@@ -1,0 +1,58 @@
+//! The robustness claim of §IV (iii): the ρ/ρ̃ running-sum scheme makes
+//! gradient tracking immune to packet loss. This example sweeps the loss
+//! probability and compares robust R-FAST against the naive-GT ablation
+//! (one-shot increments) and OSGP (push-sum, mass-lossy) on heterogeneous
+//! quadratics where the exact optimality gap is measurable.
+//!
+//!     cargo run --release --example packet_loss_robustness
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::graph::Topology;
+use rfast::metrics::Table;
+use rfast::oracle::{GradOracle, QuadraticOracle};
+use rfast::sim::{Simulator, StopRule};
+
+fn gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
+    let topo = Topology::ring(6);
+    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
+    let cfg = SimConfig {
+        seed,
+        gamma: 0.03,
+        compute_mean: 0.01,
+        compute_jitter: 0.3,
+        link_latency: 0.002,
+        latency_cap: 0.05,
+        loss_prob,
+        eval_every: 5.0,
+        ..SimConfig::default()
+    };
+    let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
+    let report = sim.run(StopRule::Iterations(60_000));
+    report.final_gap.unwrap()
+}
+
+fn main() {
+    let mut table = Table::new(
+        "optimality gap vs packet-loss probability (6-node ring, quadratics)",
+        &["loss prob", "R-FAST (robust ρ)", "naive GT", "OSGP"],
+    );
+    for loss_prob in [0.0, 0.1, 0.2, 0.3, 0.4] {
+        let robust: f64 =
+            (0..3).map(|s| gap(AlgoKind::RFast, loss_prob, 10 + s)).sum::<f64>() / 3.0;
+        let naive: f64 =
+            (0..3).map(|s| gap(AlgoKind::RFastNaive, loss_prob, 10 + s)).sum::<f64>() / 3.0;
+        let osgp: f64 =
+            (0..3).map(|s| gap(AlgoKind::Osgp, loss_prob, 10 + s)).sum::<f64>() / 3.0;
+        table.row(vec![
+            format!("{:.0}%", loss_prob * 100.0),
+            format!("{robust:.3e}"),
+            format!("{naive:.3e}"),
+            format!("{osgp:.3e}"),
+        ]);
+    }
+    table.print();
+    println!("\nExpected shape: R-FAST's gap is loss-invariant (running sums \
+              subsume dropped packets); naive GT and OSGP degrade because \
+              dropped increments / push-sum mass are gone forever.");
+}

@@ -1,0 +1,5 @@
+"""Build-time python stack (L2 model + L1 Pallas kernels + AOT lowering).
+
+Never imported at runtime: `make artifacts` runs `compile.aot` once and the
+rust coordinator consumes only `artifacts/*.hlo.txt` + `manifest.json`.
+"""

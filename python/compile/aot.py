@@ -1,0 +1,192 @@
+"""AOT lowering: L2/L1 python stack → HLO-text artifacts for the rust runtime.
+
+Run once at build time (`make artifacts`); python never appears on the
+request path. For every model entrypoint we emit:
+
+  artifacts/<name>.hlo.txt     HLO *text* — xla_extension 0.5.1 rejects
+                               jax≥0.5 serialized protos (64-bit ids); the
+                               text parser reassigns ids and round-trips
+                               (see /opt/xla-example/README.md).
+  artifacts/<model>_init.f32   raw little-endian f32 initial θ (jax init,
+                               so rust never needs to know init scales).
+  artifacts/manifest.json      machine-readable index: per-artifact input/
+                               output shapes+dtypes, p, model metadata.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--transformer-scale tiny|e2e|large] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch sizes baked into the artifacts (one executable per shape).
+GRAD_BATCH = 32    # paper: mini-batch 32 per node
+EVAL_BATCH = 256   # held-out evaluation chunk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    MLIR *bytecode* (not textual asm) goes into the converter: the textual
+    pretty-form printed by current jaxlib is not always re-parseable by the
+    bundled StableHLO parser (e.g. `dynamic_slice` attribute spelling),
+    while bytecode round-trips across versions.
+    """
+    from jax._src.interpreters import mlir as jmlir
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    bytecode = jmlir.module_to_bytecode(mlir_mod)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        bytecode, use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": np.dtype(s.dtype).name}
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = only
+        self.manifest: dict = {"artifacts": {}, "models": {}}
+
+    def emit(self, name: str, fn, arg_specs, out_specs, meta: dict):
+        if self.only and self.only != name:
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "hlo": path,
+            "inputs": [_shape_entry(s) for s in arg_specs],
+            "outputs": [_shape_entry(s) for s in out_specs],
+            "meta": meta,
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text "
+              f"({time.time() - t0:.1f}s)")
+
+    def emit_init(self, model_name: str, theta: jax.Array, extra: dict):
+        path = f"{model_name}_init.f32"
+        np.asarray(theta, dtype="<f4").tofile(os.path.join(self.out_dir, path))
+        self.manifest["models"][model_name] = {
+            "init": path, "p": int(theta.shape[0]), **extra}
+
+    def write_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+
+
+def emit_logreg(em: Emitter):
+    p, d = model.LOGREG_P, model.LOGREG_DIM
+    f32 = jnp.float32
+    em.emit(
+        "logreg_grad",
+        functools.partial(model.logreg_grad, use_kernel=True),
+        (_sds((p,), f32), _sds((GRAD_BATCH, d), f32), _sds((GRAD_BATCH,), f32)),
+        (_sds((), f32), _sds((p,), f32)),
+        {"model": "logreg", "l2": model.LOGREG_L2, "batch": GRAD_BATCH},
+    )
+    em.emit(
+        "logreg_eval",
+        model.logreg_eval,
+        (_sds((p,), f32), _sds((EVAL_BATCH, d), f32), _sds((EVAL_BATCH,), f32)),
+        (_sds((), f32), _sds((), jnp.int32)),
+        {"model": "logreg", "batch": EVAL_BATCH},
+    )
+    em.emit_init("logreg", model.logreg_init(jax.random.PRNGKey(42)),
+                 {"feature_dim": d, "grad_batch": GRAD_BATCH,
+                  "eval_batch": EVAL_BATCH, "l2": model.LOGREG_L2})
+
+
+def emit_mlp(em: Emitter):
+    p, d = model.MLP_P, model.MLP_DIMS[0]
+    f32, i32 = jnp.float32, jnp.int32
+    em.emit(
+        "mlp_grad",
+        functools.partial(model.mlp_grad, use_kernel=True),
+        (_sds((p,), f32), _sds((GRAD_BATCH, d), f32), _sds((GRAD_BATCH,), i32)),
+        (_sds((), f32), _sds((p,), f32)),
+        {"model": "mlp", "dims": list(model.MLP_DIMS), "batch": GRAD_BATCH},
+    )
+    em.emit(
+        "mlp_eval",
+        model.mlp_eval,
+        (_sds((p,), f32), _sds((EVAL_BATCH, d), f32), _sds((EVAL_BATCH,), i32)),
+        (_sds((), f32), _sds((), i32)),
+        {"model": "mlp", "batch": EVAL_BATCH},
+    )
+    em.emit_init("mlp", model.mlp_init(jax.random.PRNGKey(43)),
+                 {"feature_dim": d, "classes": model.MLP_DIMS[-1],
+                  "grad_batch": GRAD_BATCH, "eval_batch": EVAL_BATCH})
+
+
+def emit_transformer(em: Emitter, scale: str):
+    cfg = model.TRANSFORMER_CONFIGS[scale]
+    spec = model.transformer_spec(cfg)
+    p = spec.total
+    f32, i32 = jnp.float32, jnp.int32
+    tok_shape = (cfg.batch, cfg.seq + 1)
+    name = f"transformer_{scale}"
+    em.emit(
+        f"{name}_grad",
+        functools.partial(model.transformer_grad, cfg=cfg, use_kernel=True),
+        (_sds((p,), f32), _sds(tok_shape, i32)),
+        (_sds((), f32), _sds((p,), f32)),
+        {"model": name, "config": cfg.__dict__, "batch": cfg.batch},
+    )
+    em.emit(
+        f"{name}_eval",
+        functools.partial(model.transformer_eval, cfg=cfg),
+        (_sds((p,), f32), _sds(tok_shape, i32)),
+        (_sds((), f32),),
+        {"model": name, "config": cfg.__dict__},
+    )
+    em.emit_init(name, model.transformer_init(jax.random.PRNGKey(44), cfg),
+                 {"config": cfg.__dict__, "grad_batch": cfg.batch,
+                  "tokens_per_example": cfg.seq + 1})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--transformer-scale", default="e2e",
+                    choices=sorted(model.TRANSFORMER_CONFIGS))
+    ap.add_argument("--only", default=None,
+                    help="emit a single artifact by name (debugging)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    em = Emitter(args.out_dir, args.only)
+    print("AOT lowering (HLO text):")
+    emit_logreg(em)
+    emit_mlp(em)
+    emit_transformer(em, "tiny")          # always: unit/integration tests
+    if args.transformer_scale != "tiny":
+        emit_transformer(em, args.transformer_scale)
+    em.write_manifest()
+    print(f"manifest: {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

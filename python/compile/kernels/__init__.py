@@ -1,0 +1,9 @@
+"""L1 Pallas kernels + pure-jnp references.
+
+Modules:
+  logreg       — fused logistic-regression loss+grad kernel
+  softmax_xent — fused softmax-cross-entropy fwd/bwd (custom_vjp)
+  ref          — pure-jnp oracles for both
+"""
+
+from . import logreg, ref, softmax_xent  # noqa: F401

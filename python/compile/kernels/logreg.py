@@ -1,0 +1,118 @@
+"""Pallas kernel: fused logistic-regression loss + gradient (L1 hot spot).
+
+One kernel invocation computes, for a node-local minibatch:
+
+    z    = X @ w + b
+    loss = mean(BCE(z, y)) + l2/2 * ||θ||²
+    grad = [Xᵀ(σ(z) − y)/B + l2·w ;  Σ(σ(z) − y)/B + l2·b]
+
+i.e. the entire per-wake compute of R-FAST step (S1)'s stochastic gradient,
+fused so the activations never round-trip to HBM between the forward BCE
+and the backward GEMV.
+
+TPU adaptation (DESIGN.md §5): the two matrix products (X·w and Xᵀ·r) are
+the MXU work; a (B=32, d=784) f32 block is ~100 KiB so a whole batch block
+sits in VMEM and the kernel runs as a single grid step — the BlockSpecs
+below express exactly that HBM→VMEM schedule. We keep the grid explicit
+(batch-tiled) so larger B lowers to multiple VMEM-resident tiles with the
+loss/grad accumulated across tiles.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret lowering turns the kernel body into plain fused HLO
+which is what the rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["logreg_loss_grad", "DEFAULT_BATCH_BLOCK"]
+
+# Rows of X per grid step. 32 rows × 784 f32 features ≈ 100 KiB: comfortably
+# VMEM-resident together with θ (≈3 KiB) and the grad accumulator.
+DEFAULT_BATCH_BLOCK = 32
+
+
+def _kernel(theta_ref, x_ref, y_ref, loss_ref, grad_ref, *, l2: float,
+            total_b: int):
+    """One batch tile: accumulate loss and grad into the outputs.
+
+    Grid iterates over batch tiles; outputs map every grid step onto the
+    same (only) block, so `+=` accumulation across steps is well-defined
+    under the sequential-grid semantics Pallas guarantees on TPU.
+    """
+    step = pl.program_id(0)
+
+    theta = theta_ref[...]
+    w = theta[:-1]
+    b = theta[-1]
+    x = x_ref[...]
+    y = y_ref[...]
+
+    # Forward: logits for this tile (MXU matvec), stable BCE.
+    z = x @ w + b
+    bce = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+    # Backward: residual r = (σ(z) − y)/B, then the transposed product.
+    s = jax.nn.sigmoid(z)
+    r = (s - y) / total_b
+    gw = x.T @ r
+    gb = jnp.sum(r)
+
+    tile_loss = jnp.sum(bce) / total_b
+    tile_grad = jnp.concatenate([gw, gb[None]])
+
+    @pl.when(step == 0)
+    def _init():
+        # Fold the ℓ2 term in exactly once, on the first tile.
+        loss_ref[...] = tile_loss + 0.5 * l2 * jnp.sum(theta * theta)
+        grad_ref[...] = tile_grad + l2 * theta
+
+    @pl.when(step != 0)
+    def _accum():
+        loss_ref[...] += tile_loss
+        grad_ref[...] += tile_grad
+
+
+def logreg_loss_grad(theta: jax.Array, x: jax.Array, y: jax.Array, *,
+                     l2: float,
+                     batch_block: int = DEFAULT_BATCH_BLOCK
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Fused loss+grad via the Pallas kernel. Shapes as in ref.py.
+
+    Requires ``B % batch_block == 0`` (callers pad or pick a divisor; the
+    AOT artifacts use B=32 with one tile).
+    """
+    b_total, d = x.shape
+    if theta.shape != (d + 1,):
+        raise ValueError(f"theta shape {theta.shape} != ({d + 1},)")
+    if b_total % batch_block != 0:
+        # Fall back to a single whole-batch tile rather than silently
+        # mis-tiling: pallas grids need exact division.
+        batch_block = b_total
+    grid = (b_total // batch_block,)
+
+    kernel = functools.partial(_kernel, l2=l2, total_b=b_total)
+    loss, grad = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d + 1,), lambda i: (0,)),          # θ: replicated
+            pl.BlockSpec((batch_block, d), lambda i: (i, 0)),  # X: batch tile
+            pl.BlockSpec((batch_block,), lambda i: (i,)),      # y: batch tile
+        ],
+        out_specs=[
+            pl.BlockSpec((), lambda i: ()),                   # loss: scalar acc
+            pl.BlockSpec((d + 1,), lambda i: (0,)),           # grad: accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((), x.dtype),
+            jax.ShapeDtypeStruct((d + 1,), x.dtype),
+        ],
+        interpret=True,
+    )(theta, x, y)
+    return loss, grad

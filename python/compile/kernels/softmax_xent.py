@@ -1,0 +1,147 @@
+"""Pallas kernel: fused softmax-cross-entropy with custom VJP (L1 hot spot).
+
+Used as the loss head of both the MLP classifier and the transformer LM —
+for a V-way head this is the memory-bandwidth hot spot of the step
+(logits are [B·S, V]; V up to 16k in the `large` transformer config).
+
+Forward kernel (row-tiled over the batch dimension):
+    m_i   = max_v logits[i, v]
+    lse_i = m_i + log Σ_v exp(logits[i, v] − m_i)
+    loss  = mean_i (lse_i − logits[i, label_i])
+and it *saves only (m, lse)* — [B] each — as residuals.
+
+Backward kernel recomputes softmax from (m, lse) instead of materializing
+[B, V] probabilities to HBM (DESIGN.md §5: the TPU-side rematerialization
+counterpart of keeping probs in CUDA shared memory):
+    dlogits[i, v] = (exp(logits[i, v] − lse_i) − 1[v == label_i]) · g / B
+
+Both kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic);
+the BlockSpecs still express the intended VMEM tiling: a row-block of
+(block_b, V) f32 at V=16k, block_b=8 is 512 KiB — within VMEM budget
+alongside the [block_b] residuals.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["softmax_xent", "DEFAULT_ROW_BLOCK"]
+
+DEFAULT_ROW_BLOCK = 8
+
+
+def _pick_block(b: int, requested: int) -> int:
+    """Largest divisor of b that is ≤ requested (grid needs exact tiling)."""
+    blk = min(requested, b)
+    while b % blk != 0:
+        blk -= 1
+    return blk
+
+
+def _fwd_kernel(logits_ref, labels_ref, loss_ref, m_ref, lse_ref, *,
+                total_b: int):
+    step = pl.program_id(0)
+    logits = logits_ref[...]
+    labels = labels_ref[...]
+
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    tile_loss = jnp.sum(lse - gold) / total_b
+
+    m_ref[...] = m
+    lse_ref[...] = lse
+
+    @pl.when(step == 0)
+    def _init():
+        loss_ref[...] = tile_loss
+
+    @pl.when(step != 0)
+    def _accum():
+        loss_ref[...] += tile_loss
+
+
+def _bwd_kernel(logits_ref, labels_ref, lse_ref, g_ref, dlogits_ref, *,
+                total_b: int):
+    logits = logits_ref[...]
+    labels = labels_ref[...]
+    lse = lse_ref[...]
+    g = g_ref[...]
+
+    p = jnp.exp(logits - lse[:, None])
+    v = logits.shape[-1]
+    onehot = (labels[:, None] == jnp.arange(v, dtype=labels.dtype)[None, :])
+    dlogits_ref[...] = (p - onehot.astype(logits.dtype)) * (g / total_b)
+
+
+def _fwd_call(logits: jax.Array, labels: jax.Array, row_block: int):
+    b, v = logits.shape
+    blk = _pick_block(b, row_block)
+    grid = (b // blk,)
+    kernel = functools.partial(_fwd_kernel, total_b=b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, v), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((), lambda i: ()),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((), logits.dtype),
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+        ],
+        interpret=True,
+    )(logits, labels)
+
+
+def _bwd_call(logits: jax.Array, labels: jax.Array, lse: jax.Array,
+              g: jax.Array, row_block: int) -> jax.Array:
+    b, v = logits.shape
+    blk = _pick_block(b, row_block)
+    grid = (b // blk,)
+    kernel = functools.partial(_bwd_kernel, total_b=b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, v), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((), lambda i: ()),   # upstream scalar cotangent
+        ],
+        out_specs=pl.BlockSpec((blk, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, v), logits.dtype),
+        interpret=True,
+    )(logits, labels, lse, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 row_block: int = DEFAULT_ROW_BLOCK) -> jax.Array:
+    """Mean softmax cross-entropy over rows; differentiable w.r.t. logits."""
+    loss, _m, _lse = _fwd_call(logits, labels, row_block)
+    return loss
+
+
+def _vjp_fwd(logits, labels, row_block):
+    loss, _m, lse = _fwd_call(logits, labels, row_block)
+    return loss, (logits, labels, lse)
+
+
+def _vjp_bwd(row_block, residuals, g):
+    logits, labels, lse = residuals
+    dlogits = _bwd_call(logits, labels, lse, g, row_block)
+    return dlogits, None
+
+
+softmax_xent.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,293 @@
+"""L2: training models over a FLAT parameter vector θ ∈ R^p.
+
+R-FAST (the L3 coordinator) manipulates flat vectors — x_i, z_i, ρ_ij all
+live in R^p — so every model here exposes exactly two jit-able entrypoints
+operating on a flat θ:
+
+    <model>_grad(θ, batch...)  -> (scalar loss, grad ∈ R^p)
+    <model>_eval(θ, batch...)  -> (scalar loss[, #correct])
+
+The unflatten is differentiable slicing, so ``jax.grad`` over θ is exact.
+Compute hot spots route through the L1 Pallas kernels
+(``use_kernel=False`` swaps in the pure-jnp references, used by pytest to
+cross-check the full lowering).
+
+Models:
+  logreg       785-dim regularized logistic regression (paper §VI-A)
+  mlp          784-128-64-10 classifier (ResNet/ImageNet *coordination*
+               proxy, paper §VI-B — see DESIGN.md §4)
+  transformer  decoder-only LM, tied embeddings (e2e driver; configurable
+               scale tiny/e2e/large)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logreg as logreg_kernel
+from .kernels import ref as kref
+from .kernels.softmax_xent import softmax_xent
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Named shapes making up a flat parameter vector."""
+
+    names: tuple[str, ...]
+    shapes: tuple[tuple[int, ...], ...]
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return tuple(int(math.prod(s)) for s in self.shapes)
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    def unflatten(self, theta: jax.Array) -> dict[str, jax.Array]:
+        out: dict[str, jax.Array] = {}
+        off = 0
+        for name, shape, size in zip(self.names, self.shapes, self.sizes):
+            out[name] = theta[off:off + size].reshape(shape)
+            off += size
+        return out
+
+    def flatten(self, params: dict[str, jax.Array]) -> jax.Array:
+        return jnp.concatenate([params[n].reshape(-1) for n in self.names])
+
+
+def spec_from_pairs(pairs: Sequence[tuple[str, tuple[int, ...]]]) -> ParamSpec:
+    return ParamSpec(tuple(n for n, _ in pairs), tuple(s for _, s in pairs))
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (paper §VI-A: MNIST 0-vs-1, smooth strongly convex)
+# --------------------------------------------------------------------------
+
+LOGREG_DIM = 784          # feature dim (28×28 flattened)
+LOGREG_P = LOGREG_DIM + 1  # +bias
+LOGREG_L2 = 1e-4           # the "regularized" in regularized logreg
+
+
+def logreg_grad(theta: jax.Array, x: jax.Array, y: jax.Array, *,
+                l2: float = LOGREG_L2,
+                use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+    if use_kernel:
+        return logreg_kernel.logreg_loss_grad(theta, x, y, l2=l2)
+    return kref.logreg_loss_grad_ref(theta, x, y, l2)
+
+
+def logreg_eval(theta: jax.Array, x: jax.Array, y: jax.Array, *,
+                l2: float = LOGREG_L2) -> tuple[jax.Array, jax.Array]:
+    return kref.logreg_eval_ref(theta, x, y, l2)
+
+
+def logreg_init(key: jax.Array) -> jax.Array:
+    return 0.01 * jax.random.normal(key, (LOGREG_P,), dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (ImageNet/ResNet coordination proxy, paper §VI-B)
+# --------------------------------------------------------------------------
+
+MLP_DIMS = (784, 128, 64, 10)
+
+
+def mlp_spec(dims: Sequence[int] = MLP_DIMS) -> ParamSpec:
+    pairs: list[tuple[str, tuple[int, ...]]] = []
+    for i in range(len(dims) - 1):
+        pairs.append((f"w{i}", (dims[i], dims[i + 1])))
+        pairs.append((f"b{i}", (dims[i + 1],)))
+    return spec_from_pairs(pairs)
+
+
+MLP_SPEC = mlp_spec()
+MLP_P = MLP_SPEC.total
+
+
+def _mlp_logits(p: dict[str, jax.Array], x: jax.Array,
+                n_layers: int) -> jax.Array:
+    h = x
+    for i in range(n_layers):
+        h = h @ p[f"w{i}"] + p[f"b{i}"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(theta: jax.Array, x: jax.Array, labels: jax.Array, *,
+             use_kernel: bool = True) -> jax.Array:
+    p = MLP_SPEC.unflatten(theta)
+    logits = _mlp_logits(p, x, len(MLP_DIMS) - 1)
+    if use_kernel:
+        return softmax_xent(logits, labels)
+    return kref.softmax_xent_ref(logits, labels)
+
+
+def mlp_grad(theta: jax.Array, x: jax.Array, labels: jax.Array, *,
+             use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+    return jax.value_and_grad(mlp_loss)(theta, x, labels,
+                                        use_kernel=use_kernel)
+
+
+def mlp_eval(theta: jax.Array, x: jax.Array,
+             labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    p = MLP_SPEC.unflatten(theta)
+    logits = _mlp_logits(p, x, len(MLP_DIMS) - 1)
+    loss = kref.softmax_xent_ref(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels)
+                      .astype(jnp.int32))
+    return loss, correct
+
+
+def mlp_init(key: jax.Array) -> jax.Array:
+    parts = []
+    dims = MLP_DIMS
+    keys = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        scale = math.sqrt(2.0 / dims[i])
+        parts.append(scale * jax.random.normal(
+            keys[i], (dims[i] * dims[i + 1],), dtype=jnp.float32))
+        parts.append(jnp.zeros((dims[i + 1],), dtype=jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (e2e driver)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int      # training context length (tokens fed = seq+1)
+    batch: int
+    d_ff: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TRANSFORMER_CONFIGS = {
+    # ~1.3M params — unit tests / CI.
+    "tiny": TransformerConfig("tiny", d_model=128, n_layers=2, n_heads=4,
+                              vocab=512, seq=64, batch=8, d_ff=512),
+    # ~13M params — the e2e example's default (DESIGN.md §4).
+    "e2e": TransformerConfig("e2e", d_model=256, n_layers=4, n_heads=8,
+                             vocab=4096, seq=128, batch=8, d_ff=1024),
+    # ~97M params — full-scale config (slow on CPU; lowered on request).
+    "large": TransformerConfig("large", d_model=768, n_layers=12, n_heads=12,
+                               vocab=16384, seq=256, batch=8, d_ff=3072),
+}
+
+
+def transformer_spec(cfg: TransformerConfig) -> ParamSpec:
+    d, f = cfg.d_model, cfg.d_ff
+    pairs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),        # tied with the LM head
+        ("pos", (cfg.seq, d)),
+    ]
+    for i in range(cfg.n_layers):
+        pairs += [
+            (f"ln1_g{i}", (d,)), (f"ln1_b{i}", (d,)),
+            (f"wqkv{i}", (d, 3 * d)), (f"wo{i}", (d, d)),
+            (f"ln2_g{i}", (d,)), (f"ln2_b{i}", (d,)),
+            (f"wff1{i}", (d, f)), (f"bff1{i}", (f,)),
+            (f"wff2{i}", (f, d)), (f"bff2{i}", (d,)),
+        ]
+    pairs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec_from_pairs(pairs)
+
+
+def _layernorm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _attention(x: jax.Array, wqkv: jax.Array, wo: jax.Array,
+               cfg: TransformerConfig) -> jax.Array:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ wqkv                                    # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # [b, h, s, hd]
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def transformer_loss(theta: jax.Array, tokens: jax.Array,
+                     cfg: TransformerConfig, *,
+                     use_kernel: bool = True) -> jax.Array:
+    """tokens: [B, seq+1] int32; next-token cross-entropy over seq positions."""
+    spec = transformer_spec(cfg)
+    p = spec.unflatten(theta)
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    b, s = inp.shape
+
+    x = p["embed"][inp] + p["pos"][None, :s]
+    for i in range(cfg.n_layers):
+        h = _layernorm(x, p[f"ln1_g{i}"], p[f"ln1_b{i}"])
+        x = x + _attention(h, p[f"wqkv{i}"], p[f"wo{i}"], cfg)
+        h = _layernorm(x, p[f"ln2_g{i}"], p[f"ln2_b{i}"])
+        h = jax.nn.gelu(h @ p[f"wff1{i}"] + p[f"bff1{i}"])
+        x = x + h @ p[f"wff2{i}"] + p[f"bff2{i}"]
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["embed"].T                          # tied head: [b, s, V]
+
+    flat_logits = logits.reshape(b * s, cfg.vocab)
+    flat_tgt = tgt.reshape(b * s)
+    if use_kernel:
+        return softmax_xent(flat_logits, flat_tgt)
+    return kref.softmax_xent_ref(flat_logits, flat_tgt)
+
+
+def transformer_grad(theta: jax.Array, tokens: jax.Array,
+                     cfg: TransformerConfig, *,
+                     use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+    return jax.value_and_grad(transformer_loss)(theta, tokens, cfg,
+                                                use_kernel=use_kernel)
+
+
+def transformer_eval(theta: jax.Array, tokens: jax.Array,
+                     cfg: TransformerConfig) -> tuple[jax.Array]:
+    return (transformer_loss(theta, tokens, cfg, use_kernel=False),)
+
+
+def transformer_init(key: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    spec = transformer_spec(cfg)
+    params: dict[str, jax.Array] = {}
+    keys = iter(jax.random.split(key, len(spec.names)))
+    for name, shape in zip(spec.names, spec.shapes):
+        k = next(keys)
+        if "_g" in name:                      # layernorm gains
+            params[name] = jnp.ones(shape, dtype=jnp.float32)
+        elif name.startswith("b") or "_b" in name:  # biases, layernorm shifts
+            params[name] = jnp.zeros(shape, dtype=jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            scale = 0.02 if name in ("embed", "pos") else 1.0 / math.sqrt(fan_in)
+            params[name] = scale * jax.random.normal(k, shape,
+                                                     dtype=jnp.float32)
+    return spec.flatten(params)

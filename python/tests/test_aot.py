@@ -1,0 +1,77 @@
+"""AOT pipeline checks: lowering produces loadable HLO text and a manifest
+that matches the shapes the rust runtime will feed."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_contains_entry():
+    lowered = jax.jit(lambda a, b: (a + b,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_to_hlo_text_logreg_has_fused_outputs():
+    import functools
+    p, d, b = model.LOGREG_P, model.LOGREG_DIM, 8
+    lowered = jax.jit(functools.partial(model.logreg_grad,
+                                        use_kernel=True)).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    # tuple of (scalar loss, grad[p])
+    assert f"f32[{p}]" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(autouse=True)
+    def _load(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.m = json.load(f)
+
+    def test_required_artifacts_present(self):
+        for name in ("logreg_grad", "logreg_eval", "mlp_grad", "mlp_eval",
+                     "transformer_tiny_grad", "transformer_tiny_eval"):
+            assert name in self.m["artifacts"], name
+            path = os.path.join(ART, self.m["artifacts"][name]["hlo"])
+            assert os.path.exists(path)
+            with open(path) as f:
+                assert "ENTRY" in f.read()
+
+    def test_logreg_grad_shapes(self):
+        a = self.m["artifacts"]["logreg_grad"]
+        assert a["inputs"][0]["shape"] == [model.LOGREG_P]
+        assert a["inputs"][1]["shape"] == [aot.GRAD_BATCH, model.LOGREG_DIM]
+        assert a["outputs"][0]["shape"] == []
+        assert a["outputs"][1]["shape"] == [model.LOGREG_P]
+
+    def test_init_files_match_p(self):
+        for mname, info in self.m["models"].items():
+            path = os.path.join(ART, info["init"])
+            raw = np.fromfile(path, dtype="<f4")
+            assert raw.shape[0] == info["p"], mname
+            assert np.all(np.isfinite(raw)), mname
+
+    def test_label_dtypes_are_int32_where_needed(self):
+        assert self.m["artifacts"]["mlp_grad"]["inputs"][2]["dtype"] == "int32"
+        assert (self.m["artifacts"]["transformer_tiny_grad"]["inputs"][1]
+                ["dtype"] == "int32")
+        # logreg labels are float targets in {0,1}
+        assert (self.m["artifacts"]["logreg_grad"]["inputs"][2]["dtype"]
+                == "float32")

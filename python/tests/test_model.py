@@ -1,0 +1,198 @@
+"""L2 correctness: flat-θ models — kernel vs ref lowering, gradient checks,
+shape contracts that the rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _data(b=16, d=784, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, d), dtype=jnp.float32)
+    y = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (b,)) > 0.5
+         ).astype(jnp.float32)
+    return x, y
+
+
+# ------------------------------------------------------------- ParamSpec --
+
+
+def test_paramspec_roundtrip():
+    spec = model.spec_from_pairs([("a", (3, 4)), ("b", (5,)), ("c", (2, 2, 2))])
+    assert spec.total == 12 + 5 + 8
+    theta = jnp.arange(spec.total, dtype=jnp.float32)
+    p = spec.unflatten(theta)
+    assert p["a"].shape == (3, 4) and p["c"].shape == (2, 2, 2)
+    np.testing.assert_array_equal(spec.flatten(p), theta)
+
+
+def test_paramspec_unflatten_is_differentiable():
+    spec = model.spec_from_pairs([("w", (4, 2)), ("b", (2,))])
+    theta = jnp.ones(spec.total)
+
+    def f(t):
+        p = spec.unflatten(t)
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] * 3.0)
+
+    g = jax.grad(f)(theta)
+    np.testing.assert_allclose(g[:8], 2.0)
+    np.testing.assert_allclose(g[8:], 3.0)
+
+
+# ---------------------------------------------------------------- logreg --
+
+
+def test_logreg_grad_matches_autodiff():
+    theta = model.logreg_init(jax.random.PRNGKey(0))
+    x, y = _data()
+
+    def pure_loss(t):
+        l, _ = model.logreg_grad(t, x, y, use_kernel=False)
+        return l
+
+    _, g_kernel = model.logreg_grad(theta, x, y)
+    g_auto = jax.grad(pure_loss)(theta)
+    np.testing.assert_allclose(g_kernel, g_auto, rtol=1e-4, atol=1e-6)
+
+
+def test_logreg_eval_counts():
+    theta = jnp.zeros(model.LOGREG_P)
+    x, y = _data(b=32)
+    _, correct = model.logreg_eval(theta, x, y)
+    # zero weights → logit 0 → predict class 0 everywhere
+    expected = int(np.sum(np.asarray(y) == 0.0))
+    assert int(correct) == expected
+
+
+def test_logreg_sgd_descends():
+    theta = model.logreg_init(jax.random.PRNGKey(1))
+    x, y = _data(b=64, seed=3)
+    l0, _ = model.logreg_grad(theta, x, y)
+    for _ in range(50):
+        _, g = model.logreg_grad(theta, x, y)
+        theta = theta - 0.5 * g
+    l1, _ = model.logreg_grad(theta, x, y)
+    assert float(l1) < float(l0) * 0.7
+
+
+# ------------------------------------------------------------------- mlp --
+
+
+def test_mlp_param_count():
+    dims = model.MLP_DIMS
+    expect = sum(dims[i] * dims[i + 1] + dims[i + 1]
+                 for i in range(len(dims) - 1))
+    assert model.MLP_P == expect
+
+
+def test_mlp_kernel_vs_ref_lowering():
+    theta = model.mlp_init(jax.random.PRNGKey(2))
+    x, _ = _data(b=8)
+    labels = jax.random.randint(jax.random.PRNGKey(5), (8,), 0, 10)
+    lk, gk = model.mlp_grad(theta, x, labels, use_kernel=True)
+    lr, gr = model.mlp_grad(theta, x, labels, use_kernel=False)
+    np.testing.assert_allclose(lk, lr, rtol=1e-5)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-6)
+
+
+def test_mlp_eval_correct_upper_bound():
+    theta = model.mlp_init(jax.random.PRNGKey(3))
+    x, _ = _data(b=32)
+    labels = jax.random.randint(jax.random.PRNGKey(6), (32,), 0, 10)
+    loss, correct = model.mlp_eval(theta, x, labels)
+    assert 0 <= int(correct) <= 32
+    assert float(loss) > 0.0
+
+
+def test_mlp_sgd_descends():
+    theta = model.mlp_init(jax.random.PRNGKey(4))
+    x, _ = _data(b=64, seed=9)
+    labels = jax.random.randint(jax.random.PRNGKey(7), (64,), 0, 10)
+    grad_fn = jax.jit(lambda t: model.mlp_grad(t, x, labels))
+    l0, g = grad_fn(theta)
+    for _ in range(30):
+        _, g = grad_fn(theta)
+        theta = theta - 0.1 * g
+    l1, _ = grad_fn(theta)
+    assert float(l1) < float(l0)
+
+
+# ----------------------------------------------------------- transformer --
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.TRANSFORMER_CONFIGS["tiny"]
+    theta = model.transformer_init(jax.random.PRNGKey(11), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(12),
+                              (cfg.batch, cfg.seq + 1), 0, cfg.vocab)
+    return cfg, theta, toks
+
+
+def test_transformer_spec_total_matches_init(tiny):
+    cfg, theta, _ = tiny
+    assert theta.shape == (model.transformer_spec(cfg).total,)
+
+
+def test_transformer_initial_loss_near_uniform(tiny):
+    """Random init ⇒ loss ≈ log(vocab)."""
+    cfg, theta, toks = tiny
+    loss = model.transformer_loss(theta, toks, cfg, use_kernel=False)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_transformer_kernel_vs_ref_lowering(tiny):
+    cfg, theta, toks = tiny
+    lk, gk = model.transformer_grad(theta, toks, cfg, use_kernel=True)
+    lr, gr = model.transformer_grad(theta, toks, cfg, use_kernel=False)
+    np.testing.assert_allclose(lk, lr, rtol=1e-4)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-5)
+
+
+def test_transformer_causality(tiny):
+    """Changing a future token must not change earlier positions' logits
+    (verified through the loss: perturb the LAST input token and check the
+    per-position losses before it are unchanged)."""
+    cfg, theta, toks = tiny
+
+    def per_pos_losses(tokens):
+        # re-implement loss per position with ref xent
+        from compile.kernels import ref as kref
+        spec = model.transformer_spec(cfg)
+        # reuse internal forward by calling transformer_loss on 1-batch slices
+        return model.transformer_loss(theta, tokens, cfg, use_kernel=False)
+
+    t2 = np.asarray(toks).copy()
+    t2[:, -1] = (t2[:, -1] + 1) % cfg.vocab
+    # loss over positions 0..S-2 unchanged ⇒ total loss differs only via the
+    # last position term, bounded by (max per-token xent)/S.
+    l1 = float(model.transformer_loss(theta, toks, cfg, use_kernel=False))
+    l2 = float(model.transformer_loss(theta, jnp.asarray(t2), cfg,
+                                      use_kernel=False))
+    # crude but effective: last-token change can move mean loss at most by
+    # ~(2*log V)/S; a causality bug (full attention) moves every position.
+    assert abs(l1 - l2) < 2.5 * np.log(cfg.vocab) / cfg.seq + 1e-3
+
+
+def test_transformer_sgd_descends(tiny):
+    cfg, theta, toks = tiny
+    grad_fn = jax.jit(lambda t: model.transformer_grad(t, toks, cfg,
+                                                       use_kernel=False))
+    l0, _ = grad_fn(theta)
+    for _ in range(10):
+        _, g = grad_fn(theta)
+        theta = theta - 0.5 * g
+    l1, _ = grad_fn(theta)
+    assert float(l1) < float(l0)
+
+
+def test_transformer_configs_param_counts():
+    # sanity: documented scales
+    p_tiny = model.transformer_spec(model.TRANSFORMER_CONFIGS["tiny"]).total
+    p_e2e = model.transformer_spec(model.TRANSFORMER_CONFIGS["e2e"]).total
+    p_large = model.transformer_spec(model.TRANSFORMER_CONFIGS["large"]).total
+    assert 3e5 < p_tiny < 1e6
+    assert 3e6 < p_e2e < 1e7
+    assert 8e7 < p_large < 1.2e8

@@ -1,0 +1,82 @@
+//! Ablation: data-heterogeneity robustness (Definition 2 / Remark 7).
+//!
+//! Gradient tracking makes R-FAST's rate ς-free; AD-PSGD/OSGP/D-PSGD carry
+//! a ς-dependent term. We sweep the label-skew α of the partition from IID
+//! (α=0) to fully class-segregated shards (α=1) on the logreg workload and
+//! on quadratics with growing minimizer spread (where ς is exact).
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::exp::{run_sim, Workload};
+use rfast::graph::Topology;
+use rfast::metrics::Table;
+use rfast::oracle::{GradOracle, QuadraticOracle};
+use rfast::sim::{Simulator, StopRule};
+
+const ALGOS: [AlgoKind; 4] = [
+    AlgoKind::RFast,
+    AlgoKind::DPsgd,
+    AlgoKind::AdPsgd,
+    AlgoKind::Osgp,
+];
+
+fn main() {
+    // --- quadratics: exact ς via minimizer spread ------------------------
+    let mut t1 = Table::new(
+        "ablation: optimality gap vs heterogeneity ς (quadratics, fixed γ)",
+        &["spread (∝ς)", "ς²@x*", "R-FAST", "D-PSGD", "AD-PSGD", "OSGP"],
+    );
+    for spread in [0.0f32, 0.5, 1.0, 2.0, 4.0] {
+        let quad = QuadraticOracle::new(16, 6, 0.5, 2.0, spread, 0.0, 31);
+        let sigma2 = quad.heterogeneity_at_optimum();
+        let mut row = vec![format!("{spread}"), format!("{sigma2:.2}")];
+        for algo in ALGOS {
+            let topo = Topology::ring(6);
+            let cfg = SimConfig {
+                seed: 31,
+                gamma: 0.03,
+                compute_mean: 0.01,
+                compute_jitter: 0.3,
+                link_latency: 0.002,
+                latency_cap: 0.05,
+                eval_every: 5.0,
+                ..SimConfig::default()
+            };
+            let mut sim =
+                Simulator::new(cfg, &topo, algo, quad.clone().into_set());
+            let gap = sim
+                .run(StopRule::Iterations(60_000))
+                .final_gap
+                .unwrap_or(f64::NAN);
+            row.push(format!("{gap:.3e}"));
+        }
+        t1.row(row);
+    }
+    t1.print();
+
+    // --- logreg: label-skew partitions -----------------------------------
+    let mut t2 = Table::new(
+        "ablation: logreg final loss / acc(%) vs label-skew α (8 nodes, \
+         60 virtual s)",
+        &["skew α", "R-FAST", "D-PSGD", "AD-PSGD", "OSGP"],
+    );
+    for alpha in [0.0, 0.5, 0.9, 1.0] {
+        let mut row = vec![format!("{alpha}")];
+        for algo in ALGOS {
+            let topo = Topology::ring(8);
+            let mut cfg = Workload::LogReg.paper_config();
+            cfg.seed = 13;
+            cfg.skew_alpha = alpha;
+            let r = run_sim(Workload::LogReg, algo, &topo, &cfg,
+                            StopRule::VirtualTime(60.0));
+            let loss = r.series["loss_vs_time"].last_y().unwrap();
+            let acc = r.series["acc_vs_time"].last_y().unwrap();
+            row.push(format!("{loss:.3} / {:.1}", acc * 100.0));
+        }
+        t2.row(row);
+    }
+    t2.print();
+    println!("\nExpected shape: R-FAST's columns barely move with ς / α \
+              (gradient tracking); D-PSGD's fixed-step bias and AD-PSGD's \
+              drift grow with heterogeneity (Remark 7).");
+}

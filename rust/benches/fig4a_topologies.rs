@@ -1,0 +1,73 @@
+//! Fig 4a — R-FAST training loss vs epoch over five topologies (7 nodes,
+//! regularized logreg, B=32 per node). Regenerates the paper's figure as
+//! `runs/fig4a_*.csv` plus a console summary.
+//!
+//! Paper claim reproduced: R-FAST converges on ALL of binary tree, line,
+//! directed ring, exponential and mesh — including the two that are not
+//! strongly connected (tree, line), which no strongly-connected-only
+//! baseline supports.
+
+use rfast::algo::AlgoKind;
+use rfast::exp::{run_sim, save_comparison_csvs, Workload};
+use rfast::graph::TopologyKind;
+use rfast::metrics::Table;
+use rfast::sim::StopRule;
+use std::path::Path;
+
+fn main() {
+    let n = 7;
+    let epochs = std::env::var("RFAST_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+    let kinds = [
+        TopologyKind::BinaryTree,
+        TopologyKind::Line,
+        TopologyKind::Ring,
+        TopologyKind::Exponential,
+        TopologyKind::Mesh,
+    ];
+    let mut table = Table::new(
+        &format!("Fig 4a: R-FAST loss vs epoch over topologies \
+                  ({n} nodes, {epochs} epochs)"),
+        &["topology", "loss@25%", "loss@50%", "final loss", "final acc(%)"],
+    );
+    let mut reports = Vec::new();
+    for kind in kinds {
+        let topo = kind.build(n);
+        let mut cfg = Workload::LogReg.paper_config();
+        cfg.seed = 1;
+        cfg.gamma = 4e-3; // root-concentration makes ring/mesh slower at
+                          // the paper's 1e-3; 4e-3 keeps all five in frame
+        let mut r = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
+                            StopRule::Epochs(epochs));
+        let s = &r.series["loss_vs_epoch"];
+        let probe = |frac: f64| -> f64 {
+            let target_x = epochs * frac;
+            s.points
+                .iter()
+                .min_by(|a, b| {
+                    (a.0 - target_x)
+                        .abs()
+                        .partial_cmp(&(b.0 - target_x).abs())
+                        .unwrap()
+                })
+                .map(|&(_, y)| y)
+                .unwrap_or(f64::NAN)
+        };
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{:.4}", probe(0.25)),
+            format!("{:.4}", probe(0.5)),
+            format!("{:.4}", s.last_y().unwrap()),
+            format!("{:.1}",
+                    100.0 * r.series["acc_vs_epoch"].last_y().unwrap()),
+        ]);
+        r.label = kind.name().to_string();
+        reports.push(r);
+    }
+    table.print();
+    let refs: Vec<&_> = reports.iter().collect();
+    save_comparison_csvs(Path::new("runs"), "fig4a", &refs).unwrap();
+    println!("series: runs/fig4a_loss_vs_epoch.csv");
+}

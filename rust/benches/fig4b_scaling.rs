@@ -1,0 +1,45 @@
+//! Fig 4b — time to reach training loss 0.1 vs node count on the binary
+//! tree (logreg, §VI-A). Paper claim: the time decreases almost linearly
+//! with the number of nodes.
+
+use rfast::algo::AlgoKind;
+use rfast::exp::{run_sim, Workload};
+use rfast::metrics::{save_series_csv, Series, Table};
+use rfast::sim::StopRule;
+use std::path::Path;
+
+fn main() {
+    let target = 0.1;
+    let mut table = Table::new(
+        "Fig 4b: time to training loss 0.1 vs #nodes (binary tree)",
+        &["nodes", "virtual time (s)", "speedup vs n=3", "grad steps"],
+    );
+    let mut curve = Series::new("time_to_loss_0.1", "nodes", "virtual_seconds");
+    let mut base = None;
+    for n in [3usize, 7, 15, 31] {
+        let topo = rfast::graph::Topology::binary_tree(n);
+        let mut cfg = Workload::LogReg.paper_config();
+        cfg.seed = 2;
+        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
+                             StopRule::TargetLoss {
+                                 loss: target,
+                                 max_time: 2_000.0,
+                             });
+        let t = report.series["loss_vs_time"]
+            .time_to_reach(target)
+            .unwrap_or(f64::INFINITY);
+        let b = *base.get_or_insert(t);
+        table.row(vec![
+            n.to_string(),
+            format!("{t:.2}"),
+            format!("{:.2}×", b / t),
+            format!("{:.0}", report.scalars["grad_wakes"]),
+        ]);
+        curve.push(n as f64, t);
+    }
+    table.print();
+    save_series_csv(Path::new("runs/fig4b_time_to_target.csv"), &[&curve])
+        .unwrap();
+    println!("series: runs/fig4b_time_to_target.csv");
+    println!("Expected shape: near-linear speedup in n (paper Fig 4b).");
+}

@@ -1,0 +1,315 @@
+//! Ring-AllReduce SGD (Horovod-style, paper baseline §VI-B): every round,
+//! all nodes compute gradients and take the *exact* average via the classic
+//! ring primitive — reduce-scatter (n−1 steps) then all-gather (n−1 steps),
+//! each step moving one p/n-sized chunk to the ring successor.
+//!
+//! The real chunked message pattern is implemented (not a magic global
+//! average): each communication step is a zero-compute `wake` gated on the
+//! previous step's chunk having arrived, so a straggler — or one slow link —
+//! stalls the entire ring, which is exactly the behaviour Table II's
+//! straggler column quantifies.
+//!
+//! Chunk schedule (standard): at reduce step s (0-based), node i sends
+//! chunk (i − s) mod n and receives chunk (i − s − 1) mod n; after n−1
+//! steps node i owns the fully-reduced chunk (i + 1) mod n. All-gather
+//! circulates the reduced chunks the same way.
+
+use super::{Msg, MsgKind, NodeState};
+use crate::oracle::NodeOracle;
+
+pub fn build(n: usize, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
+    (0..n)
+        .map(|i| Box::new(RingAllReduceNode::new(i, n, x0, gamma)) as Box<dyn NodeState>)
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    /// Compute the local gradient (the only compute-charged wake).
+    Grad,
+    /// Reduce-scatter step s: waiting to have received step s's chunk.
+    Reduce(u32),
+    /// All-gather step s.
+    Gather(u32),
+}
+
+pub struct RingAllReduceNode {
+    id: usize,
+    n: usize,
+    gamma: f32,
+    round: u64,
+    phase: Phase,
+    x: Vec<f32>,
+    /// gradient accumulation buffer (chunks get reduced in place)
+    gbuf: Vec<f32>,
+    /// chunks received but not yet applied, keyed by (round, is_gather,
+    /// step). Latency jitter can deliver step s+1 (or even next round's
+    /// reduce step 0) before step s is consumed, so a keyed map — not a
+    /// single slot — is required.
+    pending: std::collections::BTreeMap<(u64, bool, u32), Vec<f32>>,
+    chunks: Vec<(usize, usize)>, // chunk c → [start, end)
+}
+
+impl RingAllReduceNode {
+    pub fn new(id: usize, n: usize, x0: &[f32], gamma: f32) -> RingAllReduceNode {
+        let p = x0.len();
+        // chunk boundaries: ceil-partition so every chunk is non-empty when
+        // p ≥ n (for p < n some chunks are empty, still correct)
+        let mut chunks = Vec::with_capacity(n);
+        let base = p / n;
+        let rem = p % n;
+        let mut start = 0;
+        for c in 0..n {
+            let len = base + usize::from(c < rem);
+            chunks.push((start, start + len));
+            start += len;
+        }
+        RingAllReduceNode {
+            id,
+            n,
+            gamma,
+            round: 0,
+            phase: Phase::Grad,
+            x: x0.to_vec(),
+            gbuf: vec![0.0; p],
+            pending: std::collections::BTreeMap::new(),
+            chunks,
+        }
+    }
+
+    /// The (round, is_gather, step) key this node must consume next.
+    fn awaited_key(&self) -> Option<(u64, bool, u32)> {
+        match self.phase {
+            Phase::Grad => None,
+            Phase::Reduce(s) => Some((self.round, false, s)),
+            Phase::Gather(s) => Some((self.round, true, s)),
+        }
+    }
+
+    fn succ(&self) -> usize {
+        (self.id + 1) % self.n
+    }
+
+    fn chunk(&self, c: usize) -> (usize, usize) {
+        self.chunks[c % self.n]
+    }
+
+    /// Chunk index this node sends at reduce step s.
+    fn reduce_send_chunk(&self, s: u32) -> usize {
+        (self.id + self.n - s as usize % self.n) % self.n
+    }
+
+    /// Chunk index this node sends at gather step s (it owns (i+1) after
+    /// the reduce phase, then forwards what it received).
+    fn gather_send_chunk(&self, s: u32) -> usize {
+        (self.id + 1 + self.n - s as usize % self.n) % self.n
+    }
+
+    fn send_chunk(&self, kind: MsgKind, step: u32, c: usize,
+                  out: &mut Vec<Msg>) {
+        let (a, b) = self.chunk(c);
+        let mut m = Msg::new(self.id, self.succ(), kind, self.round,
+                             self.gbuf[a..b].to_vec());
+        m.slot = step;
+        out.push(m);
+    }
+
+    fn apply_pending(&mut self) {
+        let key = self.awaited_key().expect("apply only in comm phases");
+        let payload = self
+            .pending
+            .remove(&key)
+            .expect("wake gated on ready() ⇒ awaited chunk present");
+        let (_, is_gather, step) = key;
+        if !is_gather {
+            // incoming chunk at reduce step s is (id − s − 1) mod n
+            let c = (self.id + 2 * self.n - step as usize % self.n - 1) % self.n;
+            let (a, b) = self.chunk(c);
+            for (dst, src) in self.gbuf[a..b].iter_mut().zip(&payload) {
+                *dst += *src;
+            }
+        } else {
+            // incoming chunk at gather step s is (id − s) mod n
+            let c = (self.id + 2 * self.n - step as usize % self.n) % self.n;
+            let (a, b) = self.chunk(c);
+            self.gbuf[a..b].copy_from_slice(&payload);
+        }
+    }
+}
+
+impl NodeState for RingAllReduceNode {
+    fn ready(&self) -> bool {
+        match self.awaited_key() {
+            None => true,
+            Some(key) => self.pending.contains_key(&key),
+        }
+    }
+
+    fn wake_computes_gradient(&self) -> bool {
+        self.phase == Phase::Grad
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        match self.phase {
+            Phase::Grad => {
+                let loss = oracle.grad(&self.x, &mut self.gbuf);
+                if self.n == 1 {
+                    crate::linalg::axpy(&mut self.x, -self.gamma, &self.gbuf);
+                    self.round += 1;
+                    return Some(loss);
+                }
+                self.send_chunk(MsgKind::Reduce, 0,
+                                self.reduce_send_chunk(0), out);
+                self.phase = Phase::Reduce(0);
+                Some(loss)
+            }
+            Phase::Reduce(s) => {
+                self.apply_pending();
+                let next = s + 1;
+                if (next as usize) < self.n - 1 {
+                    self.send_chunk(MsgKind::Reduce, next,
+                                    self.reduce_send_chunk(next), out);
+                    self.phase = Phase::Reduce(next);
+                } else {
+                    // reduce done: start gather by sending the chunk we own
+                    self.send_chunk(MsgKind::Gather, 0,
+                                    self.gather_send_chunk(0), out);
+                    self.phase = Phase::Gather(0);
+                }
+                None
+            }
+            Phase::Gather(s) => {
+                self.apply_pending();
+                let next = s + 1;
+                if (next as usize) < self.n - 1 {
+                    self.send_chunk(MsgKind::Gather, next,
+                                    self.gather_send_chunk(next), out);
+                    self.phase = Phase::Gather(next);
+                } else {
+                    // all-gather done: gbuf = Σ_j g_j; apply averaged step
+                    let scale = self.gamma / self.n as f32;
+                    crate::linalg::axpy(&mut self.x, -scale, &self.gbuf);
+                    self.round += 1;
+                    self.phase = Phase::Grad;
+                }
+                None
+            }
+        }
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        match msg.kind {
+            MsgKind::Reduce | MsgKind::Gather => {
+                let key = (msg.stamp, msg.kind == MsgKind::Gather, msg.slot);
+                let prev = self.pending.insert(key, msg.payload);
+                debug_assert!(prev.is_none(), "duplicate ring chunk {key:?}");
+            }
+            _ => {}
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, NodeOracle, QuadraticOracle};
+
+    /// Drive the ring until all nodes are back in Grad phase `rounds` times.
+    fn drive(nodes: &mut [Box<dyn NodeState>],
+             oracles: &mut [Box<dyn NodeOracle>], rounds: u64) {
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        let mut guard = 0u64;
+        while nodes.iter().any(|n| n.local_iter() < rounds) {
+            guard += 1;
+            assert!(guard < 10_000_000, "ring deadlocked");
+            let mut progressed = false;
+            for i in 0..nodes.len() {
+                if nodes[i].ready() && nodes[i].local_iter() < rounds {
+                    nodes[i].wake(oracles[i].as_mut(), &mut out);
+                    progressed = true;
+                }
+            }
+            for m in out.drain(..) {
+                let to = m.to;
+                nodes[to].receive(m, &mut replies);
+            }
+            assert!(progressed, "no node could progress — deadlock");
+        }
+    }
+
+    #[test]
+    fn one_round_computes_exact_average() {
+        for n in [2, 3, 4, 7] {
+            // p not divisible by n on purpose
+            let p = 10;
+            let q = QuadraticOracle::heterogeneous(p, n, 0.5, 2.0, n as u64);
+            let mut set = q.clone().into_set();
+            let x0 = vec![0.3f32; p];
+            let mut nodes = build(n, &x0, 1.0); // γ=1 ⇒ x1 = x0 − mean(g)
+            drive(&mut nodes, &mut set.nodes, 1);
+
+            // expected: x0 − (1/n) Σ g_i(x0), deterministic oracle
+            let mut expect = x0.clone();
+            let mut g = vec![0.0f32; p];
+            let mut set2 = q.into_set();
+            for node_oracle in set2.nodes.iter_mut() {
+                node_oracle.grad(&x0, &mut g);
+                crate::linalg::axpy(&mut expect, -1.0 / n as f32, &g);
+            }
+            for nd in &nodes {
+                crate::testutil::assert_close(nd.param(), &expect, 1e-5)
+                    .unwrap_or_else(|e| panic!("n={n}: {e}"));
+            }
+            // every node ends identical
+            for nd in &nodes[1..] {
+                assert_eq!(nd.param(), nodes[0].param());
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let q = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 77);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(4, &vec![0.0; 8], 0.2);
+        drive(&mut nodes, &mut set.nodes, 400);
+        let gap = crate::linalg::dist(nodes[0].param(), &xs);
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn single_node_degenerates_to_sgd() {
+        let q = QuadraticOracle::heterogeneous(4, 1, 1.0, 1.0, 5);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(1, &vec![0.0; 4], 0.5);
+        drive(&mut nodes, &mut set.nodes, 100);
+        assert!(crate::linalg::dist(nodes[0].param(), &xs) < 1e-4);
+    }
+
+    #[test]
+    fn communication_wakes_charge_no_compute() {
+        let q = QuadraticOracle::heterogeneous(4, 3, 1.0, 1.0, 9);
+        let mut set = q.into_set();
+        let mut nodes = build(3, &vec![0.0; 4], 0.1);
+        let mut out = Vec::new();
+        assert!(nodes[0].wake_computes_gradient());
+        nodes[0].wake(set.nodes[0].as_mut(), &mut out);
+        assert!(!nodes[0].wake_computes_gradient()); // now in Reduce phase
+    }
+}

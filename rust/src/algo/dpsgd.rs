@@ -1,0 +1,188 @@
+//! D-PSGD (Lian et al. 2017): synchronous decentralized parallel SGD over
+//! an undirected doubly-stochastic graph:
+//!
+//!   x_i^{t+1} = Σ_j w_ij x_j^t − γ ∇f_i(x_i^t; ζ_i^t)
+//!
+//! Requires undirected communication + doubly-stochastic W — the paper runs
+//! it on an undirected ring (Metropolis weights, w = 1/3 each), which this
+//! builder constructs internally regardless of the directed topology the
+//! other algorithms use. No gradient tracking: convergence degrades with
+//! data heterogeneity (ς-dependent rate), which the heterogeneity ablation
+//! bench exhibits.
+
+use super::roundbuf::RoundBuf;
+use super::{Msg, MsgKind, NodeState};
+use crate::oracle::NodeOracle;
+
+pub fn build(n: usize, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
+    (0..n)
+        .map(|i| Box::new(DPsgdNode::new(i, n, x0, gamma)) as Box<dyn NodeState>)
+        .collect()
+}
+
+pub struct DPsgdNode {
+    id: usize,
+    n: usize,
+    gamma: f32,
+    t: u64,
+    x: Vec<f32>,
+    g: Vec<f32>,
+    neighbors: Vec<usize>,
+    buf: RoundBuf,
+    started: bool,
+}
+
+impl DPsgdNode {
+    pub fn new(id: usize, n: usize, x0: &[f32], gamma: f32) -> DPsgdNode {
+        let neighbors: Vec<usize> = if n == 1 {
+            vec![]
+        } else if n == 2 {
+            vec![1 - id]
+        } else {
+            vec![(id + n - 1) % n, (id + 1) % n]
+        };
+        DPsgdNode {
+            id,
+            n,
+            gamma,
+            t: 0,
+            x: x0.to_vec(),
+            g: vec![0.0; x0.len()],
+            buf: RoundBuf::new(neighbors.clone()),
+            neighbors,
+            started: false,
+        }
+    }
+
+    /// Metropolis weight on the ring: 1/(1+deg) with deg=2 ⇒ 1/3 (1/2 for
+    /// the 2-node graph, 1 for a singleton).
+    fn mix_weight(&self) -> f32 {
+        1.0 / (self.neighbors.len() as f32 + 1.0)
+    }
+}
+
+impl NodeState for DPsgdNode {
+    fn ready(&self) -> bool {
+        if !self.started {
+            return true;
+        }
+        self.buf.has_all(self.t - 1)
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        if self.started {
+            // mix round t−1 values
+            let w = self.mix_weight();
+            let prev = self.t - 1;
+            let mut mixed = vec![0.0f32; self.x.len()];
+            crate::linalg::scale_into(&mut mixed, w, &self.x);
+            for k in 0..self.neighbors.len() {
+                let xj = self.buf.take(k, prev);
+                crate::linalg::axpy(&mut mixed, w, &xj);
+            }
+            self.x = mixed;
+        }
+        // local SGD step at the (mixed) iterate
+        let loss = oracle.grad(&self.x, &mut self.g);
+        crate::linalg::axpy(&mut self.x, -self.gamma, &self.g);
+        // broadcast x^t
+        for &j in &self.neighbors {
+            out.push(Msg::new(self.id, j, MsgKind::X, self.t, self.x.clone()));
+        }
+        self.started = true;
+        self.t += 1;
+        let _ = self.n;
+        Some(loss)
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        if msg.kind == MsgKind::X {
+            self.buf.insert(msg.from, msg.stamp, msg.payload);
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+
+    #[test]
+    fn converges_near_optimum_homogeneous() {
+        // identical objectives at every node ⇒ D-PSGD is unbiased
+        let q = QuadraticOracle::new(6, 4, 0.5, 2.0, 0.0, 0.0, 3);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(4, &vec![0.0; 6], 0.05);
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..2500 {
+            for i in 0..nodes.len() {
+                assert!(nodes[i].ready());
+                nodes[i].wake(set.nodes[i].as_mut(), &mut out);
+            }
+            for m in out.drain(..) {
+                let to = m.to;
+                nodes[to].receive(m, &mut replies);
+            }
+        }
+        let gap = crate::linalg::dist(nodes[0].param(), &xs);
+        assert!(gap < 1e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn heterogeneity_biases_dpsgd_fixed_step() {
+        // with heterogeneous objectives and a fixed step, D-PSGD stalls at
+        // a ς-dependent bias — the contrast that motivates gradient tracking
+        let q = QuadraticOracle::new(6, 4, 0.5, 4.0, 2.0, 0.0, 5);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(4, &vec![0.0; 6], 0.05);
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..4000 {
+            for i in 0..nodes.len() {
+                nodes[i].wake(set.nodes[i].as_mut(), &mut out);
+            }
+            for m in out.drain(..) {
+                let to = m.to;
+                nodes[to].receive(m, &mut replies);
+            }
+        }
+        let gap = crate::linalg::dist(nodes[0].param(), &xs);
+        assert!(gap > 1e-3, "expected heterogeneity bias, gap {gap}");
+    }
+
+    #[test]
+    fn two_node_graph_works() {
+        let q = QuadraticOracle::new(3, 2, 1.0, 1.0, 0.0, 0.0, 7);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(2, &vec![0.0; 3], 0.1);
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..1500 {
+            for i in 0..2 {
+                nodes[i].wake(set.nodes[i].as_mut(), &mut out);
+            }
+            for m in out.drain(..) {
+                let to = m.to;
+                nodes[to].receive(m, &mut replies);
+            }
+        }
+        assert!(crate::linalg::dist(nodes[0].param(), &xs) < 1e-2);
+    }
+}

@@ -1,0 +1,322 @@
+//! Distributed-training algorithms as event-driven node state machines.
+//!
+//! Every algorithm (R-FAST and the six baselines of paper §VI) is a set of
+//! per-node [`NodeState`] objects that an *engine* drives:
+//!
+//! * [`crate::sim::Simulator`] — discrete-event, virtual time;
+//! * [`crate::runner::ThreadedRunner`] — one OS thread per node, wall clock.
+//!
+//! The contract is engine-agnostic and has no notion of time:
+//!
+//! 1. engine calls [`NodeState::ready`]; if true and the node is idle it
+//!    charges the node's compute time and then calls [`NodeState::wake`],
+//!    which performs one local iteration (oracle call + state update) and
+//!    emits messages;
+//! 2. delivered messages go to [`NodeState::receive`] (possibly delayed,
+//!    reordered, or — for loss-tolerant algorithms — dropped by the link
+//!    layer, never by the algorithm).
+//!
+//! Fully-asynchronous algorithms are always `ready`; synchronous ones gate
+//! `ready` on having every round-(t) message, which is exactly how barrier
+//! stalls and straggler amplification emerge in the engines.
+
+mod adpsgd;
+mod allreduce;
+mod dpsgd;
+mod osgp;
+mod push_pull;
+mod rfast;
+mod roundbuf;
+mod sab;
+
+pub use adpsgd::AdPsgdNode;
+pub use allreduce::RingAllReduceNode;
+pub use dpsgd::DPsgdNode;
+pub use osgp::OsgpNode;
+pub use push_pull::PushPullNode;
+pub use rfast::{RFastNode, RFastParams};
+pub use sab::SabNode;
+
+use crate::graph::Topology;
+use crate::oracle::NodeOracle;
+
+/// Message kinds across all algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// R-FAST / Push-Pull consensus variable v.
+    V,
+    /// R-FAST robust-tracking running sum ρ (payload is the *cumulative*
+    /// sum — re-delivery of any later ρ subsumes lost ones).
+    Rho,
+    /// One-shot tracking increment (naive-GT ablation / push-pull z push).
+    ZDelta,
+    /// Raw parameter x (D-PSGD gossip, AD-PSGD exchange).
+    X,
+    /// AD-PSGD reply leg of the pairwise exchange.
+    XReply,
+    /// OSGP push-sum mass; `aux` carries the scalar weight share.
+    PushSum,
+    /// Ring-AllReduce reduce-scatter chunk; `slot` = ring step.
+    Reduce,
+    /// Ring-AllReduce all-gather chunk; `slot` = ring step.
+    Gather,
+}
+
+/// A network message between nodes. `stamp` is the sender's local iteration
+/// counter (the paper's `t+1` attached at S3); receivers keep only the
+/// freshest stamp per (peer, kind) where the algorithm calls for it.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub from: usize,
+    pub to: usize,
+    pub kind: MsgKind,
+    pub stamp: u64,
+    /// Ring step / chunk index for the all-reduce phases.
+    pub slot: u32,
+    /// Scalar side-channel (OSGP push-sum weight).
+    pub aux: f64,
+    pub payload: Vec<f32>,
+    /// f64 payload used ONLY by `Rho` messages: the running sums grow
+    /// while their increments shrink, so the receiver-side difference
+    /// ρ(latest) − ρ̃(consumed) cancels catastrophically in f32 — it floors
+    /// R-FAST's optimality gap around 1e-3 (measured; EXPERIMENTS.md §Notes).
+    /// Carrying ρ in f64 restores exact geometric convergence.
+    pub payload64: Vec<f64>,
+}
+
+impl MsgKind {
+    /// Logical channel index for the link layer's one-unacked-packet rule.
+    /// Distinct kinds are distinct "sockets" (the paper's v- and ρ-packets
+    /// are independent transmissions): without this, on topologies where
+    /// G(W) and G(A) share a directed edge, v-packets would permanently
+    /// starve ρ-packets and the tracking mass would never flow.
+    pub fn chan(&self) -> usize {
+        match self {
+            MsgKind::V => 0,
+            MsgKind::Rho | MsgKind::ZDelta => 1,
+            MsgKind::X | MsgKind::PushSum => 2,
+            MsgKind::XReply => 3,
+            MsgKind::Reduce => 0,
+            MsgKind::Gather => 1,
+        }
+    }
+
+    pub const CHANNELS: usize = 4;
+}
+
+impl Msg {
+    pub fn new(from: usize, to: usize, kind: MsgKind, stamp: u64,
+               payload: Vec<f32>) -> Msg {
+        Msg { from, to, kind, stamp, slot: 0, aux: 0.0, payload,
+              payload64: Vec::new() }
+    }
+
+    pub fn new64(from: usize, to: usize, kind: MsgKind, stamp: u64,
+                 payload64: Vec<f64>) -> Msg {
+        Msg { from, to, kind, stamp, slot: 0, aux: 0.0,
+              payload: Vec::new(), payload64 }
+    }
+
+    /// Payload length in scalar elements (either precision).
+    pub fn len(&self) -> usize {
+        self.payload.len() + self.payload64.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One node of a distributed algorithm (engine-agnostic; see module docs).
+pub trait NodeState: Send {
+    /// May this node start its next local iteration now? Async algorithms
+    /// return `true` unconditionally; synchronous ones gate on messages.
+    fn ready(&self) -> bool;
+
+    /// One local iteration: consume buffered messages, call the oracle,
+    /// update state, append outgoing messages to `out`. Returns the
+    /// minibatch loss when a gradient was computed this wake (engines log
+    /// it), or `None` for pure-communication steps.
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32>;
+
+    /// Deliver one message (any order, any delay). Protocol replies (e.g.
+    /// AD-PSGD's exchange leg) are appended to `out`.
+    fn receive(&mut self, msg: Msg, out: &mut Vec<Msg>);
+
+    /// This node's current model estimate (de-biased where applicable).
+    fn param(&self) -> &[f32];
+
+    /// Local iteration counter t.
+    fn local_iter(&self) -> u64;
+
+    /// Does one `wake` include a gradient computation? (Ring-AllReduce
+    /// communication micro-steps don't; engines charge compute time only
+    /// when this is true for the upcoming wake.)
+    fn wake_computes_gradient(&self) -> bool {
+        true
+    }
+
+    /// Update the step size (γ^t schedules — Algorithm 1 allows a
+    /// time-varying γ; the paper's §VI-B runs decay 10× per 30 epochs).
+    fn set_gamma(&mut self, gamma: f32);
+
+    /// The link layer could not send this message (sender-side loss
+    /// emulation or an unacked channel — §VI ¶1: the *node* decides to
+    /// send or discard, so the sender always knows). Default: drop.
+    /// Mass-conserving protocols (OSGP's push-sum) reabsorb the payload.
+    fn on_send_failed(&mut self, _msg: Msg) {}
+}
+
+/// Algorithm selector (CLI / benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    RFast,
+    /// R-FAST with the robust ρ/ρ̃ scheme replaced by one-shot z-deltas —
+    /// the ablation isolating what robust tracking buys under packet loss.
+    RFastNaive,
+    PushPull,
+    DPsgd,
+    SAb,
+    AdPsgd,
+    Osgp,
+    RingAllReduce,
+}
+
+impl AlgoKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::RFast => "R-FAST",
+            AlgoKind::RFastNaive => "R-FAST(naive-GT)",
+            AlgoKind::PushPull => "Push-Pull",
+            AlgoKind::DPsgd => "D-PSGD",
+            AlgoKind::SAb => "S-AB",
+            AlgoKind::AdPsgd => "AD-PSGD",
+            AlgoKind::Osgp => "OSGP",
+            AlgoKind::RingAllReduce => "Ring-AllReduce",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AlgoKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "rfast" | "r-fast" => AlgoKind::RFast,
+            "rfast-naive" | "naive" | "r-fast(naive-gt)" => AlgoKind::RFastNaive,
+            "pushpull" | "push-pull" => AlgoKind::PushPull,
+            "dpsgd" | "d-psgd" => AlgoKind::DPsgd,
+            "sab" | "s-ab" => AlgoKind::SAb,
+            "adpsgd" | "ad-psgd" => AlgoKind::AdPsgd,
+            "osgp" => AlgoKind::Osgp,
+            "allreduce" | "ring-allreduce" => AlgoKind::RingAllReduce,
+            _ => return None,
+        })
+    }
+
+    /// Is the algorithm fully asynchronous (nodes never block)?
+    pub fn is_async(&self) -> bool {
+        matches!(
+            self,
+            AlgoKind::RFast | AlgoKind::RFastNaive | AlgoKind::AdPsgd | AlgoKind::Osgp
+        )
+    }
+
+    /// May the link layer drop this algorithm's messages? (Paper §VI ¶1:
+    /// packet loss is emulated for the asynchronous algorithms only —
+    /// synchronous ones would deadlock.)
+    pub fn tolerates_loss(&self) -> bool {
+        self.is_async()
+    }
+
+    /// Build the per-node state machines over a topology.
+    ///
+    /// `x0` is the shared initial parameter vector; `gamma` the step size.
+    /// D-PSGD / AD-PSGD require an undirected doubly-stochastic graph and
+    /// therefore ignore the directed structure of `topo`, building a
+    /// Metropolis ring over the same node count (exactly the paper's setup:
+    /// "We run D-PSGD and AD-PSGD over an undirected ring graph").
+    pub fn build(&self, topo: &Topology, x0: &[f32], gamma: f32,
+                 seed: u64) -> Vec<Box<dyn NodeState>> {
+        let n = topo.n();
+        match self {
+            AlgoKind::RFast => rfast::build(topo, x0, gamma, RFastParams {
+                robust: true,
+            }),
+            AlgoKind::RFastNaive => rfast::build(topo, x0, gamma, RFastParams {
+                robust: false,
+            }),
+            AlgoKind::PushPull => push_pull::build(topo, x0, gamma),
+            AlgoKind::SAb => sab::build(topo, x0, gamma),
+            AlgoKind::DPsgd => dpsgd::build(n, x0, gamma),
+            AlgoKind::AdPsgd => adpsgd::build(n, x0, gamma, seed),
+            AlgoKind::Osgp => osgp::build(topo, x0, gamma),
+            AlgoKind::RingAllReduce => allreduce::build(n, x0, gamma),
+        }
+    }
+}
+
+/// Mean parameter across nodes (the x̄ the paper evaluates).
+pub fn mean_param(nodes: &[Box<dyn NodeState>], out: &mut Vec<f32>) {
+    let p = nodes[0].param().len();
+    out.clear();
+    out.resize(p, 0.0);
+    for node in nodes {
+        crate::linalg::axpy(out, 1.0, node.param());
+    }
+    crate::linalg::scale(out, 1.0 / nodes.len() as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [
+            AlgoKind::RFast,
+            AlgoKind::RFastNaive,
+            AlgoKind::PushPull,
+            AlgoKind::DPsgd,
+            AlgoKind::SAb,
+            AlgoKind::AdPsgd,
+            AlgoKind::Osgp,
+            AlgoKind::RingAllReduce,
+        ] {
+            let lower = k.name().to_ascii_lowercase();
+            assert_eq!(AlgoKind::from_name(&lower), Some(k), "{lower}");
+        }
+        assert_eq!(AlgoKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn async_set_matches_paper() {
+        assert!(AlgoKind::RFast.is_async());
+        assert!(AlgoKind::AdPsgd.is_async());
+        assert!(AlgoKind::Osgp.is_async());
+        assert!(!AlgoKind::DPsgd.is_async());
+        assert!(!AlgoKind::RingAllReduce.is_async());
+        assert!(!AlgoKind::SAb.is_async());
+        assert!(!AlgoKind::PushPull.is_async());
+    }
+
+    #[test]
+    fn builders_produce_n_nodes() {
+        let topo = Topology::ring(5);
+        let x0 = vec![0.0f32; 8];
+        for k in [
+            AlgoKind::RFast,
+            AlgoKind::RFastNaive,
+            AlgoKind::PushPull,
+            AlgoKind::DPsgd,
+            AlgoKind::SAb,
+            AlgoKind::AdPsgd,
+            AlgoKind::Osgp,
+            AlgoKind::RingAllReduce,
+        ] {
+            let nodes = k.build(&topo, &x0, 0.1, 1);
+            assert_eq!(nodes.len(), 5, "{}", k.name());
+            for nd in &nodes {
+                assert_eq!(nd.param().len(), 8);
+                assert_eq!(nd.local_iter(), 0);
+            }
+        }
+    }
+}

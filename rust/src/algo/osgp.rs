@@ -1,0 +1,205 @@
+//! OSGP — Overlap Stochastic Gradient Push (Assran et al. 2019): an
+//! asynchronous push-sum method over column-stochastic digraphs.
+//!
+//! Node state is the push-sum pair (x̃, w): x̃ the biased parameter mass, w
+//! the scalar weight mass; the de-biased estimate is z = x̃ / w. Per wake:
+//!
+//!   1. g = ∇f(z; ζ);  x̃ ← x̃ − γ g
+//!   2. push: send (a_ji·x̃, a_ji·w) to each A-out-neighbor, keep the
+//!      a_ii share locally
+//!   3. receive: accumulate arriving (x̃, w) mass whenever it lands
+//!      ("overlap" — no blocking on arrivals)
+//!
+//! Push-sum's correctness hinges on mass conservation; a dropped message
+//! destroys both x̃- and w-mass, biasing the average — the robustness gap
+//! R-FAST's ρ/ρ̃ scheme closes (paper Table II: OSGP's accuracy drop under
+//! loss). A corollary: OSGP needs compute-time ≫ link-RTT, because the
+//! link layer's one-in-flight rule discards sends on busy channels and
+//! every discard destroys mass; R-FAST's running sums are immune to both
+//! failure modes.
+
+use super::{Msg, MsgKind, NodeState};
+use crate::graph::Topology;
+use crate::oracle::NodeOracle;
+
+pub fn build(topo: &Topology, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
+    (0..topo.n())
+        .map(|i| Box::new(OsgpNode::new(i, topo, x0, gamma)) as Box<dyn NodeState>)
+        .collect()
+}
+
+pub struct OsgpNode {
+    id: usize,
+    gamma: f32,
+    t: u64,
+    /// biased parameter mass x̃
+    xt: Vec<f32>,
+    /// push-sum weight w
+    w: f64,
+    /// de-biased estimate z = x̃/w (cached for param())
+    z: Vec<f32>,
+    g: Vec<f32>,
+    a_ii: f32,
+    a_out: Vec<(usize, f32)>,
+}
+
+impl OsgpNode {
+    pub fn new(id: usize, topo: &Topology, x0: &[f32], gamma: f32) -> OsgpNode {
+        let wm = &topo.weights;
+        OsgpNode {
+            id,
+            gamma,
+            t: 0,
+            xt: x0.to_vec(),
+            w: 1.0,
+            z: x0.to_vec(),
+            g: vec![0.0; x0.len()],
+            a_ii: wm.a.get(id, id),
+            a_out: wm.a_out[id].iter().map(|&j| (j, wm.a.get(j, id))).collect(),
+        }
+    }
+
+    fn rebias(&mut self) {
+        // Under heavy packet loss w can collapse toward 0 (lost push-sum
+        // mass). Floor the denominator so z stays finite — the estimate is
+        // still biased, which is the honest failure mode Table II shows
+        // for OSGP; we just avoid 0/0 = NaN in the metrics.
+        let inv = (1.0 / self.w.max(1e-12)) as f32;
+        crate::linalg::scale_into(&mut self.z, inv, &self.xt);
+    }
+
+    pub fn weight(&self) -> f64 {
+        self.w
+    }
+}
+
+impl NodeState for OsgpNode {
+    fn ready(&self) -> bool {
+        true // overlap: never blocks
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        // gradient at the de-biased estimate
+        let loss = oracle.grad(&self.z, &mut self.g);
+        // biased mass absorbs the step scaled by w (standard SGP form:
+        // x̃ ← x̃ − γ·w·g keeps z's effective step ≈ γ regardless of bias)
+        let scale = -(self.gamma as f64 * self.w) as f32;
+        crate::linalg::axpy(&mut self.xt, scale, &self.g);
+        // push shares
+        for &(j, a_ji) in &self.a_out {
+            let mut share = vec![0.0f32; self.xt.len()];
+            crate::linalg::scale_into(&mut share, a_ji, &self.xt);
+            let mut m = Msg::new(self.id, j, MsgKind::PushSum, self.t, share);
+            m.aux = a_ji as f64 * self.w;
+            out.push(m);
+        }
+        // keep own share
+        crate::linalg::scale(&mut self.xt, self.a_ii);
+        self.w *= self.a_ii as f64;
+        self.rebias();
+        self.t += 1;
+        Some(loss)
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        if msg.kind == MsgKind::PushSum {
+            crate::linalg::axpy(&mut self.xt, 1.0, &msg.payload);
+            self.w += msg.aux;
+            self.rebias();
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn on_send_failed(&mut self, msg: Msg) {
+        // sender-side discard: reabsorb the push-sum mass instead of
+        // destroying it (the sender knows it didn't send — paper §VI ¶1).
+        // In-flight losses cannot be reabsorbed; they are what degrades
+        // OSGP relative to R-FAST.
+        if msg.kind == MsgKind::PushSum {
+            crate::linalg::axpy(&mut self.xt, 1.0, &msg.payload);
+            self.w += msg.aux;
+            self.rebias();
+        }
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.z
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+    use crate::prng::Rng;
+
+    fn run(n: usize, spread: f32, iters: usize, drop_prob: f64,
+           seed: u64) -> (Vec<Box<dyn NodeState>>, Vec<f32>) {
+        let topo = Topology::ring(n);
+        let q = QuadraticOracle::new(6, n, 0.5, 2.0, spread, 0.0, seed);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &vec![0.0; 6], 0.03);
+        let mut rng = Rng::new(seed ^ 0xfeed);
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..iters {
+            let i = rng.below(n);
+            nodes[i].wake(set.nodes[i].as_mut(), &mut out);
+            for m in out.drain(..) {
+                if drop_prob > 0.0 && rng.chance(drop_prob) {
+                    continue; // lost: push-sum mass destroyed
+                }
+                let to = m.to;
+                nodes[to].receive(m, &mut replies);
+            }
+        }
+        (nodes, xs)
+    }
+
+    #[test]
+    fn weights_stay_positive_and_mass_conserved_without_loss() {
+        let (nodes, _) = run(4, 1.0, 2000, 0.0, 3);
+        for nd in nodes {
+            assert!(nd.local_iter() > 0);
+        }
+    }
+
+    #[test]
+    fn converges_homogeneous_no_loss() {
+        let (nodes, xs) = run(4, 0.0, 12_000, 0.0, 5);
+        for nd in &nodes {
+            let gap = crate::linalg::dist(nd.param(), &xs);
+            assert!(gap < 5e-2, "gap {gap}");
+        }
+    }
+
+    #[test]
+    fn packet_loss_degrades_osgp() {
+        // with HETEROGENEOUS objectives, lost push-sum mass biases the
+        // consensus average — compare mean gaps over nodes
+        let gap_of = |drop: f64| -> f64 {
+            let (nodes, xs) = run(4, 2.0, 12_000, drop, 11);
+            let g = nodes
+                .iter()
+                .map(|nd| crate::linalg::dist(nd.param(), &xs))
+                .sum::<f64>()
+                / nodes.len() as f64;
+            if g.is_finite() { g } else { f64::MAX / 4.0 }
+        };
+        let g_clean = gap_of(0.0);
+        let g_lossy = gap_of(0.35);
+        assert!(
+            g_lossy > 1.5 * g_clean,
+            "loss should hurt OSGP: clean {g_clean} lossy {g_lossy}"
+        );
+    }
+}

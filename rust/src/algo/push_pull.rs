@@ -1,0 +1,214 @@
+//! Synchronous Push-Pull (paper eq. (2); Pu et al. 2020) — the algorithm
+//! R-FAST reduces to under the synchronous schedule of Remark 2.
+//!
+//!   x_i^{t+1} = Σ_j w_ij (x_j^t − γ z_j^t)
+//!   z_i^{t+1} = Σ_j a_ij z_j^t + ∇f_i(x_i^{t+1};ζ^{t+1}) − ∇f_i(x_i^t;ζ^t)
+//!
+//! Message plan per round t: node j sends `m_j = x_j − γ z_j` on W-edges
+//! and the pre-weighted `a_ij · z_j` on A-edges, both stamped t. A node
+//! `ready`s for round t+1 only when every round-t input arrived — the
+//! barrier that makes this (and every sync baseline) straggler-bound.
+
+use super::roundbuf::RoundBuf;
+use super::{Msg, MsgKind, NodeState};
+use crate::graph::Topology;
+use crate::oracle::NodeOracle;
+
+pub fn build(topo: &Topology, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
+    (0..topo.n())
+        .map(|i| Box::new(PushPullNode::new(i, topo, x0, gamma)) as Box<dyn NodeState>)
+        .collect()
+}
+
+pub struct PushPullNode {
+    id: usize,
+    gamma: f32,
+    t: u64,
+    w_ii: f32,
+    w_in_weights: Vec<f32>,
+    w_out: Vec<usize>,
+    a_ii: f32,
+    /// (out-neighbor j, a_ji) — sender pre-weights its z by the receiver's
+    /// column entry.
+    a_out: Vec<(usize, f32)>,
+    x: Vec<f32>,
+    z: Vec<f32>,
+    g_prev: Vec<f32>,
+    g_new: Vec<f32>,
+    vbuf: RoundBuf,
+    zbuf: RoundBuf,
+    initialized: bool,
+}
+
+impl PushPullNode {
+    pub fn new(id: usize, topo: &Topology, x0: &[f32], gamma: f32) -> PushPullNode {
+        let wm = &topo.weights;
+        let p = x0.len();
+        PushPullNode {
+            id,
+            gamma,
+            t: 0,
+            w_ii: wm.w.get(id, id),
+            w_in_weights: wm.w_in[id].iter().map(|&j| wm.w.get(id, j)).collect(),
+            w_out: wm.w_out[id].clone(),
+            a_ii: wm.a.get(id, id),
+            a_out: wm.a_out[id].iter().map(|&j| (j, wm.a.get(j, id))).collect(),
+            x: x0.to_vec(),
+            z: vec![0.0; p],
+            g_prev: vec![0.0; p],
+            g_new: vec![0.0; p],
+            vbuf: RoundBuf::new(wm.w_in[id].clone()),
+            zbuf: RoundBuf::new(wm.a_in[id].clone()),
+            initialized: false,
+        }
+    }
+
+    fn send_round(&self, out: &mut Vec<Msg>) {
+        // m = x − γ z on W-edges
+        let mut m = self.x.clone();
+        crate::linalg::axpy(&mut m, -self.gamma, &self.z);
+        for &j in &self.w_out {
+            out.push(Msg::new(self.id, j, MsgKind::V, self.t, m.clone()));
+        }
+        // a_ij-weighted z on A-edges
+        for &(j, a_ji) in &self.a_out {
+            let mut wz = vec![0.0f32; self.z.len()];
+            crate::linalg::scale_into(&mut wz, a_ji, &self.z);
+            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t, wz));
+        }
+    }
+}
+
+impl NodeState for PushPullNode {
+    fn ready(&self) -> bool {
+        if !self.initialized {
+            return true;
+        }
+        let prev = self.t - 1;
+        self.vbuf.has_all(prev) && self.zbuf.has_all(prev)
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        if !self.initialized {
+            // round 0: z⁰ = ∇f(x⁰; ζ⁰), broadcast round-0 messages
+            let loss = oracle.grad(&self.x, &mut self.g_prev);
+            self.z.copy_from_slice(&self.g_prev);
+            self.initialized = true;
+            self.send_round(out);
+            self.t = 1;
+            return Some(loss);
+        }
+        let prev = self.t - 1;
+        // pull: x ← w_ii (x − γ z) + Σ_j w_ij m_j
+        let mut x_new = self.x.clone();
+        crate::linalg::axpy(&mut x_new, -self.gamma, &self.z);
+        crate::linalg::scale(&mut x_new, self.w_ii);
+        for k in 0..self.w_in_weights.len() {
+            let m = self.vbuf.take(k, prev);
+            crate::linalg::axpy(&mut x_new, self.w_in_weights[k], &m);
+        }
+        // push: z ← a_ii z + Σ_j (a_ij z_j) + ∇f(x_new) − ∇f(x_old)
+        let mut z_new = vec![0.0f32; self.z.len()];
+        crate::linalg::scale_into(&mut z_new, self.a_ii, &self.z);
+        for k in 0..self.zbuf.peers().len() {
+            let wz = self.zbuf.take(k, prev);
+            crate::linalg::axpy(&mut z_new, 1.0, &wz);
+        }
+        let loss = oracle.grad(&x_new, &mut self.g_new);
+        crate::linalg::add_diff(&mut z_new, &self.g_new, &self.g_prev);
+        std::mem::swap(&mut self.g_prev, &mut self.g_new);
+
+        self.x = x_new;
+        self.z = z_new;
+        self.send_round(out);
+        self.t += 1;
+        Some(loss)
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        match msg.kind {
+            MsgKind::V => {
+                self.vbuf.insert(msg.from, msg.stamp, msg.payload);
+            }
+            MsgKind::ZDelta => {
+                self.zbuf.insert(msg.from, msg.stamp, msg.payload);
+            }
+            _ => {}
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+
+    /// Lock-step driver honoring the barrier (all nodes each round).
+    fn drive(nodes: &mut [Box<dyn NodeState>],
+             oracles: &mut [Box<dyn NodeOracle>], rounds: usize) {
+        let mut out = Vec::new();
+        for _ in 0..rounds {
+            for i in 0..nodes.len() {
+                assert!(nodes[i].ready(), "barrier violated at node {i}");
+                nodes[i].wake(oracles[i].as_mut(), &mut out);
+            }
+            let mut replies = Vec::new();
+            for msg in out.drain(..) {
+                let to = msg.to;
+                nodes[to].receive(msg, &mut replies);
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_ring_quadratic() {
+        let topo = Topology::ring(5);
+        let q = QuadraticOracle::heterogeneous(8, 5, 0.5, 2.0, 17);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &vec![0.0; 8], 0.04);
+        drive(&mut nodes, &mut set.nodes, 3000);
+        for nd in &nodes {
+            let gap = crate::linalg::dist(nd.param(), &xs);
+            assert!(gap < 1e-3, "gap {gap}");
+        }
+    }
+
+    #[test]
+    fn converges_on_star_quadratic() {
+        let topo = Topology::star(6);
+        let q = QuadraticOracle::heterogeneous(4, 6, 0.5, 2.0, 23);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &vec![0.5; 4], 0.04);
+        drive(&mut nodes, &mut set.nodes, 5000);
+        let gap = crate::linalg::dist(nodes[0].param(), &xs);
+        assert!(gap < 2e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn not_ready_until_round_messages_arrive() {
+        let topo = Topology::ring(3);
+        let q = QuadraticOracle::heterogeneous(2, 3, 1.0, 1.0, 1);
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &[0.0, 0.0], 0.1);
+        let mut out = Vec::new();
+        assert!(nodes[0].ready());
+        nodes[0].wake(set.nodes[0].as_mut(), &mut out);
+        // round 1 requires round-0 inputs from the ring predecessor
+        assert!(!nodes[0].ready());
+    }
+}

@@ -1,0 +1,489 @@
+//! R-FAST (Algorithm 1 of the paper) — the core contribution.
+//!
+//! Per-node state, local view (the subscript i is this node):
+//!
+//! | paper | field | role |
+//! |-------|-------|------|
+//! | x_i^t | `x` | model estimate |
+//! | z_i^t | `z` | tracked global-gradient estimate |
+//! | v_i^{t+1} | `v_self` | post-descent intermediate |
+//! | ∇f_i(x^t;ζ^t) | `g_prev` | last gradient sample (cleared out at S2b) |
+//! | v_j^{τ_{v,ij}} | `v_in[j]` | freshest received v per W-in-neighbor |
+//! | ρ_ij^{τ_{ρ,ij}} | `rho_in[j]` | freshest received running sum per A-in-neighbor |
+//! | ρ̃_ij | `rho_tilde[j]` | last *consumed* running sum (buffer) |
+//! | ρ_ji | `rho_out[j]` | running sum pushed to A-out-neighbor j |
+//!
+//! The robust part: ρ_ji accumulates `a_ji · z_i^{t+½}` forever, and the
+//! receiver applies `ρ(latest) − ρ̃(consumed)`. A dropped ρ-packet is
+//! subsumed by any later one, so packet loss delays — but never destroys —
+//! gradient mass. The naive-GT ablation (`robust: false`) sends the
+//! one-shot increment instead; a dropped packet then loses its mass
+//! permanently, which is precisely what `benches/ablation_packet_loss.rs`
+//! measures.
+//!
+//! Freshest-wins: every packet carries the sender's local iteration stamp
+//! (S3); `receive` keeps the largest stamp per neighbor, which implements
+//! the paper's τ_{v,ij} / τ_{ρ,ij} "most updated one" selection under
+//! arbitrary reordering.
+
+use super::{Msg, MsgKind, NodeState};
+use crate::graph::Topology;
+use crate::oracle::NodeOracle;
+
+/// Variant knobs (the ablation switch).
+#[derive(Clone, Copy, Debug)]
+pub struct RFastParams {
+    /// `true` = paper's robust running-sum scheme; `false` = naive one-shot
+    /// gradient-tracking increments.
+    pub robust: bool,
+}
+
+impl Default for RFastParams {
+    fn default() -> Self {
+        RFastParams { robust: true }
+    }
+}
+
+/// Build all node state machines for a topology.
+pub fn build(topo: &Topology, x0: &[f32], gamma: f32,
+             params: RFastParams) -> Vec<Box<dyn NodeState>> {
+    (0..topo.n())
+        .map(|i| {
+            Box::new(RFastNode::new(i, topo, x0, gamma, params))
+                as Box<dyn NodeState>
+        })
+        .collect()
+}
+
+/// Freshest-stamp buffer for one in-neighbor.
+#[derive(Clone, Debug)]
+struct Fresh {
+    stamp: u64,
+    data: Vec<f32>,
+}
+
+/// Freshest-stamp buffer for ρ (f64 — see `Msg::payload64`).
+#[derive(Clone, Debug)]
+struct Fresh64 {
+    stamp: u64,
+    data: Vec<f64>,
+}
+
+pub struct RFastNode {
+    id: usize,
+    gamma: f32,
+    params: RFastParams,
+    t: u64,
+
+    // mixing structure (weights resolved once at build time)
+    w_ii: f32,
+    /// (neighbor j, w_ij) for j ∈ N_i^in(W)
+    w_in: Vec<(usize, f32)>,
+    w_out: Vec<usize>,
+    a_ii: f32,
+    /// (neighbor j, a_ji) for j ∈ N_i^out(A)
+    a_out: Vec<(usize, f32)>,
+    a_in: Vec<usize>,
+
+    // state vectors
+    x: Vec<f32>,
+    z: Vec<f32>,
+    v_self: Vec<f32>,
+    g_prev: Vec<f32>,
+    g_new: Vec<f32>,
+    z_half: Vec<f32>,
+
+    /// freshest v per W-in-neighbor (parallel to `w_in`); paper init v⁰=0.
+    v_in: Vec<Fresh>,
+    /// freshest ρ per A-in-neighbor (parallel to `a_in`). f64: the
+    /// running-sum difference ρ−ρ̃ cancels catastrophically in f32.
+    rho_in: Vec<Fresh64>,
+    /// consumed buffer ρ̃ per A-in-neighbor.
+    rho_tilde: Vec<Vec<f64>>,
+    /// running sums ρ_ji per A-out-neighbor (parallel to `a_out`);
+    /// in naive mode reused as the per-wake increment scratch.
+    rho_out: Vec<Vec<f64>>,
+    /// naive mode: accumulated received one-shot increments per A-in.
+    pending_delta: Vec<f32>,
+
+    initialized: bool,
+}
+
+impl RFastNode {
+    pub fn new(id: usize, topo: &Topology, x0: &[f32], gamma: f32,
+               params: RFastParams) -> RFastNode {
+        let wm = &topo.weights;
+        let p = x0.len();
+        let w_in: Vec<(usize, f32)> =
+            wm.w_in[id].iter().map(|&j| (j, wm.w.get(id, j))).collect();
+        let a_out: Vec<(usize, f32)> =
+            wm.a_out[id].iter().map(|&j| (j, wm.a.get(j, id))).collect();
+        let a_in = wm.a_in[id].clone();
+        RFastNode {
+            id,
+            gamma,
+            params,
+            t: 0,
+            w_ii: wm.w.get(id, id),
+            w_out: wm.w_out[id].clone(),
+            a_ii: wm.a.get(id, id),
+            a_in: a_in.clone(),
+            x: x0.to_vec(),
+            z: vec![0.0; p],
+            v_self: vec![0.0; p],
+            g_prev: vec![0.0; p],
+            g_new: vec![0.0; p],
+            z_half: vec![0.0; p],
+            v_in: w_in
+                .iter()
+                .map(|_| Fresh { stamp: 0, data: vec![0.0; p] })
+                .collect(),
+            rho_in: a_in
+                .iter()
+                .map(|_| Fresh64 { stamp: 0, data: vec![0.0; p] })
+                .collect(),
+            rho_tilde: a_in.iter().map(|_| vec![0.0; p]).collect(),
+            rho_out: a_out.iter().map(|_| vec![0.0; p]).collect(),
+            pending_delta: vec![0.0; p],
+            w_in,
+            a_out,
+            initialized: false,
+        }
+    }
+
+    /// Test/diagnostic access: current tracked gradient z_i.
+    pub fn z(&self) -> &[f32] {
+        &self.z
+    }
+
+    /// Test access: total un-consumed mass this node still owes the
+    /// network view (for the conservation invariant): Σ_out ρ_ji minus
+    /// what receivers have consumed lives on the *edges*; this exposes
+    /// the sender-side running sums.
+    pub fn rho_out_sums(&self) -> &[Vec<f64>] {
+        &self.rho_out
+    }
+
+    pub fn rho_tilde_sums(&self) -> &[Vec<f64>] {
+        &self.rho_tilde
+    }
+
+    pub fn a_in_ids(&self) -> &[usize] {
+        &self.a_in
+    }
+
+    pub fn a_out_ids(&self) -> Vec<usize> {
+        self.a_out.iter().map(|&(j, _)| j).collect()
+    }
+
+    pub fn last_grad(&self) -> &[f32] {
+        &self.g_prev
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+
+    pub fn pending_delta_sum(&self) -> &[f32] {
+        &self.pending_delta
+    }
+}
+
+impl NodeState for RFastNode {
+    fn ready(&self) -> bool {
+        true // fully asynchronous: never blocks (paper §IV i)
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        let p = self.x.len();
+        debug_assert_eq!(oracle.dim(), p);
+
+        // Initialization (Algorithm 1 line 1): z_i^0 = ∇f_i(x_i^0; ζ_i^0).
+        if !self.initialized {
+            let _ = oracle.grad(&self.x, &mut self.g_prev);
+            self.z.copy_from_slice(&self.g_prev);
+            self.initialized = true;
+        }
+
+        // (S1) local descent: v^{t+1} = x^t − γ z^t
+        self.v_self.copy_from_slice(&self.x);
+        crate::linalg::axpy(&mut self.v_self, -self.gamma, &self.z);
+
+        // (S2a) consensus pull: x^{t+1} = w_ii v^{t+1} + Σ w_ij v_j^{τ}
+        {
+            // reuse z_half as scratch for x_new to avoid allocation
+            let x_new = &mut self.z_half;
+            crate::linalg::scale_into(x_new, self.w_ii, &self.v_self);
+            for (k, &(_, w_ij)) in self.w_in.iter().enumerate() {
+                crate::linalg::axpy(x_new, w_ij, &self.v_in[k].data);
+            }
+            std::mem::swap(&mut self.x, &mut self.z_half);
+        }
+
+        // (S2b) z^{t+½} = z^t + Σ_j (ρ_ij^τ − ρ̃_ij) + ∇f(x^{t+1};ζ^{t+1}) − ∇f(x^t;ζ^t)
+        self.z_half.copy_from_slice(&self.z);
+        if self.params.robust {
+            for k in 0..self.a_in.len() {
+                // difference in f64, then cast: the whole point of the
+                // f64 ρ pipeline (see Msg::payload64)
+                for ((zh, riv), rtv) in self
+                    .z_half
+                    .iter_mut()
+                    .zip(&self.rho_in[k].data)
+                    .zip(&self.rho_tilde[k])
+                {
+                    *zh += (riv - rtv) as f32;
+                }
+            }
+        } else {
+            // naive GT: apply accumulated one-shot increments
+            crate::linalg::axpy(&mut self.z_half, 1.0, &self.pending_delta);
+            self.pending_delta.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let loss = oracle.grad(&self.x, &mut self.g_new);
+        crate::linalg::add_diff(&mut self.z_half, &self.g_new, &self.g_prev);
+        std::mem::swap(&mut self.g_prev, &mut self.g_new);
+
+        // (S2c) z^{t+1} = a_ii z^{t+½};  ρ_ji += a_ji z^{t+½}
+        crate::linalg::scale_into(&mut self.z, self.a_ii, &self.z_half);
+        for (k, &(_, a_ji)) in self.a_out.iter().enumerate() {
+            if self.params.robust {
+                for (r, &zh) in self.rho_out[k].iter_mut().zip(&self.z_half) {
+                    *r += a_ji as f64 * zh as f64;
+                }
+            } else {
+                // one-shot increment: overwrite the scratch with a_ji·z½
+                for (r, &zh) in self.rho_out[k].iter_mut().zip(&self.z_half) {
+                    *r = a_ji as f64 * zh as f64;
+                }
+            }
+        }
+
+        // (S3) sends, stamped t+1. The engine's link layer decides delay /
+        // loss / in-flight limits; the algorithm just emits.
+        let stamp = self.t + 1;
+        for &j in &self.w_out {
+            out.push(Msg::new(self.id, j, MsgKind::V, stamp,
+                              self.v_self.clone()));
+        }
+        for (k, &(j, _)) in self.a_out.iter().enumerate() {
+            if self.params.robust {
+                out.push(Msg::new64(self.id, j, MsgKind::Rho, stamp,
+                                    self.rho_out[k].clone()));
+            } else {
+                let delta: Vec<f32> =
+                    self.rho_out[k].iter().map(|&v| v as f32).collect();
+                out.push(Msg::new(self.id, j, MsgKind::ZDelta, stamp, delta));
+            }
+        }
+
+        // (S4) buffer update: ρ̃ ← ρ(consumed)
+        if self.params.robust {
+            for k in 0..self.a_in.len() {
+                self.rho_tilde[k].copy_from_slice(&self.rho_in[k].data);
+            }
+        }
+
+        // (S5) t += 1
+        self.t += 1;
+        Some(loss)
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        match msg.kind {
+            MsgKind::V => {
+                if let Some(k) =
+                    self.w_in.iter().position(|&(j, _)| j == msg.from)
+                {
+                    // freshest-wins (τ_{v,ij} = largest stamp received)
+                    if msg.stamp > self.v_in[k].stamp {
+                        self.v_in[k].stamp = msg.stamp;
+                        self.v_in[k].data = msg.payload;
+                    }
+                }
+            }
+            MsgKind::Rho => {
+                if let Some(k) = self.a_in.iter().position(|&j| j == msg.from) {
+                    if msg.stamp > self.rho_in[k].stamp {
+                        self.rho_in[k].stamp = msg.stamp;
+                        self.rho_in[k].data = msg.payload64;
+                    }
+                }
+            }
+            MsgKind::ZDelta => {
+                // naive mode: increments accumulate regardless of order;
+                // a dropped packet's mass is simply gone.
+                if self.a_in.contains(&msg.from) {
+                    crate::linalg::axpy(&mut self.pending_delta, 1.0,
+                                        &msg.payload);
+                }
+            }
+            _ => { /* other kinds are never routed to R-FAST nodes */ }
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+
+    fn drive_round_robin(
+        nodes: &mut [Box<dyn NodeState>],
+        oracles: &mut [Box<dyn NodeOracle>],
+        iters: usize,
+    ) {
+        // synchronous schedule of Remark 2: round-robin activation with
+        // immediate delivery
+        let mut outbox = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..iters {
+            for i in 0..nodes.len() {
+                nodes[i].wake(oracles[i].as_mut(), &mut outbox);
+                for msg in outbox.drain(..) {
+                    let to = msg.to;
+                    nodes[to].receive(msg, &mut replies);
+                }
+                assert!(replies.is_empty(), "R-FAST never replies");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic_ring_round_robin() {
+        let topo = Topology::ring(4);
+        let q = QuadraticOracle::heterogeneous(6, 4, 0.5, 2.0, 3);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let x0 = vec![0.0f32; 6];
+        let mut nodes = build(&topo, &x0, 0.05, RFastParams::default());
+        drive_round_robin(&mut nodes, &mut set.nodes, 12_000);
+        for nd in &nodes {
+            let gap = crate::linalg::dist(nd.param(), &xs);
+            assert!(gap < 1e-3, "gap {gap}");
+        }
+    }
+
+    #[test]
+    fn converges_on_binary_tree() {
+        // non-strongly-connected: the whole point of Assumption 2
+        let topo = Topology::binary_tree(7);
+        let q = QuadraticOracle::heterogeneous(4, 7, 0.5, 2.0, 9);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &vec![0.0; 4], 0.03, RFastParams::default());
+        drive_round_robin(&mut nodes, &mut set.nodes, 12_000);
+        let gap = crate::linalg::dist(nodes[0].param(), &xs);
+        assert!(gap < 5e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn stale_messages_are_ignored() {
+        let topo = Topology::ring(3);
+        let mut node = RFastNode::new(1, &topo, &[0.0, 0.0], 0.1,
+                                      RFastParams::default());
+        let fresh = Msg::new(0, 1, MsgKind::V, 5, vec![5.0, 5.0]);
+        let stale = Msg::new(0, 1, MsgKind::V, 3, vec![3.0, 3.0]);
+        node.receive(fresh, &mut Vec::new());
+        node.receive(stale, &mut Vec::new());
+        assert_eq!(node.v_in[0].data, vec![5.0, 5.0]);
+        assert_eq!(node.v_in[0].stamp, 5);
+    }
+
+    #[test]
+    fn messages_from_non_neighbors_are_dropped() {
+        let topo = Topology::line(4); // W-in of node 2 = {1}
+        let mut node = RFastNode::new(2, &topo, &[0.0], 0.1,
+                                      RFastParams::default());
+        node.receive(Msg::new(3, 2, MsgKind::V, 9, vec![9.0]), &mut Vec::new());
+        assert!(node.v_in.iter().all(|f| f.stamp == 0));
+    }
+
+    #[test]
+    fn emits_expected_message_set() {
+        let topo = Topology::binary_tree(3); // 0 → {1,2} in W; {1,2} → 0 in A
+        let q = QuadraticOracle::heterogeneous(2, 3, 1.0, 1.0, 1);
+        let mut set = q.into_set();
+        let mut root = RFastNode::new(0, &topo, &[0.0, 0.0], 0.1,
+                                      RFastParams::default());
+        let mut out = Vec::new();
+        root.wake(set.nodes[0].as_mut(), &mut out);
+        // root sends V to children (W-out), and ρ to nobody (A-out of root
+        // in a tree: children push UP to root, so root has no A-out).
+        let v_msgs: Vec<_> =
+            out.iter().filter(|m| m.kind == MsgKind::V).collect();
+        assert_eq!(v_msgs.len(), 2);
+        assert!(out.iter().all(|m| m.kind != MsgKind::Rho));
+
+        let mut leaf = RFastNode::new(1, &topo, &[0.0, 0.0], 0.1,
+                                      RFastParams::default());
+        out.clear();
+        leaf.wake(set.nodes[1].as_mut(), &mut out);
+        // leaf 1: no W-out (tree leaf), one A-out (to parent 0)
+        assert_eq!(out.iter().filter(|m| m.kind == MsgKind::V).count(), 0);
+        let rho: Vec<_> = out.iter().filter(|m| m.kind == MsgKind::Rho).collect();
+        assert_eq!(rho.len(), 1);
+        assert_eq!(rho[0].to, 0);
+        assert_eq!(rho[0].stamp, 1);
+    }
+
+    #[test]
+    fn naive_mode_sends_deltas() {
+        let topo = Topology::ring(3);
+        let q = QuadraticOracle::heterogeneous(2, 3, 1.0, 1.0, 1);
+        let mut set = q.into_set();
+        let mut node = RFastNode::new(0, &topo, &[1.0, 1.0], 0.1,
+                                      RFastParams { robust: false });
+        let mut out = Vec::new();
+        node.wake(set.nodes[0].as_mut(), &mut out);
+        assert!(out.iter().any(|m| m.kind == MsgKind::ZDelta));
+        assert!(out.iter().all(|m| m.kind != MsgKind::Rho));
+    }
+
+    #[test]
+    fn rho_running_sum_monotone_growth() {
+        // after two wakes the ρ payload must equal the SUM of both
+        // increments (that's what makes re-delivery subsume losses)
+        let topo = Topology::line(2); // node 0 → 1 in W, 1 → 0 in A
+        let q = QuadraticOracle::heterogeneous(2, 2, 1.0, 1.0, 5);
+        let mut set = q.into_set();
+        let mut node1 = RFastNode::new(1, &topo, &[1.0, -1.0], 0.1,
+                                       RFastParams::default());
+        let mut out = Vec::new();
+        node1.wake(set.nodes[1].as_mut(), &mut out);
+        let rho1 = out
+            .iter()
+            .find(|m| m.kind == MsgKind::Rho)
+            .unwrap()
+            .payload64
+            .clone();
+        out.clear();
+        node1.wake(set.nodes[1].as_mut(), &mut out);
+        let rho2 = out
+            .iter()
+            .find(|m| m.kind == MsgKind::Rho)
+            .unwrap()
+            .payload64
+            .clone();
+        // second running sum strictly extends the first (non-zero z½)
+        let diff: f64 = rho2
+            .iter()
+            .zip(&rho1)
+            .map(|(b, a)| (b - a).abs())
+            .sum();
+        assert!(diff > 0.0, "running sum did not grow");
+    }
+}

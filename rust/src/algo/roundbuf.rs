@@ -1,0 +1,94 @@
+//! Per-round message buffering for the synchronous baselines.
+//!
+//! A synchronous node at round `t` must combine exactly the round-`t`
+//! payloads of each in-neighbor. Links may deliver out of order (latency
+//! jitter), so arrivals are keyed by (peer, stamp); `has_all(t)` is the
+//! barrier predicate behind [`super::NodeState::ready`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct RoundBuf {
+    peers: Vec<usize>,
+    per: Vec<BTreeMap<u64, Vec<f32>>>,
+}
+
+impl RoundBuf {
+    pub fn new(peers: Vec<usize>) -> RoundBuf {
+        let per = peers.iter().map(|_| BTreeMap::new()).collect();
+        RoundBuf { peers, per }
+    }
+
+    pub fn peers(&self) -> &[usize] {
+        &self.peers
+    }
+
+    /// Store a payload; returns false if `from` is not a tracked peer.
+    pub fn insert(&mut self, from: usize, stamp: u64, payload: Vec<f32>) -> bool {
+        match self.peers.iter().position(|&p| p == from) {
+            Some(k) => {
+                self.per[k].insert(stamp, payload);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Have all peers delivered round `stamp`?
+    pub fn has_all(&self, stamp: u64) -> bool {
+        self.per.iter().all(|m| m.contains_key(&stamp))
+    }
+
+    /// Remove and return peer `k`'s round-`stamp` payload (panics if
+    /// absent — callers must check `has_all` first).
+    pub fn take(&mut self, k: usize, stamp: u64) -> Vec<f32> {
+        self.per[k]
+            .remove(&stamp)
+            .unwrap_or_else(|| panic!("round {stamp} payload missing for peer index {k}"))
+    }
+
+    /// Drop all rounds `< stamp` (bounded memory under jitter).
+    pub fn gc_before(&mut self, stamp: u64) {
+        for m in self.per.iter_mut() {
+            *m = m.split_off(&stamp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_semantics() {
+        let mut b = RoundBuf::new(vec![3, 5]);
+        assert!(!b.has_all(0));
+        assert!(b.insert(3, 0, vec![1.0]));
+        assert!(!b.has_all(0));
+        assert!(b.insert(5, 0, vec![2.0]));
+        assert!(b.has_all(0));
+        assert!(!b.insert(9, 0, vec![0.0])); // unknown peer
+    }
+
+    #[test]
+    fn out_of_order_rounds() {
+        let mut b = RoundBuf::new(vec![1]);
+        b.insert(1, 2, vec![2.0]);
+        b.insert(1, 1, vec![1.0]);
+        assert!(b.has_all(1));
+        assert!(b.has_all(2));
+        assert_eq!(b.take(0, 1), vec![1.0]);
+        assert!(!b.has_all(1));
+        assert!(b.has_all(2));
+    }
+
+    #[test]
+    fn gc_drops_old() {
+        let mut b = RoundBuf::new(vec![1]);
+        b.insert(1, 0, vec![0.0]);
+        b.insert(1, 5, vec![5.0]);
+        b.gc_before(3);
+        assert!(!b.has_all(0));
+        assert!(b.has_all(5));
+    }
+}

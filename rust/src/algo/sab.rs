@@ -1,0 +1,178 @@
+//! S-AB (Xin, Sahu, Khan, Kar 2019): synchronous stochastic gradient
+//! tracking over strongly-connected digraphs with a row-stochastic A and a
+//! column-stochastic B:
+//!
+//!   x_i^{t+1} = Σ_j a_ij x_j^t − γ y_i^t
+//!   y_i^{t+1} = Σ_j b_ij y_j^t + ∇f_i(x_i^{t+1};ζ^{t+1}) − ∇f_i(x_i^t;ζ^t)
+//!
+//! We reuse the topology's W as the row-stochastic A and its A as the
+//! column-stochastic B (they coincide structurally on the directed ring the
+//! paper benches S-AB on). Unlike Push-Pull/R-FAST, S-AB *requires* both
+//! graphs strongly connected — running it on a tree violates its theory,
+//! which `sim` tests demonstrate empirically.
+
+use super::roundbuf::RoundBuf;
+use super::{Msg, MsgKind, NodeState};
+use crate::graph::Topology;
+use crate::oracle::NodeOracle;
+
+pub fn build(topo: &Topology, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
+    (0..topo.n())
+        .map(|i| Box::new(SabNode::new(i, topo, x0, gamma)) as Box<dyn NodeState>)
+        .collect()
+}
+
+pub struct SabNode {
+    id: usize,
+    gamma: f32,
+    t: u64,
+    a_ii: f32,
+    a_in_weights: Vec<f32>,
+    a_out_nodes: Vec<usize>,
+    b_ii: f32,
+    b_out: Vec<(usize, f32)>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    g_prev: Vec<f32>,
+    g_new: Vec<f32>,
+    xbuf: RoundBuf,
+    ybuf: RoundBuf,
+    initialized: bool,
+}
+
+impl SabNode {
+    pub fn new(id: usize, topo: &Topology, x0: &[f32], gamma: f32) -> SabNode {
+        let wm = &topo.weights;
+        let p = x0.len();
+        SabNode {
+            id,
+            gamma,
+            t: 0,
+            a_ii: wm.w.get(id, id),
+            a_in_weights: wm.w_in[id].iter().map(|&j| wm.w.get(id, j)).collect(),
+            a_out_nodes: wm.w_out[id].clone(),
+            b_ii: wm.a.get(id, id),
+            b_out: wm.a_out[id].iter().map(|&j| (j, wm.a.get(j, id))).collect(),
+            x: x0.to_vec(),
+            y: vec![0.0; p],
+            g_prev: vec![0.0; p],
+            g_new: vec![0.0; p],
+            xbuf: RoundBuf::new(wm.w_in[id].clone()),
+            ybuf: RoundBuf::new(wm.a_in[id].clone()),
+            initialized: false,
+        }
+    }
+
+    fn send_round(&self, out: &mut Vec<Msg>) {
+        for &j in &self.a_out_nodes {
+            out.push(Msg::new(self.id, j, MsgKind::X, self.t, self.x.clone()));
+        }
+        for &(j, b_ji) in &self.b_out {
+            let mut wy = vec![0.0f32; self.y.len()];
+            crate::linalg::scale_into(&mut wy, b_ji, &self.y);
+            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t, wy));
+        }
+    }
+}
+
+impl NodeState for SabNode {
+    fn ready(&self) -> bool {
+        if !self.initialized {
+            return true;
+        }
+        let prev = self.t - 1;
+        self.xbuf.has_all(prev) && self.ybuf.has_all(prev)
+    }
+
+    fn wake(&mut self, oracle: &mut dyn NodeOracle, out: &mut Vec<Msg>)
+            -> Option<f32> {
+        if !self.initialized {
+            let loss = oracle.grad(&self.x, &mut self.g_prev);
+            self.y.copy_from_slice(&self.g_prev);
+            self.initialized = true;
+            self.send_round(out);
+            self.t = 1;
+            return Some(loss);
+        }
+        let prev = self.t - 1;
+        // x ← A-mix(x) − γ y
+        let mut x_new = vec![0.0f32; self.x.len()];
+        crate::linalg::scale_into(&mut x_new, self.a_ii, &self.x);
+        for k in 0..self.a_in_weights.len() {
+            let xj = self.xbuf.take(k, prev);
+            crate::linalg::axpy(&mut x_new, self.a_in_weights[k], &xj);
+        }
+        crate::linalg::axpy(&mut x_new, -self.gamma, &self.y);
+        // y ← B-mix(y) + grad diff
+        let mut y_new = vec![0.0f32; self.y.len()];
+        crate::linalg::scale_into(&mut y_new, self.b_ii, &self.y);
+        for k in 0..self.ybuf.peers().len() {
+            let wy = self.ybuf.take(k, prev);
+            crate::linalg::axpy(&mut y_new, 1.0, &wy);
+        }
+        let loss = oracle.grad(&x_new, &mut self.g_new);
+        crate::linalg::add_diff(&mut y_new, &self.g_new, &self.g_prev);
+        std::mem::swap(&mut self.g_prev, &mut self.g_new);
+
+        self.x = x_new;
+        self.y = y_new;
+        self.send_round(out);
+        self.t += 1;
+        Some(loss)
+    }
+
+    fn receive(&mut self, msg: Msg, _out: &mut Vec<Msg>) {
+        match msg.kind {
+            MsgKind::X => {
+                self.xbuf.insert(msg.from, msg.stamp, msg.payload);
+            }
+            MsgKind::ZDelta => {
+                self.ybuf.insert(msg.from, msg.stamp, msg.payload);
+            }
+            _ => {}
+        }
+    }
+
+    fn set_gamma(&mut self, gamma: f32) {
+        self.gamma = gamma;
+    }
+
+    fn param(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn local_iter(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+
+    #[test]
+    fn converges_on_ring_quadratic() {
+        let topo = Topology::ring(4);
+        let q = QuadraticOracle::heterogeneous(6, 4, 0.5, 2.0, 31);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut nodes = build(&topo, &vec![0.2; 6], 0.04);
+        let mut out = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..4000 {
+            for i in 0..nodes.len() {
+                assert!(nodes[i].ready());
+                nodes[i].wake(set.nodes[i].as_mut(), &mut out);
+            }
+            for msg in out.drain(..) {
+                let to = msg.to;
+                nodes[to].receive(msg, &mut replies);
+            }
+        }
+        for nd in &nodes {
+            let gap = crate::linalg::dist(nd.param(), &xs);
+            assert!(gap < 2e-3, "gap {gap}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`
+//! Values may also be attached as `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        Args::parse_rest(subcommand, it)
+    }
+
+    /// Parse options only — no subcommand (the `examples/` entry points).
+    pub fn parse_opts<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        Args::parse_rest(String::new(), args.into_iter().peekable())
+    }
+
+    fn parse_rest(
+        subcommand: String,
+        mut it: std::iter::Peekable<impl Iterator<Item = String>>,
+    ) -> Result<Args, String> {
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("expected --option, got {a:?}"));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|nx| !nx.starts_with("--")).unwrap_or(false)
+            {
+                out.opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str,
+                                           default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Keys consumed as config overrides: everything not in `known`.
+    pub fn unknown_keys<'a>(&'a self, known: &[&str]) -> Vec<&'a str> {
+        self.opts
+            .keys()
+            .map(|s| s.as_str())
+            .filter(|k| !known.contains(k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = parse(&["train", "--algo", "rfast", "--nodes=8", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("algo"), Some("rfast"));
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn numbers_and_defaults() {
+        let a = parse(&["x", "--gamma", "0.5"]);
+        assert_eq!(a.parse_num("gamma", 0.0f32).unwrap(), 0.5);
+        assert_eq!(a.parse_num("seed", 42u64).unwrap(), 42);
+        assert!(a.parse_num::<f32>("gamma", 0.0).is_ok());
+        let b = parse(&["x", "--gamma", "abc"]);
+        assert!(b.parse_num::<f32>("gamma", 0.0).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.subcommand, "help");
+    }
+
+    #[test]
+    fn rejects_positional_after_subcommand() {
+        assert!(Args::parse(["x".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_listed() {
+        let a = parse(&["x", "--algo", "rfast", "--zzz", "1"]);
+        assert_eq!(a.unknown_keys(&["algo"]), vec!["zzz"]);
+    }
+}

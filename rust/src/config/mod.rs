@@ -1,0 +1,242 @@
+//! Experiment configuration: defaults, a `key = value` file format, and
+//! CLI-style overrides (serde/clap are unavailable offline — DESIGN.md §6).
+//!
+//! The timing model mirrors the paper's testbed (§VI-B): per-node compute
+//! time (lognormal jitter), per-link latency, Bernoulli packet loss with
+//! send-until-ack, and an optional straggler (a node slowed by a factor).
+//! Defaults are calibrated so grad-step : link-latency ≈ a ResNet-50 step
+//! (~200 ms) : intra-server transfer (~20 ms), matching the substitution
+//! argument of DESIGN.md §4.
+
+use std::path::Path;
+
+/// All knobs of one simulated/threaded training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Master seed; every stream (node paces, links, batchers) derives
+    /// deterministically from it.
+    pub seed: u64,
+    /// Step size γ (paper: 1e-3 logreg, 0.1 ResNet).
+    pub gamma: f32,
+    /// Mean compute time per local iteration, seconds of virtual time.
+    pub compute_mean: f64,
+    /// Lognormal sigma of compute jitter (0 = deterministic pace).
+    pub compute_jitter: f64,
+    /// Straggler: (node, slowdown factor ≥ 1). Paper §VI-B slows one GPU.
+    pub straggler: Option<(usize, f64)>,
+    /// Mean one-way link latency, seconds.
+    pub link_latency: f64,
+    /// Lognormal sigma of latency jitter.
+    pub latency_jitter: f64,
+    /// Hard cap on link latency (enforces Assumption 3's bounded delay D).
+    pub latency_cap: f64,
+    /// Per-message Bernoulli drop probability (async algorithms only; the
+    /// sender withholds re-sends until the ack arrives — paper §VI ¶1).
+    pub loss_prob: f64,
+    /// Minibatch size per node.
+    pub batch: usize,
+    /// Evaluate / record the loss every this many seconds of virtual time.
+    pub eval_every: f64,
+    /// Label-skew α of the partition (0 = IID).
+    pub skew_alpha: f64,
+    /// Step-size schedule: multiply γ by `factor` every `interval` epochs
+    /// (paper §VI-B: 0.1 every 30 epochs). `None` = constant γ.
+    pub gamma_decay: Option<(f64, f32)>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 1,
+            gamma: 1e-3,
+            compute_mean: 0.2,
+            compute_jitter: 0.08,
+            straggler: None,
+            link_latency: 0.02,
+            latency_jitter: 0.25,
+            latency_cap: 0.5,
+            loss_prob: 0.0,
+            batch: 32,
+            eval_every: 5.0,
+            skew_alpha: 0.0,
+            gamma_decay: None,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Paper §VI-A (logreg on CPU cores): fast steps, fast links.
+    pub fn logreg_paper() -> SimConfig {
+        SimConfig {
+            gamma: 1e-3,
+            compute_mean: 0.01,
+            compute_jitter: 0.10,
+            link_latency: 0.002,
+            latency_cap: 0.05,
+            eval_every: 0.25,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Paper §VI-B (ResNet-50 proxy on 8 GPUs): ~200 ms steps. The jitter
+    /// (lognormal σ=0.25) calibrates the per-step variance of a loaded GPU
+    /// server — it is what makes synchronous barriers cost E[max of n]
+    /// ≈ 1.4-1.5× the mean step, the paper's observed 1.5-2× gap between
+    /// R-FAST and the synchronous baselines.
+    pub fn resnet_paper() -> SimConfig {
+        SimConfig {
+            gamma: 0.05,
+            compute_mean: 0.2,
+            compute_jitter: 0.25,
+            link_latency: 0.02,
+            latency_cap: 0.5,
+            eval_every: 20.0,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Apply one `key=value` override; returns an error string for unknown
+    /// keys or malformed values.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str, key: &str) -> Result<T, String> {
+            v.trim()
+                .parse::<T>()
+                .map_err(|_| format!("bad value {v:?} for key {key:?}"))
+        }
+        match key.trim() {
+            "seed" => self.seed = p(value, key)?,
+            "gamma" => self.gamma = p(value, key)?,
+            "compute_mean" => self.compute_mean = p(value, key)?,
+            "compute_jitter" => self.compute_jitter = p(value, key)?,
+            "link_latency" => self.link_latency = p(value, key)?,
+            "latency_jitter" => self.latency_jitter = p(value, key)?,
+            "latency_cap" => self.latency_cap = p(value, key)?,
+            "loss_prob" => self.loss_prob = p(value, key)?,
+            "batch" => self.batch = p(value, key)?,
+            "eval_every" => self.eval_every = p(value, key)?,
+            "skew_alpha" => self.skew_alpha = p(value, key)?,
+            "straggler" => {
+                // "node:factor", e.g. "3:5.0"; "none" clears it
+                if value.trim() == "none" {
+                    self.straggler = None;
+                } else {
+                    let (node, factor) = value
+                        .split_once(':')
+                        .ok_or_else(|| format!("straggler wants node:factor, got {value:?}"))?;
+                    self.straggler =
+                        Some((p(node, "straggler.node")?, p(factor, "straggler.factor")?));
+                }
+            }
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key = value` lines (# comments, blank lines).
+    pub fn from_file(path: &Path) -> Result<SimConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let mut cfg = SimConfig::default();
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_text(&mut self, text: &str) -> Result<(), String> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            self.apply_kv(k, v)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Validate ranges; called by the launcher before running.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.gamma > 0.0) {
+            return Err(format!("gamma must be > 0, got {}", self.gamma));
+        }
+        if self.compute_mean <= 0.0 || self.link_latency < 0.0 {
+            return Err("compute_mean must be > 0 and link_latency ≥ 0".into());
+        }
+        if !(0.0..1.0).contains(&self.loss_prob) {
+            return Err(format!("loss_prob must be in [0,1), got {}", self.loss_prob));
+        }
+        if let Some((_, f)) = self.straggler {
+            if f < 1.0 {
+                return Err(format!("straggler factor must be ≥ 1, got {f}"));
+            }
+        }
+        if self.batch == 0 {
+            return Err("batch must be ≥ 1".into());
+        }
+        if self.latency_cap < self.link_latency {
+            return Err("latency_cap must be ≥ link_latency".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+        SimConfig::logreg_paper().validate().unwrap();
+        SimConfig::resnet_paper().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = SimConfig::default();
+        c.apply_kv("gamma", "0.5").unwrap();
+        c.apply_kv("straggler", "3:5.0").unwrap();
+        c.apply_kv("batch", "64").unwrap();
+        assert_eq!(c.gamma, 0.5);
+        assert_eq!(c.straggler, Some((3, 5.0)));
+        assert_eq!(c.batch, 64);
+        c.apply_kv("straggler", "none").unwrap();
+        assert_eq!(c.straggler, None);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::default();
+        assert!(c.apply_kv("nope", "1").is_err());
+        assert!(c.apply_kv("gamma", "abc").is_err());
+    }
+
+    #[test]
+    fn text_parsing_with_comments() {
+        let mut c = SimConfig::default();
+        c.apply_text("# comment\n gamma = 0.25 # inline\n\nseed=9\n")
+            .unwrap();
+        assert_eq!(c.gamma, 0.25);
+        assert_eq!(c.seed, 9);
+        assert!(c.apply_text("gamma 0.5").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        let mut c = SimConfig::default();
+        c.gamma = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.loss_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.straggler = Some((0, 0.5));
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.latency_cap = 0.0;
+        c.link_latency = 0.1;
+        assert!(c.validate().is_err());
+    }
+}

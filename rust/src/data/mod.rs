@@ -1,0 +1,482 @@
+//! Synthetic datasets + heterogeneity-controlled partitioning.
+//!
+//! The paper trains on MNIST (two digits, logreg) and ImageNet-500
+//! (ResNet-50); neither is downloadable offline, so we generate
+//! deterministic synthetic equivalents that exercise identical code paths
+//! (DESIGN.md §4): class-template images with Gaussian noise for the
+//! classifiers, and a sparse order-1 Markov chain for the LM corpus (so a
+//! transformer can actually drive the loss well below log V).
+//!
+//! Partitioning controls **data heterogeneity** — the ς of Definition 2.
+//! `Partition::iid` shuffles globally; `Partition::label_skew(alpha)`
+//! interpolates from IID (α=0) to completely class-segregated shards
+//! (α=1), the regime where non-gradient-tracking baselines degrade.
+
+use crate::prng::Rng;
+
+/// A dense supervised dataset: row-major features + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub features: Vec<f32>,
+    /// Class ids (0-based). For binary tasks these are {0,1}.
+    pub labels: Vec<u32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Synthetic "two handwritten digits" set (paper §VI-A: 12 000 MNIST
+    /// images of 0 and 1). Each class c has a template t_c ∈ [0,1]^dim with
+    /// a class-dependent active-pixel pattern; samples are
+    /// `clip(t_c + N(0, σ))`, linearly separable in expectation but noisy
+    /// enough that SGD takes real work (mirrors logreg-on-MNIST behaviour).
+    pub fn synthetic_digits(n_samples: usize, dim: usize, classes: usize,
+                            noise: f32, seed: u64) -> Dataset {
+        let mut rng = Rng::stream(seed, 0xda7a);
+        // class templates: smooth-ish blobs, ~25% active pixels per class
+        let mut templates = vec![0.0f32; classes * dim];
+        for c in 0..classes {
+            for d in 0..dim {
+                // deterministic pseudo-structure: stripes of active pixels
+                // at class-dependent phase, plus small random texture
+                let phase = (d * (c + 2)) % (4 * classes);
+                let active = phase < classes;
+                templates[c * dim + d] = if active {
+                    0.7 + 0.3 * rng.f32()
+                } else {
+                    0.05 * rng.f32()
+                };
+            }
+        }
+        let mut features = Vec::with_capacity(n_samples * dim);
+        let mut labels = Vec::with_capacity(n_samples);
+        for s in 0..n_samples {
+            let c = s % classes; // balanced
+            labels.push(c as u32);
+            let t = &templates[c * dim..(c + 1) * dim];
+            for &tv in t {
+                let v = (tv + rng.normal_f32(0.0, noise)).clamp(0.0, 1.0);
+                features.push(v);
+            }
+        }
+        Dataset { dim, features, labels, classes }
+    }
+
+    /// The paper's §VI-A workload: 12k samples, 784 features, 2 classes.
+    pub fn mnist01_like(seed: u64) -> Dataset {
+        Dataset::synthetic_digits(12_000, 784, 2, 0.30, seed)
+    }
+
+    /// Gaussian class-template task with a *controlled Bayes error*: class
+    /// templates are `base + N(0, sep²)` perturbations, samples add
+    /// `N(0, noise²)` pixel noise, and `label_flip` of the labels are
+    /// resampled uniformly. The optimal pairwise margin is
+    /// `sep·√(2·dim)/(2·noise)` standard deviations, so accuracy saturates
+    /// strictly below 100% — giving the Fig 5/6 curves room to separate
+    /// algorithms, like ImageNet top-1 does in the paper.
+    pub fn gaussian_classes(n_samples: usize, dim: usize, classes: usize,
+                            sep: f32, noise: f32, label_flip: f64,
+                            seed: u64) -> Dataset {
+        let mut rng = Rng::stream(seed, 0x9a55);
+        let mut base = vec![0.0f32; dim];
+        for b in base.iter_mut() {
+            *b = 0.3 * rng.f32();
+        }
+        let mut templates = vec![0.0f32; classes * dim];
+        for c in 0..classes {
+            for d in 0..dim {
+                templates[c * dim + d] = base[d] + rng.normal_f32(0.0, sep);
+            }
+        }
+        let mut features = Vec::with_capacity(n_samples * dim);
+        let mut labels = Vec::with_capacity(n_samples);
+        for s in 0..n_samples {
+            let c = s % classes;
+            let label = if label_flip > 0.0 && rng.chance(label_flip) {
+                rng.below(classes) as u32
+            } else {
+                c as u32
+            };
+            labels.push(label);
+            let t = &templates[c * dim..(c + 1) * dim];
+            for &tv in t {
+                features.push(tv + rng.normal_f32(0.0, noise));
+            }
+        }
+        Dataset { dim, features, labels, classes }
+    }
+
+    /// 10-class variant used as the ImageNet proxy for the MLP (§VI-B).
+    /// sep/noise put the pairwise Bayes margin at ≈2.6σ and 3% of the labels
+    /// are noise ⇒ top-1 saturates in the mid-80s (paper's ResNet: ~79%),
+    /// not at 100%.
+    pub fn imagenet_like(n_samples: usize, seed: u64) -> Dataset {
+        Dataset::gaussian_classes(n_samples, 784, 10, 0.04, 0.30, 0.03, seed)
+    }
+
+    /// Split off a held-out evaluation set (last `k` samples).
+    pub fn split_eval(mut self, k: usize) -> (Dataset, Dataset) {
+        assert!(k < self.len());
+        let train_n = self.len() - k;
+        let eval = Dataset {
+            dim: self.dim,
+            features: self.features.split_off(train_n * self.dim),
+            labels: self.labels.split_off(train_n),
+            classes: self.classes,
+        };
+        (self, eval)
+    }
+
+    /// Labels as f32 (logreg targets).
+    pub fn labels_f32(&self) -> Vec<f32> {
+        self.labels.iter().map(|&l| l as f32).collect()
+    }
+}
+
+/// A per-node shard: indices into the parent dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// IID: global shuffle, equal contiguous shards.
+    pub fn iid(data: &Dataset, n_nodes: usize, seed: u64) -> Partition {
+        let mut idx: Vec<usize> = (0..data.len()).collect();
+        Rng::stream(seed, 0x11d).shuffle(&mut idx);
+        Partition { shards: chunk_even(&idx, n_nodes) }
+    }
+
+    /// Label-skew heterogeneity: with probability `alpha` a sample is
+    /// routed to the shard group "owning" its class; with probability
+    /// `1−alpha` it is routed uniformly. α=0 ⇒ IID, α=1 ⇒ every node sees
+    /// only its own class subset (maximal ς in Definition 2).
+    pub fn label_skew(data: &Dataset, n_nodes: usize, alpha: f64,
+                      seed: u64) -> Partition {
+        assert!((0.0..=1.0).contains(&alpha));
+        let mut rng = Rng::stream(seed, 0x5ca1e);
+        let mut shards = vec![Vec::new(); n_nodes];
+        for i in 0..data.len() {
+            let class = data.labels[i] as usize;
+            let node = if rng.chance(alpha) {
+                // class-owner group: classes are striped across nodes
+                let owners: Vec<usize> = (0..n_nodes)
+                    .filter(|&k| k % data.classes.min(n_nodes) ==
+                        class % data.classes.min(n_nodes))
+                    .collect();
+                owners[rng.below(owners.len())]
+            } else {
+                rng.below(n_nodes)
+            };
+            shards[node].push(i);
+        }
+        // guarantee non-empty shards (move from the largest)
+        for k in 0..n_nodes {
+            if shards[k].is_empty() {
+                let donor = (0..n_nodes)
+                    .max_by_key(|&d| shards[d].len())
+                    .unwrap();
+                let take = shards[donor].pop().unwrap();
+                shards[k].push(take);
+            }
+        }
+        Partition { shards }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Empirical heterogeneity proxy: max over nodes of the total-variation
+    /// distance between the shard's label histogram and the global one.
+    pub fn label_skew_measure(&self, data: &Dataset) -> f64 {
+        let c = data.classes;
+        let mut global = vec![0.0f64; c];
+        for &l in &data.labels {
+            global[l as usize] += 1.0;
+        }
+        let total: f64 = global.iter().sum();
+        for g in global.iter_mut() {
+            *g /= total;
+        }
+        let mut worst = 0.0f64;
+        for shard in &self.shards {
+            let mut hist = vec![0.0f64; c];
+            for &i in shard {
+                hist[data.labels[i] as usize] += 1.0;
+            }
+            let s: f64 = hist.iter().sum();
+            if s == 0.0 {
+                continue;
+            }
+            let tv: f64 = hist
+                .iter()
+                .zip(&global)
+                .map(|(h, g)| (h / s - g).abs())
+                .sum::<f64>()
+                / 2.0;
+            worst = worst.max(tv);
+        }
+        worst
+    }
+}
+
+fn chunk_even(idx: &[usize], n: usize) -> Vec<Vec<usize>> {
+    let mut shards = vec![Vec::new(); n];
+    for (pos, &i) in idx.iter().enumerate() {
+        shards[pos % n].push(i);
+    }
+    shards
+}
+
+/// Cyclic minibatch sampler over one node's shard (with reshuffle between
+/// epochs) — mirrors a PyTorch DataLoader with shuffle=True.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub batch: usize,
+}
+
+impl Batcher {
+    pub fn new(shard: &[usize], batch: usize, seed: u64) -> Batcher {
+        assert!(!shard.is_empty());
+        let mut rng = Rng::stream(seed, 0xba7c4);
+        let mut order = shard.to_vec();
+        rng.shuffle(&mut order);
+        Batcher { order, cursor: 0, rng, batch }
+    }
+
+    /// Next minibatch of sample indices (wraps + reshuffles at epoch end;
+    /// short shards repeat indices to fill the fixed batch the AOT
+    /// executable expects).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        while out.len() < self.batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Fraction of an epoch consumed per batch (for epoch bookkeeping).
+    pub fn epoch_per_batch(&self) -> f64 {
+        self.batch as f64 / self.order.len() as f64
+    }
+}
+
+/// Synthetic LM corpus: a sparse order-1 Markov chain over the vocabulary.
+/// Each token has `branching` plausible successors (plus smoothing), so the
+/// achievable cross-entropy is ≈ log(branching) ≪ log(vocab) — a transformer
+/// that learns shows a real loss curve (e2e driver).
+#[derive(Clone, Debug)]
+pub struct TokenStream {
+    pub vocab: usize,
+    succ: Vec<u32>, // [vocab * branching]
+    branching: usize,
+    state: u32,
+    rng: Rng,
+}
+
+impl TokenStream {
+    pub fn new(vocab: usize, branching: usize, seed: u64) -> TokenStream {
+        assert!(vocab >= 2 && branching >= 1);
+        let mut rng = Rng::stream(seed, 0x70ce5);
+        let mut succ = Vec::with_capacity(vocab * branching);
+        for _ in 0..vocab {
+            for _ in 0..branching {
+                succ.push(rng.below(vocab) as u32);
+            }
+        }
+        let state = rng.below(vocab) as u32;
+        TokenStream { vocab, succ, branching, state, rng }
+    }
+
+    /// Per-node stream: same chain (shared structure), independent walk.
+    pub fn for_node(&self, node: usize, seed: u64) -> TokenStream {
+        let mut ts = self.clone();
+        ts.rng = Rng::stream(seed, 0xbeef ^ node as u64);
+        ts.state = ts.rng.below(ts.vocab) as u32;
+        ts
+    }
+
+    #[inline]
+    pub fn next_token(&mut self) -> u32 {
+        // 10% smoothing mass escapes to a uniform token
+        let t = if self.rng.chance(0.10) {
+            self.rng.below(self.vocab) as u32
+        } else {
+            let row = self.state as usize * self.branching;
+            self.succ[row + self.rng.below(self.branching)]
+        };
+        self.state = t;
+        t
+    }
+
+    /// Fill a [batch, seq_plus_one] token block (row-major i32) — the exact
+    /// input layout of the transformer AOT artifact.
+    pub fn next_block(&mut self, batch: usize, seq_plus_one: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_plus_one);
+        for _ in 0..batch {
+            for _ in 0..seq_plus_one {
+                out.push(self.next_token() as i32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_deterministic_and_balanced() {
+        let a = Dataset::synthetic_digits(100, 16, 2, 0.2, 5);
+        let b = Dataset::synthetic_digits(100, 16, 2, 0.2, 5);
+        assert_eq!(a.features, b.features);
+        let ones = a.labels.iter().filter(|&&l| l == 1).count();
+        assert_eq!(ones, 50);
+        assert!(a.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn digits_are_separable_by_template_dot() {
+        // mean feature vectors of the two classes must differ markedly
+        let d = Dataset::synthetic_digits(400, 64, 2, 0.2, 1);
+        let mut m0 = vec![0.0f64; 64];
+        let mut m1 = vec![0.0f64; 64];
+        let (mut c0, mut c1) = (0.0, 0.0);
+        for i in 0..d.len() {
+            let row = d.row(i);
+            if d.labels[i] == 0 {
+                c0 += 1.0;
+                for (m, &v) in m0.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            } else {
+                c1 += 1.0;
+                for (m, &v) in m1.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            }
+        }
+        let diff: f64 = m0
+            .iter()
+            .zip(&m1)
+            .map(|(a, b)| (a / c0 - b / c1).abs())
+            .sum();
+        assert!(diff > 1.0, "class means too close: {diff}");
+    }
+
+    #[test]
+    fn split_eval_sizes() {
+        let d = Dataset::synthetic_digits(100, 8, 2, 0.1, 3);
+        let (tr, ev) = d.split_eval(20);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(ev.len(), 20);
+        assert_eq!(ev.features.len(), 20 * 8);
+    }
+
+    #[test]
+    fn iid_partition_covers_all() {
+        let d = Dataset::synthetic_digits(101, 4, 2, 0.1, 9);
+        let p = Partition::iid(&d, 7, 0);
+        let mut all: Vec<usize> = p.shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..101).collect::<Vec<_>>());
+        // near-even shards
+        for s in &p.shards {
+            assert!((14..=15).contains(&s.len()));
+        }
+    }
+
+    #[test]
+    fn label_skew_monotone_in_alpha() {
+        let d = Dataset::synthetic_digits(2000, 4, 2, 0.1, 11);
+        let m0 = Partition::label_skew(&d, 4, 0.0, 2).label_skew_measure(&d);
+        let m5 = Partition::label_skew(&d, 4, 0.5, 2).label_skew_measure(&d);
+        let m1 = Partition::label_skew(&d, 4, 1.0, 2).label_skew_measure(&d);
+        assert!(m0 < 0.1, "iid skew {m0}");
+        assert!(m5 > m0, "{m5} vs {m0}");
+        // 2 balanced classes ⇒ max possible TV distance is 0.5
+        assert!(m1 > 0.45, "full skew {m1}");
+    }
+
+    #[test]
+    fn label_skew_no_empty_shards() {
+        let d = Dataset::synthetic_digits(50, 4, 2, 0.1, 13);
+        let p = Partition::label_skew(&d, 8, 1.0, 3);
+        assert!(p.shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn batcher_cycles_and_fills() {
+        let shard = vec![10, 11, 12];
+        let mut b = Batcher::new(&shard, 2, 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..6 {
+            for i in b.next_batch() {
+                assert!(shard.contains(&i));
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 3);
+        assert!((b.epoch_per_batch() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn token_stream_in_range_and_structured() {
+        let mut ts = TokenStream::new(64, 4, 7);
+        let block = ts.next_block(4, 17);
+        assert_eq!(block.len(), 68);
+        assert!(block.iter().all(|&t| (0..64).contains(&t)));
+        // structure: successor entropy must be far below log2(64)=6 bits.
+        // count distinct successors of the most common token
+        let mut ts2 = TokenStream::new(64, 4, 7);
+        let mut followers: std::collections::HashMap<u32, std::collections::HashSet<u32>> =
+            Default::default();
+        let mut prev = ts2.next_token();
+        for _ in 0..20_000 {
+            let t = ts2.next_token();
+            followers.entry(prev).or_default().insert(t);
+            prev = t;
+        }
+        // with 10% smoothing the follower sets grow, but the *typical* set
+        // must be much smaller than the vocab
+        let med = {
+            let mut sizes: Vec<usize> =
+                followers.values().map(|s| s.len()).collect();
+            sizes.sort_unstable();
+            sizes[sizes.len() / 2]
+        };
+        assert!(med < 40, "median follower set {med} ≥ 40: no structure");
+    }
+
+    #[test]
+    fn per_node_streams_differ() {
+        let base = TokenStream::new(32, 3, 1);
+        let mut a = base.for_node(0, 99);
+        let mut b = base.for_node(1, 99);
+        let xa: Vec<u32> = (0..50).map(|_| a.next_token()).collect();
+        let xb: Vec<u32> = (0..50).map(|_| b.next_token()).collect();
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,223 @@
+//! Experiment harness shared by `examples/` and `rust/benches/` — the glue
+//! that turns (workload, topology, algorithm, timing model) into a
+//! [`Report`], so every paper figure/table is regenerated through one code
+//! path.
+
+use crate::algo::AlgoKind;
+use crate::config::SimConfig;
+use crate::graph::Topology;
+use crate::metrics::Report;
+use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, OracleSet};
+use crate::sim::{Simulator, StopRule};
+use std::path::Path;
+
+/// Which training workload an experiment drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// §VI-A: regularized logreg on the synthetic two-digit set
+    /// (pure-rust oracle — exact twin of the Pallas kernel).
+    LogReg,
+    /// §VI-B proxy: 10-class MLP on synthetic images (ResNet-50 stand-in;
+    /// DESIGN.md §4).
+    Mlp,
+}
+
+impl Workload {
+    pub fn build_set(&self, n: usize, cfg: &SimConfig) -> OracleSet {
+        match self {
+            Workload::LogReg => LogRegOracle::paper_workload(
+                n, cfg.batch, cfg.skew_alpha, cfg.seed,
+            )
+            .into_set(),
+            Workload::Mlp => MlpOracle::paper_workload(
+                n, cfg.batch, cfg.skew_alpha, cfg.seed,
+            )
+            .into_set(),
+        }
+    }
+
+    /// Paper-calibrated timing model for this workload.
+    pub fn paper_config(&self) -> SimConfig {
+        match self {
+            Workload::LogReg => SimConfig::logreg_paper(),
+            Workload::Mlp => SimConfig::resnet_paper(),
+        }
+    }
+
+    /// Initial parameters (matching scale of the python init).
+    pub fn x0(&self, n_dim: usize, seed: u64) -> Vec<f32> {
+        match self {
+            Workload::LogReg => {
+                let mut rng = crate::prng::Rng::stream(seed, 0x1091);
+                (0..n_dim).map(|_| rng.normal_f32(0.0, 0.01)).collect()
+            }
+            Workload::Mlp => MlpOracle::init_theta(seed),
+        }
+    }
+}
+
+/// Per-algorithm step size on the MLP proxy, tuned for matched per-epoch
+/// progress at the IID baseline. R-FAST/Push-Pull's descent enters through
+/// `v = x − γz` with z the tracked *average* gradient and the mean-dynamics
+/// stepping by γ·ψ_i·z_i (ψ the augmented-system left eigenvector), an
+/// ≈ n·ψ ≈ 4-6× smaller effective step than D-PSGD's local-gradient update
+/// at equal γ — so gradient-tracking methods get a proportionally larger γ.
+/// (The paper uses one lr on its testbed; its per-update scaling differs
+/// from our event-level model. Documented in DESIGN.md §4.)
+pub fn tuned_gamma(workload: Workload, algo: AlgoKind) -> f32 {
+    let base = workload.paper_config().gamma;
+    match algo {
+        AlgoKind::RFast | AlgoKind::RFastNaive | AlgoKind::PushPull => {
+            base * 6.0
+        }
+        AlgoKind::SAb => base * 1.5,
+        _ => base,
+    }
+}
+
+/// One simulated run.
+pub fn run_sim(workload: Workload, algo: AlgoKind, topo: &Topology,
+               cfg: &SimConfig, stop: StopRule) -> Report {
+    let set = workload.build_set(topo.n(), cfg);
+    let x0 = workload.x0(set.dim, cfg.seed);
+    let mut sim = Simulator::with_x0(cfg.clone(), topo, algo, set, &x0);
+    sim.run(stop)
+}
+
+/// The six-algorithm comparison set of paper §VI-B (Figs 5/6, Table II).
+pub const PAPER_BASELINES: [AlgoKind; 6] = [
+    AlgoKind::RFast,
+    AlgoKind::DPsgd,
+    AlgoKind::SAb,
+    AlgoKind::AdPsgd,
+    AlgoKind::Osgp,
+    AlgoKind::RingAllReduce,
+];
+
+/// Write every series of several reports as per-series CSVs under `dir`,
+/// one file per series name with one column per report.
+pub fn save_comparison_csvs(dir: &Path, prefix: &str,
+                            reports: &[&Report]) -> std::io::Result<()> {
+    use std::collections::BTreeSet;
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for r in reports {
+        names.extend(r.series.keys().map(|s| s.as_str()));
+    }
+    for name in names {
+        let series: Vec<_> = reports
+            .iter()
+            .filter_map(|r| r.series.get(name))
+            .collect();
+        if series.is_empty() {
+            continue;
+        }
+        // label each column with its report label
+        let mut labeled: Vec<crate::metrics::Series> = Vec::new();
+        for (r, s) in reports.iter().zip(&series) {
+            let mut c = (*s).clone();
+            c.name = r.label.clone();
+            labeled.push(c);
+        }
+        let refs: Vec<&crate::metrics::Series> = labeled.iter().collect();
+        crate::metrics::save_series_csv(
+            &dir.join(format!("{prefix}_{name}.csv")),
+            &refs,
+        )?;
+    }
+    Ok(())
+}
+
+/// Simple wall-clock timer for micro benches (criterion is unavailable
+/// offline — DESIGN.md §6). Runs `f` in batches until ≥ `min_time` elapsed
+/// and reports ns/iter statistics.
+pub struct BenchTimer {
+    pub name: String,
+    pub iters: u64,
+    pub total_ns: u128,
+}
+
+impl BenchTimer {
+    pub fn run<F: FnMut()>(name: &str, min_time_s: f64, mut f: F) -> BenchTimer {
+        // warmup
+        for _ in 0..3 {
+            f();
+        }
+        let mut iters = 0u64;
+        let start = std::time::Instant::now();
+        let mut batch = 1u64;
+        loop {
+            for _ in 0..batch {
+                f();
+            }
+            iters += batch;
+            let elapsed = start.elapsed();
+            if elapsed.as_secs_f64() >= min_time_s {
+                return BenchTimer {
+                    name: name.to_string(),
+                    iters,
+                    total_ns: elapsed.as_nanos(),
+                };
+            }
+            batch = (batch * 2).min(1 << 20);
+        }
+    }
+
+    pub fn ns_per_iter(&self) -> f64 {
+        self.total_ns as f64 / self.iters as f64
+    }
+
+    pub fn report(&self) -> String {
+        let ns = self.ns_per_iter();
+        let human = if ns >= 1e6 {
+            format!("{:.3} ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.3} µs", ns / 1e3)
+        } else {
+            format!("{ns:.1} ns")
+        };
+        format!("{:<44} {:>12}/iter  ({} iters)", self.name, human, self.iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logreg_sim_run_end_to_end() {
+        let cfg = SimConfig {
+            eval_every: 1.0,
+            ..SimConfig::logreg_paper()
+        };
+        let topo = Topology::ring(4);
+        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
+                             StopRule::VirtualTime(10.0));
+        let s = &report.series["loss_vs_time"];
+        assert!(s.last_y().unwrap() < s.points[0].1);
+        assert!(report.series.contains_key("acc_vs_time"));
+    }
+
+    #[test]
+    fn bench_timer_measures() {
+        let mut acc = 0u64;
+        let t = BenchTimer::run("noop-ish", 0.01, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(t.iters > 100);
+        assert!(t.ns_per_iter() < 1e6);
+    }
+
+    #[test]
+    fn comparison_csvs_written() {
+        let dir = std::env::temp_dir().join("rfast_cmp_csv");
+        let mut r1 = Report::new("A");
+        r1.series_mut("loss_vs_time", "t", "l").push(0.0, 1.0);
+        let mut r2 = Report::new("B");
+        r2.series_mut("loss_vs_time", "t", "l").push(0.5, 0.8);
+        save_comparison_csvs(&dir, "test", &[&r1, &r2]).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("test_loss_vs_time.csv")).unwrap();
+        assert!(text.starts_with("x,A,B"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

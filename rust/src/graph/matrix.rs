@@ -1,0 +1,168 @@
+//! Dense n×n matrix for mixing weights (n is the node count — tens, not
+//! thousands — so dense row-major storage is the right call).
+
+/// Row-major dense square matrix of f32 weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Mat { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.n + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    pub fn row_sum(&self, i: usize) -> f64 {
+        self.row(i).iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn col_sum(&self, j: usize) -> f64 {
+        (0..self.n).map(|i| self.get(i, j) as f64).sum()
+    }
+
+    /// Normalize each row to sum 1 (build row-stochastic W from adjacency).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let s = self.row_sum(i);
+            if s > 0.0 {
+                let inv = (1.0 / s) as f32;
+                for j in 0..self.n {
+                    let v = self.get(i, j);
+                    self.set(i, j, v * inv);
+                }
+            }
+        }
+    }
+
+    /// Normalize each column to sum 1 (build column-stochastic A).
+    pub fn normalize_cols(&mut self) {
+        for j in 0..self.n {
+            let s = self.col_sum(j);
+            if s > 0.0 {
+                let inv = (1.0 / s) as f32;
+                for i in 0..self.n {
+                    let v = self.get(i, j);
+                    self.set(i, j, v * inv);
+                }
+            }
+        }
+    }
+
+    /// Transpose (used to build G(A) from a W-style adjacency).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// y = M · x for column vectors stacked as rows of a flat slice-of-slices
+    /// (used by tests to iterate the consensus dynamics directly).
+    pub fn apply_rows(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(xs.len(), self.n);
+        let p = xs[0].len();
+        let mut out = vec![vec![0.0f32; p]; self.n];
+        for i in 0..self.n {
+            for j in 0..self.n {
+                let w = self.get(i, j);
+                if w != 0.0 {
+                    crate::linalg::axpy(&mut out[i], w, &xs[j]);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_rows_makes_stochastic() {
+        let mut m = Mat::zeros(3);
+        m.set(0, 0, 2.0);
+        m.set(0, 1, 2.0);
+        m.set(1, 1, 5.0);
+        m.set(2, 0, 1.0);
+        m.set(2, 2, 3.0);
+        m.normalize_rows();
+        for i in 0..3 {
+            assert!((m.row_sum(i) - 1.0).abs() < 1e-6);
+        }
+        assert!((m.get(0, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_cols_makes_col_stochastic() {
+        let mut m = Mat::zeros(2);
+        m.set(0, 0, 1.0);
+        m.set(1, 0, 3.0);
+        m.set(1, 1, 2.0);
+        m.normalize_cols();
+        for j in 0..2 {
+            assert!((m.col_sum(j) - 1.0).abs() < 1e-6);
+        }
+        assert!((m.get(1, 0) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut m = Mat::zeros(3);
+        m.set(0, 1, 1.0);
+        m.set(2, 0, 5.0);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn apply_rows_identity() {
+        let m = Mat::identity(2);
+        let xs = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(m.apply_rows(&xs), xs);
+    }
+
+    #[test]
+    fn apply_rows_mixes() {
+        let mut m = Mat::zeros(2);
+        m.set(0, 0, 0.5);
+        m.set(0, 1, 0.5);
+        m.set(1, 1, 1.0);
+        let xs = vec![vec![0.0f32], vec![10.0f32]];
+        let out = m.apply_rows(&xs);
+        assert_eq!(out[0][0], 5.0);
+        assert_eq!(out[1][0], 10.0);
+    }
+}

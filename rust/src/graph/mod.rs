@@ -1,0 +1,352 @@
+//! Directed topologies + the paper's two-matrix communication structure.
+//!
+//! R-FAST communicates over two induced graphs (paper §III):
+//!
+//! * `G(W)` — **pull/consensus** graph, `W` row-stochastic. Edge `(j, i)`
+//!   (i.e. `W[i][j] > 0`) means node *i* pulls `v_j` from node *j*.
+//! * `G(A)` — **push/tracking** graph, `A` column-stochastic. `A[j][i] > 0`
+//!   means node *i* pushes ρ-mass to node *j*.
+//!
+//! Assumption 1: positive diagonals, non-zero entries ≥ m̄, stochasticity.
+//! Assumption 2: `G(W)` and `G(Aᵀ)` each contain a spanning tree and share
+//! at least one common root — *much* weaker than strong connectivity, and
+//! the reason the paper can run on plain trees/lines (Fig 3, Appendix G).
+//!
+//! [`Topology`] bundles both matrices plus builders for every topology used
+//! in the paper's experiments (binary tree, line, directed ring,
+//! exponential, mesh) and the structures Appendix G calls out as special
+//! cases (star/parameter-server, random gossip).
+
+pub mod augmented;
+mod matrix;
+mod topology;
+
+pub use augmented::AugmentedAnalysis;
+pub use matrix::Mat;
+pub use topology::{Topology, TopologyKind};
+
+/// The (W, A) pair with cached neighbor lists, ready for algorithm use.
+#[derive(Clone, Debug)]
+pub struct WeightMatrices {
+    pub n: usize,
+    /// Row-stochastic pull matrix.
+    pub w: Mat,
+    /// Column-stochastic push matrix.
+    pub a: Mat,
+    /// `w_in[i]` = in-neighbors j (≠ i) of i in G(W): `W[i][j] > 0`.
+    pub w_in: Vec<Vec<usize>>,
+    /// `w_out[i]` = out-neighbors j (≠ i) of i in G(W): `W[j][i] > 0`.
+    pub w_out: Vec<Vec<usize>>,
+    /// `a_in[i]` = in-neighbors j of i in G(A): `A[i][j] > 0`.
+    pub a_in: Vec<Vec<usize>>,
+    /// `a_out[i]` = out-neighbors j of i in G(A): `A[j][i] > 0`.
+    pub a_out: Vec<Vec<usize>>,
+}
+
+/// Assumption-violation report (all violations, not just the first).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AssumptionError {
+    /// `W[i][i] == 0` or `A[i][i] == 0`.
+    ZeroDiagonal { matrix: char, node: usize },
+    /// Row of W (resp. column of A) does not sum to 1.
+    NotStochastic { matrix: char, index: usize, sum: f64 },
+    /// A present entry is negative.
+    NegativeEntry { matrix: char, row: usize, col: usize },
+    /// G(W) has no spanning tree (no node reaches all others).
+    NoSpanningTreeW,
+    /// G(Aᵀ) has no spanning tree.
+    NoSpanningTreeAt,
+    /// Spanning trees exist but share no common root (Assumption 2 fails).
+    NoCommonRoot,
+}
+
+impl std::fmt::Display for AssumptionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssumptionError::ZeroDiagonal { matrix, node } => {
+                write!(f, "{matrix}[{node}][{node}] must be > 0 (Assumption 1i)")
+            }
+            AssumptionError::NotStochastic { matrix, index, sum } => {
+                let kind = if *matrix == 'W' { "row" } else { "column" };
+                write!(f, "{matrix} {kind} {index} sums to {sum} ≠ 1 (Assumption 1ii)")
+            }
+            AssumptionError::NegativeEntry { matrix, row, col } => {
+                write!(f, "{matrix}[{row}][{col}] < 0")
+            }
+            AssumptionError::NoSpanningTreeW => {
+                write!(f, "G(W) contains no spanning tree (Assumption 2)")
+            }
+            AssumptionError::NoSpanningTreeAt => {
+                write!(f, "G(Aᵀ) contains no spanning tree (Assumption 2)")
+            }
+            AssumptionError::NoCommonRoot => {
+                write!(f, "R_W ∩ R_Aᵀ = ∅: no common root (Assumption 2)")
+            }
+        }
+    }
+}
+
+impl WeightMatrices {
+    /// Build from raw matrices, caching neighbor lists.
+    pub fn new(w: Mat, a: Mat) -> Self {
+        assert_eq!(w.n(), a.n());
+        let n = w.n();
+        let mut w_in = vec![Vec::new(); n];
+        let mut w_out = vec![Vec::new(); n];
+        let mut a_in = vec![Vec::new(); n];
+        let mut a_out = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                if w.get(i, j) > 0.0 {
+                    w_in[i].push(j);
+                    w_out[j].push(i);
+                }
+                if a.get(i, j) > 0.0 {
+                    a_in[i].push(j);
+                    a_out[j].push(i);
+                }
+            }
+        }
+        WeightMatrices { n, w, a, w_in, w_out, a_in, a_out }
+    }
+
+    /// Roots of spanning trees of G(W): nodes that reach every node along
+    /// edges `j → i` whenever `W[i][j] > 0`.
+    pub fn roots_w(&self) -> Vec<usize> {
+        roots_of(self.n, |from, to| self.w.get(to, from) > 0.0)
+    }
+
+    /// Roots of spanning trees of G(Aᵀ): edges `j → i` whenever
+    /// `Aᵀ[i][j] = A[j][i] > 0`.
+    pub fn roots_at(&self) -> Vec<usize> {
+        roots_of(self.n, |from, to| self.a.get(from, to) > 0.0)
+    }
+
+    /// `R = R_W ∩ R_Aᵀ` — the common roots whose activations drive the
+    /// optimality-gap contraction (paper's two-time-scale analysis).
+    pub fn common_roots(&self) -> Vec<usize> {
+        let rw = self.roots_w();
+        let ra = self.roots_at();
+        rw.into_iter().filter(|r| ra.contains(r)).collect()
+    }
+
+    /// Smallest non-zero mixing weight m̄ (Assumption 1i).
+    pub fn min_weight(&self) -> f64 {
+        let mut m = f64::INFINITY;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                for v in [self.w.get(i, j), self.a.get(i, j)] {
+                    if v > 0.0 {
+                        m = m.min(v as f64);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Validate Assumptions 1 and 2, returning every violation.
+    pub fn check_assumptions(&self) -> Vec<AssumptionError> {
+        let mut errs = Vec::new();
+        const TOL: f64 = 1e-5;
+        for i in 0..self.n {
+            if self.w.get(i, i) <= 0.0 {
+                errs.push(AssumptionError::ZeroDiagonal { matrix: 'W', node: i });
+            }
+            if self.a.get(i, i) <= 0.0 {
+                errs.push(AssumptionError::ZeroDiagonal { matrix: 'A', node: i });
+            }
+            let rs = self.w.row_sum(i);
+            if (rs - 1.0).abs() > TOL {
+                errs.push(AssumptionError::NotStochastic {
+                    matrix: 'W', index: i, sum: rs,
+                });
+            }
+            let cs = self.a.col_sum(i);
+            if (cs - 1.0).abs() > TOL {
+                errs.push(AssumptionError::NotStochastic {
+                    matrix: 'A', index: i, sum: cs,
+                });
+            }
+            for j in 0..self.n {
+                if self.w.get(i, j) < 0.0 {
+                    errs.push(AssumptionError::NegativeEntry {
+                        matrix: 'W', row: i, col: j,
+                    });
+                }
+                if self.a.get(i, j) < 0.0 {
+                    errs.push(AssumptionError::NegativeEntry {
+                        matrix: 'A', row: i, col: j,
+                    });
+                }
+            }
+        }
+        let rw = self.roots_w();
+        let ra = self.roots_at();
+        if rw.is_empty() {
+            errs.push(AssumptionError::NoSpanningTreeW);
+        }
+        if ra.is_empty() {
+            errs.push(AssumptionError::NoSpanningTreeAt);
+        }
+        if !rw.is_empty() && !ra.is_empty() && self.common_roots().is_empty() {
+            errs.push(AssumptionError::NoCommonRoot);
+        }
+        errs
+    }
+
+    /// Edge count of G(A) — |E(A)|, sizing the augmented tracking system.
+    pub fn a_edge_count(&self) -> usize {
+        self.a_in.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// Nodes from which every node is reachable under `edge(from, to)`.
+fn roots_of(n: usize, edge: impl Fn(usize, usize) -> bool) -> Vec<usize> {
+    (0..n)
+        .filter(|&r| {
+            // BFS from r
+            let mut seen = vec![false; n];
+            let mut queue = vec![r];
+            seen[r] = true;
+            let mut count = 1;
+            while let Some(u) = queue.pop() {
+                for v in 0..n {
+                    if !seen[v] && edge(u, v) {
+                        seen[v] = true;
+                        count += 1;
+                        queue.push(v);
+                    }
+                }
+            }
+            count == n
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_ok(t: &Topology) {
+        let errs = t.weights.check_assumptions();
+        assert!(errs.is_empty(), "{:?}: {:?}", t.kind, errs);
+        assert!(!t.weights.common_roots().is_empty(), "{:?}", t.kind);
+    }
+
+    #[test]
+    fn all_builders_satisfy_assumptions() {
+        for n in [2, 3, 4, 7, 8, 15, 16, 31] {
+            check_ok(&Topology::binary_tree(n));
+            check_ok(&Topology::line(n));
+            check_ok(&Topology::ring(n));
+            check_ok(&Topology::exponential(n));
+            check_ok(&Topology::star(n));
+            if n >= 4 {
+                check_ok(&Topology::mesh(n));
+            }
+            check_ok(&Topology::gossip(n, 3, 42));
+        }
+    }
+
+    #[test]
+    fn binary_tree_root_is_node_zero() {
+        let t = Topology::binary_tree(7);
+        assert_eq!(t.weights.roots_w(), vec![0]);
+        assert_eq!(t.weights.roots_at(), vec![0]);
+        assert_eq!(t.weights.common_roots(), vec![0]);
+    }
+
+    #[test]
+    fn ring_every_node_is_root() {
+        let t = Topology::ring(5);
+        assert_eq!(t.weights.common_roots(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn line_has_single_root() {
+        let t = Topology::line(6);
+        assert_eq!(t.weights.common_roots(), vec![0]);
+    }
+
+    #[test]
+    fn tree_is_not_strongly_connected() {
+        // The whole point of Assumption 2: G(W) alone is NOT strongly
+        // connected for a tree (leaves can't reach the root).
+        let t = Topology::binary_tree(7);
+        let leaf = 6;
+        let roots = roots_of(t.n(), |from, to| t.weights.w.get(to, from) > 0.0);
+        assert!(!roots.contains(&leaf));
+    }
+
+    #[test]
+    fn broken_matrices_are_reported() {
+        let n = 3;
+        let mut w = Mat::zeros(n);
+        let mut a = Mat::zeros(n);
+        // identity-ish but disconnected and row 0 not stochastic
+        for i in 0..n {
+            w.set(i, i, 0.5);
+            a.set(i, i, 1.0);
+        }
+        let wm = WeightMatrices::new(w, a);
+        let errs = wm.check_assumptions();
+        assert!(errs.iter().any(|e| matches!(e, AssumptionError::NotStochastic { matrix: 'W', .. })));
+        assert!(errs.contains(&AssumptionError::NoSpanningTreeW));
+    }
+
+    #[test]
+    fn no_common_root_detected() {
+        // W: tree rooted at 0 (0→1, 0→2); A: tree rooted at... make G(Aᵀ)
+        // rooted ONLY at 1 while G(W) rooted only at 0.
+        let n = 3;
+        let mut w = Mat::zeros(n);
+        // W[i][j] > 0 means edge j→i: root 0 reaches 1 and 2.
+        w.set(0, 0, 1.0);
+        w.set(1, 1, 0.5);
+        w.set(1, 0, 0.5);
+        w.set(2, 2, 0.5);
+        w.set(2, 0, 0.5);
+        // A column-stochastic with G(Aᵀ) rooted at 1: edges 1→0, 1→2 in Aᵀ
+        // mean A[1][0] > 0? Aᵀ[i][j] = A[j][i] > 0 edge j→i: want edges
+        // 1→0 (A[0][1] > 0… wait A[j][i]: edge from j to i needs A_ji? —
+        // Aᵀ edge (j,i) iff A[j][i] > 0. Edge 1→0 ⇒ A[1][0] > 0.
+        let mut a = Mat::zeros(n);
+        a.set(1, 0, 0.5); // edge 1→0 in G(Aᵀ)? A[1][0]>0 ⇒ Aᵀ[0][1]>0 ⇒ edge 1→0 ✓
+        a.set(0, 0, 0.5);
+        a.set(1, 1, 0.5);
+        a.set(1, 2, 0.5); // A[1][2]>0 ⇒ Aᵀ[2][1]>0 ⇒ edge 1→2 ✓
+        a.set(2, 2, 0.5);
+        let wm = WeightMatrices::new(w, a);
+        assert_eq!(wm.roots_w(), vec![0]);
+        assert_eq!(wm.roots_at(), vec![1]);
+        let errs = wm.check_assumptions();
+        assert!(errs.contains(&AssumptionError::NoCommonRoot), "{errs:?}");
+    }
+
+    #[test]
+    fn min_weight_positive() {
+        let t = Topology::binary_tree(15);
+        assert!(t.weights.min_weight() > 0.0);
+        assert!(t.weights.min_weight() <= 1.0);
+    }
+
+    #[test]
+    fn neighbor_lists_consistent_with_matrices() {
+        let t = Topology::exponential(8);
+        let wm = &t.weights;
+        for i in 0..8 {
+            for &j in &wm.w_in[i] {
+                assert!(wm.w.get(i, j) > 0.0);
+                assert!(wm.w_out[j].contains(&i));
+            }
+            for &j in &wm.a_out[i] {
+                assert!(wm.a.get(j, i) > 0.0);
+                assert!(wm.a_in[j].contains(&i));
+            }
+        }
+    }
+}

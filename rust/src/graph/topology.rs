@@ -1,0 +1,327 @@
+//! Topology builders — every graph from the paper's experiments (§VI,
+//! Fig 3, Appendix G) plus the parameter-server and random-gossip
+//! structures Remark 1 calls out as special cases.
+//!
+//! Convention (paper §III): an edge `j → i` in G(W) means `W[i][j] > 0`
+//! (node i pulls from j); an edge `i → j` in G(A) means `A[j][i] > 0`
+//! (node i pushes to j). Weights are uniform over {self} ∪ neighbors — the
+//! Appendix-G construction: W rows and A columns are `1/(1+deg)`.
+
+use super::{Mat, WeightMatrices};
+use crate::prng::Rng;
+
+/// Which builder produced a topology (benches/reports key on this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    BinaryTree,
+    Line,
+    Ring,
+    Exponential,
+    Mesh,
+    Star,
+    Gossip,
+    Custom,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::BinaryTree => "binary_tree",
+            TopologyKind::Line => "line",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Exponential => "exponential",
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Star => "star",
+            TopologyKind::Gossip => "gossip",
+            TopologyKind::Custom => "custom",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "binary_tree" | "tree" => TopologyKind::BinaryTree,
+            "line" => TopologyKind::Line,
+            "ring" => TopologyKind::Ring,
+            "exponential" | "exp" => TopologyKind::Exponential,
+            "mesh" | "grid" => TopologyKind::Mesh,
+            "star" | "ps" => TopologyKind::Star,
+            "gossip" => TopologyKind::Gossip,
+            _ => return None,
+        })
+    }
+
+    /// Build with default parameters (gossip uses degree 3, seed 0).
+    pub fn build(&self, n: usize) -> Topology {
+        match self {
+            TopologyKind::BinaryTree => Topology::binary_tree(n),
+            TopologyKind::Line => Topology::line(n),
+            TopologyKind::Ring => Topology::ring(n),
+            TopologyKind::Exponential => Topology::exponential(n),
+            TopologyKind::Mesh => Topology::mesh(n),
+            TopologyKind::Star => Topology::star(n),
+            TopologyKind::Gossip => Topology::gossip(n, 3, 0),
+            TopologyKind::Custom => panic!("custom topologies use Topology::from_edges"),
+        }
+    }
+}
+
+/// A named communication topology: the (W, A) pair plus provenance.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub weights: WeightMatrices,
+}
+
+impl Topology {
+    pub fn n(&self) -> usize {
+        self.weights.n
+    }
+
+    /// Build from explicit directed edge lists.
+    ///
+    /// `w_edges`: `(j, i)` meaning i pulls from j in G(W).
+    /// `a_edges`: `(i, j)` meaning i pushes to j in G(A).
+    /// Weights are uniform (Appendix-G style).
+    pub fn from_edges(
+        n: usize,
+        w_edges: &[(usize, usize)],
+        a_edges: &[(usize, usize)],
+    ) -> Topology {
+        let mut w = Mat::identity(n);
+        for &(j, i) in w_edges {
+            assert!(i < n && j < n && i != j, "bad W edge ({j},{i})");
+            w.set(i, j, 1.0);
+        }
+        w.normalize_rows();
+
+        let mut a = Mat::identity(n);
+        for &(i, j) in a_edges {
+            assert!(i < n && j < n && i != j, "bad A edge ({i},{j})");
+            a.set(j, i, 1.0);
+        }
+        a.normalize_cols();
+
+        Topology { kind: TopologyKind::Custom, weights: WeightMatrices::new(w, a) }
+    }
+
+    fn with_kind(mut self, kind: TopologyKind) -> Topology {
+        self.kind = kind;
+        self
+    }
+
+    /// Binary tree (paper Fig 3a): G(W) is the tree oriented root→leaves
+    /// (node 0 the root, children of k at 2k+1, 2k+2), G(A) its inverse —
+    /// exactly the "oriented acyclic tree + inverse graph" construction of
+    /// §VI-A. Parameters flow down; gradient mass flows up. Root set = {0}.
+    pub fn binary_tree(n: usize) -> Topology {
+        assert!(n >= 1);
+        let mut w_edges = Vec::new(); // (parent j) → (child i)
+        let mut a_edges = Vec::new(); // child i → parent j
+        for i in 1..n {
+            let parent = (i - 1) / 2;
+            w_edges.push((parent, i));
+            a_edges.push((i, parent));
+        }
+        Topology::from_edges(n, &w_edges, &a_edges)
+            .with_kind(TopologyKind::BinaryTree)
+    }
+
+    /// Line graph (paper Fig 3c): 0→1→…→n−1 in G(W), reversed in G(A).
+    pub fn line(n: usize) -> Topology {
+        assert!(n >= 1);
+        let w_edges: Vec<_> = (1..n).map(|i| (i - 1, i)).collect();
+        let a_edges: Vec<_> = (1..n).map(|i| (i, i - 1)).collect();
+        Topology::from_edges(n, &w_edges, &a_edges).with_kind(TopologyKind::Line)
+    }
+
+    /// Directed ring (paper Fig 3b): i→i+1 (mod n) in both graphs — the
+    /// topology of the ResNet-50 experiments (§VI-B). Strongly connected,
+    /// so every node is a common root.
+    pub fn ring(n: usize) -> Topology {
+        assert!(n >= 2);
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Topology::from_edges(n, &edges, &edges).with_kind(TopologyKind::Ring)
+    }
+
+    /// Exponential graph (Appendix G, Fig 13): i → (i + 2^k) mod n for all
+    /// 2^k < n. The classic O(log n)-diameter digraph.
+    pub fn exponential(n: usize) -> Topology {
+        assert!(n >= 2);
+        let mut edges = Vec::new();
+        let mut hop = 1;
+        while hop < n {
+            for i in 0..n {
+                let j = (i + hop) % n;
+                if j != i {
+                    edges.push((i, j));
+                }
+            }
+            hop *= 2;
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Topology::from_edges(n, &edges, &edges)
+            .with_kind(TopologyKind::Exponential)
+    }
+
+    /// 2-D mesh/grid (Appendix G, Fig 14): nodes in a ⌈√n⌉-wide grid,
+    /// undirected lattice edges used in both directions for both graphs.
+    pub fn mesh(n: usize) -> Topology {
+        assert!(n >= 2);
+        let cols = (n as f64).sqrt().ceil() as usize;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            let (r, c) = (i / cols, i % cols);
+            if c + 1 < cols && i + 1 < n {
+                edges.push((i, i + 1));
+                edges.push((i + 1, i));
+            }
+            let down = (r + 1) * cols + c;
+            if down < n {
+                edges.push((i, down));
+                edges.push((down, i));
+            }
+        }
+        Topology::from_edges(n, &edges, &edges).with_kind(TopologyKind::Mesh)
+    }
+
+    /// Star / parameter-server (Remark 1, Fig 15 bottom): node 0 is the
+    /// server; G(W) = server→workers, G(A) = workers→server.
+    pub fn star(n: usize) -> Topology {
+        assert!(n >= 1);
+        let w_edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        let a_edges: Vec<_> = (1..n).map(|i| (i, 0)).collect();
+        Topology::from_edges(n, &w_edges, &a_edges).with_kind(TopologyKind::Star)
+    }
+
+    /// Random gossip digraph: a directed ring (guaranteeing strong
+    /// connectivity ⇒ Assumption 2) plus `extra_deg` random out-edges per
+    /// node; same graph for W and A.
+    pub fn gossip(n: usize, extra_deg: usize, seed: u64) -> Topology {
+        assert!(n >= 2);
+        let mut rng = Rng::stream(seed, 0x90551b);
+        let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        for i in 0..n {
+            for _ in 0..extra_deg {
+                let j = rng.below(n);
+                if j != i && j != (i + 1) % n {
+                    edges.push((i, j));
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Topology::from_edges(n, &edges, &edges).with_kind(TopologyKind::Gossip)
+    }
+
+    /// Undirected ring with doubly-stochastic Metropolis weights — what
+    /// D-PSGD / AD-PSGD require (they cannot run on directed graphs).
+    /// Returned as a Topology whose W **is** doubly stochastic and A = W.
+    pub fn undirected_ring_metropolis(n: usize) -> Topology {
+        assert!(n >= 3);
+        let mut w = Mat::zeros(n);
+        // Metropolis–Hastings: w_ij = 1/(1+max(d_i,d_j)) = 1/3 on a ring.
+        for i in 0..n {
+            let prev = (i + n - 1) % n;
+            let next = (i + 1) % n;
+            w.set(i, prev, 1.0 / 3.0);
+            w.set(i, next, 1.0 / 3.0);
+            w.set(i, i, 1.0 / 3.0);
+        }
+        Topology {
+            kind: TopologyKind::Ring,
+            weights: WeightMatrices::new(w.clone(), w),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_tree_edges() {
+        let t = Topology::binary_tree(7);
+        // node 3's parent is 1: W[3][1] > 0, A[1][3] > 0
+        assert!(t.weights.w.get(3, 1) > 0.0);
+        assert!(t.weights.a.get(1, 3) > 0.0);
+        // no reverse edge in W
+        assert_eq!(t.weights.w.get(1, 3), 0.0);
+    }
+
+    #[test]
+    fn star_structure() {
+        let t = Topology::star(5);
+        for i in 1..5 {
+            assert!(t.weights.w.get(i, 0) > 0.0); // workers pull from server
+            assert!(t.weights.a.get(0, i) > 0.0); // workers push to server
+        }
+        assert_eq!(t.weights.common_roots(), vec![0]);
+    }
+
+    #[test]
+    fn mesh_is_strongly_connected() {
+        for n in [4, 6, 9, 12, 16] {
+            let t = Topology::mesh(n);
+            assert_eq!(t.weights.common_roots().len(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn exponential_has_log_edges() {
+        let t = Topology::exponential(8);
+        // out-degree of each node = log2(8) = 3
+        for i in 0..8 {
+            assert_eq!(t.weights.w_out[i].len(), 3);
+        }
+    }
+
+    #[test]
+    fn gossip_deterministic_by_seed() {
+        let a = Topology::gossip(10, 2, 7);
+        let b = Topology::gossip(10, 2, 7);
+        assert_eq!(a.weights.w, b.weights.w);
+        let c = Topology::gossip(10, 2, 8);
+        assert_ne!(a.weights.w, c.weights.w);
+    }
+
+    #[test]
+    fn metropolis_ring_is_doubly_stochastic() {
+        let t = Topology::undirected_ring_metropolis(6);
+        for i in 0..6 {
+            assert!((t.weights.w.row_sum(i) - 1.0).abs() < 1e-6);
+            assert!((t.weights.w.col_sum(i) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [
+            TopologyKind::BinaryTree,
+            TopologyKind::Line,
+            TopologyKind::Ring,
+            TopologyKind::Exponential,
+            TopologyKind::Mesh,
+            TopologyKind::Star,
+            TopologyKind::Gossip,
+        ] {
+            assert_eq!(TopologyKind::from_name(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn from_edges_rejects_self_loops() {
+        let r = std::panic::catch_unwind(|| {
+            Topology::from_edges(3, &[(1, 1)], &[])
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn single_node_degenerate_topologies() {
+        let t = Topology::binary_tree(1);
+        assert_eq!(t.weights.common_roots(), vec![0]);
+        let t = Topology::line(1);
+        assert_eq!(t.weights.common_roots(), vec![0]);
+    }
+}

@@ -1,0 +1,66 @@
+//! # rfast — R-FAST: Robust Fully-Asynchronous Stochastic Gradient Tracking
+//!
+//! Production-oriented reproduction of Zhu et al., *"R-FAST: Robust
+//! Fully-Asynchronous Stochastic Gradient Tracking over General Topology"*
+//! (2023). The crate is the L3 layer of a three-layer rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`graph`] — directed topologies, row/column-stochastic weight matrices,
+//!   spanning-tree root sets, Assumption 1-2 validation.
+//! * [`algo`] — the R-FAST state machine plus six baselines (sync Push-Pull,
+//!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven.
+//! * [`sim`] — deterministic discrete-event simulator: per-node compute
+//!   times, stragglers, link latency, packet loss with send-until-ack.
+//! * [`runner`] — real thread-per-node asynchronous engine (wall clock).
+//! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`)
+//!   produced by `python/compile/aot.py`; python is never on this path.
+//! * [`oracle`] — gradient oracles: closed-form quadratics, pure-rust
+//!   logistic regression, and PJRT-backed model gradients.
+//! * [`data`] — synthetic datasets + heterogeneity-controlled partitioning.
+//! * Substrates built in-repo because the offline registry only carries the
+//!   `xla` crate closure: [`prng`], [`linalg`], [`jsonio`], [`config`],
+//!   [`metrics`], [`testutil`].
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use rfast::prelude::*;
+//! use rfast::oracle::GradOracle;
+//!
+//! let topo = Topology::binary_tree(7);
+//! let quad = QuadraticOracle::heterogeneous(16, 7, 1.0, 4.0, 1);
+//! let cfg = SimConfig { seed: 7, gamma: 0.05, compute_mean: 0.01,
+//!                       eval_every: 1.0, ..SimConfig::default() };
+//! let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, quad.into_set());
+//! let report = sim.run(StopRule::Iterations(5_000));
+//! println!("final optimality gap: {:.3e}", report.final_gap.unwrap());
+//! ```
+
+pub mod algo;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod graph;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod oracle;
+pub mod prng;
+pub mod runner;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+
+/// Convenience re-exports for examples/benches.
+pub mod prelude {
+    pub use crate::algo::{AlgoKind, NodeState, RFastParams};
+    pub use crate::config::SimConfig;
+    pub use crate::data::{Dataset, Partition};
+    pub use crate::graph::{Topology, TopologyKind, WeightMatrices};
+    pub use crate::linalg as la;
+    pub use crate::metrics::{Report, Series};
+    pub use crate::oracle::{GradOracle, LogRegOracle, QuadraticOracle};
+    pub use crate::prng::Rng;
+    pub use crate::sim::{Simulator, StopRule};
+}

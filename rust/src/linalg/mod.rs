@@ -1,0 +1,228 @@
+//! Flat-vector linear algebra — the L3 hot path.
+//!
+//! Every R-FAST state mutation is an O(p) dense-vector operation (the model
+//! lives in a flat `Vec<f32>`, matching the paper's x, z, ρ ∈ R^p). These
+//! routines are written so LLVM auto-vectorizes them (slice-of-equal-length
+//! idiom, no bounds checks in the loop body) and the per-wake hot loop in
+//! `algo::rfast` performs **zero allocations** — see EXPERIMENTS.md §Perf.
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// y = alpha * x (overwrite)
+#[inline]
+pub fn scale_into(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = alpha * *xi;
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for ((o, ai), bi) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = ai - bi;
+    }
+}
+
+/// y += (a - b), the ρ-difference accumulation of R-FAST step (S2b):
+/// fused so the difference never materializes.
+#[inline]
+pub fn add_diff(y: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(y.len(), a.len());
+    assert_eq!(y.len(), b.len());
+    for ((yi, ai), bi) in y.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *yi += ai - bi;
+    }
+}
+
+/// dot(a, b), block-compensated: full-speed f32 SIMD lanes inside
+/// 4096-element blocks, each block's partial sum promoted to an f64
+/// accumulator. Rounding error is O(√block·ε_f32) per block instead of
+/// O(√p) — at p ~ 1e8 the result keeps ~6 significant digits while the
+/// inner loop runs at axpy speed (5-6× faster than a serial f64 chain;
+/// EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    const LANES: usize = 8;
+    const BLOCK: usize = 4096;
+    let mut total = 0.0f64;
+    let mut i = 0;
+    while i < a.len() {
+        let end = (i + BLOCK).min(a.len());
+        let (ab, bb) = (&a[i..end], &b[i..end]);
+        let chunks = ab.len() / LANES;
+        let mut acc = [0.0f32; LANES];
+        for c in 0..chunks {
+            let base = c * LANES;
+            for l in 0..LANES {
+                acc[l] += ab[base + l] * bb[base + l];
+            }
+        }
+        let mut block = 0.0f64;
+        for l in 0..LANES {
+            block += acc[l] as f64;
+        }
+        for k in chunks * LANES..ab.len() {
+            block += ab[k] as f64 * bb[k] as f64;
+        }
+        total += block;
+        i = end;
+    }
+    total
+}
+
+/// ||x||₂
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||a − b||₂ without materializing the difference (same unrolled
+/// accumulation as [`dot`]).
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    const LANES: usize = 8;
+    let chunks = a.len() / LANES;
+    let mut acc = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let d = (a[base + l] - b[base + l]) as f64;
+            acc[l] += d * d;
+        }
+    }
+    let mut total = 0.0f64;
+    for l in 0..LANES {
+        total += acc[l];
+    }
+    for i in chunks * LANES..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        total += d * d;
+    }
+    total.sqrt()
+}
+
+/// out = Σ_k w_k · x_k — the consensus mixing step (S2a). `out` is
+/// overwritten; the first term initializes it so no zero-fill pass is needed.
+pub fn weighted_sum_into(out: &mut [f32], terms: &[(f32, &[f32])]) {
+    assert!(!terms.is_empty());
+    let (w0, x0) = terms[0];
+    scale_into(out, w0, x0);
+    for &(w, x) in &terms[1..] {
+        axpy(out, w, x);
+    }
+}
+
+/// Mean of a set of equal-length vectors into `out`.
+pub fn mean_into(out: &mut [f32], xs: &[&[f32]]) {
+    assert!(!xs.is_empty());
+    out.copy_from_slice(xs[0]);
+    for x in &xs[1..] {
+        axpy(out, 1.0, x);
+    }
+    scale(out, 1.0 / xs.len() as f32);
+}
+
+/// Squared consensus error: Σ_i ||x_i − x̄||² (paper's ‖x − 1x̄ᵀ‖²_F).
+pub fn consensus_error_sq(xs: &[&[f32]]) -> f64 {
+    let p = xs[0].len();
+    let mut mean = vec![0.0f32; p];
+    mean_into(&mut mean, xs);
+    xs.iter().map(|x| {
+        let d = dist(x, &mean);
+        d * d
+    }).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn scale_into_overwrites() {
+        let mut y = vec![9.0; 3];
+        scale_into(&mut y, 0.5, &[2.0, 4.0, 6.0]);
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn add_diff_matches_two_step() {
+        let mut y1 = vec![1.0, 1.0];
+        let mut y2 = y1.clone();
+        let a = [5.0, 7.0];
+        let b = [2.0, 3.0];
+        add_diff(&mut y1, &a, &b);
+        axpy(&mut y2, 1.0, &a);
+        axpy(&mut y2, -1.0, &b);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn dot_f64_accumulation() {
+        let a = vec![1e-4f32; 1_000_000];
+        let d = dot(&a, &a);
+        assert!((d - 1e-2).abs() < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn dist_matches_norm_of_diff() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 6.0, 3.0];
+        assert!((dist(&a, &b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_sum_simple() {
+        let mut out = vec![0.0; 2];
+        let x1 = [1.0, 0.0];
+        let x2 = [0.0, 1.0];
+        weighted_sum_into(&mut out, &[(0.25, &x1), (0.75, &x2)]);
+        assert_eq!(out, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn mean_and_consensus_error() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![2.0f32, 2.0];
+        let refs: Vec<&[f32]> = vec![&a, &b];
+        let mut m = vec![0.0; 2];
+        mean_into(&mut m, &refs);
+        assert_eq!(m, vec![1.0, 1.0]);
+        // each node is sqrt(2) from the mean ⇒ total squared = 4
+        assert!((consensus_error_sq(&refs) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_len_mismatch_panics() {
+        let mut y = vec![0.0; 2];
+        axpy(&mut y, 1.0, &[1.0; 3]);
+    }
+}

@@ -1,0 +1,318 @@
+//! `repro` — the R-FAST launcher.
+//!
+//! ```text
+//! repro train   --algo rfast --topology ring --nodes 8 --model logreg
+//!               [--gamma G] [--seed S] [--straggler NODE:FACTOR]
+//!               [--loss-prob P] [--skew ALPHA] [--time T | --iters K]
+//!               [--oracle pjrt|rust] [--out runs/NAME]
+//! repro graph   --topology binary_tree --nodes 7      # inspect W/A, roots
+//! repro check-artifacts                               # load + smoke-run
+//! repro algos                                         # list algorithms
+//! repro help
+//! ```
+
+use rfast::algo::AlgoKind;
+use rfast::cli::Args;
+use rfast::config::SimConfig;
+use rfast::data::{Dataset, Partition};
+use rfast::graph::TopologyKind;
+use rfast::metrics::Table;
+use rfast::oracle::{GradOracle, LogRegOracle};
+use rfast::runtime::{self, Manifest, PjrtTask};
+use rfast::sim::{Simulator, StopRule};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "graph" => cmd_graph(&args),
+        "check-artifacts" => cmd_check_artifacts(),
+        "algos" => {
+            cmd_algos();
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?} (try `repro help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — R-FAST reproduction launcher\n\n\
+         subcommands:\n  \
+         train            run one training experiment in the virtual-time simulator\n  \
+         graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
+         check-artifacts  load every AOT artifact and smoke-run it\n  \
+         algos            list implemented algorithms\n  \
+         help             this text\n\n\
+         train options:\n  \
+         --algo NAME        rfast|rfast-naive|pushpull|sab|dpsgd|adpsgd|osgp|allreduce\n  \
+         --topology NAME    binary_tree|line|ring|exponential|mesh|star|gossip\n  \
+         --nodes N          node count (default 8)\n  \
+         --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
+         --oracle KIND      rust|pjrt (default rust; pjrt needs `make artifacts`)\n  \
+         --gamma G          step size\n  --seed S\n  \
+         --straggler N:F    slow node N down by factor F\n  \
+         --loss-prob P      packet loss probability (async algos)\n  \
+         --skew A           label-skew heterogeneity in [0,1]\n  \
+         --time T           stop after T virtual seconds (default 300)\n  \
+         --iters K          stop after K total gradient steps\n  \
+         --out PATH         write the JSON report here (default runs/train.json)"
+    );
+}
+
+fn cmd_algos() {
+    let mut t = Table::new("algorithms", &["name", "async", "loss-tolerant"]);
+    for k in [
+        AlgoKind::RFast,
+        AlgoKind::RFastNaive,
+        AlgoKind::PushPull,
+        AlgoKind::SAb,
+        AlgoKind::DPsgd,
+        AlgoKind::AdPsgd,
+        AlgoKind::Osgp,
+        AlgoKind::RingAllReduce,
+    ] {
+        t.row(vec![
+            k.name().to_string(),
+            k.is_async().to_string(),
+            k.tolerates_loss().to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_graph(args: &Args) -> Result<(), String> {
+    let kind = TopologyKind::from_name(&args.get_or("topology", "binary_tree"))
+        .ok_or("unknown --topology")?;
+    let n: usize = args.parse_num("nodes", 7usize)?;
+    let topo = kind.build(n);
+    let wm = &topo.weights;
+    println!("topology {} over {} nodes", kind.name(), n);
+    println!("G(W) edges (j→i, i pulls from j):");
+    for i in 0..n {
+        for &j in &wm.w_in[i] {
+            println!("  {j} → {i}   w[{i}][{j}] = {:.3}", wm.w.get(i, j));
+        }
+    }
+    println!("G(A) edges (i→j, i pushes to j):");
+    for i in 0..n {
+        for &j in &wm.a_out[i] {
+            println!("  {i} → {j}   a[{j}][{i}] = {:.3}", wm.a.get(j, i));
+        }
+    }
+    println!("roots of G(W):  {:?}", wm.roots_w());
+    println!("roots of G(Aᵀ): {:?}", wm.roots_at());
+    println!("common roots R: {:?}", wm.common_roots());
+    let errs = wm.check_assumptions();
+    if errs.is_empty() {
+        println!("Assumptions 1-2: OK (m̄ = {:.4})", wm.min_weight());
+    } else {
+        for e in errs {
+            println!("VIOLATION: {e}");
+        }
+    }
+    if args.has_flag("analyze") {
+        let delay: usize = args.parse_num("delay", 2usize)?;
+        let a = rfast::graph::AugmentedAnalysis::estimate(&topo, delay);
+        println!("\naugmented-system analysis (Lemma 1, D = {delay}):");
+        println!("  contraction ρ̂        = {:.5}", a.rho_w);
+        println!("  iters to consensus   = {}", a.iters_to_consensus);
+        println!("  Lemma-1 η bound      = {:.3e} (K1 = {})", a.eta_bound, a.k1);
+        for (r, p) in &a.psi_roots {
+            println!("  ψ mass at root {r}    = {p:.4}");
+        }
+        println!("  γ̄ hint (L=1)         ≈ {:.4}", a.gamma_hint(1.0));
+    }
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> Result<(), String> {
+    let dir = runtime::default_artifact_dir()
+        .ok_or("no artifacts/ found — run `make artifacts`")?;
+    println!("artifacts: {}", dir.display());
+    let manifest = Manifest::load(&dir)?;
+    let mut t = Table::new("artifacts", &["name", "inputs", "outputs", "status"]);
+    for (name, info) in &manifest.artifacts {
+        let status = match rfast::runtime::Engine::load(&manifest, &[name]) {
+            Ok(engine) => {
+                // smoke-run with zero inputs of the right shapes
+                let zeros_f: Vec<Vec<f32>> = info
+                    .inputs
+                    .iter()
+                    .map(|s| vec![0.0f32; s.numel()])
+                    .collect();
+                let zeros_i: Vec<Vec<i32>> = info
+                    .inputs
+                    .iter()
+                    .map(|s| vec![0i32; s.numel()])
+                    .collect();
+                let inputs: Vec<rfast::runtime::Input<'_>> = info
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(k, s)| match s.dtype.as_str() {
+                        "int32" => rfast::runtime::Input::I32(&zeros_i[k]),
+                        _ => rfast::runtime::Input::F32(&zeros_f[k]),
+                    })
+                    .collect();
+                match engine.run(name, &inputs) {
+                    Ok(_) => "ok".to_string(),
+                    Err(e) => format!("EXEC FAIL: {e}"),
+                }
+            }
+            Err(e) => format!("COMPILE FAIL: {e}"),
+        };
+        t.row(vec![
+            name.clone(),
+            format!("{}", info.inputs.len()),
+            format!("{}", info.outputs.len()),
+            status,
+        ]);
+    }
+    t.print();
+    for (name, m) in &manifest.models {
+        let init = manifest.load_init(name)?;
+        println!("model {name}: p = {} (init ‖θ‖ = {:.3})", m.p,
+                 rfast::linalg::norm(&init));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let algo = AlgoKind::from_name(&args.get_or("algo", "rfast"))
+        .ok_or("unknown --algo (see `repro algos`)")?;
+    let kind = TopologyKind::from_name(&args.get_or("topology", "ring"))
+        .ok_or("unknown --topology")?;
+    let n: usize = args.parse_num("nodes", 8usize)?;
+    let model = args.get_or("model", "logreg");
+    let oracle_kind = args.get_or("oracle", "rust");
+
+    let mut cfg = SimConfig::logreg_paper();
+    cfg.seed = args.parse_num("seed", 1u64)?;
+    cfg.gamma = args.parse_num("gamma", cfg.gamma)?;
+    cfg.loss_prob = args.parse_num("loss-prob", 0.0f64)?;
+    cfg.skew_alpha = args.parse_num("skew", 0.0f64)?;
+    if let Some(s) = args.get("straggler") {
+        cfg.apply_kv("straggler", s)?;
+    }
+    if model == "mlp" {
+        let base = SimConfig::resnet_paper();
+        cfg.compute_mean = base.compute_mean;
+        cfg.link_latency = base.link_latency;
+        cfg.eval_every = base.eval_every;
+        cfg.gamma = args.parse_num("gamma", base.gamma)?;
+    }
+    cfg.validate()?;
+
+    let topo = kind.build(n);
+    let stop = if let Some(iters) = args.get("iters") {
+        StopRule::Iterations(iters.parse().map_err(|_| "--iters")?)
+    } else {
+        StopRule::VirtualTime(args.parse_num("time", 300.0f64)?)
+    };
+
+    println!(
+        "train: {} on {} ({} nodes), model={model} oracle={oracle_kind} γ={} seed={}",
+        algo.name(), kind.name(), n, cfg.gamma, cfg.seed
+    );
+
+    let report = match (model.as_str(), oracle_kind.as_str()) {
+        ("logreg", "rust") => {
+            let oracle = LogRegOracle::paper_workload(n, cfg.batch,
+                                                      cfg.skew_alpha, cfg.seed);
+            let set = oracle.into_set();
+            Simulator::new(cfg.clone(), &topo, algo, set).run(stop)
+        }
+        (m, "pjrt") => {
+            let dir = runtime::default_artifact_dir()
+                .ok_or("no artifacts/ — run `make artifacts`")?;
+            let manifest = Manifest::load(&dir)?;
+            let task = pjrt_task_for(m, n, &cfg)?;
+            let set = runtime::build_pjrt_set(&manifest, &task, n, cfg.seed)
+                .map_err(|e| e.to_string())?;
+            let x0 = manifest.load_init(&task.model_name())?;
+            Simulator::with_x0(cfg.clone(), &topo, algo, set, &x0).run(stop)
+        }
+        ("mlp", "rust") => {
+            return Err("mlp requires --oracle pjrt (the MLP lives in the \
+                        AOT artifacts)".into())
+        }
+        (m, o) => return Err(format!("unsupported --model {m} / --oracle {o}")),
+    };
+
+    let out = PathBuf::from(args.get_or("out", "runs/train.json"));
+    let (dir, name) = (
+        out.parent().unwrap_or(std::path::Path::new("runs")),
+        out.file_stem().and_then(|s| s.to_str()).unwrap_or("train"),
+    );
+    report.save(dir, name).map_err(|e| e.to_string())?;
+
+    let mut t = Table::new("result", &["metric", "value"]);
+    for (k, v) in &report.scalars {
+        t.row(vec![k.clone(), format!("{v:.4}")]);
+    }
+    if let Some(s) = report.series.get("loss_vs_time") {
+        if let Some(y) = s.last_y() {
+            t.row(vec!["final_eval_loss".into(), format!("{y:.5}")]);
+        }
+        if let Some(tt) = s.time_to_reach(0.1) {
+            t.row(vec!["time_to_loss_0.1".into(), format!("{tt:.1}s")]);
+        }
+    }
+    if let Some(g) = report.final_gap {
+        t.row(vec!["final_gap".into(), format!("{g:.3e}")]);
+    }
+    t.print();
+    println!("report: {}", out.display());
+    Ok(())
+}
+
+fn pjrt_task_for(model: &str, n: usize, cfg: &SimConfig) -> Result<PjrtTask, String> {
+    match model {
+        "logreg" => {
+            let (train, eval) = Dataset::mnist01_like(cfg.seed).split_eval(2000);
+            let partition = if cfg.skew_alpha > 0.0 {
+                Partition::label_skew(&train, n, cfg.skew_alpha, cfg.seed)
+            } else {
+                Partition::iid(&train, n, cfg.seed)
+            };
+            Ok(PjrtTask::LogReg {
+                data: Arc::new(train),
+                eval: Arc::new(eval),
+                partition,
+            })
+        }
+        "mlp" => {
+            let (train, eval) =
+                Dataset::imagenet_like(20_000, cfg.seed).split_eval(2000);
+            let partition = if cfg.skew_alpha > 0.0 {
+                Partition::label_skew(&train, n, cfg.skew_alpha, cfg.seed)
+            } else {
+                Partition::iid(&train, n, cfg.seed)
+            };
+            Ok(PjrtTask::Mlp {
+                data: Arc::new(train),
+                eval: Arc::new(eval),
+                partition,
+            })
+        }
+        other => Err(format!("unknown model {other:?}")),
+    }
+}

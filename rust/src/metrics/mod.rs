@@ -1,0 +1,314 @@
+//! Run metrics: loss curves, tables, CSV/JSON emit.
+//!
+//! Benches regenerate the paper's figures as [`Series`] (x = virtual time
+//! or epoch, y = loss/accuracy) and tables via [`Table`] — the same
+//! rows/columns the paper reports, printed to stdout and written under
+//! `runs/`.
+
+use crate::jsonio::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One curve of an experiment figure.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, xlabel: &str, ylabel: &str) -> Series {
+        Series {
+            name: name.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// First x at which y drops to/below the threshold (time-to-target, the
+    /// paper's Fig 4b metric). Linear interpolation between samples.
+    pub fn time_to_reach(&self, threshold: f64) -> Option<f64> {
+        let mut prev: Option<(f64, f64)> = None;
+        for &(x, y) in &self.points {
+            if y <= threshold {
+                if let Some((px, py)) = prev {
+                    if py > threshold && (py - y).abs() > 1e-30 {
+                        let t = (py - threshold) / (py - y);
+                        return Some(px + t * (x - px));
+                    }
+                }
+                return Some(x);
+            }
+            prev = Some((x, y));
+        }
+        None
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|&(_, y)| y)
+    }
+
+    /// Minimum y over the curve (best loss seen).
+    pub fn min_y(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|&(_, y)| y)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("xlabel", self.xlabel.as_str().into()),
+            ("ylabel", self.ylabel.as_str().into()),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|&(x, y)| Json::Arr(vec![x.into(), y.into()]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A full run report: named series + scalar summary values.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub label: String,
+    pub series: BTreeMap<String, Series>,
+    pub scalars: BTreeMap<String, f64>,
+    /// Final distance to optimum (quadratic oracles expose x*).
+    pub final_gap: Option<f64>,
+}
+
+impl Report {
+    pub fn new(label: &str) -> Report {
+        Report { label: label.to_string(), ..Default::default() }
+    }
+
+    pub fn series_mut(&mut self, name: &str, xlabel: &str,
+                      ylabel: &str) -> &mut Series {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name, xlabel, ylabel))
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: f64) {
+        self.scalars.insert(name.to_string(), v);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", self.label.as_str().into()),
+            (
+                "series",
+                Json::Obj(
+                    self.series
+                        .iter()
+                        .map(|(k, s)| (k.clone(), s.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "scalars",
+                Json::Obj(
+                    self.scalars
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `runs/<name>.json`.
+    pub fn save(&self, dir: &Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{name}.json")))?;
+        f.write_all(self.to_json().to_string().as_bytes())
+    }
+}
+
+/// Write several series as one CSV: `x, <name1>, <name2>, ...` aligned on
+/// the union of x values (empty cells where a series has no sample).
+pub fn save_series_csv(path: &Path, series: &[&Series]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "x")?;
+    for s in series {
+        write!(f, ",{}", s.name)?;
+    }
+    writeln!(f)?;
+    for &x in &xs {
+        write!(f, "{x}")?;
+        for s in series {
+            match s.points.iter().find(|&&(px, _)| px == x) {
+                Some(&(_, y)) => write!(f, ",{y}")?,
+                None => write!(f, ",")?,
+            }
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Fixed-width console table (paper-style rows).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (c, h) in self.headers.iter().enumerate() {
+            width[c] = width[c].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                width[c] = width[c].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                let pad = width[c] - cell.chars().count();
+                line.push_str("| ");
+                line.push_str(cell);
+                line.push_str(&" ".repeat(pad + 1));
+            }
+            line.push('|');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        out.push('\n');
+        let total: usize = width.iter().map(|w| w + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds of virtual time like the paper's tables ("time(mins)").
+pub fn fmt_mins(seconds: f64) -> String {
+    format!("{:.1}", seconds / 60.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_to_reach_interpolates() {
+        let mut s = Series::new("l", "t", "loss");
+        s.push(0.0, 1.0);
+        s.push(10.0, 0.5);
+        s.push(20.0, 0.1);
+        let t = s.time_to_reach(0.3).unwrap();
+        assert!((t - 15.0).abs() < 1e-9, "{t}");
+        assert_eq!(s.time_to_reach(0.05), None);
+        assert_eq!(s.time_to_reach(2.0), Some(0.0));
+    }
+
+    #[test]
+    fn series_json_roundtrip() {
+        let mut s = Series::new("a", "x", "y");
+        s.push(1.0, 2.0);
+        let j = s.to_json();
+        assert_eq!(j.at(&["name"]).unwrap().as_str(), Some("a"));
+        assert_eq!(
+            j.at(&["points"]).unwrap().as_arr().unwrap()[0].as_arr().unwrap()[1],
+            Json::Num(2.0)
+        );
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["algo", "time"]);
+        t.row(vec!["rfast".into(), "1.0".into()]);
+        t.row(vec!["ring-allreduce".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("| rfast"));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn csv_union_of_x() {
+        let dir = std::env::temp_dir().join("rfast_test_csv");
+        let mut a = Series::new("a", "x", "y");
+        a.push(0.0, 1.0);
+        a.push(2.0, 3.0);
+        let mut b = Series::new("b", "x", "y");
+        b.push(1.0, 5.0);
+        let path = dir.join("out.csv");
+        save_series_csv(&path, &[&a, &b]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].starts_with("1,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_scalars_and_save() {
+        let mut r = Report::new("test");
+        r.set_scalar("acc", 0.5);
+        r.series_mut("loss", "t", "l").push(0.0, 1.0);
+        let dir = std::env::temp_dir().join("rfast_test_report");
+        r.save(&dir, "r1").unwrap();
+        let text = std::fs::read_to_string(dir.join("r1.json")).unwrap();
+        let j = crate::jsonio::parse(&text).unwrap();
+        assert_eq!(j.at(&["scalars", "acc"]).unwrap().as_f64(), Some(0.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,258 @@
+//! Pure-rust logistic-regression oracle — exact functional twin of the
+//! Pallas `logreg_grad` kernel / `ref.py` oracle (same stable BCE, same
+//! ℓ2 term), over the synthetic digit set. Used for:
+//!   * high-rate virtual-time benches (no PJRT per-call overhead),
+//!   * cross-checking the PJRT path (integration test asserts the two
+//!     oracles agree to fp tolerance on identical batches).
+
+use super::{Eval, GradOracle, NodeOracle, OracleSet};
+use crate::data::{Batcher, Dataset, Partition};
+use std::sync::Arc;
+
+/// Builder: dataset + partition + hyper-parameters.
+pub struct LogRegOracle {
+    pub train: Arc<Dataset>,
+    pub eval_set: Arc<Dataset>,
+    pub partition: Partition,
+    pub batch: usize,
+    pub l2: f32,
+    pub seed: u64,
+}
+
+impl LogRegOracle {
+    /// The paper's §VI-A workload: 12k synthetic two-digit samples split
+    /// into train/eval, IID or label-skew partition over `n_nodes`.
+    pub fn paper_workload(n_nodes: usize, batch: usize, skew_alpha: f64,
+                          seed: u64) -> LogRegOracle {
+        let (train, eval_set) = Dataset::mnist01_like(seed).split_eval(2_000);
+        let partition = if skew_alpha <= 0.0 {
+            Partition::iid(&train, n_nodes, seed)
+        } else {
+            Partition::label_skew(&train, n_nodes, skew_alpha, seed)
+        };
+        LogRegOracle {
+            train: Arc::new(train),
+            eval_set: Arc::new(eval_set),
+            partition,
+            batch,
+            l2: 1e-4,
+            seed,
+        }
+    }
+
+    pub fn dim_p(&self) -> usize {
+        self.train.dim + 1
+    }
+}
+
+impl GradOracle for LogRegOracle {
+    fn into_set(self) -> OracleSet {
+        let p = self.dim_p();
+        let n_nodes = self.partition.n_nodes();
+        let mut nodes: Vec<Box<dyn NodeOracle>> = Vec::new();
+        // one node-batch advances the GLOBAL epoch by batch / N_total
+        let total: usize = self.partition.shards.iter().map(|s| s.len()).sum();
+        let epoch_frac = self.batch as f64 / total as f64;
+        for i in 0..n_nodes {
+            let b = Batcher::new(&self.partition.shards[i], self.batch,
+                                 self.seed ^ (0xb000 + i as u64));
+            nodes.push(Box::new(LogRegNode {
+                data: Arc::clone(&self.train),
+                batcher: b,
+                l2: self.l2,
+            }));
+        }
+        let eval_set = Arc::clone(&self.eval_set);
+        let l2 = self.l2;
+        OracleSet {
+            nodes,
+            eval: Box::new(move |x| eval_logreg(&eval_set, x, l2)),
+            optimum: None,
+            dim: p,
+            epoch_per_node_batch: epoch_frac,
+        }
+    }
+}
+
+/// Per-node handle: shard batcher + shared dataset.
+pub struct LogRegNode {
+    data: Arc<Dataset>,
+    batcher: Batcher,
+    l2: f32,
+}
+
+impl LogRegNode {
+    /// Expose the next batch indices (PJRT cross-check tests drive both
+    /// oracles with identical batches through this).
+    pub fn next_batch_indices(&mut self) -> Vec<usize> {
+        self.batcher.next_batch()
+    }
+
+    /// Gradient on an explicit batch (shared by `grad` and the tests).
+    pub fn grad_on(&self, idx: &[usize], x: &[f32],
+                   grad_out: &mut [f32]) -> f32 {
+        logreg_loss_grad(&self.data, idx, x, self.l2, grad_out)
+    }
+}
+
+impl NodeOracle for LogRegNode {
+    fn dim(&self) -> usize {
+        self.data.dim + 1
+    }
+
+    fn grad(&mut self, x: &[f32], grad_out: &mut [f32]) -> f32 {
+        let idx = self.batcher.next_batch();
+        self.grad_on(&idx, x, grad_out)
+    }
+}
+
+/// Stable BCE-with-logits loss + gradient over a batch of rows — the same
+/// arithmetic as `kernels/logreg.py::_kernel` (and `ref.py`).
+pub fn logreg_loss_grad(data: &Dataset, idx: &[usize], theta: &[f32],
+                        l2: f32, grad_out: &mut [f32]) -> f32 {
+    let d = data.dim;
+    assert_eq!(theta.len(), d + 1);
+    assert_eq!(grad_out.len(), d + 1);
+    let (w, bias) = theta.split_at(d);
+    let inv_b = 1.0 / idx.len() as f32;
+
+    // grad = l2 * theta  (filled first; batch terms accumulate on top)
+    for (g, &t) in grad_out.iter_mut().zip(theta.iter()) {
+        *g = l2 * t;
+    }
+    let mut loss = 0.0f64;
+    for &s in idx {
+        let row = data.row(s);
+        let y = data.labels[s] as f32;
+        let z = crate::linalg::dot(row, w) as f32 + bias[0];
+        // max(z,0) − z·y + log1p(exp(−|z|))
+        loss += (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64;
+        let sig = 1.0 / (1.0 + (-z).exp());
+        let r = (sig - y) * inv_b;
+        crate::linalg::axpy(&mut grad_out[..d], r, row);
+        grad_out[d] += r;
+    }
+    let theta_sq: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+    (loss * inv_b as f64 + 0.5 * l2 as f64 * theta_sq) as f32
+}
+
+/// Held-out loss + accuracy.
+pub fn eval_logreg(data: &Dataset, theta: &[f32], l2: f32) -> Eval {
+    let d = data.dim;
+    let (w, bias) = theta.split_at(d);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for s in 0..data.len() {
+        let row = data.row(s);
+        let y = data.labels[s] as f32;
+        let z = crate::linalg::dot(row, w) as f32 + bias[0];
+        loss += (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64;
+        let pred = if z > 0.0 { 1.0 } else { 0.0 };
+        if pred == y {
+            correct += 1;
+        }
+    }
+    let theta_sq: f64 = theta.iter().map(|&t| (t as f64) * (t as f64)).sum();
+    Eval {
+        loss: loss / data.len() as f64 + 0.5 * l2 as f64 * theta_sq,
+        accuracy: Some(correct as f64 / data.len() as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_oracle() -> LogRegOracle {
+        let (train, eval_set) =
+            Dataset::synthetic_digits(400, 16, 2, 0.25, 3).split_eval(100);
+        let partition = Partition::iid(&train, 3, 0);
+        LogRegOracle {
+            train: Arc::new(train),
+            eval_set: Arc::new(eval_set),
+            partition,
+            batch: 16,
+            l2: 1e-4,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let o = small_oracle();
+        let data = Arc::clone(&o.train);
+        let node = LogRegNode {
+            data: Arc::clone(&data),
+            batcher: Batcher::new(&o.partition.shards[0], 8, 0),
+            l2: 1e-3,
+        };
+        let idx: Vec<usize> = o.partition.shards[0][..8].to_vec();
+        let p = node.dim();
+        let theta: Vec<f32> = (0..p).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.05).collect();
+        let mut g = vec![0.0f32; p];
+        let l0 = node.grad_on(&idx, &theta, &mut g);
+        let eps = 1e-3f32;
+        for d in [0usize, 3, p - 1] {
+            let mut tp = theta.clone();
+            tp[d] += eps;
+            let mut tm = theta.clone();
+            tm[d] -= eps;
+            let mut scratch = vec![0.0f32; p];
+            let lp = node.grad_on(&idx, &tp, &mut scratch);
+            let lm = node.grad_on(&idx, &tm, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[d]).abs() < 2e-2 * (1.0 + g[d].abs()),
+                "dim {d}: fd {fd} vs analytic {}",
+                g[d]
+            );
+        }
+        assert!(l0 > 0.0);
+    }
+
+    #[test]
+    fn sgd_reaches_high_accuracy_on_separable_data() {
+        let o = small_oracle();
+        let mut set = o.into_set();
+        let p = set.dim;
+        let mut theta = vec![0.0f32; p];
+        let mut g = vec![0.0f32; p];
+        for step in 0..600 {
+            let node = step % set.nodes.len();
+            set.nodes[node].grad(&theta, &mut g);
+            crate::linalg::axpy(&mut theta, -0.5, &g);
+        }
+        let e = (set.eval)(&theta);
+        assert!(e.accuracy.unwrap() > 0.95, "acc {:?}", e.accuracy);
+        assert!(e.loss < 0.3, "loss {}", e.loss);
+    }
+
+    #[test]
+    fn eval_zero_theta_is_chance() {
+        let o = small_oracle();
+        let e = eval_logreg(&o.eval_set, &vec![0.0; o.dim_p()], 0.0);
+        // z = 0 everywhere ⇒ predicts class 0; balanced set ⇒ ~50%
+        assert!((e.accuracy.unwrap() - 0.5).abs() < 0.15);
+        assert!((e.loss - std::f64::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_matches_bce_identity_small_case() {
+        // hand-checked 1-sample case: d=1, w=1, b=0, x=2, y=1
+        let data = Dataset {
+            dim: 1,
+            features: vec![2.0],
+            labels: vec![1],
+            classes: 2,
+        };
+        let theta = [1.0f32, 0.0];
+        let mut g = [0.0f32; 2];
+        let loss = logreg_loss_grad(&data, &[0], &theta, 0.0, &mut g);
+        let z = 2.0f32;
+        let expect = (1.0 + (-z).exp()).ln();
+        assert!((loss - expect).abs() < 1e-6);
+        let sig = 1.0 / (1.0 + (-z).exp());
+        assert!((g[0] - (sig - 1.0) * 2.0).abs() < 1e-6);
+        assert!((g[1] - (sig - 1.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,413 @@
+//! Pure-rust MLP classifier oracle (784-128-64-10, ReLU, softmax xent) —
+//! functional twin of `python/compile/model.py::mlp_grad` over the same
+//! flat-θ layout ([w0; b0; w1; b1; w2; b2], row-major weights).
+//!
+//! Exists for two reasons: (1) the Table II / Figs 5-7 benches drive ~10⁵
+//! simulated gradient steps per algorithm — a hand-rolled fwd/bwd at
+//! ~0.1 ms/batch keeps every bench regenerable in seconds; (2) it
+//! cross-checks the PJRT `mlp_grad` artifact (integration test asserts
+//! agreement on identical batches).
+
+use super::{Eval, GradOracle, NodeOracle, OracleSet};
+use crate::data::{Batcher, Dataset, Partition};
+use std::sync::Arc;
+
+/// Layer dims — MUST match `model.MLP_DIMS` in python.
+pub const MLP_DIMS: [usize; 4] = [784, 128, 64, 10];
+
+/// Total parameter count p.
+pub fn mlp_p() -> usize {
+    (0..3).map(|i| MLP_DIMS[i] * MLP_DIMS[i + 1] + MLP_DIMS[i + 1]).sum()
+}
+
+/// Offsets of (w_i, b_i) inside flat θ.
+fn offsets() -> [(usize, usize); 3] {
+    let mut out = [(0, 0); 3];
+    let mut off = 0;
+    for i in 0..3 {
+        let w = off;
+        off += MLP_DIMS[i] * MLP_DIMS[i + 1];
+        let b = off;
+        off += MLP_DIMS[i + 1];
+        out[i] = (w, b);
+    }
+    out
+}
+
+/// Builder over the synthetic 10-class set (ImageNet proxy, DESIGN.md §4).
+pub struct MlpOracle {
+    pub train: Arc<Dataset>,
+    pub eval_set: Arc<Dataset>,
+    pub partition: Partition,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl MlpOracle {
+    /// Paper §VI-B proxy workload.
+    pub fn paper_workload(n_nodes: usize, batch: usize, skew_alpha: f64,
+                          seed: u64) -> MlpOracle {
+        let (train, eval_set) =
+            Dataset::imagenet_like(20_000, seed).split_eval(2_000);
+        let partition = if skew_alpha <= 0.0 {
+            Partition::iid(&train, n_nodes, seed)
+        } else {
+            Partition::label_skew(&train, n_nodes, skew_alpha, seed)
+        };
+        MlpOracle {
+            train: Arc::new(train),
+            eval_set: Arc::new(eval_set),
+            partition,
+            batch,
+            seed,
+        }
+    }
+
+    /// Deterministic init matching the python scale (He init, zero bias) —
+    /// exact values differ (different PRNG), distributional match only.
+    pub fn init_theta(seed: u64) -> Vec<f32> {
+        let mut rng = crate::prng::Rng::stream(seed, 0x1417);
+        let mut theta = vec![0.0f32; mlp_p()];
+        let offs = offsets();
+        for i in 0..3 {
+            let scale = (2.0 / MLP_DIMS[i] as f32).sqrt();
+            let (w, b) = offs[i];
+            for v in theta[w..w + MLP_DIMS[i] * MLP_DIMS[i + 1]].iter_mut() {
+                *v = rng.normal_f32(0.0, scale);
+            }
+            let _ = b; // biases stay zero
+        }
+        theta
+    }
+}
+
+impl GradOracle for MlpOracle {
+    fn into_set(self) -> OracleSet {
+        let p = mlp_p();
+        let n = self.partition.n_nodes();
+        let mut nodes: Vec<Box<dyn NodeOracle>> = Vec::new();
+        // one node-batch advances the GLOBAL epoch by batch / N_total
+        let total: usize = self.partition.shards.iter().map(|s| s.len()).sum();
+        let epoch_frac = self.batch as f64 / total as f64;
+        for i in 0..n {
+            let b = Batcher::new(&self.partition.shards[i], self.batch,
+                                 self.seed ^ (0x3170 + i as u64));
+            nodes.push(Box::new(MlpNode {
+                data: Arc::clone(&self.train),
+                batcher: b,
+                ws: Workspace::new(self.batch),
+            }));
+        }
+        let eval_set = Arc::clone(&self.eval_set);
+        let mut ews = Workspace::new(256);
+        OracleSet {
+            nodes,
+            eval: Box::new(move |x| eval_mlp(&eval_set, x, &mut ews)),
+            optimum: None,
+            dim: p,
+            epoch_per_node_batch: epoch_frac,
+        }
+    }
+}
+
+/// Per-batch activation/gradient scratch (no allocation on the hot path).
+pub struct Workspace {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    logits: Vec<f32>,
+    d2: Vec<f32>,
+    d1: Vec<f32>,
+    dlog: Vec<f32>,
+    cap: usize,
+}
+
+impl Workspace {
+    pub fn new(batch: usize) -> Workspace {
+        Workspace {
+            h1: vec![0.0; batch * MLP_DIMS[1]],
+            h2: vec![0.0; batch * MLP_DIMS[2]],
+            logits: vec![0.0; batch * MLP_DIMS[3]],
+            d2: vec![0.0; batch * MLP_DIMS[2]],
+            d1: vec![0.0; batch * MLP_DIMS[1]],
+            dlog: vec![0.0; batch * MLP_DIMS[3]],
+            cap: batch,
+        }
+    }
+}
+
+pub struct MlpNode {
+    data: Arc<Dataset>,
+    batcher: Batcher,
+    ws: Workspace,
+}
+
+impl MlpNode {
+    pub fn next_batch_indices(&mut self) -> Vec<usize> {
+        self.batcher.next_batch()
+    }
+
+    pub fn grad_on(&mut self, idx: &[usize], theta: &[f32],
+                   grad_out: &mut [f32]) -> f32 {
+        mlp_loss_grad(&self.data, idx, theta, grad_out, &mut self.ws)
+    }
+}
+
+impl NodeOracle for MlpNode {
+    fn dim(&self) -> usize {
+        mlp_p()
+    }
+
+    fn grad(&mut self, x: &[f32], grad_out: &mut [f32]) -> f32 {
+        let idx = self.batcher.next_batch();
+        mlp_loss_grad(&self.data, &idx, x, grad_out, &mut self.ws)
+    }
+}
+
+/// y[b, o] = x[b, i] @ w[i, o] + bias[o]
+fn dense_fwd(x: &[f32], w: &[f32], bias: &[f32], y: &mut [f32], b: usize,
+             din: usize, dout: usize) {
+    for r in 0..b {
+        let yr = &mut y[r * dout..(r + 1) * dout];
+        yr.copy_from_slice(bias);
+        let xr = &x[r * din..(r + 1) * din];
+        for i in 0..din {
+            let xv = xr[i];
+            if xv != 0.0 {
+                crate::linalg::axpy(yr, xv, &w[i * dout..(i + 1) * dout]);
+            }
+        }
+    }
+}
+
+/// Backward through dense: dW += xᵀ dy, db += Σ dy, dx = dy Wᵀ.
+fn dense_bwd(x: &[f32], w: &[f32], dy: &[f32], dw: &mut [f32],
+             db: &mut [f32], dx: Option<&mut [f32]>, b: usize, din: usize,
+             dout: usize) {
+    for r in 0..b {
+        let dyr = &dy[r * dout..(r + 1) * dout];
+        let xr = &x[r * din..(r + 1) * din];
+        for i in 0..din {
+            let xv = xr[i];
+            if xv != 0.0 {
+                crate::linalg::axpy(&mut dw[i * dout..(i + 1) * dout], xv, dyr);
+            }
+        }
+        crate::linalg::axpy(db, 1.0, dyr);
+    }
+    if let Some(dx) = dx {
+        for r in 0..b {
+            let dyr = &dy[r * dout..(r + 1) * dout];
+            let dxr = &mut dx[r * din..(r + 1) * din];
+            for i in 0..din {
+                dxr[i] = crate::linalg::dot(dyr, &w[i * dout..(i + 1) * dout])
+                    as f32;
+            }
+        }
+    }
+}
+
+fn forward(data: &Dataset, idx: &[usize], theta: &[f32],
+           ws: &mut Workspace) -> f64 {
+    let b = idx.len();
+    assert!(b <= ws.cap);
+    let offs = offsets();
+    let d = MLP_DIMS;
+    // gather rows contiguously via per-row fwd (x rows borrowed directly)
+    for (r, &s) in idx.iter().enumerate() {
+        let xr = data.row(s);
+        let (w0, b0) = offs[0];
+        dense_fwd(xr, &theta[w0..w0 + d[0] * d[1]],
+                  &theta[b0..b0 + d[1]],
+                  &mut ws.h1[r * d[1]..(r + 1) * d[1]], 1, d[0], d[1]);
+    }
+    for v in ws.h1[..b * d[1]].iter_mut() {
+        *v = v.max(0.0);
+    }
+    let (w1, b1) = offs[1];
+    dense_fwd(&ws.h1, &theta[w1..w1 + d[1] * d[2]], &theta[b1..b1 + d[2]],
+              &mut ws.h2, b, d[1], d[2]);
+    for v in ws.h2[..b * d[2]].iter_mut() {
+        *v = v.max(0.0);
+    }
+    let (w2, b2) = offs[2];
+    dense_fwd(&ws.h2, &theta[w2..w2 + d[2] * d[3]], &theta[b2..b2 + d[3]],
+              &mut ws.logits, b, d[2], d[3]);
+    // stable mean xent + dlogits = (softmax − onehot)/B
+    let mut loss = 0.0f64;
+    for r in 0..b {
+        let lr = &mut ws.logits[r * d[3]..(r + 1) * d[3]];
+        let label = data.labels[idx[r]] as usize;
+        let m = lr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for v in lr.iter() {
+            denom += (v - m).exp();
+        }
+        let lse = m + denom.ln();
+        loss += (lse - lr[label]) as f64;
+        let dlr = &mut ws.dlog[r * d[3]..(r + 1) * d[3]];
+        for (o, v) in lr.iter().enumerate() {
+            dlr[o] = ((v - lse).exp() - f32::from(o == label)) / b as f32;
+        }
+    }
+    loss / b as f64
+}
+
+/// One-shot convenience wrapper (tests / cross-checks): allocates its own
+/// workspace.
+pub fn mlp_loss_grad_once(data: &Dataset, idx: &[usize],
+                          theta: &[f32]) -> (f32, Vec<f32>) {
+    let mut ws = Workspace::new(idx.len());
+    let mut grad = vec![0.0f32; mlp_p()];
+    let loss = mlp_loss_grad(data, idx, theta, &mut grad, &mut ws);
+    (loss, grad)
+}
+
+/// Fused loss+grad (the oracle hot path).
+pub fn mlp_loss_grad(data: &Dataset, idx: &[usize], theta: &[f32],
+                     grad_out: &mut [f32], ws: &mut Workspace) -> f32 {
+    let b = idx.len();
+    let d = MLP_DIMS;
+    let offs = offsets();
+    let loss = forward(data, idx, theta, ws);
+    grad_out.iter_mut().for_each(|v| *v = 0.0);
+
+    let (w2, b2) = offs[2];
+    let (w1, b1) = offs[1];
+    let (w0, b0) = offs[0];
+    // split grad_out disjointly
+    let (g01, g2) = grad_out.split_at_mut(w2);
+    let (g0, g1) = g01.split_at_mut(w1);
+    let (gw2, gb2) = g2.split_at_mut(b2 - w2);
+    let (gw1, gb1) = g1.split_at_mut(b1 - w1);
+    let (gw0, gb0) = g0.split_at_mut(b0 - w0);
+
+    dense_bwd(&ws.h2, &theta[w2..w2 + d[2] * d[3]], &ws.dlog, gw2, gb2,
+              Some(&mut ws.d2), b, d[2], d[3]);
+    for (dv, hv) in ws.d2[..b * d[2]].iter_mut().zip(&ws.h2) {
+        if *hv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    dense_bwd(&ws.h1, &theta[w1..w1 + d[1] * d[2]], &ws.d2, gw1, gb1,
+              Some(&mut ws.d1), b, d[1], d[2]);
+    for (dv, hv) in ws.d1[..b * d[1]].iter_mut().zip(&ws.h1) {
+        if *hv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    for (r, &s) in idx.iter().enumerate() {
+        let xr = data.row(s);
+        dense_bwd(xr, &theta[w0..w0 + d[0] * d[1]],
+                  &ws.d1[r * d[1]..(r + 1) * d[1]], gw0, gb0, None, 1, d[0],
+                  d[1]);
+    }
+    loss as f32
+}
+
+/// Held-out loss + accuracy.
+pub fn eval_mlp(data: &Dataset, theta: &[f32], ws: &mut Workspace) -> Eval {
+    let d = MLP_DIMS;
+    let chunk = ws.cap;
+    let mut total_loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut counted = 0usize;
+    let idx_all: Vec<usize> = (0..data.len()).collect();
+    for c in idx_all.chunks(chunk) {
+        let loss = forward(data, c, theta, ws);
+        total_loss += loss * c.len() as f64;
+        counted += c.len();
+        for (r, &s) in c.iter().enumerate() {
+            // dlog holds softmax/B − onehot/B; recover argmax from logits
+            let lr = &ws.logits[r * d[3]..(r + 1) * d[3]];
+            let mut best = 0;
+            for o in 1..d[3] {
+                if lr[o] > lr[best] {
+                    best = o;
+                }
+            }
+            if best == data.labels[s] as usize {
+                correct += 1;
+            }
+        }
+    }
+    Eval {
+        loss: total_loss / counted as f64,
+        accuracy: Some(correct as f64 / counted as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_data() -> Dataset {
+        Dataset::synthetic_digits(300, 784, 10, 0.3, 7)
+    }
+
+    #[test]
+    fn p_matches_python() {
+        assert_eq!(mlp_p(), 109_386); // asserted equal to model.MLP_P
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let data = tiny_data();
+        let idx: Vec<usize> = (0..8).collect();
+        let theta = MlpOracle::init_theta(3);
+        let mut ws = Workspace::new(8);
+        let mut g = vec![0.0f32; mlp_p()];
+        let _ = mlp_loss_grad(&data, &idx, &theta, &mut g, &mut ws);
+        let offs = offsets();
+        // probe a few coordinates across all six tensors
+        let probes = [
+            offs[0].0 + 5,
+            offs[0].1 + 3,
+            offs[1].0 + 17,
+            offs[1].1 + 1,
+            offs[2].0 + 9,
+            offs[2].1 + 2,
+        ];
+        let eps = 5e-3f32;
+        for &k in &probes {
+            let mut tp = theta.clone();
+            tp[k] += eps;
+            let mut tm = theta.clone();
+            tm[k] -= eps;
+            let mut scratch = vec![0.0f32; mlp_p()];
+            let lp = mlp_loss_grad(&data, &idx, &tp, &mut scratch, &mut ws);
+            let lm = mlp_loss_grad(&data, &idx, &tm, &mut scratch, &mut ws);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[k]).abs() < 5e-2 * (1.0 + fd.abs().max(g[k].abs())),
+                "coord {k}: fd {fd} vs analytic {}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_synthetic_classes() {
+        let o = MlpOracle::paper_workload(1, 32, 0.0, 5);
+        let eval_set = Arc::clone(&o.eval_set);
+        let mut set = o.into_set();
+        let mut theta = MlpOracle::init_theta(1);
+        let mut g = vec![0.0f32; mlp_p()];
+        for _ in 0..300 {
+            set.nodes[0].grad(&theta, &mut g);
+            crate::linalg::axpy(&mut theta, -0.05, &g);
+        }
+        let mut ws = Workspace::new(256);
+        let e = eval_mlp(&eval_set, &theta, &mut ws);
+        assert!(e.accuracy.unwrap() > 0.8, "acc {:?}", e.accuracy);
+    }
+
+    #[test]
+    fn eval_random_theta_near_chance() {
+        let o = MlpOracle::paper_workload(1, 32, 0.0, 9);
+        let theta = MlpOracle::init_theta(2);
+        let mut ws = Workspace::new(256);
+        let e = eval_mlp(&o.eval_set, &theta, &mut ws);
+        assert!((e.loss - (10.0f64).ln()).abs() < 0.8, "loss {}", e.loss);
+        assert!(e.accuracy.unwrap() < 0.45);
+    }
+}

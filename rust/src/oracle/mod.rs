@@ -1,0 +1,104 @@
+//! Gradient oracles — what a node computes when it wakes (step S1/S2b).
+//!
+//! Three families:
+//! * [`QuadraticOracle`] — heterogeneous quadratics with a closed-form
+//!   global optimum; drives convergence *proofs-as-tests* (optimality gap,
+//!   mass conservation) at high event rates.
+//! * [`LogRegOracle`] — pure-rust logistic regression over the synthetic
+//!   digit set: exact twin of the Pallas `logreg_grad` kernel, used to
+//!   cross-check the PJRT path and for fast virtual-time benches.
+//! * [`PjrtOracle`](crate::runtime::PjrtOracle) — the production path:
+//!   gradients come from the AOT-compiled XLA executables.
+//!
+//! The per-node handle is [`NodeOracle`] (`Send`, owned by a sim node or a
+//! runner thread); centralized evaluation goes through [`EvalFn`].
+
+mod logreg;
+mod mlp;
+mod quadratic;
+
+pub use logreg::{eval_logreg, logreg_loss_grad, LogRegNode, LogRegOracle};
+pub use mlp::{mlp_loss_grad_once, mlp_p, MlpNode, MlpOracle};
+pub use quadratic::{QuadraticNode, QuadraticOracle};
+
+/// Per-node stochastic gradient source.
+///
+/// `grad` writes ∇f_node(x; ζ) into `grad_out` and returns the minibatch
+/// loss. Implementations advance their own sampling state (ζ) per call.
+///
+/// Deliberately **not** `Send`: the PJRT client is `Rc`-based, so PJRT
+/// oracles must live on the thread that built them. The threaded runner
+/// therefore takes an [`OracleFactory`] and constructs each node's oracle
+/// inside its worker thread; the single-threaded simulator owns its
+/// oracles directly.
+pub trait NodeOracle {
+    fn dim(&self) -> usize;
+    fn grad(&mut self, x: &[f32], grad_out: &mut [f32]) -> f32;
+}
+
+/// Thread-safe builder of per-node oracles (used by `runner`).
+pub trait OracleFactory: Send + Sync {
+    fn dim(&self) -> usize;
+    fn make(&self, node: usize) -> Box<dyn NodeOracle>;
+}
+
+/// Evaluation snapshot on held-out data / the full objective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Eval {
+    pub loss: f64,
+    /// Classification accuracy in [0,1] when defined for the task.
+    pub accuracy: Option<f64>,
+}
+
+/// Centralized evaluation closure (runs on the coordinator thread only).
+pub type EvalFn = Box<dyn FnMut(&[f32]) -> Eval>;
+
+/// Everything the engines need: one oracle per node + evaluation + the
+/// closed-form optimum when the objective has one.
+pub struct OracleSet {
+    pub nodes: Vec<Box<dyn NodeOracle>>,
+    pub eval: EvalFn,
+    pub optimum: Option<Vec<f32>>,
+    pub dim: usize,
+    /// Fraction of a global epoch consumed by one minibatch at one node
+    /// (Σ over nodes of their per-batch fractions ≈ n · this for even
+    /// shards); lets reports convert iterations → epochs like the paper.
+    pub epoch_per_node_batch: f64,
+}
+
+impl OracleSet {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Marker trait for oracle builders (each concrete oracle type provides
+/// `fn build(&self, ...) -> OracleSet`); kept as a free convention rather
+/// than a trait because builders differ in their inputs.
+pub trait GradOracle {
+    fn into_set(self) -> OracleSet;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_set_shapes() {
+        let q = QuadraticOracle::heterogeneous(8, 3, 1.0, 4.0, 7);
+        let set = q.into_set();
+        assert_eq!(set.n_nodes(), 3);
+        assert_eq!(set.dim, 8);
+        assert!(set.optimum.is_some());
+    }
+
+    #[test]
+    fn eval_fn_runs() {
+        let q = QuadraticOracle::heterogeneous(4, 2, 1.0, 2.0, 3);
+        let mut set = q.into_set();
+        let x = vec![0.0f32; 4];
+        let e = (set.eval)(&x);
+        assert!(e.loss >= 0.0);
+        assert!(e.accuracy.is_none());
+    }
+}

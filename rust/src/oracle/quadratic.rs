@@ -1,0 +1,241 @@
+//! Heterogeneous quadratic objectives with closed-form optimum.
+//!
+//! f_i(x) = ½ (x − b_i)ᵀ H_i (x − b_i), H_i diagonal positive.
+//! F = Σ_i f_i is τ-strongly convex with τ = λ_min(Σ H_i); the optimum is
+//! x* = (Σ H_i)⁻¹ Σ H_i b_i (element-wise for diagonal H).
+//!
+//! Heterogeneity knob: the spread of the b_i. With `spread = 0` every node
+//! shares the same minimizer (ς = 0); growing spread grows ς exactly as in
+//! Definition 2 — this is what the heterogeneity ablation bench sweeps.
+//! Stochasticity: `noise_sigma` adds i.i.d. N(0, σ²) to each gradient
+//! entry (Assumption 5 with variance p·σ²).
+
+use super::{Eval, GradOracle, NodeOracle, OracleSet};
+use crate::prng::Rng;
+
+/// Builder for the family (owns all nodes' H_i, b_i).
+#[derive(Clone, Debug)]
+pub struct QuadraticOracle {
+    pub dim: usize,
+    pub n_nodes: usize,
+    /// h[i] — diagonal of H_i.
+    pub h: Vec<Vec<f32>>,
+    /// b[i] — per-node shift.
+    pub b: Vec<Vec<f32>>,
+    pub noise_sigma: f32,
+    pub seed: u64,
+}
+
+impl QuadraticOracle {
+    /// Random instance: curvatures log-uniform in [h_min, h_max], shifts
+    /// uniform in [-spread, spread] around a common center.
+    pub fn new(dim: usize, n_nodes: usize, h_min: f32, h_max: f32,
+               spread: f32, noise_sigma: f32, seed: u64) -> QuadraticOracle {
+        assert!(h_min > 0.0 && h_max >= h_min);
+        let mut rng = Rng::stream(seed, 0x9ad);
+        let center: Vec<f32> = (0..dim).map(|_| 2.0 * rng.f32() - 1.0).collect();
+        let mut h = Vec::with_capacity(n_nodes);
+        let mut b = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            h.push(
+                (0..dim)
+                    .map(|_| {
+                        let t = rng.f32();
+                        (h_min.ln() + t * (h_max.ln() - h_min.ln())).exp()
+                    })
+                    .collect(),
+            );
+            b.push(
+                center
+                    .iter()
+                    .map(|c| c + spread * (2.0 * rng.f32() - 1.0))
+                    .collect(),
+            );
+        }
+        QuadraticOracle { dim, n_nodes, h, b, noise_sigma, seed }
+    }
+
+    /// Standard heterogeneous test instance (spread 1, no gradient noise).
+    pub fn heterogeneous(dim: usize, n_nodes: usize, h_min: f32, h_max: f32,
+                         seed: u64) -> QuadraticOracle {
+        QuadraticOracle::new(dim, n_nodes, h_min, h_max, 1.0, 0.0, seed)
+    }
+
+    /// With stochastic gradients.
+    pub fn noisy(dim: usize, n_nodes: usize, sigma: f32, seed: u64) -> QuadraticOracle {
+        QuadraticOracle::new(dim, n_nodes, 0.5, 4.0, 1.0, sigma, seed)
+    }
+
+    /// Closed-form minimizer of F = Σ f_i.
+    pub fn optimum(&self) -> Vec<f32> {
+        let mut num = vec![0.0f64; self.dim];
+        let mut den = vec![0.0f64; self.dim];
+        for i in 0..self.n_nodes {
+            for d in 0..self.dim {
+                num[d] += self.h[i][d] as f64 * self.b[i][d] as f64;
+                den[d] += self.h[i][d] as f64;
+            }
+        }
+        num.iter().zip(&den).map(|(n, d)| (n / d) as f32).collect()
+    }
+
+    /// Exact F(x) = Σ_i f_i(x).
+    pub fn global_loss(&self, x: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..self.n_nodes {
+            for d in 0..self.dim {
+                let e = (x[d] - self.b[i][d]) as f64;
+                total += 0.5 * self.h[i][d] as f64 * e * e;
+            }
+        }
+        total
+    }
+
+    /// ς² of Definition 2 at the optimum: (1/n)Σ‖∇f_i(x*) − ∇F(x*)/n‖².
+    pub fn heterogeneity_at_optimum(&self) -> f64 {
+        let xs = self.optimum();
+        let mut grads = vec![vec![0.0f64; self.dim]; self.n_nodes];
+        for i in 0..self.n_nodes {
+            for d in 0..self.dim {
+                grads[i][d] =
+                    self.h[i][d] as f64 * (xs[d] - self.b[i][d]) as f64;
+            }
+        }
+        let mut mean = vec![0.0f64; self.dim];
+        for g in &grads {
+            for (m, v) in mean.iter_mut().zip(g) {
+                *m += v / self.n_nodes as f64;
+            }
+        }
+        grads
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .zip(&mean)
+                    .map(|(v, m)| (v - m) * (v - m))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / self.n_nodes as f64
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn into_set(self) -> OracleSet {
+        let mut nodes: Vec<Box<dyn NodeOracle>> = Vec::new();
+        for i in 0..self.n_nodes {
+            nodes.push(Box::new(QuadraticNode {
+                h: self.h[i].clone(),
+                b: self.b[i].clone(),
+                noise_sigma: self.noise_sigma,
+                rng: Rng::stream(self.seed, 0x3100 + i as u64),
+            }));
+        }
+        let optimum = self.optimum();
+        let dim = self.dim;
+        let this = self;
+        OracleSet {
+            nodes,
+            eval: Box::new(move |x| Eval {
+                loss: this.global_loss(x),
+                accuracy: None,
+            }),
+            optimum: Some(optimum),
+            dim,
+            epoch_per_node_batch: 1.0, // one "epoch" per deterministic step
+        }
+    }
+}
+
+/// Per-node quadratic gradient: ∇f_i(x) = H_i(x − b_i) (+ noise).
+pub struct QuadraticNode {
+    h: Vec<f32>,
+    b: Vec<f32>,
+    noise_sigma: f32,
+    rng: Rng,
+}
+
+impl NodeOracle for QuadraticNode {
+    fn dim(&self) -> usize {
+        self.h.len()
+    }
+
+    fn grad(&mut self, x: &[f32], grad_out: &mut [f32]) -> f32 {
+        let mut loss = 0.0f64;
+        for d in 0..self.h.len() {
+            let e = x[d] - self.b[d];
+            loss += 0.5 * (self.h[d] * e * e) as f64;
+            let mut g = self.h[d] * e;
+            if self.noise_sigma > 0.0 {
+                g += self.rng.normal_f32(0.0, self.noise_sigma);
+            }
+            grad_out[d] = g;
+        }
+        loss as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    #[test]
+    fn optimum_has_zero_total_gradient() {
+        let q = QuadraticOracle::heterogeneous(16, 5, 0.5, 8.0, 42);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut total = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        for node in set.nodes.iter_mut() {
+            node.grad(&xs, &mut g);
+            linalg::axpy(&mut total, 1.0, &g);
+        }
+        assert!(linalg::norm(&total) < 1e-4, "{}", linalg::norm(&total));
+    }
+
+    #[test]
+    fn global_loss_minimized_at_optimum() {
+        let q = QuadraticOracle::heterogeneous(8, 4, 1.0, 3.0, 7);
+        let xs = q.optimum();
+        let l_star = q.global_loss(&xs);
+        let mut perturbed = xs.clone();
+        perturbed[3] += 0.1;
+        assert!(q.global_loss(&perturbed) > l_star);
+    }
+
+    #[test]
+    fn spread_zero_means_zero_heterogeneity() {
+        let q = QuadraticOracle::new(8, 4, 1.0, 1.0, 0.0, 0.0, 5);
+        assert!(q.heterogeneity_at_optimum() < 1e-10);
+        let q2 = QuadraticOracle::new(8, 4, 0.5, 4.0, 2.0, 0.0, 5);
+        assert!(q2.heterogeneity_at_optimum() > 0.01);
+    }
+
+    #[test]
+    fn noise_is_zero_mean() {
+        let q = QuadraticOracle::noisy(4, 1, 0.5, 9);
+        let xs = q.optimum();
+        let mut set = q.into_set();
+        let mut acc = vec![0.0f64; 4];
+        let mut g = vec![0.0f32; 4];
+        let reps = 20_000;
+        for _ in 0..reps {
+            set.nodes[0].grad(&xs, &mut g);
+            for (a, &v) in acc.iter_mut().zip(&g) {
+                *a += v as f64;
+            }
+        }
+        for a in &acc {
+            assert!((a / reps as f64).abs() < 0.02, "{a}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = QuadraticOracle::heterogeneous(4, 2, 1.0, 2.0, 11);
+        let b = QuadraticOracle::heterogeneous(4, 2, 1.0, 2.0, 11);
+        assert_eq!(a.h, b.h);
+        assert_eq!(a.b, b.b);
+    }
+}

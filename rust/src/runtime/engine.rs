@@ -1,0 +1,190 @@
+//! Thread-local PJRT execution engine.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`, following the smoke-verified
+//! pattern of /opt/xla-example/load_hlo. One engine per thread (the client
+//! is `Rc`-based); executables are compiled once at construction and
+//! reused for every step.
+
+use super::manifest::{ArtifactInfo, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, (ArtifactInfo, xla::PjRtLoadedExecutable)>,
+}
+
+impl Engine {
+    /// Compile the named artifacts (compile-once; call off the hot path).
+    pub fn load(manifest: &Manifest, names: &[&str]) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for &name in names {
+            let info = manifest
+                .artifact(name)
+                .map_err(|e| anyhow!(e))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&info.hlo_path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", info.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            executables.insert(name.to_string(), (info, exe));
+        }
+        Ok(Engine { client, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.executables.get(name).map(|(i, _)| i)
+    }
+
+    /// Execute an artifact on f32/i32 host buffers. Inputs must match the
+    /// manifest specs (checked); outputs come back as flat f32 vectors
+    /// (int outputs are converted).
+    pub fn run(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Output>> {
+        let (info, exe) = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))?;
+        if inputs.len() != info.inputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} inputs, artifact wants {}",
+                inputs.len(),
+                info.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (input, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            let lit = match (input, spec.dtype.as_str()) {
+                (Input::F32(data), "float32") => {
+                    if data.len() != spec.numel() {
+                        return Err(anyhow!(
+                            "{name} input {k}: {} elems, spec {:?}",
+                            data.len(),
+                            spec.shape
+                        ));
+                    }
+                    make_literal_f32(data, &spec.shape)?
+                }
+                (Input::I32(data), "int32") => {
+                    if data.len() != spec.numel() {
+                        return Err(anyhow!(
+                            "{name} input {k}: {} elems, spec {:?}",
+                            data.len(),
+                            spec.shape
+                        ));
+                    }
+                    make_literal_i32(data, &spec.shape)?
+                }
+                (inp, want) => {
+                    return Err(anyhow!(
+                        "{name} input {k}: host dtype {} vs artifact {want}",
+                        inp.dtype_name()
+                    ))
+                }
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple {name}: {e:?}"))?;
+        if parts.len() != info.outputs.len() {
+            return Err(anyhow!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                info.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&info.outputs)
+            .map(|(lit, spec)| match spec.dtype.as_str() {
+                "float32" => Ok(Output::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("output read: {e:?}"))?,
+                )),
+                "int32" => Ok(Output::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("output read: {e:?}"))?,
+                )),
+                other => Err(anyhow!("unsupported output dtype {other}")),
+            })
+            .collect()
+    }
+}
+
+/// Borrowed host input buffer.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Input<'_> {
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            Input::F32(_) => "float32",
+            Input::I32(_) => "int32",
+        }
+    }
+}
+
+/// Owned host output buffer.
+#[derive(Debug, Clone)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            Output::F32(v) => Ok(v),
+            Output::I32(_) => Err(anyhow!("output is int32, wanted float32")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Output::F32(v) if v.len() == 1 => Ok(v[0]),
+            Output::F32(v) => Err(anyhow!("expected scalar, got {} elems", v.len())),
+            Output::I32(_) => Err(anyhow!("output is int32")),
+        }
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        match self {
+            Output::I32(v) if v.len() == 1 => Ok(v[0]),
+            _ => Err(anyhow!("expected scalar int32")),
+        }
+    }
+}
+
+fn make_literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    reshape(lit, shape)
+}
+
+fn make_literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    reshape(lit, shape)
+}
+
+fn reshape(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+        .context("literal reshape")
+}

@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` parsing — the shape contract between
+//! `python/compile/aot.py` and the rust runtime.
+
+use crate::jsonio::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// dtype + shape of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or("missing dtype")?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// One model's initialization + dimensions.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub init_path: PathBuf,
+    pub p: usize,
+    pub meta: Json,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = jsonio::parse(text).map_err(|e| e.to_string())?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts").and_then(Json::as_obj).ok_or("no artifacts key")? {
+            let hlo = a.get("hlo").and_then(Json::as_str).ok_or("no hlo path")?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("{name}: no {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| format!("{name}: {e}"))
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    hlo_path: dir.join(hlo),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).ok_or("no models key")? {
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    init_path: dir.join(
+                        m.get("init").and_then(Json::as_str).ok_or("no init")?,
+                    ),
+                    p: m.get("p").and_then(Json::as_usize).ok_or("no p")?,
+                    meta: m.clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact {name:?} not in manifest (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo, String> {
+        self.models
+            .get(name)
+            .ok_or_else(|| format!("model {name:?} not in manifest"))
+    }
+
+    /// Load a model's initial flat parameter vector.
+    pub fn load_init(&self, model: &str) -> Result<Vec<f32>, String> {
+        let info = self.model(model)?;
+        let v = super::read_f32_file(&info.init_path).map_err(|e| e.to_string())?;
+        if v.len() != info.p {
+            return Err(format!(
+                "{model}: init file has {} floats, manifest says p={}",
+                v.len(),
+                info.p
+            ));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "artifacts": {
+  "logreg_grad": {
+   "hlo": "logreg_grad.hlo.txt",
+   "inputs": [
+    {"dtype": "float32", "shape": [785]},
+    {"dtype": "float32", "shape": [32, 784]},
+    {"dtype": "float32", "shape": [32]}
+   ],
+   "outputs": [
+    {"dtype": "float32", "shape": []},
+    {"dtype": "float32", "shape": [785]}
+   ],
+   "meta": {"batch": 32, "l2": 0.0001, "model": "logreg"}
+  }
+ },
+ "models": {
+  "logreg": {"init": "logreg_init.f32", "p": 785, "l2": 0.0001}
+ }
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        let a = m.artifact("logreg_grad").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![32, 784]);
+        assert_eq!(a.inputs[1].numel(), 32 * 784);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.hlo_path, Path::new("/tmp/arts/logreg_grad.hlo.txt"));
+        let model = m.model("logreg").unwrap();
+        assert_eq!(model.p, 785);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+        let missing_hlo = r#"{"artifacts": {"a": {"inputs": [], "outputs": []}}, "models": {}}"#;
+        assert!(Manifest::parse(Path::new("."), missing_hlo).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        if let Some(dir) = crate::runtime::default_artifact_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("logreg_grad"));
+            let init = m.load_init("logreg").unwrap();
+            assert_eq!(init.len(), m.model("logreg").unwrap().p);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! PJRT runtime — the request-path bridge to the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2/L1 stack ONCE to
+//! `artifacts/*.hlo.txt` (+ `manifest.json`, `*_init.f32`); this module
+//! loads the HLO **text** (xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos — DESIGN.md §6), compiles it on the PJRT CPU client, and
+//! executes it from the coordinator's hot path. Python never runs here.
+//!
+//! Thread model: the `xla` crate's client is `Rc`-based (!Send), so an
+//! [`Engine`] is strictly thread-local. Each runner worker builds its own
+//! engine from the shared artifact directory (compile happens once per
+//! thread at startup, off the hot path).
+
+mod engine;
+mod manifest;
+mod oracle;
+
+pub use engine::{Engine, Input, Output};
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TensorSpec};
+pub use oracle::{build_set as build_pjrt_set, PjrtEval, PjrtFactory,
+                 PjrtOracle, PjrtTask};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifact directory: `$RFAST_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walks up from cwd until it finds a
+/// `manifest.json`).
+pub fn default_artifact_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("RFAST_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+/// Read a raw little-endian f32 file (the `*_init.f32` initial parameters).
+pub fn read_f32_file(path: &Path) -> std::io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{}: length {} not a multiple of 4", path.display(), bytes.len()),
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("rfast_f32_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.f32");
+        let vals = [1.5f32, -2.25, 0.0, 1e-9];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), vals);
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

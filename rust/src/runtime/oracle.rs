@@ -1,0 +1,403 @@
+//! PJRT-backed gradient oracles — the production request path.
+//!
+//! A node's `grad(x)` marshals its minibatch + flat θ into literals,
+//! executes the AOT `*_grad` executable (loss, grad = one fused XLA call —
+//! a single host↔device round trip per step), and copies the gradient out.
+//! Evaluation runs the `*_eval` executable over held-out chunks.
+//!
+//! Sharing: within one thread, all node oracles share one [`Engine`] via
+//! `Rc` (compile once); across threads, [`PjrtFactory`] builds a fresh
+//! engine per worker (the client is `Rc`-based — DESIGN.md §6).
+
+use super::engine::{Engine, Input};
+use super::manifest::Manifest;
+use crate::data::{Batcher, Dataset, Partition, TokenStream};
+use crate::oracle::{Eval, NodeOracle, OracleFactory, OracleSet};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Which model/workload an oracle set drives.
+#[derive(Clone)]
+pub enum PjrtTask {
+    /// `logreg_*` artifacts; float {0,1} labels.
+    LogReg { data: Arc<Dataset>, eval: Arc<Dataset>, partition: Partition },
+    /// `mlp_*` artifacts; int32 class labels.
+    Mlp { data: Arc<Dataset>, eval: Arc<Dataset>, partition: Partition },
+    /// `transformer_<scale>_*` artifacts; per-node Markov token streams.
+    Transformer { scale: String, vocab: usize, branching: usize },
+}
+
+impl PjrtTask {
+    pub fn grad_artifact(&self) -> String {
+        match self {
+            PjrtTask::LogReg { .. } => "logreg_grad".into(),
+            PjrtTask::Mlp { .. } => "mlp_grad".into(),
+            PjrtTask::Transformer { scale, .. } => {
+                format!("transformer_{scale}_grad")
+            }
+        }
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        match self {
+            PjrtTask::LogReg { .. } => "logreg_eval".into(),
+            PjrtTask::Mlp { .. } => "mlp_eval".into(),
+            PjrtTask::Transformer { scale, .. } => {
+                format!("transformer_{scale}_eval")
+            }
+        }
+    }
+
+    pub fn model_name(&self) -> String {
+        match self {
+            PjrtTask::LogReg { .. } => "logreg".into(),
+            PjrtTask::Mlp { .. } => "mlp".into(),
+            PjrtTask::Transformer { scale, .. } => format!("transformer_{scale}"),
+        }
+    }
+}
+
+/// Per-node data feed.
+enum Feed {
+    Supervised {
+        data: Arc<Dataset>,
+        batcher: Batcher,
+        labels_i32: bool,
+        xbuf: Vec<f32>,
+        yf: Vec<f32>,
+        yi: Vec<i32>,
+    },
+    Tokens {
+        stream: TokenStream,
+        batch: usize,
+        seq_plus_one: usize,
+    },
+}
+
+/// One node's PJRT gradient oracle.
+pub struct PjrtOracle {
+    engine: Rc<Engine>,
+    grad_name: String,
+    p: usize,
+    feed: Feed,
+}
+
+impl NodeOracle for PjrtOracle {
+    fn dim(&self) -> usize {
+        self.p
+    }
+
+    fn grad(&mut self, x: &[f32], grad_out: &mut [f32]) -> f32 {
+        assert_eq!(x.len(), self.p);
+        let outputs = match &mut self.feed {
+            Feed::Supervised { data, batcher, labels_i32, xbuf, yf, yi } => {
+                let idx = batcher.next_batch();
+                let d = data.dim;
+                xbuf.clear();
+                yf.clear();
+                yi.clear();
+                for &s in &idx {
+                    xbuf.extend_from_slice(data.row(s));
+                    if *labels_i32 {
+                        yi.push(data.labels[s] as i32);
+                    } else {
+                        yf.push(data.labels[s] as f32);
+                    }
+                }
+                debug_assert_eq!(xbuf.len(), idx.len() * d);
+                let labels: Input<'_> = if *labels_i32 {
+                    Input::I32(yi)
+                } else {
+                    Input::F32(yf)
+                };
+                self.engine
+                    .run(&self.grad_name, &[Input::F32(x), Input::F32(xbuf), labels])
+            }
+            Feed::Tokens { stream, batch, seq_plus_one } => {
+                let toks = stream.next_block(*batch, *seq_plus_one);
+                self.engine
+                    .run(&self.grad_name, &[Input::F32(x), Input::I32(&toks)])
+            }
+        }
+        .expect("PJRT grad execution failed");
+        let loss = outputs[0].scalar_f32().expect("loss scalar");
+        let grad = match &outputs[1] {
+            super::engine::Output::F32(v) => v,
+            _ => panic!("grad output must be f32"),
+        };
+        grad_out.copy_from_slice(grad);
+        loss
+    }
+}
+
+/// Centralized PJRT evaluation (loss + accuracy over held-out data).
+pub struct PjrtEval {
+    engine: Rc<Engine>,
+    eval_name: String,
+    kind: EvalKind,
+}
+
+enum EvalKind {
+    Supervised {
+        eval: Arc<Dataset>,
+        chunk: usize,
+        labels_i32: bool,
+    },
+    /// Fixed deterministic token blocks generated at construction.
+    Tokens { blocks: Vec<Vec<i32>> },
+}
+
+impl PjrtEval {
+    pub fn eval(&mut self, x: &[f32]) -> Eval {
+        match &self.kind {
+            EvalKind::Supervised { eval, chunk, labels_i32 } => {
+                let mut total_loss = 0.0f64;
+                let mut total_correct = 0i64;
+                let mut counted = 0usize;
+                let mut xbuf = Vec::with_capacity(chunk * eval.dim);
+                let mut yf = Vec::with_capacity(*chunk);
+                let mut yi = Vec::with_capacity(*chunk);
+                let full_chunks = eval.len() / chunk;
+                for c in 0..full_chunks.max(1).min(full_chunks) {
+                    xbuf.clear();
+                    yf.clear();
+                    yi.clear();
+                    for s in c * chunk..(c + 1) * chunk {
+                        xbuf.extend_from_slice(eval.row(s));
+                        if *labels_i32 {
+                            yi.push(eval.labels[s] as i32);
+                        } else {
+                            yf.push(eval.labels[s] as f32);
+                        }
+                    }
+                    let labels: Input<'_> = if *labels_i32 {
+                        Input::I32(&yi)
+                    } else {
+                        Input::F32(&yf)
+                    };
+                    let out = self
+                        .engine
+                        .run(&self.eval_name,
+                             &[Input::F32(x), Input::F32(&xbuf), labels])
+                        .expect("PJRT eval failed");
+                    total_loss += out[0].scalar_f32().unwrap() as f64 * *chunk as f64;
+                    total_correct += out[1].scalar_i32().unwrap() as i64;
+                    counted += chunk;
+                }
+                Eval {
+                    loss: total_loss / counted.max(1) as f64,
+                    accuracy: Some(total_correct as f64 / counted.max(1) as f64),
+                }
+            }
+            EvalKind::Tokens { blocks } => {
+                let mut total = 0.0f64;
+                for b in blocks {
+                    let out = self
+                        .engine
+                        .run(&self.eval_name, &[Input::F32(x), Input::I32(b)])
+                        .expect("PJRT eval failed");
+                    total += out[0].scalar_f32().unwrap() as f64;
+                }
+                Eval { loss: total / blocks.len() as f64, accuracy: None }
+            }
+        }
+    }
+}
+
+/// Build a full [`OracleSet`] sharing ONE engine across this thread's node
+/// oracles — the simulator path.
+pub fn build_set(manifest: &Manifest, task: &PjrtTask, n_nodes: usize,
+                 seed: u64) -> Result<OracleSet> {
+    let grad_name = task.grad_artifact();
+    let eval_name = task.eval_artifact();
+    let engine = Rc::new(
+        Engine::load(manifest, &[&grad_name, &eval_name])
+            .map_err(|e| anyhow!("engine: {e}"))?,
+    );
+    build_set_with_engine(engine, manifest, task, n_nodes, seed)
+}
+
+fn build_set_with_engine(engine: Rc<Engine>, manifest: &Manifest,
+                         task: &PjrtTask, n_nodes: usize,
+                         seed: u64) -> Result<OracleSet> {
+    let grad_name = task.grad_artifact();
+    let eval_name = task.eval_artifact();
+    let ginfo = engine
+        .artifact_info(&grad_name)
+        .ok_or_else(|| anyhow!("{grad_name} not loaded"))?;
+    let p = ginfo.inputs[0].numel();
+    let model = manifest.model(&task.model_name()).map_err(|e| anyhow!(e))?;
+    if model.p != p {
+        return Err(anyhow!("model p {} vs artifact p {}", model.p, p));
+    }
+
+    let mut nodes: Vec<Box<dyn NodeOracle>> = Vec::new();
+    let mut epoch_frac: f64;
+    match task {
+        PjrtTask::LogReg { data, partition, .. }
+        | PjrtTask::Mlp { data, partition, .. } => {
+            let labels_i32 = matches!(task, PjrtTask::Mlp { .. });
+            let batch = ginfo.inputs[1].shape[0];
+            if partition.n_nodes() != n_nodes {
+                return Err(anyhow!("partition has {} shards, want {n_nodes}",
+                                   partition.n_nodes()));
+            }
+            // one node-batch advances the GLOBAL epoch by batch / N_total
+            let total: usize =
+                partition.shards.iter().map(|s| s.len()).sum();
+            epoch_frac = batch as f64 / total as f64;
+            for i in 0..n_nodes {
+                let b = Batcher::new(&partition.shards[i], batch,
+                                     seed ^ (0xb0 + i as u64));
+                nodes.push(Box::new(PjrtOracle {
+                    engine: Rc::clone(&engine),
+                    grad_name: grad_name.clone(),
+                    p,
+                    feed: Feed::Supervised {
+                        data: Arc::clone(data),
+                        batcher: b,
+                        labels_i32,
+                        xbuf: Vec::new(),
+                        yf: Vec::new(),
+                        yi: Vec::new(),
+                    },
+                }));
+            }
+        }
+        PjrtTask::Transformer { vocab, branching, .. } => {
+            let batch = ginfo.inputs[1].shape[0];
+            let spo = ginfo.inputs[1].shape[1];
+            let base = TokenStream::new(*vocab, *branching, seed);
+            for i in 0..n_nodes {
+                nodes.push(Box::new(PjrtOracle {
+                    engine: Rc::clone(&engine),
+                    grad_name: grad_name.clone(),
+                    p,
+                    feed: Feed::Tokens {
+                        stream: base.for_node(i, seed ^ 0x7ea),
+                        batch,
+                        seq_plus_one: spo,
+                    },
+                }));
+            }
+            // "epoch" for the LM = 1M tokens consumed globally
+            epoch_frac = (batch * spo) as f64 / 1e6;
+        }
+    }
+
+    // evaluation closure
+    let mut ev = match task {
+        PjrtTask::LogReg { eval, .. } | PjrtTask::Mlp { eval, .. } => {
+            let einfo = engine
+                .artifact_info(&eval_name)
+                .ok_or_else(|| anyhow!("{eval_name} not loaded"))?;
+            PjrtEval {
+                engine: Rc::clone(&engine),
+                eval_name: eval_name.clone(),
+                kind: EvalKind::Supervised {
+                    eval: Arc::clone(eval),
+                    chunk: einfo.inputs[1].shape[0],
+                    labels_i32: matches!(task, PjrtTask::Mlp { .. }),
+                },
+            }
+        }
+        PjrtTask::Transformer { vocab, branching, .. } => {
+            let einfo = engine
+                .artifact_info(&eval_name)
+                .ok_or_else(|| anyhow!("{eval_name} not loaded"))?;
+            let batch = einfo.inputs[1].shape[0];
+            let spo = einfo.inputs[1].shape[1];
+            let mut stream =
+                TokenStream::new(*vocab, *branching, seed).for_node(999, seed ^ 0xe7a1);
+            let blocks = (0..4).map(|_| stream.next_block(batch, spo)).collect();
+            PjrtEval {
+                engine: Rc::clone(&engine),
+                eval_name: eval_name.clone(),
+                kind: EvalKind::Tokens { blocks },
+            }
+        }
+    };
+
+    Ok(OracleSet {
+        nodes,
+        eval: Box::new(move |x| ev.eval(x)),
+        optimum: None,
+        dim: p,
+        epoch_per_node_batch: epoch_frac,
+    })
+}
+
+/// Thread-safe factory for the runner: each worker compiles its own engine.
+pub struct PjrtFactory {
+    pub manifest: Manifest,
+    pub task: PjrtTask,
+    pub seed: u64,
+    pub dim: usize,
+}
+
+impl PjrtFactory {
+    pub fn new(manifest: Manifest, task: PjrtTask, seed: u64) -> Result<PjrtFactory> {
+        let model = manifest.model(&task.model_name()).map_err(|e| anyhow!(e))?;
+        Ok(PjrtFactory { dim: model.p, manifest, task, seed })
+    }
+}
+
+impl OracleFactory for PjrtFactory {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn make(&self, node: usize) -> Box<dyn NodeOracle> {
+        // Build a 1-node set on THIS thread and take its only oracle: the
+        // engine is compiled here, inside the worker.
+        let grad_name = self.task.grad_artifact();
+        let eval_name = self.task.eval_artifact();
+        let engine = Rc::new(
+            Engine::load(&self.manifest, &[&grad_name, &eval_name])
+                .expect("worker engine"),
+        );
+        let mut set = build_single_node(engine, &self.manifest, &self.task,
+                                        node, self.seed)
+            .expect("worker oracle");
+        set.nodes.remove(0)
+    }
+}
+
+/// One node's oracle (used by the factory; node id selects the shard /
+/// stream so worker i sees the same data as simulator node i).
+fn build_single_node(engine: Rc<Engine>, manifest: &Manifest, task: &PjrtTask,
+                     node: usize, seed: u64) -> Result<OracleSet> {
+    match task {
+        PjrtTask::LogReg { data, eval, partition } => {
+            let sub = PjrtTask::LogReg {
+                data: Arc::clone(data),
+                eval: Arc::clone(eval),
+                partition: Partition {
+                    shards: vec![partition.shards[node].clone()],
+                },
+            };
+            build_set_with_engine(engine, manifest, &sub, 1,
+                                  seed ^ (node as u64) << 32)
+        }
+        PjrtTask::Mlp { data, eval, partition } => {
+            let sub = PjrtTask::Mlp {
+                data: Arc::clone(data),
+                eval: Arc::clone(eval),
+                partition: Partition {
+                    shards: vec![partition.shards[node].clone()],
+                },
+            };
+            build_set_with_engine(engine, manifest, &sub, 1,
+                                  seed ^ (node as u64) << 32)
+        }
+        PjrtTask::Transformer { .. } => {
+            // per-node stream id must match build_set's node numbering
+            let mut set =
+                build_set_with_engine(engine, manifest, task, node + 1, seed)?;
+            let only = set.nodes.remove(node);
+            set.nodes = vec![only];
+            Ok(set)
+        }
+    }
+}

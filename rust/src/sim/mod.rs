@@ -1,0 +1,565 @@
+//! Deterministic discrete-event simulator (virtual time).
+//!
+//! Reproduces the paper's testbed semantics (§VI) without its hardware:
+//! every node has its own compute pace (lognormal jitter, optional
+//! straggler multiplier), every directed link has latency (lognormal,
+//! capped — Assumption 3's bounded delay) and, for the asynchronous
+//! algorithms, sender-side Bernoulli packet loss with at most one unacked
+//! packet in flight per link (the paper's send-until-receipt emulation,
+//! §VI ¶1). Synchronous algorithms get reliable links — they would
+//! deadlock otherwise, which is why the paper only applies loss to the
+//! async ones.
+//!
+//! Event loop invariants:
+//! * a node is either *busy* (an iteration in flight, `NodeFinish`
+//!   scheduled) or *idle*; idle nodes are re-examined whenever a message
+//!   arrives, so synchronous barriers release exactly when the last input
+//!   lands;
+//! * ties in virtual time break on a monotone sequence number — the run is
+//!   a pure function of (config, topology, algorithm, oracle seeds).
+
+use crate::algo::{mean_param, AlgoKind, Msg, NodeState};
+use crate::config::SimConfig;
+use crate::graph::Topology;
+use crate::metrics::Report;
+use crate::oracle::OracleSet;
+use crate::prng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// When to stop a run.
+#[derive(Clone, Copy, Debug)]
+pub enum StopRule {
+    /// Total gradient computations across all nodes.
+    Iterations(u64),
+    /// Seconds of virtual time.
+    VirtualTime(f64),
+    /// Stop once the evaluated loss reaches `loss` (checked at every eval
+    /// tick), or at `max_time` — whichever comes first.
+    TargetLoss { loss: f64, max_time: f64 },
+    /// Stop when the global epoch counter reaches this value — the paper's
+    /// Table II protocol (fixed epoch budget, compare wall time + accuracy).
+    Epochs(f64),
+}
+
+/// Aggregate counters the report exposes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub grad_wakes: u64,
+    pub comm_wakes: u64,
+    pub msgs_sent: u64,
+    pub msgs_delivered: u64,
+    pub msgs_lost: u64,
+    /// Discarded because the link still had an unacked packet in flight.
+    pub msgs_backpressured: u64,
+    pub virtual_time: f64,
+}
+
+#[derive(Debug)]
+enum Event {
+    /// Node finishes the iteration whose cost was charged when scheduled.
+    NodeFinish(usize),
+    Deliver(Msg),
+    /// Ack returns to the sender; channel (from→to, chan) becomes free.
+    Ack { from: usize, to: usize, chan: usize },
+    EvalTick,
+}
+
+/// Min-heap key: (time, seq) — deterministic tie-break.
+#[derive(PartialEq)]
+struct Key(f64, u64);
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+pub struct Simulator {
+    cfg: SimConfig,
+    algo: AlgoKind,
+    nodes: Vec<Box<dyn NodeState>>,
+    set: OracleSet,
+    n: usize,
+    time: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<(Key, usize)>>, // (key, event idx)
+    events: Vec<Option<Event>>,
+    busy: Vec<bool>,
+    /// per (ordered pair, message channel): unacked packet in flight?
+    /// index = (from*n + to)*CHANNELS + kind.chan()
+    link_busy: Vec<bool>,
+    pace_rng: Vec<Rng>,
+    link_rng: Rng,
+    stats: SimStats,
+    mean_buf: Vec<f32>,
+    epoch: f64,
+    /// rolling sum/count of minibatch losses between eval ticks
+    train_loss_acc: (f64, u64),
+    /// number of γ-decay steps already applied
+    decay_steps: u32,
+}
+
+impl Simulator {
+    /// Build a simulator; nodes start from `x0 = 0` (override with
+    /// [`Simulator::with_x0`] before the first `run`).
+    pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
+               set: OracleSet) -> Simulator {
+        cfg.validate().expect("invalid SimConfig");
+        let n = topo.n();
+        assert_eq!(set.n_nodes(), n, "oracle set vs topology node count");
+        let x0 = vec![0.0f32; set.dim];
+        Simulator::with_x0(cfg, topo, algo, set, &x0)
+    }
+
+    pub fn with_x0(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
+                   set: OracleSet, x0: &[f32]) -> Simulator {
+        let n = topo.n();
+        let nodes = algo.build(topo, x0, cfg.gamma, cfg.seed);
+        let pace_rng =
+            (0..n).map(|i| Rng::stream(cfg.seed, 0xacce1 + i as u64)).collect();
+        Simulator {
+            link_rng: Rng::stream(cfg.seed, 0x117c),
+            cfg,
+            algo,
+            nodes,
+            set,
+            n,
+            time: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            events: Vec::new(),
+            busy: vec![false; n],
+            link_busy: vec![false; n * n * crate::algo::MsgKind::CHANNELS],
+            pace_rng,
+            stats: SimStats::default(),
+            mean_buf: Vec::new(),
+            epoch: 0.0,
+            train_loss_acc: (0.0, 0),
+            decay_steps: 0,
+        }
+    }
+
+    fn push_event(&mut self, at: f64, ev: Event) {
+        let idx = self.events.len();
+        self.events.push(Some(ev));
+        self.seq += 1;
+        self.heap.push(Reverse((Key(at, self.seq), idx)));
+    }
+
+    fn compute_cost(&mut self, node: usize) -> f64 {
+        let mut c = if self.cfg.compute_jitter > 0.0 {
+            self.pace_rng[node].lognormal(self.cfg.compute_mean,
+                                          self.cfg.compute_jitter)
+        } else {
+            self.cfg.compute_mean
+        };
+        if let Some((s, factor)) = self.cfg.straggler {
+            if s == node {
+                c *= factor;
+            }
+        }
+        c
+    }
+
+    fn latency(&mut self) -> f64 {
+        let l = if self.cfg.latency_jitter > 0.0 {
+            self.link_rng
+                .lognormal(self.cfg.link_latency, self.cfg.latency_jitter)
+        } else {
+            self.cfg.link_latency
+        };
+        l.min(self.cfg.latency_cap)
+    }
+
+    /// Start node's next iteration if idle and ready.
+    fn try_start(&mut self, node: usize) {
+        if self.busy[node] || !self.nodes[node].ready() {
+            return;
+        }
+        self.busy[node] = true;
+        let cost = if self.nodes[node].wake_computes_gradient() {
+            self.compute_cost(node)
+        } else {
+            // communication micro-step (ring phases): message handling only
+            1e-6
+        };
+        let at = self.time + cost;
+        self.push_event(at, Event::NodeFinish(node));
+    }
+
+    /// Route freshly emitted messages through the link layer.
+    fn route(&mut self, msgs: &mut Vec<Msg>) {
+        let lossy = self.algo.tolerates_loss();
+        for msg in msgs.drain(..) {
+            debug_assert!(msg.to < self.n && msg.from < self.n);
+            self.stats.msgs_sent += 1;
+            if lossy {
+                let link = (msg.from * self.n + msg.to)
+                    * crate::algo::MsgKind::CHANNELS
+                    + msg.kind.chan();
+                if self.link_busy[link] {
+                    // previous packet unacked: paper semantics — discard,
+                    // and tell the sender (it decided not to send)
+                    self.stats.msgs_backpressured += 1;
+                    let from = msg.from;
+                    self.nodes[from].on_send_failed(msg);
+                    continue;
+                }
+                if self.cfg.loss_prob > 0.0
+                    && self.link_rng.chance(self.cfg.loss_prob)
+                {
+                    self.stats.msgs_lost += 1;
+                    let from = msg.from;
+                    self.nodes[from].on_send_failed(msg);
+                    continue;
+                }
+                self.link_busy[link] = true;
+            }
+            let at = self.time + self.latency();
+            self.push_event(at, Event::Deliver(msg));
+        }
+    }
+
+    fn record_train_loss(&mut self, loss: Option<f32>) {
+        if let Some(l) = loss {
+            self.stats.grad_wakes += 1;
+            self.epoch += self.set.epoch_per_node_batch;
+            if let Some((interval, factor)) = self.cfg.gamma_decay {
+                let due = (self.epoch / interval) as u32;
+                if due > self.decay_steps {
+                    self.decay_steps = due;
+                    let g = self.cfg.gamma * factor.powi(due as i32);
+                    for nd in self.nodes.iter_mut() {
+                        nd.set_gamma(g);
+                    }
+                }
+            }
+            self.train_loss_acc.0 += l as f64;
+            self.train_loss_acc.1 += 1;
+        } else {
+            self.stats.comm_wakes += 1;
+        }
+    }
+
+    fn eval_now(&mut self, report: &mut Report) -> f64 {
+        mean_param(&self.nodes, &mut self.mean_buf);
+        let e = (self.set.eval)(&self.mean_buf);
+        report
+            .series_mut("loss_vs_time", "virtual_seconds", "eval_loss")
+            .push(self.time, e.loss);
+        report
+            .series_mut("loss_vs_epoch", "epoch", "eval_loss")
+            .push(self.epoch, e.loss);
+        if let Some(acc) = e.accuracy {
+            report
+                .series_mut("acc_vs_time", "virtual_seconds", "accuracy")
+                .push(self.time, acc);
+            report
+                .series_mut("acc_vs_epoch", "epoch", "accuracy")
+                .push(self.epoch, acc);
+        }
+        if self.train_loss_acc.1 > 0 {
+            let avg = self.train_loss_acc.0 / self.train_loss_acc.1 as f64;
+            report
+                .series_mut("train_loss_vs_epoch", "epoch", "train_loss")
+                .push(self.epoch, avg);
+            self.train_loss_acc = (0.0, 0);
+        }
+        if let Some(opt) = &self.set.optimum {
+            let gap = crate::linalg::dist(&self.mean_buf, opt);
+            report
+                .series_mut("gap_vs_time", "virtual_seconds", "optimality_gap")
+                .push(self.time, gap);
+        }
+        e.loss
+    }
+
+    /// Run until the stop rule fires; returns the report (evaluations,
+    /// counters, final optimality gap when the oracle has a closed form).
+    pub fn run(&mut self, stop: StopRule) -> Report {
+        let mut report = Report::new(self.algo.name());
+        // kick off: every node attempts its first iteration at t=0
+        for i in 0..self.n {
+            self.try_start(i);
+        }
+        self.push_event(self.cfg.eval_every, Event::EvalTick);
+        self.eval_now(&mut report);
+
+        let mut outbox: Vec<Msg> = Vec::with_capacity(16);
+        let mut replies: Vec<Msg> = Vec::with_capacity(4);
+        let mut done = false;
+        while !done {
+            let Some(Reverse((Key(at, _), idx))) = self.heap.pop() else {
+                // drained queue: sync deadlock would land here
+                report.set_scalar("drained_early", 1.0);
+                break;
+            };
+            self.time = at;
+            let ev = self.events[idx].take().expect("event consumed twice");
+            match ev {
+                Event::NodeFinish(i) => {
+                    self.busy[i] = false;
+                    let loss =
+                        self.nodes[i].wake(self.set.nodes[i].as_mut(), &mut outbox);
+                    self.record_train_loss(loss);
+                    self.route(&mut outbox);
+                    self.try_start(i);
+                    match stop {
+                        StopRule::Iterations(max) => {
+                            if self.stats.grad_wakes >= max {
+                                done = true;
+                            }
+                        }
+                        StopRule::Epochs(e) => {
+                            if self.epoch >= e {
+                                done = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                Event::Deliver(msg) => {
+                    self.stats.msgs_delivered += 1;
+                    let (from, to, chan) = (msg.from, msg.to, msg.kind.chan());
+                    self.nodes[to].receive(msg, &mut replies);
+                    // ack travels back; channel frees on arrival
+                    if self.algo.tolerates_loss() {
+                        let ack_at = self.time + self.latency();
+                        self.push_event(ack_at, Event::Ack { from, to, chan });
+                    }
+                    // protocol replies (AD-PSGD leg) go through the link layer
+                    if !replies.is_empty() {
+                        outbox.append(&mut replies);
+                        self.route(&mut outbox);
+                    }
+                    self.try_start(to);
+                }
+                Event::Ack { from, to, chan } => {
+                    self.link_busy
+                        [(from * self.n + to) * crate::algo::MsgKind::CHANNELS + chan] =
+                        false;
+                    // freed channel doesn't wake anyone by itself
+                }
+                Event::EvalTick => {
+                    let loss = self.eval_now(&mut report);
+                    let next = self.time + self.cfg.eval_every;
+                    self.push_event(next, Event::EvalTick);
+                    match stop {
+                        StopRule::TargetLoss { loss: target, max_time } => {
+                            if loss <= target || self.time >= max_time {
+                                done = true;
+                            }
+                        }
+                        StopRule::VirtualTime(t) => {
+                            if self.time >= t {
+                                done = true;
+                            }
+                        }
+                        StopRule::Iterations(_) | StopRule::Epochs(_) => {}
+                    }
+                }
+            }
+        }
+        self.stats.virtual_time = self.time;
+        self.eval_now(&mut report);
+        self.finalize_report(&mut report);
+        report
+    }
+
+    fn finalize_report(&mut self, report: &mut Report) {
+        let s = &self.stats;
+        report.set_scalar("virtual_time", s.virtual_time);
+        report.set_scalar("grad_wakes", s.grad_wakes as f64);
+        report.set_scalar("comm_wakes", s.comm_wakes as f64);
+        report.set_scalar("msgs_sent", s.msgs_sent as f64);
+        report.set_scalar("msgs_delivered", s.msgs_delivered as f64);
+        report.set_scalar("msgs_lost", s.msgs_lost as f64);
+        report.set_scalar("msgs_backpressured", s.msgs_backpressured as f64);
+        report.set_scalar("epoch", self.epoch);
+        if let Some(opt) = &self.set.optimum {
+            mean_param(&self.nodes, &mut self.mean_buf);
+            report.final_gap = Some(crate::linalg::dist(&self.mean_buf, opt));
+        }
+    }
+
+    pub fn stats(&self) -> SimStats {
+        self.stats
+    }
+
+    pub fn nodes(&self) -> &[Box<dyn NodeState>] {
+        &self.nodes
+    }
+
+    pub fn virtual_time(&self) -> f64 {
+        self.time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{GradOracle, QuadraticOracle};
+
+    fn quad_set(n: usize, seed: u64) -> (OracleSet, Vec<f32>) {
+        let q = QuadraticOracle::heterogeneous(8, n, 0.5, 2.0, seed);
+        let xs = q.optimum();
+        (q.into_set(), xs)
+    }
+
+    fn fast_cfg(seed: u64) -> SimConfig {
+        SimConfig {
+            seed,
+            gamma: 0.04,
+            compute_mean: 0.01,
+            compute_jitter: 0.3,
+            link_latency: 0.002,
+            latency_jitter: 0.3,
+            latency_cap: 0.05,
+            eval_every: 1.0,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn rfast_converges_under_full_asynchrony() {
+        let topo = Topology::binary_tree(7);
+        let (set, xs) = quad_set(7, 3);
+        let mut sim = Simulator::new(fast_cfg(1), &topo, AlgoKind::RFast, set);
+        let report = sim.run(StopRule::Iterations(40_000));
+        let gap = report.final_gap.unwrap();
+        assert!(gap < 1e-2, "gap {gap}");
+        let _ = xs;
+    }
+
+    #[test]
+    fn rfast_converges_with_packet_loss() {
+        let topo = Topology::ring(5);
+        let (set, _) = quad_set(5, 7);
+        let mut cfg = fast_cfg(2);
+        cfg.loss_prob = 0.25;
+        let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, set);
+        let report = sim.run(StopRule::Iterations(40_000));
+        assert!(sim.stats().msgs_lost > 100, "loss emulation active");
+        let gap = report.final_gap.unwrap();
+        assert!(gap < 2e-2, "gap {gap} under 25% loss");
+    }
+
+    #[test]
+    fn sync_algorithms_progress_without_deadlock() {
+        for algo in [AlgoKind::PushPull, AlgoKind::SAb, AlgoKind::DPsgd,
+                     AlgoKind::RingAllReduce] {
+            let topo = Topology::ring(4);
+            let (set, _) = quad_set(4, 11);
+            let mut sim = Simulator::new(fast_cfg(3), &topo, algo, set);
+            let report = sim.run(StopRule::Iterations(2_000));
+            assert!(report.scalars.get("drained_early").is_none(),
+                    "{} drained", algo.name());
+            assert!(sim.stats().grad_wakes >= 2_000, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let mk = || {
+            let topo = Topology::ring(4);
+            let (set, _) = quad_set(4, 5);
+            let mut sim =
+                Simulator::new(fast_cfg(9), &topo, AlgoKind::RFast, set);
+            let r = sim.run(StopRule::Iterations(3_000));
+            (r.final_gap.unwrap(), sim.stats().msgs_sent,
+             sim.virtual_time())
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn straggler_slows_sync_more_than_async() {
+        let run = |algo: AlgoKind, straggler: Option<(usize, f64)>| -> f64 {
+            let topo = Topology::ring(4);
+            let (set, _) = quad_set(4, 13);
+            let mut cfg = fast_cfg(4);
+            cfg.straggler = straggler;
+            let mut sim = Simulator::new(cfg, &topo, algo, set);
+            sim.run(StopRule::Iterations(4_000));
+            sim.stats().virtual_time
+        };
+        let sync_clean = run(AlgoKind::RingAllReduce, None);
+        let sync_slow = run(AlgoKind::RingAllReduce, Some((1, 5.0)));
+        let async_clean = run(AlgoKind::RFast, None);
+        let async_slow = run(AlgoKind::RFast, Some((1, 5.0)));
+        let sync_ratio = sync_slow / sync_clean;
+        let async_ratio = async_slow / async_clean;
+        assert!(
+            sync_ratio > 2.0,
+            "ring-allreduce should stall on straggler: {sync_ratio}"
+        );
+        assert!(
+            async_ratio < 1.6,
+            "rfast should barely notice the straggler: {async_ratio}"
+        );
+    }
+
+    #[test]
+    fn backpressure_counts_under_ack_limit() {
+        let topo = Topology::ring(3);
+        let (set, _) = quad_set(3, 17);
+        let mut cfg = fast_cfg(5);
+        // latency >> compute: every wake's send finds the link busy
+        cfg.link_latency = 0.2;
+        cfg.latency_cap = 0.4;
+        cfg.compute_mean = 0.001;
+        let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, set);
+        sim.run(StopRule::Iterations(2_000));
+        assert!(sim.stats().msgs_backpressured > 0);
+    }
+
+    #[test]
+    fn gamma_decay_schedule_applies() {
+        // with an aggressive decay the steady-state gap under gradient
+        // noise must shrink vs constant gamma (variance ∝ γ)
+        let run = |decay: Option<(f64, f32)>| -> f64 {
+            let topo = Topology::ring(4);
+            let q = crate::oracle::QuadraticOracle::noisy(8, 4, 0.5, 21);
+            let mut cfg = fast_cfg(8);
+            cfg.gamma = 0.05;
+            cfg.gamma_decay = decay;
+            let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast,
+                                         q.into_set());
+            sim.run(StopRule::Iterations(30_000)).final_gap.unwrap()
+        };
+        let constant = run(None);
+        let decayed = run(Some((5_000.0, 0.5))); // quadratic epoch == 1 per wake
+        assert!(
+            decayed < constant * 0.7,
+            "decay should cut the noise floor: {constant} vs {decayed}"
+        );
+    }
+
+    #[test]
+    fn eval_series_are_recorded() {
+        let topo = Topology::ring(3);
+        let (set, _) = quad_set(3, 19);
+        let mut sim = Simulator::new(fast_cfg(6), &topo, AlgoKind::RFast, set);
+        let report = sim.run(StopRule::VirtualTime(20.0));
+        let s = &report.series["loss_vs_time"];
+        assert!(s.points.len() >= 10);
+        assert!(report.series.contains_key("gap_vs_time"));
+        // loss should broadly decrease
+        let first = s.points.first().unwrap().1;
+        let last = s.points.last().unwrap().1;
+        assert!(last < first, "{first} → {last}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Property-testing harness (proptest is unavailable offline — DESIGN.md §6).
+//!
+//! [`forall`] runs a property over many seeded random cases and reports the
+//! first failing seed, so a failure is reproducible with
+//! `forall_one(<seed>, prop)`. No shrinking — cases are parameterized by a
+//! seed, which is already a minimal reproducer.
+
+use crate::prng::Rng;
+
+/// Run `cases` random instances of `prop`. `prop` receives a fresh RNG per
+/// case and returns `Err(description)` to fail. Panics with the seed on
+/// failure.
+pub fn forall<F>(cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn forall_one<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two slices are element-wise close; formats the first divergence.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!(
+                "element {i}: {x} vs {y} (tol {tol}, scale {scale})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random vector in [-1, 1]^p.
+pub fn rand_vec(rng: &mut Rng, p: usize) -> Vec<f32> {
+    (0..p).map(|_| 2.0 * rng.f32() - 1.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(50, 1, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(50, 2, |rng| {
+            if rng.f64() < 0.9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+        // relative tolerance at large scale
+        assert!(assert_close(&[1e6], &[1e6 + 1.0], 1e-5).is_ok());
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT ↔ pure-rust oracle cross-checks — the correctness bridge between
+//! the AOT artifacts (L2/L1 lowered through XLA) and the rust twins used
+//! by the fast benches. Skipped gracefully when `make artifacts` hasn't
+//! run.
+
+use rfast::data::Dataset;
+use rfast::linalg;
+use rfast::oracle::{eval_logreg, logreg_loss_grad, mlp_loss_grad_once};
+use rfast::runtime::{default_artifact_dir, Engine, Input, Manifest, Output};
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_artifact_dir()?;
+    Manifest::load(&dir).ok()
+}
+
+fn run_f32(engine: &Engine, name: &str, inputs: &[Input<'_>]) -> Vec<Output> {
+    engine.run(name, inputs).expect("pjrt execution")
+}
+
+#[test]
+fn logreg_grad_artifact_matches_rust_oracle() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::load(&m, &["logreg_grad"]).unwrap();
+    let info = engine.artifact_info("logreg_grad").unwrap().clone();
+    let b = info.inputs[1].shape[0];
+    let d = info.inputs[1].shape[1];
+
+    let data = Dataset::mnist01_like(3);
+    let theta = m.load_init("logreg").unwrap();
+    let idx: Vec<usize> = (0..b).map(|k| k * 7 % data.len()).collect();
+    let mut x = Vec::with_capacity(b * d);
+    let mut y = Vec::with_capacity(b);
+    for &s in &idx {
+        x.extend_from_slice(data.row(s));
+        y.push(data.labels[s] as f32);
+    }
+    let out = run_f32(&engine, "logreg_grad",
+                      &[Input::F32(&theta), Input::F32(&x), Input::F32(&y)]);
+    let loss_pjrt = out[0].scalar_f32().unwrap();
+    let grad_pjrt = match &out[1] {
+        Output::F32(v) => v.clone(),
+        _ => panic!("grad dtype"),
+    };
+
+    let mut grad_rust = vec![0.0f32; d + 1];
+    let loss_rust =
+        logreg_loss_grad(&data, &idx, &theta, 1e-4, &mut grad_rust);
+
+    assert!(
+        (loss_pjrt - loss_rust).abs() < 1e-4 * (1.0 + loss_rust.abs()),
+        "loss: pjrt {loss_pjrt} vs rust {loss_rust}"
+    );
+    rfast::testutil::assert_close(&grad_pjrt, &grad_rust, 1e-3)
+        .unwrap_or_else(|e| panic!("grad mismatch: {e}"));
+}
+
+#[test]
+fn logreg_eval_artifact_matches_rust_eval() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::load(&m, &["logreg_eval"]).unwrap();
+    let info = engine.artifact_info("logreg_eval").unwrap().clone();
+    let b = info.inputs[1].shape[0];
+    let data = Dataset::mnist01_like(3);
+    let theta = m.load_init("logreg").unwrap();
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for s in 0..b {
+        x.extend_from_slice(data.row(s));
+        y.push(data.labels[s] as f32);
+    }
+    let out = run_f32(&engine, "logreg_eval",
+                      &[Input::F32(&theta), Input::F32(&x), Input::F32(&y)]);
+    let correct_pjrt = out[1].scalar_i32().unwrap();
+
+    let sub = Dataset {
+        dim: data.dim,
+        features: x.clone(),
+        labels: (0..b).map(|s| data.labels[s]).collect(),
+        classes: 2,
+    };
+    let e = eval_logreg(&sub, &theta, 1e-4);
+    let correct_rust = (e.accuracy.unwrap() * b as f64).round() as i32;
+    assert_eq!(correct_pjrt, correct_rust);
+    assert!((out[0].scalar_f32().unwrap() as f64 - e.loss).abs() < 1e-4);
+}
+
+#[test]
+fn mlp_grad_artifact_matches_rust_oracle() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::load(&m, &["mlp_grad"]).unwrap();
+    let info = engine.artifact_info("mlp_grad").unwrap().clone();
+    let b = info.inputs[1].shape[0];
+    let d = info.inputs[1].shape[1];
+    let p = info.inputs[0].shape[0];
+
+    let data = Dataset::imagenet_like(2_000, 5);
+    let theta = m.load_init("mlp").unwrap();
+    assert_eq!(theta.len(), p);
+    let idx: Vec<usize> = (0..b).map(|k| k * 13 % data.len()).collect();
+    let mut x = Vec::with_capacity(b * d);
+    let mut labels = Vec::with_capacity(b);
+    for &s in &idx {
+        x.extend_from_slice(data.row(s));
+        labels.push(data.labels[s] as i32);
+    }
+    let out = run_f32(&engine, "mlp_grad",
+                      &[Input::F32(&theta), Input::F32(&x), Input::I32(&labels)]);
+    let loss_pjrt = out[0].scalar_f32().unwrap();
+    let grad_pjrt = match &out[1] {
+        Output::F32(v) => v.clone(),
+        _ => panic!("grad dtype"),
+    };
+
+    let (loss_rust, grad_rust) = mlp_loss_grad_once(&data, &idx, &theta);
+    assert!(
+        (loss_pjrt - loss_rust).abs() < 1e-3 * (1.0 + loss_rust.abs()),
+        "loss: pjrt {loss_pjrt} vs rust {loss_rust}"
+    );
+    // ReLU kinks + summation order ⇒ slightly looser tolerance
+    rfast::testutil::assert_close(&grad_pjrt, &grad_rust, 5e-3)
+        .unwrap_or_else(|e| panic!("grad mismatch: {e}"));
+}
+
+#[test]
+fn transformer_tiny_artifact_sane() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let names = ["transformer_tiny_grad", "transformer_tiny_eval"];
+    let engine = Engine::load(&m, &names).unwrap();
+    let ginfo = engine.artifact_info(names[0]).unwrap().clone();
+    let p = ginfo.inputs[0].shape[0];
+    let toks_n = ginfo.inputs[1].numel();
+    let vocab = 512;
+
+    let theta = m.load_init("transformer_tiny").unwrap();
+    assert_eq!(theta.len(), p);
+    let tokens: Vec<i32> = (0..toks_n).map(|k| (k * 31 % vocab) as i32).collect();
+
+    let out = run_f32(&engine, names[0],
+                      &[Input::F32(&theta), Input::I32(&tokens)]);
+    let loss = out[0].scalar_f32().unwrap();
+    let grad = match &out[1] {
+        Output::F32(v) => v.clone(),
+        _ => panic!(),
+    };
+    // at random init, next-token xent ≈ ln(vocab)
+    let uniform = (vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.5,
+        "init loss {loss} vs ln(V) {uniform}"
+    );
+    let gnorm = linalg::norm(&grad);
+    assert!(gnorm.is_finite() && gnorm > 1e-3, "grad norm {gnorm}");
+
+    // eval artifact agrees with grad artifact's loss on the same tokens
+    let out_eval = run_f32(&engine, names[1],
+                           &[Input::F32(&theta), Input::I32(&tokens)]);
+    let loss_eval = out_eval[0].scalar_f32().unwrap();
+    assert!(
+        (loss - loss_eval).abs() < 1e-3,
+        "grad-loss {loss} vs eval-loss {loss_eval}"
+    );
+
+    // one SGD step must reduce the loss on the SAME batch
+    let mut theta2 = theta.clone();
+    linalg::axpy(&mut theta2, -0.5, &grad);
+    let out2 = run_f32(&engine, names[0],
+                       &[Input::F32(&theta2), Input::I32(&tokens)]);
+    let loss2 = out2[0].scalar_f32().unwrap();
+    assert!(loss2 < loss, "sgd step: {loss} → {loss2}");
+}
+
+#[test]
+fn pjrt_simulator_trains_logreg() {
+    use rfast::algo::AlgoKind;
+    use rfast::config::SimConfig;
+    use rfast::data::Partition;
+    use rfast::graph::Topology;
+    use rfast::runtime::{build_pjrt_set, PjrtTask};
+    use rfast::sim::{Simulator, StopRule};
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (train, eval) = Dataset::mnist01_like(7).split_eval(2000);
+    let task = PjrtTask::LogReg {
+        data: Arc::new(train.clone()),
+        eval: Arc::new(eval),
+        partition: Partition::iid(&train, 4, 7),
+    };
+    let set = build_pjrt_set(&m, &task, 4, 7).unwrap();
+    let x0 = m.load_init("logreg").unwrap();
+    let mut cfg = SimConfig::logreg_paper();
+    cfg.seed = 7;
+    cfg.eval_every = 2.0;
+    let topo = Topology::binary_tree(4);
+    let mut sim = Simulator::with_x0(cfg, &topo, AlgoKind::RFast, set, &x0);
+    let report = sim.run(StopRule::VirtualTime(20.0));
+    let acc = report.series["acc_vs_time"].last_y().unwrap();
+    assert!(acc > 0.95, "accuracy {acc}");
+}

@@ -1,0 +1,147 @@
+//! Threaded-runner integration: real asynchronous training on the logreg
+//! workload with the pure-rust oracle, plus stats sanity.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::data::{Dataset, Partition};
+use rfast::graph::Topology;
+use rfast::oracle::{eval_logreg, LogRegOracle, NodeOracle, OracleFactory};
+use rfast::runner::{RunUntil, ThreadedRunner};
+use std::sync::Arc;
+
+/// Factory building per-node logreg oracles over a shared shard plan.
+struct LogRegFactory {
+    train: Arc<Dataset>,
+    partition: Partition,
+    batch: usize,
+    seed: u64,
+}
+
+impl OracleFactory for LogRegFactory {
+    fn dim(&self) -> usize {
+        self.train.dim + 1
+    }
+
+    fn make(&self, node: usize) -> Box<dyn NodeOracle> {
+        let oracle = LogRegOracle {
+            train: Arc::clone(&self.train),
+            eval_set: Arc::clone(&self.train), // unused per-node
+            partition: Partition {
+                shards: vec![self.partition.shards[node].clone()],
+            },
+            batch: self.batch,
+            l2: 1e-4,
+            seed: self.seed ^ ((node as u64) << 20),
+        };
+        use rfast::oracle::GradOracle;
+        let mut set = oracle.into_set();
+        set.nodes.remove(0)
+    }
+}
+
+fn workload(n: usize, seed: u64) -> (LogRegFactory, Arc<Dataset>) {
+    let (train, eval) = Dataset::mnist01_like(seed).split_eval(2000);
+    let train = Arc::new(train);
+    let partition = Partition::iid(&train, n, seed);
+    (
+        LogRegFactory { train: Arc::clone(&train), partition, batch: 32, seed },
+        Arc::new(eval),
+    )
+}
+
+#[test]
+fn threaded_rfast_trains_logreg_to_high_accuracy() {
+    let n = 4;
+    let (factory, eval_set) = workload(n, 3);
+    let topo = Topology::binary_tree(n);
+    let cfg = SimConfig {
+        seed: 3,
+        gamma: 2e-3,
+        compute_mean: 0.001,
+        eval_every: 0.1,
+        ..SimConfig::default()
+    };
+    let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
+                                     vec![0.0; factory.dim()])
+        .with_pace(2e-4);
+    let mut eval_fn = {
+        let eval_set = Arc::clone(&eval_set);
+        move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
+    };
+    let (report, stats) = runner.run(&factory, &mut eval_fn,
+                                     RunUntil::TargetLoss {
+                                         loss: 0.08,
+                                         max_seconds: 30.0,
+                                     });
+    let acc = report.scalars.get("final_accuracy").copied().unwrap_or(0.0);
+    assert!(acc > 0.97, "accuracy {acc}");
+    assert!(stats.steps_per_node.iter().all(|&s| s > 50),
+            "{:?}", stats.steps_per_node);
+    assert!(stats.msgs_sent > 0);
+}
+
+#[test]
+fn threaded_runner_all_async_algorithms_progress() {
+    for algo in [AlgoKind::RFast, AlgoKind::AdPsgd, AlgoKind::Osgp] {
+        let n = 3;
+        let (factory, eval_set) = workload(n, 9);
+        let topo = Topology::ring(n);
+        let cfg = SimConfig {
+            seed: 9,
+            gamma: 3e-3,
+            compute_mean: 0.001,
+            eval_every: 0.1,
+            ..SimConfig::default()
+        };
+        // OSGP's push-sum mass is destroyed by send discards, so it needs
+        // compute ≫ RTT (the paper's regime): pace well above the
+        // in-process round trip.
+        let runner = ThreadedRunner::new(cfg, &topo, algo,
+                                         vec![0.0; factory.dim()])
+            .with_pace(5e-4);
+        let mut eval_fn = {
+            let eval_set = Arc::clone(&eval_set);
+            move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
+        };
+        let (report, _) = runner.run(&factory, &mut eval_fn,
+                                     RunUntil::TotalSteps(9_000));
+        let s = &report.series["loss_vs_wall"];
+        assert!(
+            s.last_y().unwrap() < s.points[0].1,
+            "{}: {:?}",
+            algo.name(),
+            s.points
+        );
+    }
+}
+
+#[test]
+fn threaded_runner_straggler_counts_fewer_steps() {
+    let n = 4;
+    let (factory, eval_set) = workload(n, 11);
+    let topo = Topology::ring(n);
+    let mut cfg = SimConfig {
+        seed: 11,
+        gamma: 1e-3,
+        compute_mean: 0.001,
+        eval_every: 0.1,
+        ..SimConfig::default()
+    };
+    cfg.straggler = Some((2, 4.0));
+    let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
+                                     vec![0.0; factory.dim()])
+        .with_pace(2e-4);
+    let mut eval_fn = {
+        let eval_set = Arc::clone(&eval_set);
+        move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
+    };
+    let (_, stats) =
+        runner.run(&factory, &mut eval_fn, RunUntil::WallSeconds(1.5));
+    let s = &stats.steps_per_node;
+    let others_min = (0..n).filter(|&i| i != 2).map(|i| s[i]).min().unwrap();
+    assert!(
+        (s[2] as f64) < 0.6 * others_min as f64,
+        "straggler {} vs others min {others_min}",
+        s[2]
+    );
+}
