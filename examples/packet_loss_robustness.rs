@@ -2,18 +2,23 @@
 //! gradient tracking immune to packet loss. This example sweeps the loss
 //! probability and compares robust R-FAST against the naive-GT ablation
 //! (one-shot increments) and OSGP (push-sum, mass-lossy) on heterogeneous
-//! quadratics where the exact optimality gap is measurable.
+//! quadratics where the exact optimality gap is measurable. Loss is
+//! injected through the declarative `scenario` layer; a final row runs a
+//! full named preset (default `lossy_30pct`, override with `--scenario`).
 //!
 //!     cargo run --release --example packet_loss_robustness
+//!                                     [--scenario NAME|FILE.json]
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
+use rfast::cli::Args;
 use rfast::graph::Topology;
 use rfast::metrics::Table;
 use rfast::oracle::{GradOracle, QuadraticOracle};
+use rfast::scenario::Scenario;
 use rfast::sim::{Simulator, StopRule};
 
-fn gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
+fn gap(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
     let topo = Topology::ring(6);
     let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
     let cfg = SimConfig {
@@ -23,7 +28,7 @@ fn gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
         compute_jitter: 0.3,
         link_latency: 0.002,
         latency_cap: 0.05,
-        loss_prob,
+        scenario: if scenario.is_empty() { None } else { Some(scenario.clone()) },
         eval_every: 5.0,
         ..SimConfig::default()
     };
@@ -32,25 +37,44 @@ fn gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
     report.final_gap.unwrap()
 }
 
+fn mean_gap(algo: AlgoKind, scenario: &Scenario) -> f64 {
+    (0..3).map(|s| gap(algo, scenario, 10 + s)).sum::<f64>() / 3.0
+}
+
 fn main() {
+    let args = Args::parse_opts(std::env::args().skip(1)).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let mut table = Table::new(
         "optimality gap vs packet-loss probability (6-node ring, quadratics)",
-        &["loss prob", "R-FAST (robust ρ)", "naive GT", "OSGP"],
+        &["scenario", "R-FAST (robust ρ)", "naive GT", "OSGP"],
     );
     for loss_prob in [0.0, 0.1, 0.2, 0.3, 0.4] {
-        let robust: f64 =
-            (0..3).map(|s| gap(AlgoKind::RFast, loss_prob, 10 + s)).sum::<f64>() / 3.0;
-        let naive: f64 =
-            (0..3).map(|s| gap(AlgoKind::RFastNaive, loss_prob, 10 + s)).sum::<f64>() / 3.0;
-        let osgp: f64 =
-            (0..3).map(|s| gap(AlgoKind::Osgp, loss_prob, 10 + s)).sum::<f64>() / 3.0;
+        let sc = if loss_prob > 0.0 {
+            Scenario::constant_loss(loss_prob)
+        } else {
+            Scenario::default() // clean baseline
+        };
         table.row(vec![
-            format!("{:.0}%", loss_prob * 100.0),
-            format!("{robust:.3e}"),
-            format!("{naive:.3e}"),
-            format!("{osgp:.3e}"),
+            format!("{:.0}% loss", loss_prob * 100.0),
+            format!("{:.3e}", mean_gap(AlgoKind::RFast, &sc)),
+            format!("{:.3e}", mean_gap(AlgoKind::RFastNaive, &sc)),
+            format!("{:.3e}", mean_gap(AlgoKind::Osgp, &sc)),
         ]);
     }
+    // one full named preset on top of the sweep (ramps/churn welcome)
+    let preset = args.get("scenario").unwrap_or("lossy_30pct");
+    let sc = Scenario::resolve(preset).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    table.row(vec![
+        format!("preset: {}", sc.name),
+        format!("{:.3e}", mean_gap(AlgoKind::RFast, &sc)),
+        format!("{:.3e}", mean_gap(AlgoKind::RFastNaive, &sc)),
+        format!("{:.3e}", mean_gap(AlgoKind::Osgp, &sc)),
+    ]);
     table.print();
     println!("\nExpected shape: R-FAST's gap is loss-invariant (running sums \
               subsume dropped packets); naive GT and OSGP degrade because \

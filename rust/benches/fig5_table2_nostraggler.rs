@@ -16,6 +16,7 @@
 use rfast::exp::{run_sim, save_comparison_csvs, Workload, PAPER_BASELINES};
 use rfast::graph::Topology;
 use rfast::metrics::{fmt_mins, Table};
+use rfast::scenario::Scenario;
 use rfast::sim::StopRule;
 use std::path::Path;
 
@@ -39,8 +40,9 @@ fn main() {
         cfg.seed = 4;
         cfg.gamma = rfast::exp::tuned_gamma(Workload::Mlp, algo);
         cfg.gamma_decay = Some((5.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — ÷10 per 5 of our 10
-        // §VI ¶1: loss emulation active for the async algorithms
-        cfg.loss_prob = if algo.tolerates_loss() { 0.02 } else { 0.0 };
+        // §VI ¶1 as a named scenario: 2% loss — the link layer applies it
+        // to the loss-tolerant (async) algorithms only
+        cfg.scenario = Some(Scenario::by_name("paper_fig5").unwrap());
         let mut r = run_sim(Workload::Mlp, algo, &topo, &cfg,
                             StopRule::Epochs(epochs));
         let time = r.scalars["virtual_time"];

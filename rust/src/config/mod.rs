@@ -8,6 +8,7 @@
 //! (~200 ms) : intra-server transfer (~20 ms), matching the substitution
 //! argument of DESIGN.md §4.
 
+use crate::scenario::Scenario;
 use std::path::Path;
 
 /// All knobs of one simulated/threaded training run.
@@ -42,6 +43,13 @@ pub struct SimConfig {
     /// Step-size schedule: multiply γ by `factor` every `interval` epochs
     /// (paper §VI-B: 0.1 every 30 epochs). `None` = constant γ.
     pub gamma_decay: Option<(f64, f32)>,
+    /// Declarative fault-injection scenario (straggler schedules, loss and
+    /// latency ramps, churn, bandwidth caps — [`crate::scenario`]). Layers
+    /// on top of the scalar knobs above: the scenario's ramps override
+    /// `loss_prob`/latency once their first phase starts, and its
+    /// straggler factors multiply with `straggler`. Simulator-only; the
+    /// threaded runner rejects configs that carry one.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for SimConfig {
@@ -60,6 +68,7 @@ impl Default for SimConfig {
             eval_every: 5.0,
             skew_alpha: 0.0,
             gamma_decay: None,
+            scenario: None,
         }
     }
 }
@@ -127,6 +136,14 @@ impl SimConfig {
                         Some((p(node, "straggler.node")?, p(factor, "straggler.factor")?));
                 }
             }
+            "scenario" => {
+                // preset name or a path to a scenario .json; "none" clears
+                if value.trim() == "none" {
+                    self.scenario = None;
+                } else {
+                    self.scenario = Some(Scenario::resolve(value.trim())?);
+                }
+            }
             other => return Err(format!("unknown config key {other:?}")),
         }
         Ok(())
@@ -178,6 +195,11 @@ impl SimConfig {
         if self.latency_cap < self.link_latency {
             return Err("latency_cap must be ≥ link_latency".into());
         }
+        if let Some(s) = &self.scenario {
+            // node-count-independent checks; the simulator re-validates
+            // against the topology's n
+            s.validate(None)?;
+        }
         Ok(())
     }
 }
@@ -211,6 +233,19 @@ mod tests {
         let mut c = SimConfig::default();
         assert!(c.apply_kv("nope", "1").is_err());
         assert!(c.apply_kv("gamma", "abc").is_err());
+    }
+
+    #[test]
+    fn scenario_key_resolves_presets() {
+        let mut c = SimConfig::default();
+        c.apply_kv("scenario", "lossy_30pct").unwrap();
+        let s = c.scenario.as_ref().expect("scenario set");
+        assert_eq!(s.name, "lossy_30pct");
+        assert_eq!(s.loss_prob(0.0, 10.0), 0.30);
+        c.validate().unwrap();
+        c.apply_kv("scenario", "none").unwrap();
+        assert!(c.scenario.is_none());
+        assert!(c.apply_kv("scenario", "no_such_preset").is_err());
     }
 
     #[test]

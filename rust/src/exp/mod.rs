@@ -8,6 +8,7 @@ use crate::config::SimConfig;
 use crate::graph::Topology;
 use crate::metrics::Report;
 use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, OracleSet};
+use crate::scenario::Scenario;
 use crate::sim::{Simulator, StopRule};
 use std::path::Path;
 
@@ -82,6 +83,21 @@ pub fn run_sim(workload: Workload, algo: AlgoKind, topo: &Topology,
     let x0 = workload.x0(set.dim, cfg.seed);
     let mut sim = Simulator::with_x0(cfg.clone(), topo, algo, set, &x0);
     sim.run(stop)
+}
+
+/// One simulated run under a fault-injection scenario: `cfg`'s scalar
+/// knobs stay as the baseline and `scenario` layers on top (pass
+/// `None` to run clean — handy for clean-vs-faulty comparison loops).
+pub fn run_sim_under(workload: Workload, algo: AlgoKind, topo: &Topology,
+                     cfg: &SimConfig, scenario: Option<&Scenario>,
+                     stop: StopRule) -> Report {
+    let mut cfg = cfg.clone();
+    cfg.scenario = scenario.cloned();
+    let mut report = run_sim(workload, algo, topo, &cfg, stop);
+    if let Some(sc) = scenario {
+        report.label = format!("{} [{}]", report.label, sc.name);
+    }
+    report
 }
 
 /// The six-algorithm comparison set of paper §VI-B (Figs 5/6, Table II).
@@ -195,6 +211,24 @@ mod tests {
         let s = &report.series["loss_vs_time"];
         assert!(s.last_y().unwrap() < s.points[0].1);
         assert!(report.series.contains_key("acc_vs_time"));
+    }
+
+    #[test]
+    fn scenario_run_labels_report_and_injects_faults() {
+        let cfg = SimConfig {
+            eval_every: 1.0,
+            ..SimConfig::logreg_paper()
+        };
+        let topo = Topology::ring(3);
+        let sc = Scenario::by_name("lossy_30pct").unwrap();
+        let report = run_sim_under(Workload::LogReg, AlgoKind::RFast, &topo,
+                                   &cfg, Some(&sc),
+                                   StopRule::VirtualTime(3.0));
+        assert!(report.label.contains("lossy_30pct"), "{}", report.label);
+        assert!(report.scalars["msgs_lost"] > 0.0);
+        let clean = run_sim_under(Workload::LogReg, AlgoKind::RFast, &topo,
+                                  &cfg, None, StopRule::VirtualTime(3.0));
+        assert_eq!(clean.scalars["msgs_lost"], 0.0);
     }
 
     #[test]

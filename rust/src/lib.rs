@@ -11,6 +11,10 @@
 //!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven.
 //! * [`sim`] — deterministic discrete-event simulator: per-node compute
 //!   times, stragglers, link latency, packet loss with send-until-ack.
+//! * [`scenario`] — declarative fault injection over the simulator:
+//!   straggler schedules, loss/latency ramps, churn, bandwidth caps,
+//!   composed into named presets (`paper_fig6_straggler`, `lossy_30pct`,
+//!   ...) or loaded from JSON.
 //! * [`runner`] — real thread-per-node asynchronous engine (wall clock).
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`)
 //!   produced by `python/compile/aot.py`; python is never on this path.
@@ -35,6 +39,29 @@
 //! let report = sim.run(StopRule::Iterations(5_000));
 //! println!("final optimality gap: {:.3e}", report.final_gap.unwrap());
 //! ```
+//!
+//! ## Fault-injection scenarios
+//!
+//! The paper's §VI regimes are named presets; any composition of
+//! stragglers, loss/latency ramps, churn and bandwidth caps can also be
+//! loaded from JSON (`--scenario file.json` on the CLI):
+//!
+//! ```
+//! use rfast::prelude::*;
+//! use rfast::oracle::GradOracle;
+//!
+//! let topo = Topology::ring(5);
+//! let quad = QuadraticOracle::heterogeneous(8, 5, 0.5, 2.0, 7);
+//! let cfg = SimConfig {
+//!     seed: 7, gamma: 0.04, compute_mean: 0.01, eval_every: 1.0,
+//!     scenario: Some(Scenario::by_name("lossy_30pct").unwrap()),
+//!     ..SimConfig::default()
+//! };
+//! let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, quad.into_set());
+//! let report = sim.run(StopRule::Iterations(2_000));
+//! assert!(sim.stats().msgs_lost > 0); // the ramp was live
+//! assert!(report.final_gap.is_some());
+//! ```
 
 pub mod algo;
 pub mod cli;
@@ -49,6 +76,7 @@ pub mod oracle;
 pub mod prng;
 pub mod runner;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testutil;
 
@@ -62,5 +90,6 @@ pub mod prelude {
     pub use crate::metrics::{Report, Series};
     pub use crate::oracle::{GradOracle, LogRegOracle, QuadraticOracle};
     pub use crate::prng::Rng;
+    pub use crate::scenario::Scenario;
     pub use crate::sim::{Simulator, StopRule};
 }

@@ -2,13 +2,19 @@
 //!
 //! ```text
 //! repro train   --algo rfast --topology ring --nodes 8 --model logreg
-//!               [--gamma G] [--seed S] [--straggler NODE:FACTOR]
-//!               [--loss-prob P] [--skew ALPHA] [--time T | --iters K]
-//!               [--oracle pjrt|rust] [--out runs/NAME]
+//!               [--scenario NAME|FILE.json] [--gamma G] [--seed S]
+//!               [--straggler NODE:FACTOR] [--loss-prob P] [--skew ALPHA]
+//!               [--time T | --iters K] [--oracle pjrt|rust]
+//!               [--out runs/NAME]
+//! repro scenarios [--export DIR]       # list / export the fault presets
 //! repro graph   --topology binary_tree --nodes 7      # inspect W/A, roots
 //! repro check-artifacts                               # load + smoke-run
 //! repro algos                                         # list algorithms
 //! repro help
+//!
+//! A bare option list defaults to `train`, so
+//! `repro --scenario paper_fig6_straggler` runs the paper's straggler
+//! regime end-to-end.
 //! ```
 
 use rfast::algo::AlgoKind;
@@ -19,12 +25,22 @@ use rfast::graph::TopologyKind;
 use rfast::metrics::Table;
 use rfast::oracle::{GradOracle, LogRegOracle};
 use rfast::runtime::{self, Manifest, PjrtTask};
+use rfast::scenario::Scenario;
 use rfast::sim::{Simulator, StopRule};
 use std::path::PathBuf;
 use std::sync::Arc;
 
 fn main() {
-    let args = match Args::parse(std::env::args().skip(1)) {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    // a bare option list (e.g. `repro --scenario lossy_30pct`) is a train run
+    if raw
+        .first()
+        .map(|a| a.starts_with("--") && a != "--help")
+        .unwrap_or(false)
+    {
+        raw.insert(0, "train".to_string());
+    }
+    let args = match Args::parse(raw) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n");
@@ -36,6 +52,7 @@ fn main() {
         "train" => cmd_train(&args),
         "graph" => cmd_graph(&args),
         "check-artifacts" => cmd_check_artifacts(),
+        "scenarios" => cmd_scenarios(&args),
         "algos" => {
             cmd_algos();
             Ok(())
@@ -57,6 +74,7 @@ fn print_help() {
         "repro — R-FAST reproduction launcher\n\n\
          subcommands:\n  \
          train            run one training experiment in the virtual-time simulator\n  \
+         scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
          algos            list implemented algorithms\n  \
@@ -67,6 +85,7 @@ fn print_help() {
          --nodes N          node count (default 8)\n  \
          --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
          --oracle KIND      rust|pjrt (default rust; pjrt needs `make artifacts`)\n  \
+         --scenario S       fault preset name or scenario .json path\n                          (see `repro scenarios`)\n  \
          --gamma G          step size\n  --seed S\n  \
          --straggler N:F    slow node N down by factor F\n  \
          --loss-prob P      packet loss probability (async algos)\n  \
@@ -96,6 +115,33 @@ fn cmd_algos() {
         ]);
     }
     t.print();
+}
+
+/// List the built-in fault-injection presets; `--export DIR` writes each
+/// as `DIR/<name>.json` (edit + pass back via `--scenario FILE.json`).
+fn cmd_scenarios(args: &Args) -> Result<(), String> {
+    let mut t = Table::new("fault-injection scenario presets",
+                           &["name", "description"]);
+    for name in Scenario::preset_names() {
+        let s = Scenario::by_name(name).expect("preset");
+        t.row(vec![name.to_string(), s.description.clone()]);
+    }
+    t.print();
+    if let Some(dir) = args.get("export") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        for name in Scenario::preset_names() {
+            let s = Scenario::by_name(name).expect("preset");
+            let path = dir.join(format!("{name}.json"));
+            std::fs::write(&path, s.to_json().to_string())
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+    } else {
+        println!("\nrun one with:  repro train --scenario NAME");
+        println!("export JSON:   repro scenarios --export DIR");
+    }
+    Ok(())
 }
 
 fn cmd_graph(args: &Args) -> Result<(), String> {
@@ -212,6 +258,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     if let Some(s) = args.get("straggler") {
         cfg.apply_kv("straggler", s)?;
     }
+    if let Some(spec) = args.get("scenario") {
+        let sc = Scenario::resolve(spec)?;
+        // bound-check node indices here so a mismatch is a CLI error,
+        // not a panic out of the simulator
+        sc.validate(Some(n))?;
+        cfg.scenario = Some(sc);
+    }
     if model == "mlp" {
         let base = SimConfig::resnet_paper();
         cfg.compute_mean = base.compute_mean;
@@ -232,6 +285,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         "train: {} on {} ({} nodes), model={model} oracle={oracle_kind} γ={} seed={}",
         algo.name(), kind.name(), n, cfg.gamma, cfg.seed
     );
+    if let Some(sc) = &cfg.scenario {
+        println!("scenario: {} — {}", sc.name, sc.description);
+    }
 
     let report = match (model.as_str(), oracle_kind.as_str()) {
         ("logreg", "rust") => {

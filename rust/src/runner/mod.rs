@@ -78,6 +78,12 @@ impl ThreadedRunner {
     pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                x0: Vec<f32>) -> ThreadedRunner {
         cfg.validate().expect("invalid SimConfig");
+        assert!(
+            cfg.scenario.is_none(),
+            "fault-injection scenarios drive the virtual-time simulator \
+             only; the threaded runner takes the scalar SimConfig knobs \
+             (wall-clock scenario support is a ROADMAP item)"
+        );
         ThreadedRunner { cfg, algo, topo: topo.clone(), x0, pace: None }
     }
 

@@ -1,0 +1,800 @@
+//! Declarative fault-injection scenarios for the simulator.
+//!
+//! The paper's robustness claims (§VI) are statements about *fault
+//! regimes* — stragglers, latency, packet loss — that the seed encoded as
+//! scattered [`SimConfig`](crate::config::SimConfig) scalars. A
+//! [`Scenario`] composes those regimes from first-class primitives and is
+//! the single object the simulator consults on every event:
+//!
+//! * **straggler schedules** — per-node compute slowdowns that are
+//!   permanent, switch on at a time `T`, or cycle on/off
+//!   ([`StragglerSchedule`]);
+//! * **loss ramps** — piecewise-constant Bernoulli drop probability over
+//!   virtual time (overrides `SimConfig::loss_prob` once the first phase
+//!   starts; async algorithms only, exactly like the base knob);
+//! * **latency ramps** — piecewise-constant multipliers on the mean link
+//!   latency (the cap scales along, so Assumption 3 stays bounded);
+//! * **churn** — pause/resume windows during which a node starts no new
+//!   iterations (in-flight work and message receipt continue: this models
+//!   a stalled worker, not a crashed one);
+//! * **bandwidth caps** — per-link (or wildcard) byte rates; the
+//!   simulator serializes capped payloads FIFO per directed link, so the
+//!   rate is a real throughput bound, not just a fixed delay.
+//!
+//! Every query is a pure function of virtual time, so a run under a
+//! scenario is exactly as deterministic as a clean run: same seed + same
+//! scenario ⇒ identical [`SimStats`](crate::sim::SimStats).
+//!
+//! Scenarios round-trip through the in-repo [`jsonio`](crate::jsonio)
+//! (`Scenario::to_json` / `Scenario::from_json`), load from `.json` files,
+//! and ship as named presets ([`Scenario::by_name`]) that make the
+//! paper's §VI regimes one-line: `paper_fig5`, `paper_fig6_straggler`,
+//! `lossy_30pct`, `late_straggler`, `degrading_network`, `churn`.
+//! Scenarios currently drive the virtual-time simulator only; the
+//! wall-clock runner still uses the base `SimConfig` scalars.
+
+use crate::jsonio::{self, Json};
+use std::path::Path;
+
+/// When a straggler's slowdown is in effect.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StragglerSchedule {
+    /// Slow for the whole run (the paper's §VI-B loaded GPU).
+    Permanent,
+    /// Full speed until `at` seconds of virtual time, slow afterwards.
+    FromTime { at: f64 },
+    /// Cycles: slow for the first `duty`-fraction of every `period`
+    /// seconds, full speed for the rest.
+    Intermittent { period: f64, duty: f64 },
+}
+
+/// One straggling node: its compute cost is multiplied by `factor`
+/// whenever the schedule is active.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerSpec {
+    pub node: usize,
+    /// Slowdown factor ≥ 1.
+    pub factor: f64,
+    pub schedule: StragglerSchedule,
+}
+
+impl StragglerSpec {
+    /// Compute-time multiplier contributed by this spec at time `t`.
+    pub fn factor_at(&self, t: f64) -> f64 {
+        let active = match self.schedule {
+            StragglerSchedule::Permanent => true,
+            StragglerSchedule::FromTime { at } => t >= at,
+            StragglerSchedule::Intermittent { period, duty } => {
+                (t / period).fract() < duty
+            }
+        };
+        if active {
+            self.factor
+        } else {
+            1.0
+        }
+    }
+}
+
+/// One step of a piecewise-constant ramp: `value` holds from `from_time`
+/// until the next phase (phases are kept sorted by `from_time`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    pub from_time: f64,
+    pub value: f64,
+}
+
+/// A pause window for one node: no new local iterations start while
+/// `pause_at ≤ t < resume_at`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub node: usize,
+    pub pause_at: f64,
+    pub resume_at: f64,
+}
+
+/// A byte-rate cap on directed links. `None` endpoints are wildcards, so
+/// `{ from: None, to: None }` caps every link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BandwidthCap {
+    pub from: Option<usize>,
+    pub to: Option<usize>,
+    pub bytes_per_sec: f64,
+}
+
+/// A named, composable fault-injection scenario (see module docs).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub stragglers: Vec<StragglerSpec>,
+    pub loss_ramp: Vec<Phase>,
+    pub latency_ramp: Vec<Phase>,
+    pub churn: Vec<ChurnEvent>,
+    pub bandwidth: Vec<BandwidthCap>,
+}
+
+impl Scenario {
+    /// Empty scenario with a name (compose by pushing primitives).
+    pub fn named(name: &str, description: &str) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            description: description.to_string(),
+            ..Scenario::default()
+        }
+    }
+
+    /// One permanently slow node — the classic §VI-B regime.
+    pub fn single_straggler(node: usize, factor: f64) -> Scenario {
+        let mut s = Scenario::named(
+            "single_straggler",
+            "one node permanently slowed by a constant factor",
+        );
+        s.stragglers.push(StragglerSpec {
+            node,
+            factor,
+            schedule: StragglerSchedule::Permanent,
+        });
+        s
+    }
+
+    /// Constant Bernoulli packet loss from t = 0 (async algorithms only).
+    pub fn constant_loss(prob: f64) -> Scenario {
+        let mut s = Scenario::named(
+            "constant_loss",
+            "constant Bernoulli packet loss on every async link",
+        );
+        s.loss_ramp.push(Phase { from_time: 0.0, value: prob });
+        s
+    }
+
+    // ---- event-time queries (pure in `t`) ------------------------------
+
+    /// Product of all active straggler factors for `node` at time `t`.
+    pub fn compute_factor(&self, node: usize, t: f64) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|s| s.node == node)
+            .map(|s| s.factor_at(t))
+            .product()
+    }
+
+    /// Effective drop probability at time `t`; `base` (the
+    /// `SimConfig::loss_prob` scalar) applies before the first phase.
+    pub fn loss_prob(&self, base: f64, t: f64) -> f64 {
+        ramp_value(&self.loss_ramp, t).unwrap_or(base)
+    }
+
+    /// Multiplier on the mean link latency at time `t` (1.0 before the
+    /// first phase).
+    pub fn latency_multiplier(&self, t: f64) -> f64 {
+        ramp_value(&self.latency_ramp, t).unwrap_or(1.0)
+    }
+
+    /// Is `node` inside any pause window at time `t`?
+    pub fn is_paused(&self, node: usize, t: f64) -> bool {
+        self.churn
+            .iter()
+            .any(|c| c.node == node && c.pause_at <= t && t < c.resume_at)
+    }
+
+    /// Latest `resume_at` over the windows pausing `node` at time `t`
+    /// (the simulator re-examines the node then; chained windows are
+    /// handled by re-checking on wake).
+    pub fn next_resume(&self, node: usize, t: f64) -> Option<f64> {
+        self.churn
+            .iter()
+            .filter(|c| c.node == node && c.pause_at <= t && t < c.resume_at)
+            .map(|c| c.resume_at)
+            .fold(None, |acc, r| Some(acc.map_or(r, |a: f64| a.max(r))))
+    }
+
+    /// Serialization delay for `bytes` on the link `from → to`: the
+    /// tightest matching cap's `bytes / rate`, or 0 when uncapped.
+    pub fn bandwidth_delay(&self, from: usize, to: usize, bytes: f64) -> f64 {
+        let rate = self
+            .bandwidth
+            .iter()
+            .filter(|c| {
+                c.from.map_or(true, |f| f == from)
+                    && c.to.map_or(true, |t| t == to)
+            })
+            .map(|c| c.bytes_per_sec)
+            .fold(f64::INFINITY, f64::min);
+        if rate.is_finite() && rate > 0.0 {
+            bytes / rate
+        } else {
+            0.0
+        }
+    }
+
+    /// Does this scenario carry any fault primitive at all?
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.loss_ramp.is_empty()
+            && self.latency_ramp.is_empty()
+            && self.churn.is_empty()
+            && self.bandwidth.is_empty()
+    }
+
+    // ---- validation ----------------------------------------------------
+
+    /// Range checks; pass the node count to also bound-check node indices
+    /// (the simulator does), or `None` for count-independent validation.
+    pub fn validate(&self, n_nodes: Option<usize>) -> Result<(), String> {
+        let check_node = |node: usize, what: &str| -> Result<(), String> {
+            if let Some(n) = n_nodes {
+                if node >= n {
+                    return Err(format!(
+                        "scenario {:?}: {what} node {node} out of range (n = {n})",
+                        self.name
+                    ));
+                }
+            }
+            Ok(())
+        };
+        for s in &self.stragglers {
+            check_node(s.node, "straggler")?;
+            if !(s.factor >= 1.0) {
+                return Err(format!(
+                    "scenario {:?}: straggler factor must be ≥ 1, got {}",
+                    self.name, s.factor
+                ));
+            }
+            match s.schedule {
+                StragglerSchedule::Permanent => {}
+                StragglerSchedule::FromTime { at } => {
+                    if !(at >= 0.0) {
+                        return Err(format!(
+                            "scenario {:?}: straggler onset must be ≥ 0, got {at}",
+                            self.name
+                        ));
+                    }
+                }
+                StragglerSchedule::Intermittent { period, duty } => {
+                    if !(period > 0.0) || !(0.0..=1.0).contains(&duty) {
+                        return Err(format!(
+                            "scenario {:?}: intermittent wants period > 0 and \
+                             duty in [0,1], got period {period} duty {duty}",
+                            self.name
+                        ));
+                    }
+                }
+            }
+        }
+        for (ramp, what, lo, hi) in [
+            (&self.loss_ramp, "loss", 0.0, 1.0),
+            (&self.latency_ramp, "latency multiplier", 0.0, f64::INFINITY),
+        ] {
+            let mut prev = f64::NEG_INFINITY;
+            for p in ramp.iter() {
+                if !(p.from_time >= 0.0) || p.from_time < prev {
+                    return Err(format!(
+                        "scenario {:?}: {what} ramp times must be ≥ 0 and \
+                         non-decreasing",
+                        self.name
+                    ));
+                }
+                prev = p.from_time;
+                if !(p.value >= lo) || p.value >= hi && what == "loss" {
+                    return Err(format!(
+                        "scenario {:?}: {what} ramp value {} out of range",
+                        self.name, p.value
+                    ));
+                }
+            }
+        }
+        for c in &self.churn {
+            check_node(c.node, "churn")?;
+            if !(c.pause_at >= 0.0 && c.resume_at > c.pause_at) {
+                return Err(format!(
+                    "scenario {:?}: churn window [{}, {}) is empty or negative",
+                    self.name, c.pause_at, c.resume_at
+                ));
+            }
+        }
+        for b in &self.bandwidth {
+            if let Some(f) = b.from {
+                check_node(f, "bandwidth.from")?;
+            }
+            if let Some(t) = b.to {
+                check_node(t, "bandwidth.to")?;
+            }
+            if !(b.bytes_per_sec > 0.0) {
+                return Err(format!(
+                    "scenario {:?}: bandwidth rate must be > 0, got {}",
+                    self.name, b.bytes_per_sec
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    /// Serialize to the scenario JSON shape (round-trips via
+    /// [`Scenario::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let stragglers = self
+            .stragglers
+            .iter()
+            .map(|s| {
+                let schedule = match s.schedule {
+                    StragglerSchedule::Permanent => {
+                        Json::obj(vec![("kind", "permanent".into())])
+                    }
+                    StragglerSchedule::FromTime { at } => Json::obj(vec![
+                        ("kind", "from_time".into()),
+                        ("at", at.into()),
+                    ]),
+                    StragglerSchedule::Intermittent { period, duty } => {
+                        Json::obj(vec![
+                            ("kind", "intermittent".into()),
+                            ("period", period.into()),
+                            ("duty", duty.into()),
+                        ])
+                    }
+                };
+                Json::obj(vec![
+                    ("node", s.node.into()),
+                    ("factor", s.factor.into()),
+                    ("schedule", schedule),
+                ])
+            })
+            .collect();
+        let ramp_json = |ramp: &[Phase]| {
+            Json::Arr(
+                ramp.iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("from_time", p.from_time.into()),
+                            ("value", p.value.into()),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let churn = self
+            .churn
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("node", c.node.into()),
+                    ("pause_at", c.pause_at.into()),
+                    ("resume_at", c.resume_at.into()),
+                ])
+            })
+            .collect();
+        let bandwidth = self
+            .bandwidth
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("from", b.from.map_or(Json::Null, Json::from)),
+                    ("to", b.to.map_or(Json::Null, Json::from)),
+                    ("bytes_per_sec", b.bytes_per_sec.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            ("stragglers", Json::Arr(stragglers)),
+            ("loss_ramp", ramp_json(&self.loss_ramp)),
+            ("latency_ramp", ramp_json(&self.latency_ramp)),
+            ("churn", Json::Arr(churn)),
+            ("bandwidth", Json::Arr(bandwidth)),
+        ])
+    }
+
+    /// Parse the scenario JSON shape; every list is optional, unknown
+    /// keys are ignored (forward compatibility).
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        if j.as_obj().is_none() {
+            return Err("scenario: expected a JSON object".to_string());
+        }
+        fn str_field(j: &Json, key: &str) -> String {
+            j.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string()
+        }
+        fn num(j: &Json, what: &str) -> Result<f64, String> {
+            j.as_f64().ok_or_else(|| format!("scenario: {what} must be a number"))
+        }
+        fn node_of(j: &Json, what: &str) -> Result<usize, String> {
+            j.as_usize()
+                .ok_or_else(|| format!("scenario: {what} must be a node index"))
+        }
+        fn list<'a>(j: &'a Json, key: &str) -> &'a [Json] {
+            j.get(key).and_then(Json::as_arr).unwrap_or(&[])
+        }
+
+        let mut out =
+            Scenario::named(&str_field(j, "name"), &str_field(j, "description"));
+        for s in list(j, "stragglers") {
+            let node = node_of(s.get("node").unwrap_or(&Json::Null), "straggler.node")?;
+            let factor = num(s.get("factor").unwrap_or(&Json::Null), "straggler.factor")?;
+            let schedule = match s.get("schedule") {
+                None => StragglerSchedule::Permanent,
+                Some(sch) => {
+                    match sch.get("kind").and_then(Json::as_str).unwrap_or("permanent") {
+                        "permanent" => StragglerSchedule::Permanent,
+                        "from_time" => StragglerSchedule::FromTime {
+                            at: num(sch.get("at").unwrap_or(&Json::Null), "schedule.at")?,
+                        },
+                        "intermittent" => StragglerSchedule::Intermittent {
+                            period: num(sch.get("period").unwrap_or(&Json::Null),
+                                        "schedule.period")?,
+                            duty: num(sch.get("duty").unwrap_or(&Json::Null),
+                                      "schedule.duty")?,
+                        },
+                        other => {
+                            return Err(format!(
+                                "scenario: unknown straggler schedule kind {other:?}"
+                            ))
+                        }
+                    }
+                }
+            };
+            out.stragglers.push(StragglerSpec { node, factor, schedule });
+        }
+        fn parse_ramp(j: &Json, key: &str) -> Result<Vec<Phase>, String> {
+            list(j, key)
+                .iter()
+                .map(|p| {
+                    Ok(Phase {
+                        from_time: num(p.get("from_time").unwrap_or(&Json::Null),
+                                       "ramp.from_time")?,
+                        value: num(p.get("value").unwrap_or(&Json::Null),
+                                   "ramp.value")?,
+                    })
+                })
+                .collect()
+        }
+        out.loss_ramp = parse_ramp(j, "loss_ramp")?;
+        out.latency_ramp = parse_ramp(j, "latency_ramp")?;
+        for c in list(j, "churn") {
+            out.churn.push(ChurnEvent {
+                node: node_of(c.get("node").unwrap_or(&Json::Null), "churn.node")?,
+                pause_at: num(c.get("pause_at").unwrap_or(&Json::Null),
+                              "churn.pause_at")?,
+                resume_at: num(c.get("resume_at").unwrap_or(&Json::Null),
+                               "churn.resume_at")?,
+            });
+        }
+        for b in list(j, "bandwidth") {
+            let endpoint = |key: &str| -> Result<Option<usize>, String> {
+                match b.get(key) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(v) => node_of(v, key).map(Some),
+                }
+            };
+            out.bandwidth.push(BandwidthCap {
+                from: endpoint("from")?,
+                to: endpoint("to")?,
+                bytes_per_sec: num(b.get("bytes_per_sec").unwrap_or(&Json::Null),
+                                   "bandwidth.bytes_per_sec")?,
+            });
+        }
+        out.validate(None)?;
+        Ok(out)
+    }
+
+    /// Load a scenario from a `.json` file.
+    pub fn load(path: &Path) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = jsonio::parse(&text).map_err(|e| e.to_string())?;
+        Scenario::from_json(&j)
+    }
+
+    /// Resolve a CLI spec: a preset name, or a path to a `.json` file.
+    pub fn resolve(spec: &str) -> Result<Scenario, String> {
+        if let Some(s) = Scenario::by_name(spec) {
+            return Ok(s);
+        }
+        let path = Path::new(spec);
+        if spec.ends_with(".json") || path.exists() {
+            return Scenario::load(path);
+        }
+        Err(format!(
+            "unknown scenario {spec:?}; presets: {}  (or pass a .json file)",
+            Scenario::preset_names().join(", ")
+        ))
+    }
+
+    // ---- presets -------------------------------------------------------
+
+    /// Names of the built-in presets (see [`Scenario::by_name`]).
+    pub fn preset_names() -> Vec<&'static str> {
+        vec![
+            "paper_fig5",
+            "paper_fig6_straggler",
+            "lossy_30pct",
+            "late_straggler",
+            "degrading_network",
+            "churn",
+        ]
+    }
+
+    /// Built-in presets covering the paper's §VI regimes and the
+    /// robustness regimes surveyed in PAPERS.md (Assran et al. 2020).
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        let mut s = match name {
+            "paper_fig5" => {
+                let mut s = Scenario::constant_loss(0.02);
+                s.description = "§VI-B no-straggler comparison: 2% packet \
+                                 loss on the async algorithms"
+                    .to_string();
+                s
+            }
+            "paper_fig6_straggler" => {
+                let mut s = Scenario::single_straggler(3, 5.0);
+                s.loss_ramp.push(Phase { from_time: 0.0, value: 0.02 });
+                s.description = "§VI-B straggler comparison: node 3 slowed \
+                                 5x, 2% packet loss on async algorithms"
+                    .to_string();
+                s
+            }
+            "lossy_30pct" => {
+                let mut s = Scenario::constant_loss(0.30);
+                s.description = "heavy loss regime: 30% of async packets \
+                                 dropped, sender-side, send-until-ack"
+                    .to_string();
+                s
+            }
+            "late_straggler" => {
+                let mut s = Scenario::named(
+                    "late_straggler",
+                    "node 1 healthy until t = 60 s, then slowed 5x \
+                     (onset-at-time regime)",
+                );
+                s.stragglers.push(StragglerSpec {
+                    node: 1,
+                    factor: 5.0,
+                    schedule: StragglerSchedule::FromTime { at: 60.0 },
+                });
+                s
+            }
+            "degrading_network" => {
+                let mut s = Scenario::named(
+                    "degrading_network",
+                    "link quality decays in two steps: latency x1 -> x2 -> \
+                     x4 and loss 2% -> 10% -> 25% at t = 40 s and t = 80 s",
+                );
+                s.latency_ramp = vec![
+                    Phase { from_time: 0.0, value: 1.0 },
+                    Phase { from_time: 40.0, value: 2.0 },
+                    Phase { from_time: 80.0, value: 4.0 },
+                ];
+                s.loss_ramp = vec![
+                    Phase { from_time: 0.0, value: 0.02 },
+                    Phase { from_time: 40.0, value: 0.10 },
+                    Phase { from_time: 80.0, value: 0.25 },
+                ];
+                s
+            }
+            "churn" => {
+                let mut s = Scenario::named(
+                    "churn",
+                    "pause/resume churn: two nodes take turns going dark \
+                     for 15 s windows while a third throbs 3x slow",
+                );
+                s.churn = vec![
+                    ChurnEvent { node: 1, pause_at: 20.0, resume_at: 35.0 },
+                    ChurnEvent { node: 2, pause_at: 50.0, resume_at: 65.0 },
+                    ChurnEvent { node: 1, pause_at: 80.0, resume_at: 95.0 },
+                ];
+                s.stragglers.push(StragglerSpec {
+                    node: 0,
+                    factor: 3.0,
+                    schedule: StragglerSchedule::Intermittent {
+                        period: 30.0,
+                        duty: 0.5,
+                    },
+                });
+                s
+            }
+            _ => return None,
+        };
+        s.name = name.to_string();
+        Some(s)
+    }
+}
+
+/// Last phase with `from_time ≤ t`, or `None` before the first phase.
+fn ramp_value(ramp: &[Phase], t: f64) -> Option<f64> {
+    let mut cur = None;
+    for p in ramp {
+        if p.from_time <= t {
+            cur = Some(p.value);
+        } else {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_schedules() {
+        let perm = StragglerSpec {
+            node: 0,
+            factor: 4.0,
+            schedule: StragglerSchedule::Permanent,
+        };
+        assert_eq!(perm.factor_at(0.0), 4.0);
+        assert_eq!(perm.factor_at(1e6), 4.0);
+
+        let late = StragglerSpec {
+            node: 0,
+            factor: 4.0,
+            schedule: StragglerSchedule::FromTime { at: 10.0 },
+        };
+        assert_eq!(late.factor_at(9.99), 1.0);
+        assert_eq!(late.factor_at(10.0), 4.0);
+
+        let inter = StragglerSpec {
+            node: 0,
+            factor: 4.0,
+            schedule: StragglerSchedule::Intermittent { period: 10.0, duty: 0.3 },
+        };
+        assert_eq!(inter.factor_at(1.0), 4.0); // 0.1 < 0.3
+        assert_eq!(inter.factor_at(5.0), 1.0); // 0.5 ≥ 0.3
+        assert_eq!(inter.factor_at(12.0), 4.0); // wraps
+    }
+
+    #[test]
+    fn ramps_are_piecewise_constant() {
+        let s = Scenario::by_name("degrading_network").unwrap();
+        assert_eq!(s.loss_prob(0.0, 0.0), 0.02);
+        assert_eq!(s.loss_prob(0.0, 39.9), 0.02);
+        assert_eq!(s.loss_prob(0.0, 40.0), 0.10);
+        assert_eq!(s.loss_prob(0.0, 200.0), 0.25);
+        assert_eq!(s.latency_multiplier(50.0), 2.0);
+        // before any phase, base applies
+        let empty = Scenario::default();
+        assert_eq!(empty.loss_prob(0.07, 5.0), 0.07);
+        assert_eq!(empty.latency_multiplier(5.0), 1.0);
+    }
+
+    #[test]
+    fn churn_windows_and_resume() {
+        let s = Scenario::by_name("churn").unwrap();
+        assert!(!s.is_paused(1, 19.9));
+        assert!(s.is_paused(1, 20.0));
+        assert!(s.is_paused(1, 34.9));
+        assert!(!s.is_paused(1, 35.0));
+        assert_eq!(s.next_resume(1, 25.0), Some(35.0));
+        assert_eq!(s.next_resume(1, 40.0), None);
+        assert!(!s.is_paused(0, 25.0)); // other nodes untouched
+    }
+
+    #[test]
+    fn bandwidth_caps_pick_tightest_match() {
+        let mut s = Scenario::named("bw", "");
+        s.bandwidth.push(BandwidthCap {
+            from: None,
+            to: None,
+            bytes_per_sec: 1e6,
+        });
+        s.bandwidth.push(BandwidthCap {
+            from: Some(0),
+            to: Some(1),
+            bytes_per_sec: 1e3,
+        });
+        // specific link: tightest (1 KB/s) wins
+        assert!((s.bandwidth_delay(0, 1, 2e3) - 2.0).abs() < 1e-12);
+        // other links: wildcard rate
+        assert!((s.bandwidth_delay(1, 0, 2e6) - 2.0).abs() < 1e-12);
+        // uncapped scenario: zero delay
+        assert_eq!(Scenario::default().bandwidth_delay(0, 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn compute_factor_multiplies_overlapping_specs() {
+        let mut s = Scenario::single_straggler(2, 2.0);
+        s.stragglers.push(StragglerSpec {
+            node: 2,
+            factor: 3.0,
+            schedule: StragglerSchedule::FromTime { at: 10.0 },
+        });
+        assert_eq!(s.compute_factor(2, 0.0), 2.0);
+        assert_eq!(s.compute_factor(2, 20.0), 6.0);
+        assert_eq!(s.compute_factor(0, 20.0), 1.0);
+    }
+
+    #[test]
+    fn presets_exist_and_validate() {
+        for name in Scenario::preset_names() {
+            let s = Scenario::by_name(name)
+                .unwrap_or_else(|| panic!("missing preset {name}"));
+            assert_eq!(s.name, name);
+            assert!(!s.description.is_empty(), "{name}");
+            assert!(!s.is_empty(), "{name}");
+            s.validate(Some(8)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = Scenario::single_straggler(3, 0.5); // factor < 1
+        assert!(s.validate(None).is_err());
+        s = Scenario::single_straggler(9, 2.0);
+        assert!(s.validate(Some(4)).is_err()); // node out of range
+        assert!(s.validate(None).is_ok()); // unknown n: allowed
+
+        let mut bad_ramp = Scenario::named("r", "");
+        bad_ramp.loss_ramp = vec![
+            Phase { from_time: 10.0, value: 0.1 },
+            Phase { from_time: 5.0, value: 0.2 }, // decreasing time
+        ];
+        assert!(bad_ramp.validate(None).is_err());
+
+        let mut bad_loss = Scenario::named("l", "");
+        bad_loss.loss_ramp = vec![Phase { from_time: 0.0, value: 1.5 }];
+        assert!(bad_loss.validate(None).is_err());
+
+        let mut bad_churn = Scenario::named("c", "");
+        bad_churn.churn = vec![ChurnEvent { node: 0, pause_at: 5.0, resume_at: 5.0 }];
+        assert!(bad_churn.validate(None).is_err());
+
+        let mut bad_bw = Scenario::named("b", "");
+        bad_bw.bandwidth =
+            vec![BandwidthCap { from: None, to: None, bytes_per_sec: 0.0 }];
+        assert!(bad_bw.validate(None).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for name in Scenario::preset_names() {
+            let s = Scenario::by_name(name).unwrap();
+            let text = s.to_json().to_string();
+            let back = Scenario::from_json(&jsonio::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back, s, "{name} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn json_parses_sparse_documents() {
+        // every list optional; schedule defaults to permanent
+        let j = jsonio::parse(
+            r#"{"name": "mini", "stragglers": [{"node": 1, "factor": 2.5}]}"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.name, "mini");
+        assert_eq!(s.stragglers.len(), 1);
+        assert_eq!(s.stragglers[0].schedule, StragglerSchedule::Permanent);
+        assert_eq!(s.compute_factor(1, 0.0), 2.5);
+
+        assert!(Scenario::from_json(&jsonio::parse("[1,2]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn resolve_finds_presets_and_rejects_unknown() {
+        assert_eq!(Scenario::resolve("lossy_30pct").unwrap().name, "lossy_30pct");
+        let e = Scenario::resolve("definitely_not_a_scenario").unwrap_err();
+        assert!(e.contains("presets:"), "{e}");
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("rfast_scenario_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("custom.json");
+        let s = Scenario::by_name("churn").unwrap();
+        std::fs::write(&path, s.to_json().to_string()).unwrap();
+        let loaded = Scenario::load(&path).unwrap();
+        assert_eq!(loaded, s);
+        let via_resolve = Scenario::resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(via_resolve, s);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -17,6 +17,19 @@
 //!   lands;
 //! * ties in virtual time break on a monotone sequence number — the run is
 //!   a pure function of (config, topology, algorithm, oracle seeds).
+//!
+//! Fault injection beyond the scalar knobs goes through the declarative
+//! [`Scenario`](crate::scenario::Scenario) in `SimConfig::scenario`. The
+//! scenario is consulted at exactly four points, each a pure function of
+//! virtual time (so both invariants above survive):
+//! * start-of-iteration time: churn — a paused node starts no new
+//!   iteration and a `Resume` event re-examines it when the window ends;
+//! * compute-cost time: straggler schedules multiply the drawn cost;
+//! * send time: the loss ramp overrides `loss_prob`, and bandwidth caps
+//!   serialize payloads FIFO per directed link (a real throughput bound,
+//!   not just a fixed delay) before the propagation latency;
+//! * latency-draw time: the latency ramp scales the lognormal's mean (and
+//!   the cap, so Assumption 3's bound stretches rather than truncates).
 
 use crate::algo::{mean_param, AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
@@ -63,6 +76,8 @@ enum Event {
     /// Ack returns to the sender; channel (from→to, chan) becomes free.
     Ack { from: usize, to: usize, chan: usize },
     EvalTick,
+    /// A scenario churn window ended: re-examine the node.
+    Resume(usize),
 }
 
 /// Min-heap key: (time, seq) — deterministic tie-break.
@@ -99,6 +114,11 @@ pub struct Simulator {
     link_busy: Vec<bool>,
     pace_rng: Vec<Rng>,
     link_rng: Rng,
+    /// one pending `Resume` event per paused node at most
+    resume_scheduled: Vec<bool>,
+    /// per directed link (from*n + to): time the link finishes serializing
+    /// its last bandwidth-capped payload (FIFO transmission queue)
+    bw_free_at: Vec<f64>,
     stats: SimStats,
     mean_buf: Vec<f32>,
     epoch: f64,
@@ -123,6 +143,9 @@ impl Simulator {
     pub fn with_x0(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                    set: OracleSet, x0: &[f32]) -> Simulator {
         let n = topo.n();
+        if let Some(sc) = &cfg.scenario {
+            sc.validate(Some(n)).expect("invalid scenario for this topology");
+        }
         let nodes = algo.build(topo, x0, cfg.gamma, cfg.seed);
         let pace_rng =
             (0..n).map(|i| Rng::stream(cfg.seed, 0xacce1 + i as u64)).collect();
@@ -140,6 +163,8 @@ impl Simulator {
             busy: vec![false; n],
             link_busy: vec![false; n * n * crate::algo::MsgKind::CHANNELS],
             pace_rng,
+            resume_scheduled: vec![false; n],
+            bw_free_at: vec![0.0; n * n],
             stats: SimStats::default(),
             mean_buf: Vec::new(),
             epoch: 0.0,
@@ -167,22 +192,49 @@ impl Simulator {
                 c *= factor;
             }
         }
+        if let Some(sc) = &self.cfg.scenario {
+            c *= sc.compute_factor(node, self.time);
+        }
         c
     }
 
     fn latency(&mut self) -> f64 {
-        let l = if self.cfg.latency_jitter > 0.0 {
-            self.link_rng
-                .lognormal(self.cfg.link_latency, self.cfg.latency_jitter)
+        let mult = self
+            .cfg
+            .scenario
+            .as_ref()
+            .map_or(1.0, |sc| sc.latency_multiplier(self.time));
+        let mean = self.cfg.link_latency * mult;
+        let l = if self.cfg.latency_jitter > 0.0 && mean > 0.0 {
+            self.link_rng.lognormal(mean, self.cfg.latency_jitter)
         } else {
-            self.cfg.link_latency
+            mean
         };
-        l.min(self.cfg.latency_cap)
+        // the cap scales with the ramp: a degrading network stretches
+        // Assumption 3's bound D rather than clipping against it
+        l.min(self.cfg.latency_cap * mult.max(1.0))
     }
 
     /// Start node's next iteration if idle and ready.
     fn try_start(&mut self, node: usize) {
         if self.busy[node] || !self.nodes[node].ready() {
+            return;
+        }
+        // scenario churn: a paused node starts nothing; one Resume event
+        // re-examines it when the active window ends
+        let paused = match &self.cfg.scenario {
+            Some(sc) if sc.is_paused(node, self.time) => {
+                Some(sc.next_resume(node, self.time))
+            }
+            _ => None,
+        };
+        if let Some(resume_at) = paused {
+            if let Some(at) = resume_at {
+                if !self.resume_scheduled[node] {
+                    self.resume_scheduled[node] = true;
+                    self.push_event(at, Event::Resume(node));
+                }
+            }
             return;
         }
         self.busy[node] = true;
@@ -199,6 +251,12 @@ impl Simulator {
     /// Route freshly emitted messages through the link layer.
     fn route(&mut self, msgs: &mut Vec<Msg>) {
         let lossy = self.algo.tolerates_loss();
+        // the scenario's loss ramp overrides the scalar knob from its
+        // first phase on (pure in self.time, so one lookup per batch)
+        let p_loss = match &self.cfg.scenario {
+            Some(sc) => sc.loss_prob(self.cfg.loss_prob, self.time),
+            None => self.cfg.loss_prob,
+        };
         for msg in msgs.drain(..) {
             debug_assert!(msg.to < self.n && msg.from < self.n);
             self.stats.msgs_sent += 1;
@@ -214,9 +272,7 @@ impl Simulator {
                     self.nodes[from].on_send_failed(msg);
                     continue;
                 }
-                if self.cfg.loss_prob > 0.0
-                    && self.link_rng.chance(self.cfg.loss_prob)
-                {
+                if p_loss > 0.0 && self.link_rng.chance(p_loss) {
                     self.stats.msgs_lost += 1;
                     let from = msg.from;
                     self.nodes[from].on_send_failed(msg);
@@ -224,7 +280,27 @@ impl Simulator {
                 }
                 self.link_busy[link] = true;
             }
-            let at = self.time + self.latency();
+            // bandwidth caps: payload-proportional serialization delay,
+            // FIFO per directed link — concurrent sends queue behind each
+            // other so the configured byte rate is a real throughput
+            // bound for every algorithm (for loss-tolerant ones the
+            // one-unacked-packet channel already throttles on top)
+            let bw_delay = match &self.cfg.scenario {
+                Some(sc) => sc.bandwidth_delay(
+                    msg.from,
+                    msg.to,
+                    (msg.payload.len() * 4 + msg.payload64.len() * 8) as f64,
+                ),
+                None => 0.0,
+            };
+            let mut sent_at = self.time;
+            if bw_delay > 0.0 {
+                let link = msg.from * self.n + msg.to;
+                let start = self.bw_free_at[link].max(self.time);
+                self.bw_free_at[link] = start + bw_delay;
+                sent_at = start + bw_delay;
+            }
+            let at = sent_at + self.latency();
             self.push_event(at, Event::Deliver(msg));
         }
     }
@@ -348,6 +424,11 @@ impl Simulator {
                         [(from * self.n + to) * crate::algo::MsgKind::CHANNELS + chan] =
                         false;
                     // freed channel doesn't wake anyone by itself
+                }
+                Event::Resume(i) => {
+                    self.resume_scheduled[i] = false;
+                    // chained/overlapping pause windows re-arm in try_start
+                    self.try_start(i);
                 }
                 Event::EvalTick => {
                     let loss = self.eval_now(&mut report);

@@ -1,0 +1,173 @@
+//! Scenario-subsystem integration: JSON round-trips of the shipped
+//! presets, determinism of scenario runs, and the paper-shaped behavioural
+//! claims (R-FAST converges under heavy loss; synchronous baselines pay
+//! the straggler at the barrier) driven through the scenario layer.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::graph::Topology;
+use rfast::jsonio;
+use rfast::oracle::{GradOracle, QuadraticOracle};
+use rfast::scenario::Scenario;
+use rfast::sim::{Simulator, SimStats, StopRule};
+
+fn fast_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        gamma: 0.04,
+        compute_mean: 0.01,
+        compute_jitter: 0.3,
+        link_latency: 0.002,
+        latency_jitter: 0.3,
+        latency_cap: 0.05,
+        eval_every: 5.0,
+        ..SimConfig::default()
+    }
+}
+
+fn run_quad(algo: AlgoKind, n: usize, scenario: Option<Scenario>, seed: u64,
+            iters: u64) -> (f64, SimStats) {
+    let topo = Topology::ring(n);
+    let quad = QuadraticOracle::heterogeneous(8, n, 0.5, 2.0, seed);
+    let mut cfg = fast_cfg(seed);
+    cfg.scenario = scenario;
+    let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
+    let report = sim.run(StopRule::Iterations(iters));
+    (report.final_gap.unwrap(), sim.stats())
+}
+
+#[test]
+fn presets_roundtrip_through_json_files() {
+    // the acceptance-criteria loop: serialize every preset to a file on
+    // disk, load it back through the same path the CLI uses, compare
+    let dir = std::env::temp_dir().join("rfast_scenario_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let names = Scenario::preset_names();
+    assert!(names.len() >= 4, "ship at least 4 presets, have {names:?}");
+    for name in names {
+        let s = Scenario::by_name(name).unwrap();
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, s.to_json().to_string()).unwrap();
+        let loaded = Scenario::load(&path).unwrap();
+        assert_eq!(loaded, s, "{name} changed across disk round-trip");
+        // and through the generic JSON value layer
+        let j = jsonio::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(Scenario::from_json(&j).unwrap(), s, "{name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn same_seed_and_scenario_is_bitwise_deterministic() {
+    let sc = Scenario::by_name("degrading_network").unwrap();
+    let a = run_quad(AlgoKind::RFast, 5, Some(sc.clone()), 9, 5_000);
+    let b = run_quad(AlgoKind::RFast, 5, Some(sc), 9, 5_000);
+    assert_eq!(a.0, b.0, "final gap must match exactly");
+    assert_eq!(a.1.msgs_sent, b.1.msgs_sent);
+    assert_eq!(a.1.msgs_lost, b.1.msgs_lost);
+    assert_eq!(a.1.msgs_backpressured, b.1.msgs_backpressured);
+    assert_eq!(a.1.virtual_time, b.1.virtual_time);
+}
+
+#[test]
+fn rfast_converges_under_lossy_30pct_preset() {
+    let sc = Scenario::by_name("lossy_30pct").unwrap();
+    let (gap, stats) = run_quad(AlgoKind::RFast, 5, Some(sc), 7, 40_000);
+    assert!(stats.msgs_lost > 100, "loss injection active: {stats:?}");
+    assert!(gap < 2e-2, "R-FAST gap under 30% loss: {gap}");
+}
+
+#[test]
+fn sync_baseline_pays_the_straggler_scenario_rfast_does_not() {
+    // §VI-B through the scenario layer: the synchronous baseline's wall
+    // time inflates toward the straggler factor, R-FAST barely moves.
+    // (Packet loss never applies to the synchronous algorithms — they
+    // would deadlock; paper §VI ¶1 — so the slowdown is the sync-visible
+    // fault channel.)
+    let sc = Scenario::single_straggler(1, 5.0);
+    let clean_sync = run_quad(AlgoKind::RingAllReduce, 4, None, 13, 4_000);
+    let slow_sync =
+        run_quad(AlgoKind::RingAllReduce, 4, Some(sc.clone()), 13, 4_000);
+    let clean_async = run_quad(AlgoKind::RFast, 4, None, 13, 4_000);
+    let slow_async = run_quad(AlgoKind::RFast, 4, Some(sc), 13, 4_000);
+    let sync_ratio = slow_sync.1.virtual_time / clean_sync.1.virtual_time;
+    let async_ratio = slow_async.1.virtual_time / clean_async.1.virtual_time;
+    assert!(sync_ratio > 2.0, "sync should stall: {sync_ratio}");
+    assert!(async_ratio < 1.6, "async should shrug: {async_ratio}");
+}
+
+#[test]
+fn late_straggler_onset_only_bites_after_t() {
+    // run a sync algorithm (most straggler-sensitive) to a fixed iteration
+    // budget twice: the onset-at-T scenario must land strictly between
+    // clean and permanently-slow
+    let mut late = Scenario::named("late", "");
+    late.stragglers.push(rfast::scenario::StragglerSpec {
+        node: 1,
+        factor: 5.0,
+        schedule: rfast::scenario::StragglerSchedule::FromTime { at: 15.0 },
+    });
+    let clean = run_quad(AlgoKind::RingAllReduce, 4, None, 21, 4_000);
+    let perm = run_quad(AlgoKind::RingAllReduce, 4,
+                        Some(Scenario::single_straggler(1, 5.0)), 21, 4_000);
+    let lately = run_quad(AlgoKind::RingAllReduce, 4, Some(late), 21, 4_000);
+    assert!(
+        clean.1.virtual_time < lately.1.virtual_time
+            && lately.1.virtual_time < perm.1.virtual_time,
+        "onset ordering: clean {} < late {} < permanent {}",
+        clean.1.virtual_time, lately.1.virtual_time, perm.1.virtual_time
+    );
+}
+
+#[test]
+fn churn_pauses_reduce_a_nodes_share_but_not_convergence() {
+    // pause node 1 repeatedly: R-FAST keeps converging (asynchrony), and
+    // total progress still reaches the iteration budget
+    let mut sc = Scenario::named("test_churn", "");
+    for k in 0..20 {
+        let t0 = 5.0 + 10.0 * k as f64;
+        sc.churn.push(rfast::scenario::ChurnEvent {
+            node: 1,
+            pause_at: t0,
+            resume_at: t0 + 5.0,
+        });
+    }
+    let (gap, stats) = run_quad(AlgoKind::RFast, 4, Some(sc), 31, 30_000);
+    assert_eq!(stats.grad_wakes, 30_000);
+    assert!(gap < 5e-2, "R-FAST gap under churn: {gap}");
+}
+
+#[test]
+fn bandwidth_caps_congest_links() {
+    // the cap delays delivery, which delays the ack, which keeps the
+    // one-unacked-packet channel busy across whole compute steps: the
+    // sender-side backpressure counter must climb well above the clean
+    // run's jitter-tail level (async wake cadence itself is unchanged —
+    // compute, not links, drives the event clock)
+    let mut sc = Scenario::named("tight_bw", "");
+    sc.bandwidth.push(rfast::scenario::BandwidthCap {
+        from: None,
+        to: None,
+        bytes_per_sec: 2.0 * 1024.0, // 2 KiB/s: a 32-byte payload ≈ 16 ms
+    });
+    let free = run_quad(AlgoKind::RFast, 4, None, 17, 3_000);
+    let capped = run_quad(AlgoKind::RFast, 4, Some(sc), 17, 3_000);
+    assert!(
+        capped.1.msgs_backpressured > free.1.msgs_backpressured * 2 + 100,
+        "cap must congest the ack channel: {} vs {}",
+        capped.1.msgs_backpressured, free.1.msgs_backpressured
+    );
+    assert!(capped.1.msgs_delivered > 0);
+}
+
+#[test]
+fn scenario_node_bounds_checked_against_topology() {
+    let topo = Topology::ring(3);
+    let quad = QuadraticOracle::heterogeneous(4, 3, 0.5, 2.0, 1);
+    let mut cfg = fast_cfg(1);
+    cfg.scenario = Some(Scenario::single_straggler(7, 2.0)); // node 7 of 3
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        Simulator::new(cfg, &topo, AlgoKind::RFast, quad.into_set())
+    }));
+    assert!(result.is_err(), "out-of-range scenario node must be rejected");
+}

@@ -1,0 +1,106 @@
+//! Minimal, API-compatible shim of the `anyhow` crate (DESIGN.md §6).
+//!
+//! The offline build environment carries no registry, so the small slice
+//! of `anyhow` the runtime layer uses — [`Error`], [`Result`], the
+//! [`anyhow!`] macro and [`Context`] — is reimplemented here as a
+//! string-backed error. Swapping this path dependency for the real crate
+//! is a one-line change in `rust/Cargo.toml`; no call site changes.
+
+use std::fmt;
+
+/// String-backed error value (the shim keeps no cause chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable — the target of [`anyhow!`].
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// `anyhow!` — build an [`Error`] from a format string or any printable.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let owned = anyhow!(String::from("owned"));
+        assert_eq!(owned.to_string(), "owned");
+        let n = 3;
+        let fmt = anyhow!("n = {n} and {}", 4);
+        assert_eq!(fmt.to_string(), "n = 3 and 4");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: Result<()> = Err(Error::msg("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r2: std::result::Result<(), String> = Err("deep".into());
+        let e2 = r2.with_context(|| format!("lvl{}", 1)).unwrap_err();
+        assert_eq!(e2.to_string(), "lvl1: deep");
+    }
+
+    #[test]
+    fn question_mark_works() {
+        fn inner() -> Result<u32> {
+            Err(anyhow!("boom"))
+        }
+        fn outer() -> Result<u32> {
+            let v = inner()?;
+            Ok(v)
+        }
+        assert!(outer().is_err());
+    }
+}
