@@ -5,9 +5,12 @@
 //! quadratics where the exact optimality gap is measurable. Loss is
 //! injected through the declarative `scenario` layer; a final row runs a
 //! full named preset (default `lossy_30pct`, override with `--scenario`).
+//! `--engine threaded` reruns the sweep on the wall-clock thread-per-node
+//! runner (gap measured as ‖x̄ − x*‖ of the last evaluated mean).
 //!
 //!     cargo run --release --example packet_loss_robustness
 //!                                     [--scenario NAME|FILE.json]
+//!                                     [--engine sim|threaded]
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
@@ -15,13 +18,13 @@ use rfast::cli::Args;
 use rfast::graph::Topology;
 use rfast::metrics::Table;
 use rfast::oracle::{GradOracle, QuadraticOracle};
+use rfast::runner::{RunUntil, ThreadedRunner};
 use rfast::scenario::Scenario;
 use rfast::sim::{Simulator, StopRule};
+use rfast::testutil::{tracking_quad_eval, QuadFactory};
 
-fn gap(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
-    let topo = Topology::ring(6);
-    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
-    let cfg = SimConfig {
+fn cfg_for(seed: u64, scenario: &Scenario) -> SimConfig {
+    SimConfig {
         seed,
         gamma: 0.03,
         compute_mean: 0.01,
@@ -31,14 +34,40 @@ fn gap(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
         scenario: if scenario.is_empty() { None } else { Some(scenario.clone()) },
         eval_every: 5.0,
         ..SimConfig::default()
-    };
+    }
+}
+
+fn gap(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
+    let topo = Topology::ring(6);
+    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
+    let cfg = cfg_for(seed, scenario);
     let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
     let report = sim.run(StopRule::Iterations(60_000));
     report.final_gap.unwrap()
 }
 
-fn mean_gap(algo: AlgoKind, scenario: &Scenario) -> f64 {
-    (0..3).map(|s| gap(algo, scenario, 10 + s)).sum::<f64>() / 3.0
+/// Same comparison on the wall-clock runner: distance of the last
+/// evaluated mean model to the closed-form optimum.
+fn gap_threaded(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
+    let topo = Topology::ring(6);
+    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
+    let xs = quad.optimum();
+    let mut cfg = cfg_for(seed, scenario);
+    cfg.eval_every = 0.05;
+    let runner = ThreadedRunner::new(cfg, &topo, algo, vec![0.0; 16])
+        .with_pace(1e-4);
+    let (mut eval, last_mean) = tracking_quad_eval(quad.clone());
+    runner.run(&QuadFactory(quad), &mut eval, RunUntil::TotalSteps(15_000));
+    rfast::linalg::dist(&last_mean.lock().unwrap(), &xs)
+}
+
+fn mean_gap(engine: &str, algo: AlgoKind, scenario: &Scenario) -> f64 {
+    if engine == "threaded" {
+        // one seed: wall-clock runs are slower and not bitwise-repeatable
+        gap_threaded(algo, scenario, 10)
+    } else {
+        (0..3).map(|s| gap(algo, scenario, 10 + s)).sum::<f64>() / 3.0
+    }
 }
 
 fn main() {
@@ -46,8 +75,14 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
+    let engine = args.get_or("engine", "sim");
+    if engine != "sim" && engine != "threaded" {
+        eprintln!("error: unknown --engine {engine:?} (sim|threaded)");
+        std::process::exit(2);
+    }
     let mut table = Table::new(
-        "optimality gap vs packet-loss probability (6-node ring, quadratics)",
+        &format!("optimality gap vs packet-loss probability (6-node ring, \
+                  quadratics, engine: {engine})"),
         &["scenario", "R-FAST (robust ρ)", "naive GT", "OSGP"],
     );
     for loss_prob in [0.0, 0.1, 0.2, 0.3, 0.4] {
@@ -58,9 +93,9 @@ fn main() {
         };
         table.row(vec![
             format!("{:.0}% loss", loss_prob * 100.0),
-            format!("{:.3e}", mean_gap(AlgoKind::RFast, &sc)),
-            format!("{:.3e}", mean_gap(AlgoKind::RFastNaive, &sc)),
-            format!("{:.3e}", mean_gap(AlgoKind::Osgp, &sc)),
+            format!("{:.3e}", mean_gap(&engine, AlgoKind::RFast, &sc)),
+            format!("{:.3e}", mean_gap(&engine, AlgoKind::RFastNaive, &sc)),
+            format!("{:.3e}", mean_gap(&engine, AlgoKind::Osgp, &sc)),
         ]);
     }
     // one full named preset on top of the sweep (ramps/churn welcome)
@@ -71,9 +106,9 @@ fn main() {
     });
     table.row(vec![
         format!("preset: {}", sc.name),
-        format!("{:.3e}", mean_gap(AlgoKind::RFast, &sc)),
-        format!("{:.3e}", mean_gap(AlgoKind::RFastNaive, &sc)),
-        format!("{:.3e}", mean_gap(AlgoKind::Osgp, &sc)),
+        format!("{:.3e}", mean_gap(&engine, AlgoKind::RFast, &sc)),
+        format!("{:.3e}", mean_gap(&engine, AlgoKind::RFastNaive, &sc)),
+        format!("{:.3e}", mean_gap(&engine, AlgoKind::Osgp, &sc)),
     ]);
     table.print();
     println!("\nExpected shape: R-FAST's gap is loss-invariant (running sums \

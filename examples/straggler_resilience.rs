@@ -5,16 +5,21 @@
 //!
 //!     cargo run --release --example straggler_resilience [--nodes N]
 //!                                     [--factor F] [--scenario NAME|FILE]
+//!                                     [--engine sim|threaded]
 //!
 //! e.g. `--scenario late_straggler` (onset at t=60) or `--scenario churn`
 //! (pause/resume windows). Without `--scenario`, a permanent single
 //! straggler of `--factor` on node 1 is built, matching the paper.
+//! `--engine threaded` runs the same comparison on the wall-clock
+//! thread-per-node runner (real threads sleeping the straggler factor)
+//! instead of the virtual-time simulator.
 
 use rfast::algo::AlgoKind;
 use rfast::cli::Args;
-use rfast::exp::{run_sim_under, Workload};
+use rfast::exp::{run_sim_under, run_threaded_under, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
+use rfast::runner::RunUntil;
 use rfast::scenario::Scenario;
 use rfast::sim::StopRule;
 
@@ -35,12 +40,18 @@ fn main() {
         None => Scenario::single_straggler(1, factor),
     };
 
+    let engine = args.get_or("engine", "sim");
+    if engine != "sim" && engine != "threaded" {
+        eprintln!("error: unknown --engine {engine:?} (sim|threaded)");
+        std::process::exit(2);
+    }
     let algos = [AlgoKind::RFast, AlgoKind::RingAllReduce, AlgoKind::DPsgd,
                  AlgoKind::AdPsgd];
     let target = 0.15; // eval-loss target for "time-to-target"
 
     let mut table = Table::new(
-        &format!("straggler resilience ({n} nodes, scenario: {})",
+        &format!("straggler resilience ({n} nodes, engine: {engine}, \
+                  scenario: {})",
                  scenario.name),
         &["algorithm", "t→target clean (s)", "t→target faulty (s)",
           "slowdown", "grad wakes (faulty)"],
@@ -52,17 +63,30 @@ fn main() {
         for (k, sc) in [None, Some(&scenario)].into_iter().enumerate() {
             let mut cfg = Workload::LogReg.paper_config();
             cfg.seed = 3;
-            let report = run_sim_under(Workload::LogReg, algo, &topo, &cfg,
-                                       sc,
-                                       StopRule::TargetLoss {
-                                           loss: target,
-                                           max_time: 600.0,
-                                       });
-            time_to[k] = report.series["loss_vs_time"]
-                .time_to_reach(target)
-                .unwrap_or(f64::INFINITY);
+            let (series, steps) = if engine == "threaded" {
+                // wall clock: pace each local iteration at compute_mean so
+                // the cadence matches the simulator's calibration
+                cfg.eval_every = 0.25;
+                let (report, stats) = run_threaded_under(
+                    Workload::LogReg, algo, &topo, &cfg, sc,
+                    Some(cfg.compute_mean),
+                    RunUntil::TargetLoss { loss: target, max_seconds: 60.0 })
+                    .expect("threaded run");
+                (report.series["loss_vs_wall"].clone(),
+                 stats.steps_per_node.iter().sum::<u64>() as f64)
+            } else {
+                let report = run_sim_under(Workload::LogReg, algo, &topo,
+                                           &cfg, sc,
+                                           StopRule::TargetLoss {
+                                               loss: target,
+                                               max_time: 600.0,
+                                           });
+                (report.series["loss_vs_time"].clone(),
+                 report.scalars["grad_wakes"])
+            };
+            time_to[k] = series.time_to_reach(target).unwrap_or(f64::INFINITY);
             if sc.is_some() {
-                wakes = format!("{:.0}", report.scalars["grad_wakes"]);
+                wakes = format!("{steps:.0}");
             }
         }
         table.row(vec![

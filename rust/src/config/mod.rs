@@ -47,8 +47,9 @@ pub struct SimConfig {
     /// latency ramps, churn, bandwidth caps — [`crate::scenario`]). Layers
     /// on top of the scalar knobs above: the scenario's ramps override
     /// `loss_prob`/latency once their first phase starts, and its
-    /// straggler factors multiply with `straggler`. Simulator-only; the
-    /// threaded runner rejects configs that carry one.
+    /// straggler factors multiply with `straggler`. Drives both engines
+    /// through the shared [`crate::faults`] layer — virtual seconds in the
+    /// simulator, wall seconds since run start in the threaded runner.
     pub scenario: Option<Scenario>,
 }
 

@@ -7,7 +7,9 @@ use crate::algo::AlgoKind;
 use crate::config::SimConfig;
 use crate::graph::Topology;
 use crate::metrics::Report;
-use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, OracleSet};
+use crate::oracle::{GradOracle, LogRegFactory, LogRegOracle, MlpOracle,
+                    OracleFactory, OracleSet};
+use crate::runner::{RunUntil, RunnerStats, ThreadedRunner};
 use crate::scenario::Scenario;
 use crate::sim::{Simulator, StopRule};
 use std::path::Path;
@@ -98,6 +100,52 @@ pub fn run_sim_under(workload: Workload, algo: AlgoKind, topo: &Topology,
         report.label = format!("{} [{}]", report.label, sc.name);
     }
     report
+}
+
+/// Wall-clock counterpart of [`run_sim_under`]: the same workload,
+/// algorithm and scenario driven through the thread-per-node
+/// [`ThreadedRunner`] instead of the simulator. `pace` (seconds) bounds
+/// the minimum per-iteration duration — pass `Some(cfg.compute_mean)` to
+/// emulate the virtual-time cadence on the wall clock, or `None` when the
+/// oracle is naturally paced by real compute.
+///
+/// Currently supports [`Workload::LogReg`] with the pure-rust oracle; the
+/// MLP proxy lives in the PJRT artifacts and has its own wall-clock
+/// driver (`examples/e2e_transformer.rs`).
+pub fn run_threaded_under(
+    workload: Workload,
+    algo: AlgoKind,
+    topo: &Topology,
+    cfg: &SimConfig,
+    scenario: Option<&Scenario>,
+    pace: Option<f64>,
+    until: RunUntil,
+) -> Result<(Report, RunnerStats), String> {
+    let mut cfg = cfg.clone();
+    cfg.scenario = scenario.cloned();
+    match workload {
+        Workload::LogReg => {
+            let factory = LogRegFactory::paper_workload(
+                topo.n(), cfg.batch, cfg.skew_alpha, cfg.seed);
+            let x0 = workload.x0(factory.dim(), cfg.seed);
+            let mut runner = ThreadedRunner::new(cfg, topo, algo, x0);
+            if let Some(p) = pace {
+                runner = runner.with_pace(p);
+            }
+            let mut eval = factory.eval_fn();
+            let (mut report, stats) = runner.run(&factory, &mut eval, until);
+            if let Some(sc) = scenario {
+                report.label = format!("{} [{}]", report.label, sc.name);
+            }
+            Ok((report, stats))
+        }
+        Workload::Mlp => Err(
+            "the threaded engine drives the logreg workload with the \
+             pure-rust oracle; the MLP proxy needs the PJRT path \
+             (examples/e2e_transformer.rs)"
+                .into(),
+        ),
+    }
 }
 
 /// The six-algorithm comparison set of paper §VI-B (Figs 5/6, Table II).
@@ -229,6 +277,28 @@ mod tests {
         let clean = run_sim_under(Workload::LogReg, AlgoKind::RFast, &topo,
                                   &cfg, None, StopRule::VirtualTime(3.0));
         assert_eq!(clean.scalars["msgs_lost"], 0.0);
+    }
+
+    #[test]
+    fn threaded_run_end_to_end_with_scenario() {
+        let cfg = SimConfig {
+            eval_every: 0.05,
+            ..SimConfig::logreg_paper()
+        };
+        let topo = Topology::ring(3);
+        let sc = Scenario::by_name("lossy_30pct").unwrap();
+        let (report, stats) = run_threaded_under(
+            Workload::LogReg, AlgoKind::RFast, &topo, &cfg, Some(&sc),
+            Some(5e-4), RunUntil::WallSeconds(0.3))
+            .unwrap();
+        assert!(report.label.contains("lossy_30pct"), "{}", report.label);
+        assert!(stats.msgs_lost > 0, "loss ramp active in the runner");
+        assert!(stats.steps_per_node.iter().sum::<u64>() > 0);
+        // the MLP proxy is PJRT-only on this engine
+        assert!(run_threaded_under(Workload::Mlp, AlgoKind::RFast, &topo,
+                                   &cfg, None, None,
+                                   RunUntil::WallSeconds(0.1))
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Shared fault/link layer — the single home of the semantics both
+//! engines used to duplicate:
+//!
+//! * **link discipline** — per (directed link, message channel) at most
+//!   one unacked packet in flight (the paper's send-until-receipt
+//!   emulation, §VI ¶1), with sender-side Bernoulli loss for the
+//!   loss-tolerant algorithms; the check order (backpressure, then loss
+//!   draw, then channel acquisition) is fixed here so counters and RNG
+//!   streams mean the same thing in both engines;
+//! * **fault queries** — the scalar `SimConfig` knobs (`straggler`,
+//!   `loss_prob`, `link_latency`) composed with the declarative
+//!   [`Scenario`](crate::scenario::Scenario) hooks (straggler schedules,
+//!   loss/latency ramps, churn windows, bandwidth caps) behind one
+//!   [`FaultSpec`], every query a pure function of a time `t`;
+//! * **bandwidth pacing** — [`BwPacer`], the FIFO per-link transmission
+//!   queue that turns a byte rate into a real throughput bound.
+//!
+//! Time itself is abstracted by [`Clock`]: the simulator advances a
+//! [`VirtualClock`] from its event loop, the threaded runner reads a
+//! [`WallClock`] (seconds since the run started). Both time bases are
+//! "seconds since t = 0 of the run", so one scenario file means the same
+//! thing under either engine; how a computed delay is *applied* stays
+//! engine-specific — the simulator schedules an event at `t + d`, the
+//! runner sleeps `d` on the sending thread.
+
+use crate::algo::{Msg, MsgKind};
+use crate::config::SimConfig;
+use crate::prng::Rng;
+use crate::scenario::Scenario;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Engine time base: seconds since the start of the run.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Virtual time, advanced explicitly by the simulator's event loop.
+/// Single-threaded by construction (`Cell`).
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { t: Cell::new(0.0) }
+    }
+
+    /// Set the current virtual time (called once per popped event).
+    pub fn advance_to(&self, t: f64) {
+        self.t.set(t);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t.get()
+    }
+}
+
+/// Wall time since [`WallClock::start_now`]; `Copy`, so every worker
+/// thread carries the same epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn start_now() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// One busy-flag per (directed link, channel) slot. The simulator uses
+/// the single-threaded [`LocalLinks`]; the runner shares [`SharedLinks`]
+/// across worker threads.
+pub trait LinkSlots: Sized {
+    fn with_slots(slots: usize) -> Self;
+    fn busy(&self, i: usize) -> bool;
+    fn acquire(&self, i: usize);
+    fn release(&self, i: usize);
+}
+
+/// `Cell`-backed slots — single-threaded engines.
+pub struct LocalLinks {
+    slots: Vec<Cell<bool>>,
+}
+
+impl LinkSlots for LocalLinks {
+    fn with_slots(slots: usize) -> LocalLinks {
+        LocalLinks { slots: (0..slots).map(|_| Cell::new(false)).collect() }
+    }
+    fn busy(&self, i: usize) -> bool {
+        self.slots[i].get()
+    }
+    fn acquire(&self, i: usize) {
+        self.slots[i].set(true);
+    }
+    fn release(&self, i: usize) {
+        self.slots[i].set(false);
+    }
+}
+
+/// Atomic slots — the runner's worker threads share them through `Arc`.
+pub struct SharedLinks {
+    slots: Vec<AtomicBool>,
+}
+
+impl LinkSlots for SharedLinks {
+    fn with_slots(slots: usize) -> SharedLinks {
+        SharedLinks { slots: (0..slots).map(|_| AtomicBool::new(false)).collect() }
+    }
+    fn busy(&self, i: usize) -> bool {
+        self.slots[i].load(Ordering::Acquire)
+    }
+    fn acquire(&self, i: usize) {
+        self.slots[i].store(true, Ordering::Release);
+    }
+    fn release(&self, i: usize) {
+        self.slots[i].store(false, Ordering::Release);
+    }
+}
+
+/// The scalar fault knobs of a [`SimConfig`] composed with its optional
+/// [`Scenario`]. Every query is a pure function of `t` (seconds since
+/// run start, either time base), so consulting it never perturbs engine
+/// determinism.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub scenario: Option<Scenario>,
+    /// `SimConfig::loss_prob` — applies until a loss-ramp phase starts.
+    pub base_loss: f64,
+    /// `SimConfig::straggler` — multiplies with scenario schedules.
+    pub straggler: Option<(usize, f64)>,
+    /// `SimConfig::link_latency` — the mean the latency ramp scales, and
+    /// the unit of the wall-clock injected delay.
+    pub link_latency: f64,
+}
+
+impl FaultSpec {
+    pub fn from_config(cfg: &SimConfig) -> FaultSpec {
+        FaultSpec {
+            scenario: cfg.scenario.clone(),
+            base_loss: cfg.loss_prob,
+            straggler: cfg.straggler,
+            link_latency: cfg.link_latency,
+        }
+    }
+
+    /// Compute-time multiplier for `node` at `t`: the scalar straggler
+    /// knob times the product of active scenario schedules.
+    pub fn compute_factor(&self, node: usize, t: f64) -> f64 {
+        let scalar = match self.straggler {
+            Some((s, f)) if s == node => f,
+            _ => 1.0,
+        };
+        let scheduled = self
+            .scenario
+            .as_ref()
+            .map_or(1.0, |sc| sc.compute_factor(node, t));
+        scalar * scheduled
+    }
+
+    /// Effective Bernoulli drop probability at `t` (the loss ramp
+    /// overrides the scalar knob from its first phase on).
+    pub fn loss_prob(&self, t: f64) -> f64 {
+        match &self.scenario {
+            Some(sc) => sc.loss_prob(self.base_loss, t),
+            None => self.base_loss,
+        }
+    }
+
+    /// Multiplier on the mean link latency at `t` (1.0 when clean).
+    pub fn latency_multiplier(&self, t: f64) -> f64 {
+        self.scenario.as_ref().map_or(1.0, |sc| sc.latency_multiplier(t))
+    }
+
+    /// Extra one-way delay the wall-clock engine injects per message:
+    /// `(multiplier − 1) × link_latency`, never negative. The simulator
+    /// instead scales its lognormal latency draw by the multiplier — the
+    /// runner's baseline latency is whatever the real channel costs, so
+    /// only the *excess* over the configured mean is injected.
+    pub fn injected_latency(&self, t: f64) -> f64 {
+        (self.latency_multiplier(t) - 1.0).max(0.0) * self.link_latency
+    }
+
+    /// Is `node` inside a churn pause window at `t`? (A paused node
+    /// starts no new iteration; receipt and in-flight work continue.)
+    pub fn is_paused(&self, node: usize, t: f64) -> bool {
+        self.scenario.as_ref().is_some_and(|sc| sc.is_paused(node, t))
+    }
+
+    /// Latest `resume_at` over the windows pausing `node` at `t`.
+    pub fn next_resume(&self, node: usize, t: f64) -> Option<f64> {
+        self.scenario.as_ref().and_then(|sc| sc.next_resume(node, t))
+    }
+
+    /// Serialization seconds for `bytes` on `from → to` under the
+    /// tightest matching bandwidth cap (0 when uncapped).
+    pub fn bandwidth_delay(&self, from: usize, to: usize, bytes: f64) -> f64 {
+        self.scenario
+            .as_ref()
+            .map_or(0.0, |sc| sc.bandwidth_delay(from, to, bytes))
+    }
+
+    /// Payload size in bytes as the link layer charges it (f32 + f64
+    /// lanes).
+    pub fn payload_bytes(msg: &Msg) -> f64 {
+        (msg.payload.len() * 4 + msg.payload64.len() * 8) as f64
+    }
+}
+
+/// Outcome of one send attempt through the link layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendVerdict {
+    /// The message goes out (and, for lossy algorithms, now owns its
+    /// channel until the ack returns).
+    Deliver,
+    /// The channel still has an unacked packet — the sender withholds.
+    Backpressured,
+    /// The Bernoulli loss draw dropped it sender-side.
+    Lost,
+}
+
+/// The shared fault/link layer: a clock, the fault spec, and the
+/// one-unacked-packet channel slots, indexed identically in both engines.
+pub struct FaultLayer<C: Clock, L: LinkSlots> {
+    n: usize,
+    pub clock: C,
+    pub spec: FaultSpec,
+    links: L,
+}
+
+/// The simulator's instantiation (virtual time, single-threaded slots).
+pub type SimFaultLayer = FaultLayer<VirtualClock, LocalLinks>;
+/// The threaded runner's instantiation (wall time, atomic slots).
+pub type RunnerFaultLayer = FaultLayer<WallClock, SharedLinks>;
+
+impl<C: Clock, L: LinkSlots> FaultLayer<C, L> {
+    pub fn new(n: usize, clock: C, spec: FaultSpec) -> FaultLayer<C, L> {
+        FaultLayer {
+            n,
+            clock,
+            spec,
+            links: L::with_slots(n * n * MsgKind::CHANNELS),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    fn idx(&self, from: usize, to: usize, chan: usize) -> usize {
+        (from * self.n + to) * MsgKind::CHANNELS + chan
+    }
+
+    /// Decide one send. For loss-tolerant algorithms: backpressure if the
+    /// channel is busy, then the Bernoulli loss draw (consuming `rng`
+    /// only when the drop probability is positive), then acquire the
+    /// channel. Reliable algorithms always deliver.
+    pub fn send_verdict(&self, lossy: bool, msg: &Msg,
+                        rng: &mut Rng) -> SendVerdict {
+        if !lossy {
+            return SendVerdict::Deliver;
+        }
+        let i = self.idx(msg.from, msg.to, msg.kind.chan());
+        if self.links.busy(i) {
+            return SendVerdict::Backpressured;
+        }
+        let p = self.spec.loss_prob(self.clock.now());
+        if p > 0.0 && rng.chance(p) {
+            return SendVerdict::Lost;
+        }
+        self.links.acquire(i);
+        SendVerdict::Deliver
+    }
+
+    /// The receipt confirmation for channel `(from → to, chan)` arrived
+    /// back at the sender: the channel is free again.
+    pub fn ack(&self, from: usize, to: usize, chan: usize) {
+        self.links.release(self.idx(from, to, chan));
+    }
+}
+
+/// FIFO transmission queue per directed link: bandwidth-capped payloads
+/// serialize behind each other, so the configured byte rate is a real
+/// throughput bound (not just a fixed per-message delay) in either time
+/// base. Index with `from * n + to`.
+pub struct BwPacer {
+    free_at: Vec<f64>,
+}
+
+impl BwPacer {
+    pub fn new(links: usize) -> BwPacer {
+        BwPacer { free_at: vec![0.0; links] }
+    }
+
+    /// Completion time of a payload needing `delay` seconds of link time,
+    /// queued FIFO behind the link's previous transmissions.
+    pub fn sent_at(&mut self, link: usize, now: f64, delay: f64) -> f64 {
+        let start = self.free_at[link].max(now);
+        self.free_at[link] = start + delay;
+        self.free_at[link]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{BandwidthCap, ChurnEvent, Phase};
+
+    fn msg(from: usize, to: usize) -> Msg {
+        Msg::new(from, to, MsgKind::V, 0, vec![0.0; 4])
+    }
+
+    #[test]
+    fn clocks_report_their_time_base() {
+        let v = VirtualClock::new();
+        assert_eq!(v.now(), 0.0);
+        v.advance_to(12.5);
+        assert_eq!(v.now(), 12.5);
+        let w = WallClock::start_now();
+        let t0 = w.now();
+        assert!(t0 >= 0.0);
+        assert!(w.now() >= t0, "wall time is monotone");
+    }
+
+    #[test]
+    fn spec_composes_scalar_and_scenario_faults() {
+        let mut cfg = SimConfig::default();
+        cfg.straggler = Some((1, 4.0));
+        let mut sc = Scenario::single_straggler(1, 2.0);
+        sc.loss_ramp.push(Phase { from_time: 10.0, value: 0.5 });
+        sc.latency_ramp.push(Phase { from_time: 5.0, value: 3.0 });
+        sc.churn.push(ChurnEvent { node: 2, pause_at: 1.0, resume_at: 2.0 });
+        cfg.loss_prob = 0.1;
+        cfg.link_latency = 0.02;
+        cfg.scenario = Some(sc);
+        let spec = FaultSpec::from_config(&cfg);
+
+        // scalar straggler × scenario schedule
+        assert_eq!(spec.compute_factor(1, 0.0), 8.0);
+        assert_eq!(spec.compute_factor(0, 0.0), 1.0);
+        // loss ramp overrides the scalar knob from its first phase on
+        assert_eq!(spec.loss_prob(0.0), 0.1);
+        assert_eq!(spec.loss_prob(10.0), 0.5);
+        // latency ramp → injected wall delay is the excess over the mean
+        assert_eq!(spec.injected_latency(0.0), 0.0);
+        assert!((spec.injected_latency(5.0) - 0.04).abs() < 1e-12);
+        // churn
+        assert!(spec.is_paused(2, 1.5));
+        assert_eq!(spec.next_resume(2, 1.5), Some(2.0));
+        assert!(!spec.is_paused(2, 2.0));
+    }
+
+    #[test]
+    fn verdict_order_backpressure_before_loss() {
+        let mut cfg = SimConfig::default();
+        cfg.loss_prob = 0.5;
+        let spec = FaultSpec::from_config(&cfg);
+        let layer: FaultLayer<VirtualClock, LocalLinks> =
+            FaultLayer::new(3, VirtualClock::new(), spec);
+        let mut rng = Rng::new(7);
+        // send until one delivery occupies the channel (p(all 64 drawn
+        // lost) = 2^-64: the loop observes both Lost and Deliver verdicts
+        // while the channel is free, never Backpressured)
+        let m = msg(0, 1);
+        let mut got_deliver = false;
+        for _ in 0..64 {
+            match layer.send_verdict(true, &m, &mut rng) {
+                SendVerdict::Deliver => {
+                    got_deliver = true;
+                    break;
+                }
+                SendVerdict::Lost => {}
+                SendVerdict::Backpressured => {
+                    panic!("channel was free; backpressure impossible")
+                }
+            }
+        }
+        assert!(got_deliver, "p = 0.5 must deliver within 64 tries");
+        // now the channel is busy: verdict must be backpressure, and the
+        // rng must NOT be consumed by the rejected sends
+        let snapshot = rng.clone();
+        assert_eq!(layer.send_verdict(true, &m, &mut rng),
+                   SendVerdict::Backpressured);
+        assert_eq!(layer.send_verdict(true, &m, &mut rng),
+                   SendVerdict::Backpressured);
+        let mut probe = snapshot;
+        assert_eq!(probe.next_u64(), rng.clone().next_u64(),
+                   "backpressured sends must not advance the loss rng");
+        // ack frees exactly this channel
+        layer.ack(0, 1, m.kind.chan());
+        assert_ne!(layer.send_verdict(true, &m, &mut rng),
+                   SendVerdict::Backpressured);
+    }
+
+    #[test]
+    fn reliable_algorithms_bypass_the_link_discipline() {
+        let spec = FaultSpec::from_config(&SimConfig::default());
+        let layer: FaultLayer<VirtualClock, LocalLinks> =
+            FaultLayer::new(2, VirtualClock::new(), spec);
+        let mut rng = Rng::new(1);
+        for _ in 0..4 {
+            assert_eq!(layer.send_verdict(false, &msg(0, 1), &mut rng),
+                       SendVerdict::Deliver);
+        }
+    }
+
+    #[test]
+    fn distinct_channels_do_not_collide() {
+        let spec = FaultSpec::from_config(&SimConfig::default());
+        let layer: FaultLayer<VirtualClock, LocalLinks> =
+            FaultLayer::new(2, VirtualClock::new(), spec);
+        let mut rng = Rng::new(2);
+        let v = msg(0, 1); // chan 0
+        let rho = Msg::new64(0, 1, MsgKind::Rho, 0, vec![0.0; 4]); // chan 1
+        assert_eq!(layer.send_verdict(true, &v, &mut rng), SendVerdict::Deliver);
+        // same link, different kind: its own socket
+        assert_eq!(layer.send_verdict(true, &rho, &mut rng),
+                   SendVerdict::Deliver);
+        // reverse direction unaffected
+        assert_eq!(layer.send_verdict(true, &msg(1, 0), &mut rng),
+                   SendVerdict::Deliver);
+        // but the v channel itself is now busy
+        assert_eq!(layer.send_verdict(true, &v, &mut rng),
+                   SendVerdict::Backpressured);
+    }
+
+    #[test]
+    fn bw_pacer_serializes_fifo() {
+        let mut bw = BwPacer::new(4);
+        // two back-to-back 1-second payloads on link 0 queue up
+        assert_eq!(bw.sent_at(0, 0.0, 1.0), 1.0);
+        assert_eq!(bw.sent_at(0, 0.0, 1.0), 2.0);
+        // a later send after the queue drained starts fresh
+        assert_eq!(bw.sent_at(0, 5.0, 1.0), 6.0);
+        // other links are independent
+        assert_eq!(bw.sent_at(1, 0.0, 0.5), 0.5);
+    }
+
+    #[test]
+    fn bandwidth_delay_through_spec() {
+        let mut cfg = SimConfig::default();
+        let mut sc = Scenario::named("bw", "");
+        sc.bandwidth.push(BandwidthCap {
+            from: None,
+            to: None,
+            bytes_per_sec: 100.0,
+        });
+        cfg.scenario = Some(sc);
+        let spec = FaultSpec::from_config(&cfg);
+        let m = msg(0, 1); // 4 f32 = 16 bytes
+        assert!((spec.bandwidth_delay(0, 1, FaultSpec::payload_bytes(&m))
+                 - 0.16)
+                    .abs()
+                < 1e-12);
+        assert_eq!(FaultSpec::payload_bytes(
+                       &Msg::new64(0, 1, MsgKind::Rho, 0, vec![0.0; 2])),
+                   16.0);
+    }
+}

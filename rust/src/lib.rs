@@ -11,10 +11,14 @@
 //!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven.
 //! * [`sim`] — deterministic discrete-event simulator: per-node compute
 //!   times, stragglers, link latency, packet loss with send-until-ack.
-//! * [`scenario`] — declarative fault injection over the simulator:
+//! * [`scenario`] — declarative fault injection over both engines:
 //!   straggler schedules, loss/latency ramps, churn, bandwidth caps,
 //!   composed into named presets (`paper_fig6_straggler`, `lossy_30pct`,
 //!   ...) or loaded from JSON.
+//! * [`faults`] — the shared fault/link layer both engines drive: the
+//!   one-unacked-packet channel discipline, scalar+scenario fault
+//!   queries, and the [`Clock`](faults::Clock) abstraction mapping
+//!   virtual seconds to wall seconds.
 //! * [`runner`] — real thread-per-node asynchronous engine (wall clock).
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`)
 //!   produced by `python/compile/aot.py`; python is never on this path.
@@ -68,6 +72,7 @@ pub mod cli;
 pub mod config;
 pub mod data;
 pub mod exp;
+pub mod faults;
 pub mod graph;
 pub mod jsonio;
 pub mod linalg;

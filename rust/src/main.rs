@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! repro train   --algo rfast --topology ring --nodes 8 --model logreg
-//!               [--scenario NAME|FILE.json] [--gamma G] [--seed S]
-//!               [--straggler NODE:FACTOR] [--loss-prob P] [--skew ALPHA]
+//!               [--engine sim|threaded] [--scenario NAME|FILE.json]
+//!               [--gamma G] [--seed S] [--straggler NODE:FACTOR]
+//!               [--loss-prob P] [--skew ALPHA] [--pace SECONDS]
 //!               [--time T | --iters K] [--oracle pjrt|rust]
 //!               [--out runs/NAME]
 //! repro scenarios [--export DIR]       # list / export the fault presets
@@ -21,9 +22,11 @@ use rfast::algo::AlgoKind;
 use rfast::cli::Args;
 use rfast::config::SimConfig;
 use rfast::data::{Dataset, Partition};
+use rfast::exp;
 use rfast::graph::TopologyKind;
 use rfast::metrics::Table;
 use rfast::oracle::{GradOracle, LogRegOracle};
+use rfast::runner::RunUntil;
 use rfast::runtime::{self, Manifest, PjrtTask};
 use rfast::scenario::Scenario;
 use rfast::sim::{Simulator, StopRule};
@@ -73,7 +76,7 @@ fn print_help() {
     println!(
         "repro — R-FAST reproduction launcher\n\n\
          subcommands:\n  \
-         train            run one training experiment in the virtual-time simulator\n  \
+         train            run one training experiment (virtual-time simulator or\n                          wall-clock threaded runner; see --engine)\n  \
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
@@ -84,13 +87,15 @@ fn print_help() {
          --topology NAME    binary_tree|line|ring|exponential|mesh|star|gossip\n  \
          --nodes N          node count (default 8)\n  \
          --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
+         --engine E         sim (virtual time, default) | threaded\n                          (thread-per-node, wall clock; logreg + rust oracle)\n  \
          --oracle KIND      rust|pjrt (default rust; pjrt needs `make artifacts`)\n  \
-         --scenario S       fault preset name or scenario .json path\n                          (see `repro scenarios`)\n  \
+         --scenario S       fault preset name or scenario .json path; drives\n                          either engine (see `repro scenarios`)\n  \
          --gamma G          step size\n  --seed S\n  \
          --straggler N:F    slow node N down by factor F\n  \
          --loss-prob P      packet loss probability (async algos)\n  \
          --skew A           label-skew heterogeneity in [0,1]\n  \
-         --time T           stop after T virtual seconds (default 300)\n  \
+         --pace S           threaded engine: min seconds per local iteration\n                          (default compute_mean; 0 disables)\n  \
+         --time T           stop after T virtual seconds (default 300; threaded:\n                          wall seconds, default 30)\n  \
          --iters K          stop after K total gradient steps\n  \
          --out PATH         write the JSON report here (default runs/train.json)"
     );
@@ -275,19 +280,48 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     cfg.validate()?;
 
     let topo = kind.build(n);
-    let stop = if let Some(iters) = args.get("iters") {
-        StopRule::Iterations(iters.parse().map_err(|_| "--iters")?)
-    } else {
-        StopRule::VirtualTime(args.parse_num("time", 300.0f64)?)
-    };
+    let engine = args.get_or("engine", "sim");
 
     println!(
-        "train: {} on {} ({} nodes), model={model} oracle={oracle_kind} γ={} seed={}",
+        "train: {} on {} ({} nodes), engine={engine} model={model} \
+         oracle={oracle_kind} γ={} seed={}",
         algo.name(), kind.name(), n, cfg.gamma, cfg.seed
     );
     if let Some(sc) = &cfg.scenario {
         println!("scenario: {} — {}", sc.name, sc.description);
     }
+
+    if engine == "threaded" {
+        if model != "logreg" || oracle_kind != "rust" {
+            return Err("--engine threaded drives --model logreg --oracle \
+                        rust; the PJRT wall-clock path is \
+                        examples/e2e_transformer.rs"
+                .into());
+        }
+        let until = if let Some(iters) = args.get("iters") {
+            RunUntil::TotalSteps(iters.parse().map_err(|_| "--iters")?)
+        } else {
+            RunUntil::WallSeconds(args.parse_num("time", 30.0f64)?)
+        };
+        // default pace = compute_mean: the wall-clock cadence matches the
+        // virtual-time calibration unless overridden (0 disables pacing)
+        let pace: f64 = args.parse_num("pace", cfg.compute_mean)?;
+        let scenario = cfg.scenario.take();
+        let (report, stats) = exp::run_threaded_under(
+            exp::Workload::LogReg, algo, &topo, &cfg, scenario.as_ref(),
+            (pace > 0.0).then_some(pace), until)?;
+        println!("steps/node: {:?}", stats.steps_per_node);
+        return save_and_print(&report, args, "loss_vs_wall");
+    }
+    if engine != "sim" {
+        return Err(format!("unknown --engine {engine:?} (sim|threaded)"));
+    }
+
+    let stop = if let Some(iters) = args.get("iters") {
+        StopRule::Iterations(iters.parse().map_err(|_| "--iters")?)
+    } else {
+        StopRule::VirtualTime(args.parse_num("time", 300.0f64)?)
+    };
 
     let report = match (model.as_str(), oracle_kind.as_str()) {
         ("logreg", "rust") => {
@@ -313,6 +347,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         (m, o) => return Err(format!("unsupported --model {m} / --oracle {o}")),
     };
 
+    save_and_print(&report, args, "loss_vs_time")
+}
+
+/// Persist the report JSON and print the result table (shared by both
+/// engines; `loss_series` is `loss_vs_time` or `loss_vs_wall`).
+fn save_and_print(report: &rfast::metrics::Report, args: &Args,
+                  loss_series: &str) -> Result<(), String> {
     let out = PathBuf::from(args.get_or("out", "runs/train.json"));
     let (dir, name) = (
         out.parent().unwrap_or(std::path::Path::new("runs")),
@@ -324,7 +365,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     for (k, v) in &report.scalars {
         t.row(vec![k.clone(), format!("{v:.4}")]);
     }
-    if let Some(s) = report.series.get("loss_vs_time") {
+    if let Some(s) = report.series.get(loss_series) {
         if let Some(y) = s.last_y() {
             t.row(vec!["final_eval_loss".into(), format!("{y:.5}")]);
         }

@@ -5,7 +5,7 @@
 //!   * cross-checking the PJRT path (integration test asserts the two
 //!     oracles agree to fp tolerance on identical batches).
 
-use super::{Eval, GradOracle, NodeOracle, OracleSet};
+use super::{Eval, GradOracle, NodeOracle, OracleFactory, OracleSet};
 use crate::data::{Batcher, Dataset, Partition};
 use std::sync::Arc;
 
@@ -71,6 +71,62 @@ impl GradOracle for LogRegOracle {
             dim: p,
             epoch_per_node_batch: epoch_frac,
         }
+    }
+}
+
+/// Thread-safe logreg factory for the wall-clock runner: per-node
+/// oracles share the dataset (`Arc`) and the shard plan, so the threaded
+/// engine trains the exact workload the simulator does.
+pub struct LogRegFactory {
+    pub train: Arc<Dataset>,
+    pub eval_set: Arc<Dataset>,
+    pub partition: Partition,
+    pub batch: usize,
+    pub l2: f32,
+    pub seed: u64,
+}
+
+impl LogRegFactory {
+    /// The paper's §VI-A workload (same data/partition derivation as
+    /// [`LogRegOracle::paper_workload`]).
+    pub fn paper_workload(n_nodes: usize, batch: usize, skew_alpha: f64,
+                          seed: u64) -> LogRegFactory {
+        let o = LogRegOracle::paper_workload(n_nodes, batch, skew_alpha, seed);
+        LogRegFactory {
+            train: o.train,
+            eval_set: o.eval_set,
+            partition: o.partition,
+            batch: o.batch,
+            l2: o.l2,
+            seed: o.seed,
+        }
+    }
+
+    /// Held-out evaluation closure for the coordinator thread.
+    pub fn eval_fn(&self) -> impl FnMut(&[f32]) -> Eval + 'static {
+        let eval_set = Arc::clone(&self.eval_set);
+        let l2 = self.l2;
+        move |x: &[f32]| eval_logreg(&eval_set, x, l2)
+    }
+}
+
+impl OracleFactory for LogRegFactory {
+    fn dim(&self) -> usize {
+        self.train.dim + 1
+    }
+
+    fn make(&self, node: usize) -> Box<dyn NodeOracle> {
+        Box::new(LogRegNode {
+            data: Arc::clone(&self.train),
+            batcher: Batcher::new(&self.partition.shards[node], self.batch,
+                                  self.seed ^ (0xb000 + node as u64)),
+            l2: self.l2,
+        })
+    }
+
+    fn epoch_per_node_batch(&self) -> f64 {
+        let total: usize = self.partition.shards.iter().map(|s| s.len()).sum();
+        self.batch as f64 / total as f64
     }
 }
 

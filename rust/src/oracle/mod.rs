@@ -17,7 +17,8 @@ mod logreg;
 mod mlp;
 mod quadratic;
 
-pub use logreg::{eval_logreg, logreg_loss_grad, LogRegNode, LogRegOracle};
+pub use logreg::{eval_logreg, logreg_loss_grad, LogRegFactory, LogRegNode,
+                 LogRegOracle};
 pub use mlp::{mlp_loss_grad_once, mlp_p, MlpNode, MlpOracle};
 pub use quadratic::{QuadraticNode, QuadraticOracle};
 
@@ -40,6 +41,14 @@ pub trait NodeOracle {
 pub trait OracleFactory: Send + Sync {
     fn dim(&self) -> usize;
     fn make(&self, node: usize) -> Box<dyn NodeOracle>;
+
+    /// Fraction of a global epoch consumed by one node-batch — the
+    /// factory twin of [`OracleSet::epoch_per_node_batch`]; it drives the
+    /// runner's epoch-indexed γ-decay schedule. Default 1.0 (one "epoch"
+    /// per deterministic step — quadratics).
+    fn epoch_per_node_batch(&self) -> f64 {
+        1.0
+    }
 }
 
 /// Evaluation snapshot on held-out data / the full objective.

@@ -9,25 +9,49 @@
 //! * every node thread loops: drain mailbox → if `ready`, run one local
 //!   iteration (for PJRT oracles the gradient is a real XLA execution on
 //!   this thread) → send messages;
-//! * links: sender-side Bernoulli drop + at-most-one-unacked-packet per
-//!   link, implemented with an atomic in-flight flag the receiver clears —
-//!   the same semantics the simulator models (loss only for loss-tolerant
+//! * links: the shared [`faults`](crate::faults) layer — sender-side
+//!   Bernoulli drop + at-most-one-unacked-packet per (link, channel),
+//!   with an atomic in-flight flag the receiver's ack clears — exactly
+//!   the semantics the simulator models (loss only for loss-tolerant
 //!   algorithms);
 //! * a straggler is emulated by sleeping `(factor−1)×` the measured step
 //!   time, exactly like the paper slows one GPU with extra load;
 //! * the coordinator thread snapshots per-node parameters, evaluates the
-//!   mean model periodically, and stops everyone at the deadline.
+//!   mean model periodically, applies the epoch-indexed γ-decay schedule,
+//!   and stops everyone at the deadline.
+//!
+//! Declarative [`Scenario`](crate::scenario::Scenario)s drive this engine
+//! too, through the same four hooks as the simulator, with virtual
+//! seconds read as wall seconds since the run started:
+//!
+//! * **straggler schedules** scale the per-iteration pacing factor;
+//! * **churn windows** stop a node from starting new iterations (it keeps
+//!   receiving — a stalled worker, not a crash);
+//! * **loss ramps** set the sender-side drop probability;
+//! * **latency ramps and bandwidth caps** pace the *sending thread*: the
+//!   injected excess latency and the FIFO serialization delay are slept
+//!   before the channel send, so delivery genuinely arrives later and a
+//!   capped link genuinely bounds throughput.
 
 use crate::algo::{AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
+use crate::faults::{BwPacer, Clock, FaultSpec, RunnerFaultLayer, SendVerdict,
+                    WallClock};
 use crate::graph::Topology;
 use crate::metrics::Report;
 use crate::oracle::{Eval, OracleFactory};
 use crate::prng::Rng;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Injected pacing sleeps are taken in chunks of at most this many
+/// seconds, re-checking the stop flag between chunks, so a worker
+/// notices a stop request promptly even under extreme scenario
+/// parameters while still sleeping the *full* delay (truncating would
+/// let a bandwidth-capped link transmit above its configured rate).
+const MAX_PACING_SLEEP: f64 = 0.05;
 
 /// Wall-clock stopping criteria.
 #[derive(Clone, Copy, Debug)]
@@ -48,17 +72,28 @@ pub struct RunnerStats {
     pub msgs_sent: u64,
     pub msgs_lost: u64,
     pub msgs_backpressured: u64,
+    /// Messages whose send was delayed by a scenario latency ramp or
+    /// bandwidth cap (the sender thread slept before the channel send).
+    pub msgs_paced: u64,
 }
 
 struct Shared {
     stop: AtomicBool,
-    /// in-flight flag per (directed link, message channel):
-    /// (from*n + to)*CHANNELS + chan
-    link_busy: Vec<AtomicBool>,
+    /// shared fault/link layer: wall clock + atomic per-(link, channel)
+    /// in-flight flags + scalar/scenario fault queries
+    faults: RunnerFaultLayer,
     total_steps: AtomicU64,
     msgs_sent: AtomicU64,
     msgs_lost: AtomicU64,
     msgs_backpressured: AtomicU64,
+    msgs_paced: AtomicU64,
+    /// current step size as f32 bits; the coordinator writes decays, the
+    /// workers pick them up at the top of their loop
+    gamma_bits: AtomicU32,
+    /// per-node rolling (sum, count) of minibatch losses between eval
+    /// ticks — per-node so the hot training loop never contends on a
+    /// shared lock (same pattern as `steps`/`snapshots`)
+    train_loss: Vec<Mutex<(f64, u64)>>,
     /// latest parameter snapshot per node (written post-wake)
     snapshots: Vec<Mutex<Vec<f32>>>,
     steps: Vec<AtomicU64>,
@@ -78,12 +113,12 @@ impl ThreadedRunner {
     pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                x0: Vec<f32>) -> ThreadedRunner {
         cfg.validate().expect("invalid SimConfig");
-        assert!(
-            cfg.scenario.is_none(),
-            "fault-injection scenarios drive the virtual-time simulator \
-             only; the threaded runner takes the scalar SimConfig knobs \
-             (wall-clock scenario support is a ROADMAP item)"
-        );
+        if let Some(sc) = &cfg.scenario {
+            // bound-check node indices against this topology, like the
+            // simulator does
+            sc.validate(Some(topo.n()))
+                .expect("invalid scenario for this topology");
+        }
         ThreadedRunner { cfg, algo, topo: topo.clone(), x0, pace: None }
     }
 
@@ -114,13 +149,15 @@ impl ThreadedRunner {
 
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
-            link_busy: (0..n * n * crate::algo::MsgKind::CHANNELS)
-                .map(|_| AtomicBool::new(false))
-                .collect(),
+            faults: RunnerFaultLayer::new(n, WallClock::start_now(),
+                                          FaultSpec::from_config(&self.cfg)),
             total_steps: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
             msgs_lost: AtomicU64::new(0),
             msgs_backpressured: AtomicU64::new(0),
+            msgs_paced: AtomicU64::new(0),
+            gamma_bits: AtomicU32::new(self.cfg.gamma.to_bits()),
+            train_loss: (0..n).map(|_| Mutex::new((0.0, 0))).collect(),
             snapshots: (0..n).map(|_| Mutex::new(self.x0.clone())).collect(),
             steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
         });
@@ -135,6 +172,7 @@ impl ThreadedRunner {
         }
 
         let start = Instant::now();
+        let epoch_per_batch = factory.epoch_per_node_batch();
         let mut report = Report::new(self.algo.name());
         let mut mean = vec![0.0f32; p];
         std::thread::scope(|scope| {
@@ -155,9 +193,10 @@ impl ThreadedRunner {
             }
             drop(senders);
 
-            // coordinator loop: evaluate + check stop condition
+            // coordinator loop: evaluate + γ-decay + check stop condition
             let eval_every =
                 Duration::from_secs_f64(self.cfg.eval_every.max(0.05));
+            let mut decay_steps: u32 = 0;
             loop {
                 std::thread::sleep(eval_every);
                 let elapsed = start.elapsed().as_secs_f64();
@@ -171,18 +210,44 @@ impl ThreadedRunner {
                         .series_mut("acc_vs_wall", "wall_seconds", "accuracy")
                         .push(elapsed, acc);
                 }
+                let total = shared.total_steps.load(Ordering::Relaxed);
                 report
                     .series_mut("steps_vs_wall", "wall_seconds", "total_steps")
-                    .push(elapsed,
-                          shared.total_steps.load(Ordering::Relaxed) as f64);
+                    .push(elapsed, total as f64);
+                // minibatch-loss series — the runner twin of the
+                // simulator's train_loss_vs_epoch, on the wall axis
+                {
+                    let (mut sum, mut count) = (0.0f64, 0u64);
+                    for slot in &shared.train_loss {
+                        let mut acc = slot.lock().unwrap();
+                        sum += acc.0;
+                        count += acc.1;
+                        *acc = (0.0, 0);
+                    }
+                    if count > 0 {
+                        report
+                            .series_mut("train_loss_vs_wall", "wall_seconds",
+                                        "train_loss")
+                            .push(elapsed, sum / count as f64);
+                    }
+                }
+                // γ-decay: the same epoch-indexed γ·factor^k schedule the
+                // simulator applies per wake, driven here by the global
+                // step counter (epoch ≈ total steps × epoch-per-batch)
+                if let Some((interval, factor)) = self.cfg.gamma_decay {
+                    let due = (total as f64 * epoch_per_batch / interval) as u32;
+                    if due > decay_steps {
+                        decay_steps = due;
+                        let g = self.cfg.gamma * factor.powi(due as i32);
+                        shared.gamma_bits.store(g.to_bits(), Ordering::Relaxed);
+                    }
+                }
                 let done = match until {
                     RunUntil::WallSeconds(s) => elapsed >= s,
                     RunUntil::TargetLoss { loss, max_seconds } => {
                         e.loss <= loss || elapsed >= max_seconds
                     }
-                    RunUntil::TotalSteps(k) => {
-                        shared.total_steps.load(Ordering::Relaxed) >= k
-                    }
+                    RunUntil::TotalSteps(k) => total >= k,
                 };
                 if done {
                     break;
@@ -209,12 +274,17 @@ impl ThreadedRunner {
             msgs_sent: shared.msgs_sent.load(Ordering::Relaxed),
             msgs_lost: shared.msgs_lost.load(Ordering::Relaxed),
             msgs_backpressured: shared.msgs_backpressured.load(Ordering::Relaxed),
+            msgs_paced: shared.msgs_paced.load(Ordering::Relaxed),
         };
+        let total_steps = stats.steps_per_node.iter().sum::<u64>();
         report.set_scalar("wall_seconds", stats.wall_seconds);
-        report.set_scalar("total_steps",
-                          stats.steps_per_node.iter().sum::<u64>() as f64);
+        report.set_scalar("total_steps", total_steps as f64);
+        report.set_scalar("epoch", total_steps as f64 * epoch_per_batch);
         report.set_scalar("msgs_sent", stats.msgs_sent as f64);
         report.set_scalar("msgs_lost", stats.msgs_lost as f64);
+        report.set_scalar("msgs_backpressured",
+                          stats.msgs_backpressured as f64);
+        report.set_scalar("msgs_paced", stats.msgs_paced as f64);
         report.set_scalar("final_loss", e.loss);
         if let Some(acc) = e.accuracy {
             report.set_scalar("final_accuracy", acc);
@@ -237,6 +307,97 @@ enum Envelope {
     Ack { from: usize, chan: usize },
 }
 
+/// Send every queued message through the shared link layer. Scenario
+/// link degradation paces the *sending thread*: the FIFO bandwidth
+/// serialization delay and the injected excess latency are slept before
+/// the channel send, so delivery is genuinely later on the wall clock.
+#[allow(clippy::too_many_arguments)]
+fn send_all(
+    node: &mut dyn NodeState,
+    msgs: &mut Vec<Msg>,
+    rng: &mut Rng,
+    bw: &mut BwPacer,
+    routes: &[Sender<Envelope>],
+    shared: &Shared,
+    lossy: bool,
+    n: usize,
+) {
+    for m in msgs.drain(..) {
+        shared.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        match shared.faults.send_verdict(lossy, &m, rng) {
+            SendVerdict::Backpressured => {
+                shared.msgs_backpressured.fetch_add(1, Ordering::Relaxed);
+                node.on_send_failed(m);
+                continue;
+            }
+            SendVerdict::Lost => {
+                shared.msgs_lost.fetch_add(1, Ordering::Relaxed);
+                node.on_send_failed(m);
+                continue;
+            }
+            SendVerdict::Deliver => {}
+        }
+        let now = shared.faults.clock.now();
+        let mut delay = shared.faults.spec.injected_latency(now);
+        let bw_delay = shared.faults.spec.bandwidth_delay(
+            m.from, m.to, FaultSpec::payload_bytes(&m));
+        if bw_delay > 0.0 {
+            // each directed link has exactly one sender (this thread), so
+            // the per-worker FIFO queue is the link's transmission queue
+            delay += bw.sent_at(m.from * n + m.to, now, bw_delay) - now;
+        }
+        if delay > 0.0 {
+            shared.msgs_paced.fetch_add(1, Ordering::Relaxed);
+            let mut remaining = delay;
+            while remaining > 0.0 && !shared.stop.load(Ordering::Relaxed) {
+                let chunk = remaining.min(MAX_PACING_SLEEP);
+                std::thread::sleep(Duration::from_secs_f64(chunk));
+                remaining -= chunk;
+            }
+        }
+        // receiver gone ⇒ shutting down; ignore
+        let _ = routes[m.to].send(Envelope::Data(m));
+    }
+}
+
+/// Deliver one envelope to this worker's node: data messages go to the
+/// algorithm (ack'd back for loss-tolerant ones, protocol replies routed
+/// out), acks free the channel this node holds toward the ack's sender.
+#[allow(clippy::too_many_arguments)]
+fn handle_envelope(
+    env: Envelope,
+    id: usize,
+    node: &mut dyn NodeState,
+    routes: &[Sender<Envelope>],
+    shared: &Shared,
+    outbox: &mut Vec<Msg>,
+    replies: &mut Vec<Msg>,
+    rng: &mut Rng,
+    bw: &mut BwPacer,
+    lossy: bool,
+    n: usize,
+) {
+    match env {
+        Envelope::Data(m) => {
+            let from = m.from;
+            let chan = m.kind.chan();
+            node.receive(m, replies);
+            if lossy {
+                // receipt confirmation back to the sender
+                let _ = routes[from].send(Envelope::Ack { from: id, chan });
+            }
+            if !replies.is_empty() {
+                outbox.append(replies);
+                send_all(node, outbox, rng, bw, routes, shared, lossy, n);
+            }
+        }
+        Envelope::Ack { from, chan } => {
+            // we are the original sender: channel (id → from) free
+            shared.faults.ack(id, from, chan);
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     id: usize,
@@ -253,76 +414,48 @@ fn worker_loop(
     let mut oracle = factory.make(id);
     let mut rng = Rng::stream(cfg.seed, 0x70_000 + id as u64);
     let lossy = algo.tolerates_loss();
-    let straggle_factor = match cfg.straggler {
-        Some((s, f)) if s == id => f,
-        _ => 1.0,
-    };
     let mut outbox: Vec<Msg> = Vec::new();
     let mut replies: Vec<Msg> = Vec::new();
-
-    let send_all = |node: &mut dyn NodeState, msgs: &mut Vec<Msg>,
-                    rng: &mut Rng| {
-        for m in msgs.drain(..) {
-            shared.msgs_sent.fetch_add(1, Ordering::Relaxed);
-            if lossy {
-                let link = &shared.link_busy
-                    [(m.from * n + m.to) * crate::algo::MsgKind::CHANNELS
-                     + m.kind.chan()];
-                if link.load(Ordering::Acquire) {
-                    shared.msgs_backpressured.fetch_add(1, Ordering::Relaxed);
-                    node.on_send_failed(m);
-                    continue;
-                }
-                if cfg.loss_prob > 0.0 && rng.chance(cfg.loss_prob) {
-                    shared.msgs_lost.fetch_add(1, Ordering::Relaxed);
-                    node.on_send_failed(m);
-                    continue;
-                }
-                link.store(true, Ordering::Release);
-            }
-            let to = m.to;
-            // receiver gone ⇒ shutting down; ignore
-            let _ = routes[to].send(Envelope::Data(m));
-        }
-    };
+    let mut bw = BwPacer::new(n * n);
+    let mut gamma_seen = shared.gamma_bits.load(Ordering::Relaxed);
 
     while !shared.stop.load(Ordering::Relaxed) {
-        // drain mailbox
-        loop {
-            match rx.try_recv() {
-                Ok(Envelope::Data(m)) => {
-                    let from = m.from;
-                    let chan = m.kind.chan();
-                    node.receive(m, &mut replies);
-                    if lossy {
-                        // receipt confirmation back to the sender
-                        let _ = routes[from]
-                            .send(Envelope::Ack { from: id, chan });
-                    }
-                    if !replies.is_empty() {
-                        outbox.append(&mut replies);
-                        send_all(node.as_mut(), &mut outbox, &mut rng);
-                    }
-                }
-                Ok(Envelope::Ack { from, chan }) => {
-                    // we are the original sender: channel (id → from) free
-                    shared.link_busy
-                        [(id * n + from) * crate::algo::MsgKind::CHANNELS + chan]
-                        .store(false, Ordering::Release);
-                }
-                Err(_) => break,
-            }
+        // pick up γ-decay steps pushed by the coordinator
+        let g = shared.gamma_bits.load(Ordering::Relaxed);
+        if g != gamma_seen {
+            gamma_seen = g;
+            node.set_gamma(f32::from_bits(g));
         }
 
-        if node.ready() {
+        // drain mailbox
+        while let Ok(env) = rx.try_recv() {
+            handle_envelope(env, id, node.as_mut(), &routes, &shared,
+                            &mut outbox, &mut replies, &mut rng, &mut bw,
+                            lossy, n);
+        }
+
+        let now = shared.faults.clock.now();
+        // scenario churn: a paused node starts no new iteration but keeps
+        // receiving below — a stalled worker, not a crashed one (same
+        // semantics as the simulator's pause windows)
+        let paused = shared.faults.spec.is_paused(id, now);
+
+        if !paused && node.ready() {
             let t0 = Instant::now();
             let computed = node.wake_computes_gradient();
-            node.wake(oracle.as_mut(), &mut outbox);
+            let loss = node.wake(oracle.as_mut(), &mut outbox);
             let step_time = t0.elapsed();
-            send_all(node.as_mut(), &mut outbox, &mut rng);
+            send_all(node.as_mut(), &mut outbox, &mut rng, &mut bw, &routes,
+                     &shared, lossy, n);
             if computed {
                 shared.steps[id].fetch_add(1, Ordering::Relaxed);
                 shared.total_steps.fetch_add(1, Ordering::Relaxed);
+                if let Some(l) = loss {
+                    // uncontended: this node's own accumulator
+                    let mut acc = shared.train_loss[id].lock().unwrap();
+                    acc.0 += l as f64;
+                    acc.1 += 1;
+                }
                 // snapshot for the coordinator
                 {
                     let mut guard = shared.snapshots[id].lock().unwrap();
@@ -331,33 +464,23 @@ fn worker_loop(
                 // pace + straggler emulation: the target duration of this
                 // iteration is max(real step, pace) × straggler factor —
                 // the paper slows one GPU by extra load, which scales its
-                // *whole* step time.
+                // *whole* step time. The factor is re-queried per step so
+                // scenario schedules (onset-at-T, intermittent) apply.
+                let factor = shared.faults.spec.compute_factor(id, now);
                 let base = pace.map_or(step_time, |min| step_time.max(min));
-                let target = base.mul_f64(straggle_factor);
+                let target = base.mul_f64(factor);
                 if target > step_time {
                     std::thread::sleep(target - step_time);
                 }
             }
         } else {
-            // blocked on a barrier: wait for mail (with a stop-check timeout)
+            // paused, or blocked on a barrier: wait for mail (with a
+            // stop-check timeout that also rechecks the pause window)
             match rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(Envelope::Data(m)) => {
-                    let from = m.from;
-                    let chan = m.kind.chan();
-                    node.receive(m, &mut replies);
-                    if lossy {
-                        let _ = routes[from]
-                            .send(Envelope::Ack { from: id, chan });
-                    }
-                    if !replies.is_empty() {
-                        outbox.append(&mut replies);
-                        send_all(node.as_mut(), &mut outbox, &mut rng);
-                    }
-                }
-                Ok(Envelope::Ack { from, chan }) => {
-                    shared.link_busy
-                        [(id * n + from) * crate::algo::MsgKind::CHANNELS + chan]
-                        .store(false, Ordering::Release);
+                Ok(env) => {
+                    handle_envelope(env, id, node.as_mut(), &routes, &shared,
+                                    &mut outbox, &mut replies, &mut rng,
+                                    &mut bw, lossy, n);
                 }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -372,25 +495,14 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::oracle::{GradOracle, NodeOracle, QuadraticOracle};
-
-    struct QuadFactory(QuadraticOracle);
-    impl OracleFactory for QuadFactory {
-        fn dim(&self) -> usize {
-            self.0.dim
-        }
-        fn make(&self, node: usize) -> Box<dyn NodeOracle> {
-            let mut set = self.0.clone().into_set();
-            set.nodes.remove(node)
-        }
-    }
+    use crate::oracle::QuadraticOracle;
+    use crate::testutil::{tracking_quad_eval, QuadFactory};
 
     #[test]
     fn threaded_rfast_converges_on_quadratic() {
         let q = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 21);
         let xs = q.optimum();
-        let q_eval = q.clone();
-        let factory = QuadFactory(q);
+        let f_star = q.global_loss(&xs);
         let topo = Topology::ring(4);
         let cfg = SimConfig {
             seed: 5,
@@ -402,35 +514,27 @@ mod tests {
         let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
                                          vec![0.0; 8])
             .with_pace(5e-5);
-        let mut eval = move |x: &[f32]| Eval {
-            loss: q_eval.global_loss(x),
-            accuracy: None,
-        };
+        // keep the last evaluated mean so the near-optimum claim can be
+        // checked in parameter space, not just through the loss
+        let (mut eval, last_mean) = tracking_quad_eval(q.clone());
         let (report, stats) =
-            runner.run(&factory, &mut eval, RunUntil::TotalSteps(60_000));
+            runner.run(&QuadFactory(q), &mut eval,
+                       RunUntil::TotalSteps(60_000));
         assert!(stats.steps_per_node.iter().all(|&s| s > 100),
                 "{:?}", stats.steps_per_node);
         let last = report.series["loss_vs_wall"].last_y().unwrap();
         let first = report.series["loss_vs_wall"].points[0].1;
         assert!(last < first, "{first} → {last}");
-        // mean model near optimum
-        let mut mean = vec![0.0f32; 8];
-        // recompute from report scalar: use final loss proxy instead
-        let _ = &mut mean;
-        let f_star = {
-            let q2 = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 21);
-            let o = q2.optimum();
-            q2.global_loss(&o)
-        };
+        // mean model near optimum: loss within a margin of f*, iterate
+        // within a ball around x*
         assert!(last < f_star + 0.5, "final loss {last} vs f* {f_star}");
-        let _ = xs;
+        let d = crate::linalg::dist(&last_mean.lock().unwrap(), &xs);
+        assert!(d < 0.5, "‖x̄ − x*‖ = {d}");
     }
 
     #[test]
     fn threaded_sync_allreduce_no_deadlock() {
         let q = QuadraticOracle::heterogeneous(6, 3, 0.5, 2.0, 33);
-        let q_eval = q.clone();
-        let factory = QuadFactory(q);
         let topo = Topology::ring(3);
         let cfg = SimConfig {
             seed: 6,
@@ -441,12 +545,9 @@ mod tests {
         };
         let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RingAllReduce,
                                          vec![0.0; 6]);
-        let mut eval = move |x: &[f32]| Eval {
-            loss: q_eval.global_loss(x),
-            accuracy: None,
-        };
+        let (mut eval, _) = tracking_quad_eval(q.clone());
         let (_, stats) =
-            runner.run(&factory, &mut eval, RunUntil::TotalSteps(300));
+            runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(300));
         assert!(stats.steps_per_node.iter().sum::<u64>() >= 300);
         // lock-step: per-node counts within one round of each other
         let min = *stats.steps_per_node.iter().min().unwrap();
@@ -457,8 +558,6 @@ mod tests {
     #[test]
     fn packet_loss_counters_active() {
         let q = QuadraticOracle::heterogeneous(4, 3, 0.5, 2.0, 41);
-        let q_eval = q.clone();
-        let factory = QuadFactory(q);
         let topo = Topology::ring(3);
         let mut cfg = SimConfig {
             seed: 7,
@@ -471,12 +570,9 @@ mod tests {
         let runner =
             ThreadedRunner::new(cfg, &topo, AlgoKind::RFast, vec![0.0; 4])
                 .with_pace(1e-4);
-        let mut eval = move |x: &[f32]| Eval {
-            loss: q_eval.global_loss(x),
-            accuracy: None,
-        };
+        let (mut eval, _) = tracking_quad_eval(q.clone());
         let (_, stats) =
-            runner.run(&factory, &mut eval, RunUntil::TotalSteps(5_000));
+            runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(5_000));
         assert!(stats.msgs_lost > 0);
     }
 }

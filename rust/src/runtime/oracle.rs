@@ -348,6 +348,30 @@ impl OracleFactory for PjrtFactory {
         self.dim
     }
 
+    /// Same epoch accounting as [`build_set`] (batch / total samples for
+    /// the supervised tasks, tokens-per-step / 1M for the LM), read off
+    /// the manifest so no engine compile is needed.
+    fn epoch_per_node_batch(&self) -> f64 {
+        let Ok(info) = self.manifest.artifact(&self.task.grad_artifact())
+        else {
+            return 1.0;
+        };
+        match &self.task {
+            PjrtTask::LogReg { partition, .. }
+            | PjrtTask::Mlp { partition, .. } => {
+                let batch = info.inputs[1].shape[0];
+                let total: usize =
+                    partition.shards.iter().map(|s| s.len()).sum();
+                batch as f64 / total.max(1) as f64
+            }
+            PjrtTask::Transformer { .. } => {
+                let batch = info.inputs[1].shape[0];
+                let spo = info.inputs[1].shape[1];
+                (batch * spo) as f64 / 1e6
+            }
+        }
+    }
+
     fn make(&self, node: usize) -> Box<dyn NodeOracle> {
         // Build a 1-node set on THIS thread and take its only oracle: the
         // engine is compiled here, inside the worker.

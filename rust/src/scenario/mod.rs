@@ -1,10 +1,11 @@
-//! Declarative fault-injection scenarios for the simulator.
+//! Declarative fault-injection scenarios for both engines.
 //!
 //! The paper's robustness claims (§VI) are statements about *fault
 //! regimes* — stragglers, latency, packet loss — that the seed encoded as
 //! scattered [`SimConfig`](crate::config::SimConfig) scalars. A
 //! [`Scenario`] composes those regimes from first-class primitives and is
-//! the single object the simulator consults on every event:
+//! the single object the engines consult (through the shared
+//! [`faults`](crate::faults) layer) on every event:
 //!
 //! * **straggler schedules** — per-node compute slowdowns that are
 //!   permanent, switch on at a time `T`, or cycle on/off
@@ -21,17 +22,21 @@
 //!   simulator serializes capped payloads FIFO per directed link, so the
 //!   rate is a real throughput bound, not just a fixed delay.
 //!
-//! Every query is a pure function of virtual time, so a run under a
-//! scenario is exactly as deterministic as a clean run: same seed + same
-//! scenario ⇒ identical [`SimStats`](crate::sim::SimStats).
+//! Every query is a pure function of a time `t` and carries no time base
+//! of its own: the simulator passes virtual seconds, the threaded runner
+//! passes wall seconds since the run started (the [`Clock`]
+//! mapping — see [`faults`](crate::faults)). Under the simulator a run
+//! with a scenario is exactly as deterministic as a clean run: same seed
+//! + same scenario ⇒ identical [`SimStats`](crate::sim::SimStats).
 //!
 //! Scenarios round-trip through the in-repo [`jsonio`](crate::jsonio)
 //! (`Scenario::to_json` / `Scenario::from_json`), load from `.json` files,
 //! and ship as named presets ([`Scenario::by_name`]) that make the
 //! paper's §VI regimes one-line: `paper_fig5`, `paper_fig6_straggler`,
-//! `lossy_30pct`, `late_straggler`, `degrading_network`, `churn`.
-//! Scenarios currently drive the virtual-time simulator only; the
-//! wall-clock runner still uses the base `SimConfig` scalars.
+//! `lossy_30pct`, `late_straggler`, `degrading_network`, `churn` — each
+//! runnable under `--engine sim` or `--engine threaded`.
+//!
+//! [`Clock`]: crate::faults::Clock
 
 use crate::jsonio::{self, Json};
 use std::path::Path;

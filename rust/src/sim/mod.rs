@@ -18,10 +18,13 @@
 //! * ties in virtual time break on a monotone sequence number — the run is
 //!   a pure function of (config, topology, algorithm, oracle seeds).
 //!
-//! Fault injection beyond the scalar knobs goes through the declarative
-//! [`Scenario`](crate::scenario::Scenario) in `SimConfig::scenario`. The
-//! scenario is consulted at exactly four points, each a pure function of
-//! virtual time (so both invariants above survive):
+//! Link discipline and fault queries are the shared
+//! [`faults`](crate::faults) layer (the threaded runner drives the same
+//! code against a wall clock). Fault injection beyond the scalar knobs
+//! goes through the declarative [`Scenario`](crate::scenario::Scenario)
+//! in `SimConfig::scenario`. The scenario is consulted at exactly four
+//! points, each a pure function of virtual time (so both invariants
+//! above survive):
 //! * start-of-iteration time: churn — a paused node starts no new
 //!   iteration and a `Resume` event re-examines it when the window ends;
 //! * compute-cost time: straggler schedules multiply the drawn cost;
@@ -33,6 +36,8 @@
 
 use crate::algo::{mean_param, AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
+use crate::faults::{BwPacer, FaultSpec, SendVerdict, SimFaultLayer,
+                    VirtualClock};
 use crate::graph::Topology;
 use crate::metrics::Report;
 use crate::oracle::OracleSet;
@@ -80,9 +85,16 @@ enum Event {
     Resume(usize),
 }
 
-/// Min-heap key: (time, seq) — deterministic tie-break.
-#[derive(PartialEq)]
+/// Min-heap key: (time, seq) — deterministic tie-break. Times are
+/// compared with `f64::total_cmp` so the ordering is total even for the
+/// values `push_event` debug-rejects (a NaN event time must fail loudly
+/// in tests, not silently scramble the heap).
 struct Key(f64, u64);
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
 impl Eq for Key {}
 impl PartialOrd for Key {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
@@ -91,10 +103,7 @@ impl PartialOrd for Key {
 }
 impl Ord for Key {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .partial_cmp(&other.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.1.cmp(&other.1))
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
     }
 }
 
@@ -109,16 +118,16 @@ pub struct Simulator {
     heap: BinaryHeap<Reverse<(Key, usize)>>, // (key, event idx)
     events: Vec<Option<Event>>,
     busy: Vec<bool>,
-    /// per (ordered pair, message channel): unacked packet in flight?
-    /// index = (from*n + to)*CHANNELS + kind.chan()
-    link_busy: Vec<bool>,
+    /// shared fault/link layer (virtual clock + one-unacked-packet
+    /// channel slots + scalar/scenario fault queries); `faults.clock`
+    /// mirrors `self.time` and is advanced at every event pop
+    faults: SimFaultLayer,
     pace_rng: Vec<Rng>,
     link_rng: Rng,
     /// one pending `Resume` event per paused node at most
     resume_scheduled: Vec<bool>,
-    /// per directed link (from*n + to): time the link finishes serializing
-    /// its last bandwidth-capped payload (FIFO transmission queue)
-    bw_free_at: Vec<f64>,
+    /// FIFO transmission queue per directed link (bandwidth caps)
+    bw: BwPacer,
     stats: SimStats,
     mean_buf: Vec<f32>,
     epoch: f64,
@@ -149,6 +158,8 @@ impl Simulator {
         let nodes = algo.build(topo, x0, cfg.gamma, cfg.seed);
         let pace_rng =
             (0..n).map(|i| Rng::stream(cfg.seed, 0xacce1 + i as u64)).collect();
+        let faults =
+            SimFaultLayer::new(n, VirtualClock::new(), FaultSpec::from_config(&cfg));
         Simulator {
             link_rng: Rng::stream(cfg.seed, 0x117c),
             cfg,
@@ -161,10 +172,10 @@ impl Simulator {
             heap: BinaryHeap::new(),
             events: Vec::new(),
             busy: vec![false; n],
-            link_busy: vec![false; n * n * crate::algo::MsgKind::CHANNELS],
+            faults,
             pace_rng,
             resume_scheduled: vec![false; n],
-            bw_free_at: vec![0.0; n * n],
+            bw: BwPacer::new(n * n),
             stats: SimStats::default(),
             mean_buf: Vec::new(),
             epoch: 0.0,
@@ -174,6 +185,8 @@ impl Simulator {
     }
 
     fn push_event(&mut self, at: f64, ev: Event) {
+        debug_assert!(at.is_finite(),
+                      "non-finite event time {at} for {ev:?}");
         let idx = self.events.len();
         self.events.push(Some(ev));
         self.seq += 1;
@@ -181,29 +194,17 @@ impl Simulator {
     }
 
     fn compute_cost(&mut self, node: usize) -> f64 {
-        let mut c = if self.cfg.compute_jitter > 0.0 {
+        let c = if self.cfg.compute_jitter > 0.0 {
             self.pace_rng[node].lognormal(self.cfg.compute_mean,
                                           self.cfg.compute_jitter)
         } else {
             self.cfg.compute_mean
         };
-        if let Some((s, factor)) = self.cfg.straggler {
-            if s == node {
-                c *= factor;
-            }
-        }
-        if let Some(sc) = &self.cfg.scenario {
-            c *= sc.compute_factor(node, self.time);
-        }
-        c
+        c * self.faults.spec.compute_factor(node, self.time)
     }
 
     fn latency(&mut self) -> f64 {
-        let mult = self
-            .cfg
-            .scenario
-            .as_ref()
-            .map_or(1.0, |sc| sc.latency_multiplier(self.time));
+        let mult = self.faults.spec.latency_multiplier(self.time);
         let mean = self.cfg.link_latency * mult;
         let l = if self.cfg.latency_jitter > 0.0 && mean > 0.0 {
             self.link_rng.lognormal(mean, self.cfg.latency_jitter)
@@ -222,14 +223,8 @@ impl Simulator {
         }
         // scenario churn: a paused node starts nothing; one Resume event
         // re-examines it when the active window ends
-        let paused = match &self.cfg.scenario {
-            Some(sc) if sc.is_paused(node, self.time) => {
-                Some(sc.next_resume(node, self.time))
-            }
-            _ => None,
-        };
-        if let Some(resume_at) = paused {
-            if let Some(at) = resume_at {
+        if self.faults.spec.is_paused(node, self.time) {
+            if let Some(at) = self.faults.spec.next_resume(node, self.time) {
                 if !self.resume_scheduled[node] {
                     self.resume_scheduled[node] = true;
                     self.push_event(at, Event::Resume(node));
@@ -248,23 +243,16 @@ impl Simulator {
         self.push_event(at, Event::NodeFinish(node));
     }
 
-    /// Route freshly emitted messages through the link layer.
+    /// Route freshly emitted messages through the shared link layer
+    /// (backpressure → loss draw → channel acquisition, then bandwidth
+    /// serialization and propagation latency).
     fn route(&mut self, msgs: &mut Vec<Msg>) {
         let lossy = self.algo.tolerates_loss();
-        // the scenario's loss ramp overrides the scalar knob from its
-        // first phase on (pure in self.time, so one lookup per batch)
-        let p_loss = match &self.cfg.scenario {
-            Some(sc) => sc.loss_prob(self.cfg.loss_prob, self.time),
-            None => self.cfg.loss_prob,
-        };
         for msg in msgs.drain(..) {
             debug_assert!(msg.to < self.n && msg.from < self.n);
             self.stats.msgs_sent += 1;
-            if lossy {
-                let link = (msg.from * self.n + msg.to)
-                    * crate::algo::MsgKind::CHANNELS
-                    + msg.kind.chan();
-                if self.link_busy[link] {
+            match self.faults.send_verdict(lossy, &msg, &mut self.link_rng) {
+                SendVerdict::Backpressured => {
                     // previous packet unacked: paper semantics — discard,
                     // and tell the sender (it decided not to send)
                     self.stats.msgs_backpressured += 1;
@@ -272,34 +260,29 @@ impl Simulator {
                     self.nodes[from].on_send_failed(msg);
                     continue;
                 }
-                if p_loss > 0.0 && self.link_rng.chance(p_loss) {
+                SendVerdict::Lost => {
                     self.stats.msgs_lost += 1;
                     let from = msg.from;
                     self.nodes[from].on_send_failed(msg);
                     continue;
                 }
-                self.link_busy[link] = true;
+                SendVerdict::Deliver => {}
             }
             // bandwidth caps: payload-proportional serialization delay,
             // FIFO per directed link — concurrent sends queue behind each
             // other so the configured byte rate is a real throughput
             // bound for every algorithm (for loss-tolerant ones the
             // one-unacked-packet channel already throttles on top)
-            let bw_delay = match &self.cfg.scenario {
-                Some(sc) => sc.bandwidth_delay(
-                    msg.from,
-                    msg.to,
-                    (msg.payload.len() * 4 + msg.payload64.len() * 8) as f64,
-                ),
-                None => 0.0,
+            let bw_delay = self.faults.spec.bandwidth_delay(
+                msg.from,
+                msg.to,
+                FaultSpec::payload_bytes(&msg),
+            );
+            let sent_at = if bw_delay > 0.0 {
+                self.bw.sent_at(msg.from * self.n + msg.to, self.time, bw_delay)
+            } else {
+                self.time
             };
-            let mut sent_at = self.time;
-            if bw_delay > 0.0 {
-                let link = msg.from * self.n + msg.to;
-                let start = self.bw_free_at[link].max(self.time);
-                self.bw_free_at[link] = start + bw_delay;
-                sent_at = start + bw_delay;
-            }
             let at = sent_at + self.latency();
             self.push_event(at, Event::Deliver(msg));
         }
@@ -380,6 +363,7 @@ impl Simulator {
                 break;
             };
             self.time = at;
+            self.faults.clock.advance_to(at);
             let ev = self.events[idx].take().expect("event consumed twice");
             match ev {
                 Event::NodeFinish(i) => {
@@ -420,9 +404,7 @@ impl Simulator {
                     self.try_start(to);
                 }
                 Event::Ack { from, to, chan } => {
-                    self.link_busy
-                        [(from * self.n + to) * crate::algo::MsgKind::CHANNELS + chan] =
-                        false;
+                    self.faults.ack(from, to, chan);
                     // freed channel doesn't wake anyone by itself
                 }
                 Event::Resume(i) => {

@@ -5,7 +5,43 @@
 //! `forall_one(<seed>, prop)`. No shrinking — cases are parameterized by a
 //! seed, which is already a minimal reproducer.
 
+use crate::oracle::{Eval, GradOracle, NodeOracle, OracleFactory,
+                    QuadraticOracle};
 use crate::prng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe quadratic-oracle factory for the wall-clock runner:
+/// clones the family per node, so integration tests and examples can
+/// drive [`ThreadedRunner`](crate::runner::ThreadedRunner) on objectives
+/// with a closed-form optimum.
+pub struct QuadFactory(pub QuadraticOracle);
+
+impl OracleFactory for QuadFactory {
+    fn dim(&self) -> usize {
+        self.0.dim
+    }
+
+    fn make(&self, node: usize) -> Box<dyn NodeOracle> {
+        let mut set = self.0.clone().into_set();
+        set.nodes.remove(node)
+    }
+}
+
+/// Coordinator eval closure over a quadratic family that also records
+/// the last evaluated mean. Wall-clock engines report no `final_gap`, so
+/// tests and examples measure ‖x̄ − x*‖ through the returned handle
+/// after the run.
+pub fn tracking_quad_eval(
+    q: QuadraticOracle,
+) -> (impl FnMut(&[f32]) -> Eval + 'static, Arc<Mutex<Vec<f32>>>) {
+    let last = Arc::new(Mutex::new(vec![0.0f32; q.dim]));
+    let handle = Arc::clone(&last);
+    let eval = move |x: &[f32]| {
+        last.lock().unwrap().copy_from_slice(x);
+        Eval { loss: q.global_loss(x), accuracy: None }
+    };
+    (eval, handle)
+}
 
 /// Run `cases` random instances of `prop`. `prop` receives a fresh RNG per
 /// case and returns `Err(description)` to fail. Panics with the seed on

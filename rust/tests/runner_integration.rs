@@ -5,47 +5,25 @@ use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
 use rfast::data::{Dataset, Partition};
 use rfast::graph::Topology;
-use rfast::oracle::{eval_logreg, LogRegOracle, NodeOracle, OracleFactory};
+use rfast::oracle::{eval_logreg, LogRegFactory, OracleFactory};
 use rfast::runner::{RunUntil, ThreadedRunner};
 use std::sync::Arc;
-
-/// Factory building per-node logreg oracles over a shared shard plan.
-struct LogRegFactory {
-    train: Arc<Dataset>,
-    partition: Partition,
-    batch: usize,
-    seed: u64,
-}
-
-impl OracleFactory for LogRegFactory {
-    fn dim(&self) -> usize {
-        self.train.dim + 1
-    }
-
-    fn make(&self, node: usize) -> Box<dyn NodeOracle> {
-        let oracle = LogRegOracle {
-            train: Arc::clone(&self.train),
-            eval_set: Arc::clone(&self.train), // unused per-node
-            partition: Partition {
-                shards: vec![self.partition.shards[node].clone()],
-            },
-            batch: self.batch,
-            l2: 1e-4,
-            seed: self.seed ^ ((node as u64) << 20),
-        };
-        use rfast::oracle::GradOracle;
-        let mut set = oracle.into_set();
-        set.nodes.remove(0)
-    }
-}
 
 fn workload(n: usize, seed: u64) -> (LogRegFactory, Arc<Dataset>) {
     let (train, eval) = Dataset::mnist01_like(seed).split_eval(2000);
     let train = Arc::new(train);
     let partition = Partition::iid(&train, n, seed);
+    let eval = Arc::new(eval);
     (
-        LogRegFactory { train: Arc::clone(&train), partition, batch: 32, seed },
-        Arc::new(eval),
+        LogRegFactory {
+            train: Arc::clone(&train),
+            eval_set: Arc::clone(&eval),
+            partition,
+            batch: 32,
+            l2: 1e-4,
+            seed,
+        },
+        eval,
     )
 }
 

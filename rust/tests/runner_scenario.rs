@@ -1,0 +1,216 @@
+//! Engine parity for the scenario layer: every fault preset that drives
+//! the virtual-time simulator must drive the wall-clock threaded runner
+//! through the same shared `faults` layer, and the scenario-specific
+//! counters must move in the expected direction.
+//!
+//! These tests sleep real wall time; CI runs them single-threaded
+//! (`--test-threads=1`) with a job timeout so they stay honest about
+//! their clock and can't hang the pipeline. Assertions are directional
+//! (counter moved / ordering holds), never exact — wall-clock runs are
+//! not bitwise repeatable.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::graph::Topology;
+use rfast::oracle::QuadraticOracle;
+use rfast::runner::{RunUntil, RunnerStats, ThreadedRunner};
+use rfast::scenario::{BandwidthCap, ChurnEvent, Phase, Scenario};
+use rfast::testutil::{tracking_quad_eval, QuadFactory};
+
+fn fast_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        gamma: 0.03,
+        compute_mean: 0.001,
+        eval_every: 0.05,
+        ..SimConfig::default()
+    }
+}
+
+/// Run a heterogeneous quadratic on the threaded runner; returns the
+/// report stats plus the last evaluated mean's distance to the optimum.
+fn run_quad(
+    algo: AlgoKind,
+    n: usize,
+    dim: usize,
+    cfg: SimConfig,
+    pace: f64,
+    until: RunUntil,
+) -> (rfast::metrics::Report, RunnerStats, f64) {
+    let q = QuadraticOracle::heterogeneous(dim, n, 0.5, 2.0, cfg.seed);
+    let xs = q.optimum();
+    let topo = Topology::ring(n);
+    let runner =
+        ThreadedRunner::new(cfg, &topo, algo, vec![0.0; dim]).with_pace(pace);
+    let (mut eval, last_mean) = tracking_quad_eval(q.clone());
+    let (report, stats) = runner.run(&QuadFactory(q), &mut eval, until);
+    let gap = rfast::linalg::dist(&last_mean.lock().unwrap(), &xs);
+    (report, stats, gap)
+}
+
+#[test]
+fn every_preset_runs_in_the_threaded_engine() {
+    // acceptance loop: each named preset loads, passes validation against
+    // the topology, and completes a short wall-clock run
+    for name in Scenario::preset_names() {
+        let mut cfg = fast_cfg(17);
+        cfg.scenario = Some(Scenario::by_name(name).unwrap());
+        let (report, stats, _) =
+            run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
+                     RunUntil::WallSeconds(0.2));
+        assert!(stats.steps_per_node.iter().sum::<u64>() > 0,
+                "{name}: no progress");
+        assert!(report.series.contains_key("loss_vs_wall"), "{name}");
+    }
+}
+
+#[test]
+fn churn_pause_window_freezes_the_paused_node() {
+    // window covering the whole run: the paused node must take ZERO steps
+    // inside its pause window while the others keep training
+    let mut sc = Scenario::named("pause_whole_run", "");
+    sc.churn.push(ChurnEvent { node: 1, pause_at: 0.0, resume_at: 60.0 });
+    let mut cfg = fast_cfg(19);
+    cfg.scenario = Some(sc);
+    let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
+                                 RunUntil::WallSeconds(0.3));
+    assert_eq!(stats.steps_per_node[1], 0,
+               "paused node stepped: {:?}", stats.steps_per_node);
+    for i in [0usize, 2, 3] {
+        assert!(stats.steps_per_node[i] > 50,
+                "active node {i} starved: {:?}", stats.steps_per_node);
+    }
+
+    // window ending mid-run: the node must resume and step afterwards
+    let mut sc = Scenario::named("pause_then_resume", "");
+    sc.churn.push(ChurnEvent { node: 1, pause_at: 0.0, resume_at: 0.15 });
+    let mut cfg = fast_cfg(19);
+    cfg.scenario = Some(sc);
+    let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
+                                 RunUntil::WallSeconds(0.5));
+    assert!(stats.steps_per_node[1] > 0, "node 1 never resumed");
+}
+
+#[test]
+fn lossy_30pct_keeps_rfast_converging() {
+    let mut cfg = fast_cfg(23);
+    cfg.gamma = 0.02;
+    cfg.scenario = Some(Scenario::by_name("lossy_30pct").unwrap());
+    let (report, stats, gap) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
+                                        RunUntil::TotalSteps(8_000));
+    assert!(stats.msgs_lost > 0, "loss injection active: {stats:?}");
+    let first = report.series["loss_vs_wall"].points[0].1;
+    let last = report.series["loss_vs_wall"].last_y().unwrap();
+    // directional: no divergence (both points may already sit at the
+    // optimum, so allow fp-level jitter)
+    assert!(last <= first + 0.1, "diverged under loss: {first} → {last}");
+    assert!(gap < 0.5, "R-FAST gap under 30% loss: {gap}");
+}
+
+#[test]
+fn gamma_decay_lowers_the_noise_floor_threaded() {
+    // stochastic gradients: the steady-state gap scales with γ, so the
+    // epoch-indexed decay schedule must land closer to the optimum than
+    // constant γ — the same claim `sim::tests::gamma_decay_schedule_applies`
+    // makes in virtual time
+    let run = |decay: Option<(f64, f32)>| -> f64 {
+        let q = QuadraticOracle::noisy(8, 4, 0.5, 21);
+        let xs = q.optimum();
+        let topo = Topology::ring(4);
+        let mut cfg = fast_cfg(8);
+        cfg.gamma = 0.05;
+        cfg.gamma_decay = decay;
+        let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
+                                         vec![0.0; 8])
+            .with_pace(5e-5);
+        let (mut eval, last_mean) = tracking_quad_eval(q.clone());
+        runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(40_000));
+        rfast::linalg::dist(&last_mean.lock().unwrap(), &xs)
+    };
+    let constant = run(None);
+    let decayed = run(Some((8_000.0, 0.5))); // quadratic epoch == 1 per wake
+    assert!(
+        decayed < constant * 0.8,
+        "decay should cut the noise floor: constant {constant} vs decayed \
+         {decayed}"
+    );
+}
+
+#[test]
+fn straggler_preset_skews_step_counts() {
+    // paper_fig6_straggler slows node 3 by 5x: its wall-clock step count
+    // must fall well behind the healthy nodes
+    let mut cfg = fast_cfg(31);
+    cfg.scenario = Some(Scenario::by_name("paper_fig6_straggler").unwrap());
+    let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 2e-4,
+                                 RunUntil::WallSeconds(0.6));
+    let s = &stats.steps_per_node;
+    let others_min = (0..4).filter(|&i| i != 3).map(|i| s[i]).min().unwrap();
+    assert!(
+        (s[3] as f64) < 0.5 * others_min as f64,
+        "straggler {} vs healthy min {others_min}", s[3]
+    );
+    assert!(stats.msgs_lost > 0, "preset also carries 2% loss");
+}
+
+#[test]
+fn bandwidth_caps_pace_the_senders() {
+    // a tight byte rate forces the sending threads to sleep through the
+    // FIFO serialization delay: the paced counter must move and the
+    // training cadence must drop vs the clean run
+    let clean = {
+        let cfg = fast_cfg(37);
+        let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
+                                     RunUntil::WallSeconds(0.3));
+        stats
+    };
+    let capped = {
+        let mut sc = Scenario::named("tight_bw", "");
+        sc.bandwidth.push(BandwidthCap {
+            from: None,
+            to: None,
+            bytes_per_sec: 16.0 * 1024.0, // a ~50-byte payload ≈ 3 ms
+        });
+        let mut cfg = fast_cfg(37);
+        cfg.scenario = Some(sc);
+        let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
+                                     RunUntil::WallSeconds(0.3));
+        stats
+    };
+    assert_eq!(clean.msgs_paced, 0, "clean run must not pace");
+    assert!(capped.msgs_paced > 0, "cap never paced a send: {capped:?}");
+    let clean_steps: u64 = clean.steps_per_node.iter().sum();
+    let capped_steps: u64 = capped.steps_per_node.iter().sum();
+    assert!(
+        (capped_steps as f64) < 0.7 * clean_steps as f64,
+        "cap should throttle training: {capped_steps} vs {clean_steps}"
+    );
+}
+
+#[test]
+fn latency_ramp_injects_wall_clock_delay() {
+    let mut sc = Scenario::named("slow_links", "");
+    sc.latency_ramp.push(Phase { from_time: 0.0, value: 11.0 });
+    let mut cfg = fast_cfg(41);
+    cfg.link_latency = 0.002; // injected (11 − 1) × 2 ms = 20 ms / message
+    cfg.latency_cap = 0.5;
+    cfg.scenario = Some(sc);
+    let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
+                                 RunUntil::WallSeconds(0.3));
+    assert!(stats.msgs_paced > 0, "ramp never paced a send: {stats:?}");
+    assert!(stats.steps_per_node.iter().sum::<u64>() > 0);
+}
+
+#[test]
+fn runner_rejects_scenarios_that_overflow_the_topology() {
+    let cfg = {
+        let mut c = fast_cfg(43);
+        c.scenario = Some(Scenario::single_straggler(7, 2.0)); // node 7 of 3
+        c
+    };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        ThreadedRunner::new(cfg, &Topology::ring(3), AlgoKind::RFast,
+                            vec![0.0; 4])
+    }));
+    assert!(result.is_err(), "out-of-range scenario node must be rejected");
+}
