@@ -12,7 +12,8 @@ fn main() {
     let target = 0.1;
     let mut table = Table::new(
         "Fig 4b: time to training loss 0.1 vs #nodes (binary tree)",
-        &["nodes", "virtual time (s)", "speedup vs n=3", "grad steps"],
+        &["nodes", "virtual time (s)", "speedup vs n=3", "grad steps",
+          "MB sent"],
     );
     let mut curve = Series::new("time_to_loss_0.1", "nodes", "virtual_seconds");
     let mut base = None;
@@ -34,6 +35,7 @@ fn main() {
             format!("{t:.2}"),
             format!("{:.2}×", b / t),
             format!("{:.0}", report.scalars["grad_wakes"]),
+            format!("{:.1}", report.scalars["bytes_sent"] / 1e6),
         ]);
         curve.push(n as f64, t);
     }
@@ -42,4 +44,6 @@ fn main() {
         .unwrap();
     println!("series: runs/fig4b_time_to_target.csv");
     println!("Expected shape: near-linear speedup in n (paper Fig 4b).");
+    println!("(A fixed-epoch-budget twin of this sweep seeds the perf \
+              trajectory: `repro bench-baseline` → BENCH_scaling.json.)");
 }

@@ -1,137 +1,34 @@
-//! L3 hot-path microbenches (EXPERIMENTS.md §Perf). Criterion is
-//! unavailable offline; `BenchTimer` measures ns/iter with warmup and
-//! batched timing.
+//! L3 hot-path microbenches (EXPERIMENTS.md §Methodology). Criterion is
+//! unavailable offline; the suite lives in `rfast::exp::bench` so this
+//! bench and `repro bench-baseline` measure the identical workloads —
+//! this binary prints, the CLI verb also emits schema-checked
+//! `BENCH_hotpath.json`.
 //!
 //! Covers every per-wake cost center:
 //!   * linalg primitives at logreg (p=785) and transformer-e2e (p≈4.2M)
 //!     sizes,
-//!   * a full R-FAST wake (quadratic oracle; pure coordination cost),
+//!   * full R-FAST wakes on ring-8 (no fan-out) and exponential-16
+//!     (out-degree 4 — the broadcast path the zero-copy payload fabric
+//!     collapses to one allocation),
 //!   * rust logreg / MLP gradient oracles,
 //!   * simulator event throughput,
 //!   * PJRT logreg grad round trip (when artifacts are present).
+//!
+//! The counting allocator below makes the allocs/iter column live;
+//! `RFAST_BENCH_QUICK=1` shortens the timing windows.
 
-use rfast::algo::{AlgoKind, NodeState};
-use rfast::data::{Dataset, Partition};
-use rfast::exp::BenchTimer;
-use rfast::graph::Topology;
-use rfast::oracle::{GradOracle, LogRegOracle, MlpOracle, QuadraticOracle};
-use rfast::prng::Rng;
-use rfast::sim::{Simulator, StopRule};
-use std::sync::Arc;
+use rfast::exp::bench::{hotpath_suite, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
-    let mut results: Vec<BenchTimer> = Vec::new();
     let quick = std::env::var("RFAST_BENCH_QUICK").is_ok();
-    let t = if quick { 0.05 } else { 0.3 };
-
-    // ---- linalg ---------------------------------------------------------
-    for &p in &[785usize, 4_236_800] {
-        let mut rng = Rng::new(1);
-        let x: Vec<f32> = (0..p).map(|_| rng.f32()).collect();
-        let mut y: Vec<f32> = (0..p).map(|_| rng.f32()).collect();
-        let label = if p < 1000 { "p=785" } else { "p=4.2M" };
-        results.push(BenchTimer::run(&format!("linalg::axpy {label}"), t, || {
-            rfast::linalg::axpy(std::hint::black_box(&mut y), 0.5,
-                                std::hint::black_box(&x));
-        }));
-        results.push(BenchTimer::run(&format!("linalg::dot  {label}"), t, || {
-            std::hint::black_box(rfast::linalg::dot(&x, &y));
-        }));
-        let a = x.clone();
-        let b = y.clone();
-        let mut z = vec![0.0f32; p];
-        results.push(BenchTimer::run(
-            &format!("linalg::add_diff {label}"), t, || {
-                rfast::linalg::add_diff(std::hint::black_box(&mut z), &a, &b);
-            },
-        ));
-    }
-
-    // ---- one full R-FAST wake (coordination only, p=785) ----------------
-    {
-        let topo = Topology::ring(8);
-        let quad = QuadraticOracle::heterogeneous(785, 8, 0.5, 2.0, 3);
-        let mut set = quad.into_set();
-        let mut nodes = AlgoKind::RFast.build(&topo, &vec![0.0; 785], 0.01, 1);
-        let mut out = Vec::new();
-        results.push(BenchTimer::run("rfast wake+msgs (p=785, ring-8)", t, || {
-            nodes[0].wake(set.nodes[0].as_mut(), &mut out);
-            out.clear();
-        }));
-    }
-
-    // ---- gradient oracles ------------------------------------------------
-    {
-        let o = LogRegOracle::paper_workload(1, 32, 0.0, 5);
-        let mut set = o.into_set();
-        let theta = vec![0.01f32; set.dim];
-        let mut g = vec![0.0f32; set.dim];
-        results.push(BenchTimer::run("logreg grad (rust, B=32, d=784)", t, || {
-            set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
-        }));
-    }
-    {
-        let o = MlpOracle::paper_workload(1, 32, 0.0, 5);
-        let mut set = o.into_set();
-        let theta = MlpOracle::init_theta(1);
-        let mut g = vec![0.0f32; set.dim];
-        results.push(BenchTimer::run("mlp grad (rust, B=32, 784-128-64-10)",
-                                     t, || {
-            set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
-        }));
-    }
-
-    // ---- simulator event throughput --------------------------------------
-    {
-        let timer = BenchTimer::run("sim: 10k grad wakes (quad p=16, ring-8)",
-                                    if quick { 0.2 } else { 1.0 }, || {
-            let topo = Topology::ring(8);
-            let quad = QuadraticOracle::heterogeneous(16, 8, 0.5, 2.0, 7);
-            let cfg = rfast::config::SimConfig {
-                seed: 7,
-                gamma: 0.02,
-                compute_mean: 0.01,
-                compute_jitter: 0.2,
-                link_latency: 0.002,
-                eval_every: 1e6, // no evals: pure engine cost
-                ..rfast::config::SimConfig::default()
-            };
-            let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast,
-                                         quad.into_set());
-            sim.run(StopRule::Iterations(10_000));
-        });
-        println!(
-            "sim throughput ≈ {:.2} M events/s (wakes+deliveries+acks)",
-            // per grad wake ≈ 1 wake + 2 sends (deliver+ack each)
-            10_000.0 * 5.0 / (timer.ns_per_iter() / 1e9) / 1e6
-        );
-        results.push(timer);
-    }
-
-    // ---- PJRT round trip (optional) ---------------------------------------
-    if let Some(dir) = rfast::runtime::default_artifact_dir() {
-        let manifest = rfast::runtime::Manifest::load(&dir).unwrap();
-        let (train, eval) = Dataset::mnist01_like(3).split_eval(2000);
-        let task = rfast::runtime::PjrtTask::LogReg {
-            data: Arc::new(train.clone()),
-            eval: Arc::new(eval),
-            partition: Partition::iid(&train, 1, 0),
-        };
-        let mut set =
-            rfast::runtime::build_pjrt_set(&manifest, &task, 1, 3).unwrap();
-        let theta = manifest.load_init("logreg").unwrap();
-        let mut g = vec![0.0f32; set.dim];
-        results.push(BenchTimer::run(
-            "logreg grad (PJRT round trip, B=32)", t, || {
-                set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
-            },
-        ));
-    } else {
-        println!("(artifacts/ not built — skipping PJRT round-trip bench)");
-    }
-
+    let results = hotpath_suite(quick);
     println!("\n== micro_hotpath results ==");
     for r in &results {
         println!("{}", r.report());
     }
+    println!("\n(methodology + results log: EXPERIMENTS.md; JSON emit: \
+              `repro bench-baseline`)");
 }

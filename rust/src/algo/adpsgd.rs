@@ -13,7 +13,7 @@
 //! simply skips a mixing opportunity, and heterogeneity biases the fixed
 //! point — both visible in the ablation benches.
 
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::oracle::NodeOracle;
 use crate::prng::Rng;
 
@@ -67,7 +67,8 @@ impl NodeState for AdPsgdNode {
         // initiate a pairwise average with one random neighbor
         if !self.neighbors.is_empty() {
             let j = self.neighbors[self.rng.below(self.neighbors.len())];
-            out.push(Msg::new(self.id, j, MsgKind::X, self.t, self.x.clone()));
+            out.push(Msg::new(self.id, j, MsgKind::X, self.t,
+                              Payload::from_slice(&self.x)));
         }
         self.t += 1;
         Some(loss)
@@ -78,7 +79,7 @@ impl NodeState for AdPsgdNode {
             MsgKind::X => {
                 // responder leg: reply with pre-mix x, then average
                 out.push(Msg::new(self.id, msg.from, MsgKind::XReply,
-                                  msg.stamp, self.x.clone()));
+                                  msg.stamp, Payload::from_slice(&self.x)));
                 average_into(&mut self.x, &msg.payload);
             }
             MsgKind::XReply => {

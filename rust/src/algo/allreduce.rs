@@ -14,7 +14,7 @@
 //! steps node i owns the fully-reduced chunk (i + 1) mod n. All-gather
 //! circulates the reduced chunks the same way.
 
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::oracle::NodeOracle;
 
 pub fn build(n: usize, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
@@ -45,8 +45,10 @@ pub struct RingAllReduceNode {
     /// chunks received but not yet applied, keyed by (round, is_gather,
     /// step). Latency jitter can deliver step s+1 (or even next round's
     /// reduce step 0) before step s is consumed, so a keyed map — not a
-    /// single slot — is required.
-    pending: std::collections::BTreeMap<(u64, bool, u32), Vec<f32>>,
+    /// single slot — is required. Entries hold the messages' shared
+    /// payloads (the ring has one receiver per chunk, so no fan-out —
+    /// but buffering still avoids a copy).
+    pending: std::collections::BTreeMap<(u64, bool, u32), Payload>,
     chunks: Vec<(usize, usize)>, // chunk c → [start, end)
 }
 
@@ -109,7 +111,7 @@ impl RingAllReduceNode {
                   out: &mut Vec<Msg>) {
         let (a, b) = self.chunk(c);
         let mut m = Msg::new(self.id, self.succ(), kind, self.round,
-                             self.gbuf[a..b].to_vec());
+                             Payload::from_slice(&self.gbuf[a..b]));
         m.slot = step;
         out.push(m);
     }

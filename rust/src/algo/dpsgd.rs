@@ -11,7 +11,7 @@
 //! bench exhibits.
 
 use super::roundbuf::RoundBuf;
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::oracle::NodeOracle;
 
 pub fn build(n: usize, x0: &[f32], gamma: f32) -> Vec<Box<dyn NodeState>> {
@@ -86,9 +86,12 @@ impl NodeState for DPsgdNode {
         // local SGD step at the (mixed) iterate
         let loss = oracle.grad(&self.x, &mut self.g);
         crate::linalg::axpy(&mut self.x, -self.gamma, &self.g);
-        // broadcast x^t
-        for &j in &self.neighbors {
-            out.push(Msg::new(self.id, j, MsgKind::X, self.t, self.x.clone()));
+        // broadcast x^t: one shared allocation for every neighbor
+        if !self.neighbors.is_empty() {
+            let x = Payload::from_slice(&self.x);
+            for &j in &self.neighbors {
+                out.push(Msg::new(self.id, j, MsgKind::X, self.t, x.clone()));
+            }
         }
         self.started = true;
         self.t += 1;

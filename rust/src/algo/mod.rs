@@ -24,6 +24,7 @@ mod adpsgd;
 mod allreduce;
 mod dpsgd;
 mod osgp;
+pub mod payload;
 mod push_pull;
 mod rfast;
 mod roundbuf;
@@ -33,6 +34,7 @@ pub use adpsgd::AdPsgdNode;
 pub use allreduce::RingAllReduceNode;
 pub use dpsgd::DPsgdNode;
 pub use osgp::OsgpNode;
+pub use payload::{Payload, Payload64, PayloadOf};
 pub use push_pull::PushPullNode;
 pub use rfast::{RFastNode, RFastParams};
 pub use sab::SabNode;
@@ -65,6 +67,13 @@ pub enum MsgKind {
 /// A network message between nodes. `stamp` is the sender's local iteration
 /// counter (the paper's `t+1` attached at S3); receivers keep only the
 /// freshest stamp per (peer, kind) where the algorithm calls for it.
+///
+/// Payloads are **shared, not owned** ([`Payload`] / [`Payload64`] — the
+/// zero-copy message fabric, DESIGN.md §8): cloning a `Msg` clones two
+/// `Arc`s, a broadcast allocates its payload once for all out-neighbors,
+/// and receivers that only read hold the `Arc` instead of deep-copying.
+/// Payloads are logically immutable once inside a `Msg`; mutation goes
+/// through the copy-on-write [`PayloadOf::make_mut`].
 #[derive(Clone, Debug)]
 pub struct Msg {
     pub from: usize,
@@ -75,13 +84,14 @@ pub struct Msg {
     pub slot: u32,
     /// Scalar side-channel (OSGP push-sum weight).
     pub aux: f64,
-    pub payload: Vec<f32>,
+    /// Shared f32 payload lane (empty for `Rho` messages).
+    pub payload: Payload,
     /// f64 payload used ONLY by `Rho` messages: the running sums grow
     /// while their increments shrink, so the receiver-side difference
     /// ρ(latest) − ρ̃(consumed) cancels catastrophically in f32 — it floors
     /// R-FAST's optimality gap around 1e-3 (measured; EXPERIMENTS.md §Notes).
     /// Carrying ρ in f64 restores exact geometric convergence.
-    pub payload64: Vec<f64>,
+    pub payload64: Payload64,
 }
 
 impl MsgKind {
@@ -105,16 +115,20 @@ impl MsgKind {
 }
 
 impl Msg {
+    /// An f32-lane message. Accepts anything convertible into a shared
+    /// [`Payload`]: pass a `Payload` clone to fan one allocation out to
+    /// many receivers, or a `Vec<f32>` for one-off construction.
     pub fn new(from: usize, to: usize, kind: MsgKind, stamp: u64,
-               payload: Vec<f32>) -> Msg {
-        Msg { from, to, kind, stamp, slot: 0, aux: 0.0, payload,
-              payload64: Vec::new() }
+               payload: impl Into<Payload>) -> Msg {
+        Msg { from, to, kind, stamp, slot: 0, aux: 0.0,
+              payload: payload.into(), payload64: Payload64::empty() }
     }
 
+    /// An f64-lane (ρ) message; see [`Msg::new`] for the payload rules.
     pub fn new64(from: usize, to: usize, kind: MsgKind, stamp: u64,
-                 payload64: Vec<f64>) -> Msg {
+                 payload64: impl Into<Payload64>) -> Msg {
         Msg { from, to, kind, stamp, slot: 0, aux: 0.0,
-              payload: Vec::new(), payload64 }
+              payload: Payload::empty(), payload64: payload64.into() }
     }
 
     /// Payload length in scalar elements (either precision).
@@ -124,6 +138,18 @@ impl Msg {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Clone with both payload lanes copied into fresh allocations,
+    /// severing all sharing with this message. The test suite uses it to
+    /// prove payload sharing is invisible to the algorithms
+    /// (`rust/tests/fabric.rs`); production paths never need it.
+    pub fn deep_clone(&self) -> Msg {
+        Msg {
+            payload: Payload::from_slice(&self.payload),
+            payload64: Payload64::from_slice(&self.payload64),
+            ..self.clone()
+        }
     }
 }
 

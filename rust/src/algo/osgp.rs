@@ -18,7 +18,7 @@
 //! every discard destroys mass; R-FAST's running sums are immune to both
 //! failure modes.
 
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::graph::Topology;
 use crate::oracle::NodeOracle;
 
@@ -39,6 +39,8 @@ pub struct OsgpNode {
     /// de-biased estimate z = x̃/w (cached for param())
     z: Vec<f32>,
     g: Vec<f32>,
+    /// staging buffer for the per-receiver a_ji·x̃ push shares
+    share: Vec<f32>,
     a_ii: f32,
     a_out: Vec<(usize, f32)>,
 }
@@ -54,6 +56,7 @@ impl OsgpNode {
             w: 1.0,
             z: x0.to_vec(),
             g: vec![0.0; x0.len()],
+            share: vec![0.0; x0.len()],
             a_ii: wm.a.get(id, id),
             a_out: wm.a_out[id].iter().map(|&j| (j, wm.a.get(j, id))).collect(),
         }
@@ -86,11 +89,12 @@ impl NodeState for OsgpNode {
         // x̃ ← x̃ − γ·w·g keeps z's effective step ≈ γ regardless of bias)
         let scale = -(self.gamma as f64 * self.w) as f32;
         crate::linalg::axpy(&mut self.xt, scale, &self.g);
-        // push shares
+        // push shares: each a_ji·x̃ differs per receiver, so each is its
+        // own shared-payload allocation (staged through `share`)
         for &(j, a_ji) in &self.a_out {
-            let mut share = vec![0.0f32; self.xt.len()];
-            crate::linalg::scale_into(&mut share, a_ji, &self.xt);
-            let mut m = Msg::new(self.id, j, MsgKind::PushSum, self.t, share);
+            crate::linalg::scale_into(&mut self.share, a_ji, &self.xt);
+            let mut m = Msg::new(self.id, j, MsgKind::PushSum, self.t,
+                                 Payload::from_slice(&self.share));
             m.aux = a_ji as f64 * self.w;
             out.push(m);
         }

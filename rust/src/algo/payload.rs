@@ -1,0 +1,242 @@
+//! Zero-copy message payloads — the message fabric (DESIGN.md §8).
+//!
+//! A [`Msg`](super::Msg) used to own its vector payload, so a one-to-many
+//! broadcast cloned a model-sized `Vec` once **per out-neighbor** and a
+//! receiver that only ever reads (freshest-stamp buffers, ρ̃ consumption
+//! snapshots) still paid a deep copy. [`PayloadOf`] replaces the owned
+//! vectors with a reference-counted shared slice (`Arc<[T]>`) behind a
+//! thin newtype:
+//!
+//! * a broadcast allocates **once** and every out-neighbor's message
+//!   clones the `Arc` (pointer-sized, O(1));
+//! * receivers hold the `Arc` instead of deep-copying — the freshest-wins
+//!   buffers and the ρ̃ "consumed" snapshot become refcount bumps;
+//! * cross-thread sends in the threaded runner move an `Arc`
+//!   (`Arc<[T]>: Send + Sync` for these element types), so a channel send
+//!   never touches payload bytes;
+//! * mutation goes through the copy-on-write escape hatch
+//!   [`PayloadOf::make_mut`], which copies **iff** the payload is aliased
+//!   — the rule that keeps sharing invisible to the algorithms.
+//!
+//! Sharing changes no arithmetic, consumes no RNG draws, and reorders no
+//! events, so simulator output is bitwise identical to the owned-vector
+//! fabric (`rust/tests/fabric.rs` pins this down).
+//!
+//! ```
+//! use rfast::algo::Payload;
+//!
+//! let a = Payload::from_slice(&[1.0, 2.0]);
+//! let mut b = a.clone();                 // O(1): refcount bump
+//! assert!(Payload::ptr_eq(&a, &b));
+//! b.make_mut()[0] = 9.0;                 // aliased ⇒ copy-on-write
+//! assert_eq!(&a[..], &[1.0, 2.0]);       // the original is untouched
+//! assert_eq!(&b[..], &[9.0, 2.0]);
+//! assert!(!Payload::ptr_eq(&a, &b));
+//! ```
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::{Arc, OnceLock};
+
+/// A reference-counted, logically-immutable slice of scalars. Cloning is
+/// O(1) (refcount bump); mutation goes through the copy-on-write
+/// [`PayloadOf::make_mut`]. See the [module docs](self) for the sharing
+/// rules.
+pub struct PayloadOf<T>(Arc<[T]>);
+
+/// The f32 payload lane of a [`Msg`](super::Msg) (model-sized vectors:
+/// v, x, gradients, ring chunks).
+pub type Payload = PayloadOf<f32>;
+
+/// The f64 payload lane of a [`Msg`](super::Msg) — ρ running sums only
+/// (see the catastrophic-cancellation note on
+/// [`Msg::payload64`](super::Msg::payload64)).
+pub type Payload64 = PayloadOf<f64>;
+
+impl<T> PayloadOf<T> {
+    /// Wrap an owned vector (one allocation: the `Vec`'s buffer is copied
+    /// into the `Arc`'s inline slice). Prefer [`PayloadOf::from_slice`]
+    /// when the data is borrowed — it skips the intermediate `Vec`.
+    pub fn from_vec(v: Vec<T>) -> PayloadOf<T> {
+        PayloadOf(v.into())
+    }
+
+    /// Borrow the payload as a plain slice (also available through
+    /// `Deref`, so payloads coerce at `&[T]` call sites).
+    pub fn as_slice(&self) -> &[T] {
+        &self.0
+    }
+
+    /// Do two payloads share the same allocation? The zero-copy fan-out
+    /// invariant: every message of one broadcast satisfies `ptr_eq` with
+    /// its siblings.
+    pub fn ptr_eq(a: &PayloadOf<T>, b: &PayloadOf<T>) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+}
+
+impl<T: Clone> PayloadOf<T> {
+    /// Copy a borrowed slice into a fresh shared payload (one allocation).
+    pub fn from_slice(s: &[T]) -> PayloadOf<T> {
+        PayloadOf(Arc::from(s))
+    }
+
+    /// Copy the contents out into an owned `Vec`.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.0.to_vec()
+    }
+
+    /// Copy-on-write mutable access: if this payload is uniquely owned
+    /// the slice is handed out in place (no copy); if it is aliased the
+    /// contents are copied into a fresh allocation first, so the other
+    /// holders never observe the mutation.
+    pub fn make_mut(&mut self) -> &mut [T] {
+        if Arc::get_mut(&mut self.0).is_none() {
+            let copied: Arc<[T]> = Arc::from(&self.0[..]);
+            self.0 = copied;
+        }
+        Arc::get_mut(&mut self.0).expect("uniquely owned after copy-on-write")
+    }
+}
+
+impl<T: Clone + Default> PayloadOf<T> {
+    /// A zero-initialized payload of length `n` (freshest-stamp buffers
+    /// start at the paper's v⁰ = 0 / ρ⁰ = 0).
+    pub fn zeros(n: usize) -> PayloadOf<T> {
+        PayloadOf(vec![T::default(); n].into())
+    }
+}
+
+impl PayloadOf<f32> {
+    /// The shared empty f32 payload. Every [`Msg`](super::Msg) carries
+    /// both lanes and uses only one, so the unused lane must not cost an
+    /// allocation per message: all empties alias one global slice.
+    pub fn empty() -> Payload {
+        static EMPTY: OnceLock<Payload> = OnceLock::new();
+        EMPTY.get_or_init(|| Payload::from_vec(Vec::new())).clone()
+    }
+}
+
+impl PayloadOf<f64> {
+    /// The shared empty f64 payload (see [`Payload::empty`]).
+    pub fn empty() -> Payload64 {
+        static EMPTY: OnceLock<Payload64> = OnceLock::new();
+        EMPTY.get_or_init(|| Payload64::from_vec(Vec::new())).clone()
+    }
+}
+
+impl<T> Clone for PayloadOf<T> {
+    /// O(1): clones the `Arc`, never the contents.
+    fn clone(&self) -> PayloadOf<T> {
+        PayloadOf(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Deref for PayloadOf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.0
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for PayloadOf<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0[..], f)
+    }
+}
+
+impl<T: PartialEq> PartialEq for PayloadOf<T> {
+    /// Value equality (contents, not allocation identity — that is
+    /// [`PayloadOf::ptr_eq`]).
+    fn eq(&self, other: &PayloadOf<T>) -> bool {
+        self.0[..] == other.0[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for PayloadOf<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.0[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<[T]> for PayloadOf<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        self.0[..] == other[..]
+    }
+}
+
+impl<T> From<Vec<T>> for PayloadOf<T> {
+    fn from(v: Vec<T>) -> PayloadOf<T> {
+        PayloadOf::from_vec(v)
+    }
+}
+
+impl<T: Clone> From<&[T]> for PayloadOf<T> {
+    fn from(s: &[T]) -> PayloadOf<T> {
+        PayloadOf::from_slice(s)
+    }
+}
+
+impl<T> FromIterator<T> for PayloadOf<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> PayloadOf<T> {
+        PayloadOf(iter.into_iter().collect())
+    }
+}
+
+impl<'a, T> IntoIterator for &'a PayloadOf<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_make_mut_unshares() {
+        let a = Payload::from_slice(&[1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(Payload::ptr_eq(&a, &b));
+        assert_eq!(a, b);
+        b.make_mut()[1] = 7.0;
+        assert!(!Payload::ptr_eq(&a, &b));
+        assert_eq!(&a[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(&b[..], &[1.0, 7.0, 3.0]);
+    }
+
+    #[test]
+    fn make_mut_in_place_when_unique() {
+        let mut a = Payload64::from_slice(&[0.5, 0.25]);
+        let before = a.as_slice().as_ptr();
+        a.make_mut()[0] = 1.5;
+        assert_eq!(a.as_slice().as_ptr(), before, "unique ⇒ no copy");
+        assert_eq!(a, vec![1.5, 0.25]);
+    }
+
+    #[test]
+    fn empties_share_one_allocation() {
+        let a = Payload::empty();
+        let b = Payload::empty();
+        assert!(Payload::ptr_eq(&a, &b));
+        assert!(a.is_empty());
+        let c = Payload64::empty();
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn zeros_and_conversions() {
+        let z = Payload::zeros(4);
+        assert_eq!(z, vec![0.0; 4]);
+        let v: Payload = vec![1.0f32, 2.0].into();
+        assert_eq!(v.to_vec(), vec![1.0, 2.0]);
+        let from_iter: Payload64 = (0..3).map(|i| i as f64).collect();
+        assert_eq!(from_iter, vec![0.0, 1.0, 2.0]);
+        // slice indexing + iteration through Deref / &IntoIterator
+        assert_eq!(v[1], 2.0);
+        let sum: f32 = (&v).into_iter().sum();
+        assert_eq!(sum, 3.0);
+    }
+}

@@ -10,7 +10,7 @@
 //! barrier that makes this (and every sync baseline) straggler-bound.
 
 use super::roundbuf::RoundBuf;
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::graph::Topology;
 use crate::oracle::NodeOracle;
 
@@ -35,6 +35,9 @@ pub struct PushPullNode {
     z: Vec<f32>,
     g_prev: Vec<f32>,
     g_new: Vec<f32>,
+    /// staging buffer for outgoing payloads (m = x − γz, a_ji·z) so each
+    /// send costs exactly one shared-payload allocation
+    scratch: Vec<f32>,
     vbuf: RoundBuf,
     zbuf: RoundBuf,
     initialized: bool,
@@ -57,24 +60,29 @@ impl PushPullNode {
             z: vec![0.0; p],
             g_prev: vec![0.0; p],
             g_new: vec![0.0; p],
+            scratch: vec![0.0; p],
             vbuf: RoundBuf::new(wm.w_in[id].clone()),
             zbuf: RoundBuf::new(wm.a_in[id].clone()),
             initialized: false,
         }
     }
 
-    fn send_round(&self, out: &mut Vec<Msg>) {
-        // m = x − γ z on W-edges
-        let mut m = self.x.clone();
-        crate::linalg::axpy(&mut m, -self.gamma, &self.z);
-        for &j in &self.w_out {
-            out.push(Msg::new(self.id, j, MsgKind::V, self.t, m.clone()));
+    fn send_round(&mut self, out: &mut Vec<Msg>) {
+        // m = x − γ z on W-edges: one shared allocation for the fan-out
+        if !self.w_out.is_empty() {
+            self.scratch.copy_from_slice(&self.x);
+            crate::linalg::axpy(&mut self.scratch, -self.gamma, &self.z);
+            let m = Payload::from_slice(&self.scratch);
+            for &j in &self.w_out {
+                out.push(Msg::new(self.id, j, MsgKind::V, self.t, m.clone()));
+            }
         }
-        // a_ij-weighted z on A-edges
+        // a_ij-weighted z on A-edges (contents differ per receiver, so
+        // each is its own allocation)
         for &(j, a_ji) in &self.a_out {
-            let mut wz = vec![0.0f32; self.z.len()];
-            crate::linalg::scale_into(&mut wz, a_ji, &self.z);
-            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t, wz));
+            crate::linalg::scale_into(&mut self.scratch, a_ji, &self.z);
+            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t,
+                              Payload::from_slice(&self.scratch)));
         }
     }
 }

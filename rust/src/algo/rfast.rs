@@ -26,7 +26,7 @@
 //! the paper's τ_{v,ij} / τ_{ρ,ij} "most updated one" selection under
 //! arbitrary reordering.
 
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload, Payload64};
 use crate::graph::Topology;
 use crate::oracle::NodeOracle;
 
@@ -55,18 +55,19 @@ pub fn build(topo: &Topology, x0: &[f32], gamma: f32,
         .collect()
 }
 
-/// Freshest-stamp buffer for one in-neighbor.
+/// Freshest-stamp buffer for one in-neighbor. Holds the shared payload
+/// of the freshest message — a refcount bump, never a deep copy.
 #[derive(Clone, Debug)]
 struct Fresh {
     stamp: u64,
-    data: Vec<f32>,
+    data: Payload,
 }
 
 /// Freshest-stamp buffer for ρ (f64 — see `Msg::payload64`).
 #[derive(Clone, Debug)]
 struct Fresh64 {
     stamp: u64,
-    data: Vec<f64>,
+    data: Payload64,
 }
 
 pub struct RFastNode {
@@ -98,8 +99,10 @@ pub struct RFastNode {
     /// freshest ρ per A-in-neighbor (parallel to `a_in`). f64: the
     /// running-sum difference ρ−ρ̃ cancels catastrophically in f32.
     rho_in: Vec<Fresh64>,
-    /// consumed buffer ρ̃ per A-in-neighbor.
-    rho_tilde: Vec<Vec<f64>>,
+    /// consumed buffer ρ̃ per A-in-neighbor — an `Arc` alias of the
+    /// ρ snapshot consumed at S4 (O(1) instead of a p-length memcpy;
+    /// safe because payloads are immutable once received).
+    rho_tilde: Vec<Payload64>,
     /// running sums ρ_ji per A-out-neighbor (parallel to `a_out`);
     /// in naive mode reused as the per-wake increment scratch.
     rho_out: Vec<Vec<f64>>,
@@ -136,13 +139,13 @@ impl RFastNode {
             z_half: vec![0.0; p],
             v_in: w_in
                 .iter()
-                .map(|_| Fresh { stamp: 0, data: vec![0.0; p] })
+                .map(|_| Fresh { stamp: 0, data: Payload::zeros(p) })
                 .collect(),
             rho_in: a_in
                 .iter()
-                .map(|_| Fresh64 { stamp: 0, data: vec![0.0; p] })
+                .map(|_| Fresh64 { stamp: 0, data: Payload64::zeros(p) })
                 .collect(),
-            rho_tilde: a_in.iter().map(|_| vec![0.0; p]).collect(),
+            rho_tilde: a_in.iter().map(|_| Payload64::zeros(p)).collect(),
             rho_out: a_out.iter().map(|_| vec![0.0; p]).collect(),
             pending_delta: vec![0.0; p],
             w_in,
@@ -164,7 +167,7 @@ impl RFastNode {
         &self.rho_out
     }
 
-    pub fn rho_tilde_sums(&self) -> &[Vec<f64>] {
+    pub fn rho_tilde_sums(&self) -> &[Payload64] {
         &self.rho_tilde
     }
 
@@ -261,27 +264,36 @@ impl NodeState for RFastNode {
         }
 
         // (S3) sends, stamped t+1. The engine's link layer decides delay /
-        // loss / in-flight limits; the algorithm just emits.
+        // loss / in-flight limits; the algorithm just emits. The v
+        // broadcast allocates ONCE; every W-out-neighbor's message shares
+        // it (zero-copy fan-out). ρ payloads are per-neighbor by nature
+        // (each edge has its own running sum), so those stay one
+        // allocation per A-out-neighbor.
         let stamp = self.t + 1;
-        for &j in &self.w_out {
-            out.push(Msg::new(self.id, j, MsgKind::V, stamp,
-                              self.v_self.clone()));
+        if !self.w_out.is_empty() {
+            let v = Payload::from_slice(&self.v_self);
+            for &j in &self.w_out {
+                out.push(Msg::new(self.id, j, MsgKind::V, stamp, v.clone()));
+            }
         }
         for (k, &(j, _)) in self.a_out.iter().enumerate() {
             if self.params.robust {
                 out.push(Msg::new64(self.id, j, MsgKind::Rho, stamp,
-                                    self.rho_out[k].clone()));
+                                    Payload64::from_slice(&self.rho_out[k])));
             } else {
-                let delta: Vec<f32> =
+                let delta: Payload =
                     self.rho_out[k].iter().map(|&v| v as f32).collect();
                 out.push(Msg::new(self.id, j, MsgKind::ZDelta, stamp, delta));
             }
         }
 
-        // (S4) buffer update: ρ̃ ← ρ(consumed)
+        // (S4) buffer update: ρ̃ ← ρ(consumed) — an Arc alias of the
+        // snapshot just consumed at S2b, not a p-length copy (received
+        // payloads are immutable, so aliasing is safe; a fresher ρ only
+        // ever REPLACES rho_in's Arc in `receive`).
         if self.params.robust {
             for k in 0..self.a_in.len() {
-                self.rho_tilde[k].copy_from_slice(&self.rho_in[k].data);
+                self.rho_tilde[k] = self.rho_in[k].data.clone();
             }
         }
 

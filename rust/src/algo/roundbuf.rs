@@ -3,14 +3,17 @@
 //! A synchronous node at round `t` must combine exactly the round-`t`
 //! payloads of each in-neighbor. Links may deliver out of order (latency
 //! jitter), so arrivals are keyed by (peer, stamp); `has_all(t)` is the
-//! barrier predicate behind [`super::NodeState::ready`].
+//! barrier predicate behind [`super::NodeState::ready`]. Buffered entries
+//! hold the messages' shared [`Payload`]s — buffering a broadcast round
+//! costs refcount bumps, not deep copies.
 
+use super::Payload;
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]
 pub struct RoundBuf {
     peers: Vec<usize>,
-    per: Vec<BTreeMap<u64, Vec<f32>>>,
+    per: Vec<BTreeMap<u64, Payload>>,
 }
 
 impl RoundBuf {
@@ -24,10 +27,11 @@ impl RoundBuf {
     }
 
     /// Store a payload; returns false if `from` is not a tracked peer.
-    pub fn insert(&mut self, from: usize, stamp: u64, payload: Vec<f32>) -> bool {
+    pub fn insert(&mut self, from: usize, stamp: u64,
+                  payload: impl Into<Payload>) -> bool {
         match self.peers.iter().position(|&p| p == from) {
             Some(k) => {
-                self.per[k].insert(stamp, payload);
+                self.per[k].insert(stamp, payload.into());
                 true
             }
             None => false,
@@ -41,7 +45,7 @@ impl RoundBuf {
 
     /// Remove and return peer `k`'s round-`stamp` payload (panics if
     /// absent — callers must check `has_all` first).
-    pub fn take(&mut self, k: usize, stamp: u64) -> Vec<f32> {
+    pub fn take(&mut self, k: usize, stamp: u64) -> Payload {
         self.per[k]
             .remove(&stamp)
             .unwrap_or_else(|| panic!("round {stamp} payload missing for peer index {k}"))

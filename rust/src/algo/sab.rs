@@ -12,7 +12,7 @@
 //! which `sim` tests demonstrate empirically.
 
 use super::roundbuf::RoundBuf;
-use super::{Msg, MsgKind, NodeState};
+use super::{Msg, MsgKind, NodeState, Payload};
 use crate::graph::Topology;
 use crate::oracle::NodeOracle;
 
@@ -35,6 +35,8 @@ pub struct SabNode {
     y: Vec<f32>,
     g_prev: Vec<f32>,
     g_new: Vec<f32>,
+    /// staging buffer for the per-receiver b_ji·y payloads
+    scratch: Vec<f32>,
     xbuf: RoundBuf,
     ybuf: RoundBuf,
     initialized: bool,
@@ -57,20 +59,26 @@ impl SabNode {
             y: vec![0.0; p],
             g_prev: vec![0.0; p],
             g_new: vec![0.0; p],
+            scratch: vec![0.0; p],
             xbuf: RoundBuf::new(wm.w_in[id].clone()),
             ybuf: RoundBuf::new(wm.a_in[id].clone()),
             initialized: false,
         }
     }
 
-    fn send_round(&self, out: &mut Vec<Msg>) {
-        for &j in &self.a_out_nodes {
-            out.push(Msg::new(self.id, j, MsgKind::X, self.t, self.x.clone()));
+    fn send_round(&mut self, out: &mut Vec<Msg>) {
+        // x broadcast: one shared allocation for every A-out-neighbor
+        if !self.a_out_nodes.is_empty() {
+            let x = Payload::from_slice(&self.x);
+            for &j in &self.a_out_nodes {
+                out.push(Msg::new(self.id, j, MsgKind::X, self.t, x.clone()));
+            }
         }
+        // b_ji-weighted y per receiver (contents differ, own allocation)
         for &(j, b_ji) in &self.b_out {
-            let mut wy = vec![0.0f32; self.y.len()];
-            crate::linalg::scale_into(&mut wy, b_ji, &self.y);
-            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t, wy));
+            crate::linalg::scale_into(&mut self.scratch, b_ji, &self.y);
+            out.push(Msg::new(self.id, j, MsgKind::ZDelta, self.t,
+                              Payload::from_slice(&self.scratch)));
         }
     }
 }

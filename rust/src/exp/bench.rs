@@ -1,0 +1,569 @@
+//! Perf-baseline harness (EXPERIMENTS.md): the hot-path micro suite and
+//! the fig4b-style scaling sweep behind `repro bench-baseline` and
+//! `cargo bench --bench micro_hotpath`.
+//!
+//! Three pieces:
+//!
+//! * [`CountingAllocator`] — a `GlobalAlloc` wrapper the *binaries*
+//!   install (`#[global_allocator]` in `repro` and `micro_hotpath`) so
+//!   [`measure`] can report allocations-per-iteration alongside ns/iter.
+//!   When it is not installed (e.g. under `cargo test`), the allocation
+//!   columns degrade to `null`/`None` — timing still works.
+//! * [`hotpath_suite`] / [`scaling_sweep`] — the measured workloads:
+//!   every per-wake cost center, and an 8→64-node R-FAST run on the
+//!   binary tree (the Fig 4b setup) at a fixed epoch budget
+//!   (`RFAST_BENCH_EPOCHS`).
+//! * the `BENCH_*.json` emit + schema validators — the machine-readable
+//!   perf trajectory every later optimisation PR is measured against
+//!   (schema documented in EXPERIMENTS.md §Schema; the CI bench-smoke
+//!   step fails on schema-invalid output).
+
+use crate::algo::{AlgoKind, NodeState};
+use crate::exp::{run_sim, Workload};
+use crate::graph::Topology;
+use crate::jsonio::Json;
+use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, NodeOracle,
+                    QuadraticOracle};
+use crate::prng::Rng;
+use crate::sim::StopRule;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Schema tag of `BENCH_hotpath.json` (bump on breaking changes).
+pub const HOTPATH_SCHEMA: &str = "rfast-bench-hotpath/v1";
+/// Schema tag of `BENCH_scaling.json`.
+pub const SCALING_SCHEMA: &str = "rfast-bench-scaling/v1";
+/// Node counts of the baseline scaling sweep (binary tree, Fig 4b's
+/// topology, 8→64 nodes).
+pub const SCALING_NODES: &[usize] = &[8, 16, 32, 64];
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation-counting global allocator: delegates to [`System`] and
+/// keeps running totals of calls and requested bytes. Install it in a
+/// binary with
+/// `#[global_allocator] static A: CountingAllocator = CountingAllocator;`
+/// — the overhead is two relaxed atomic adds per allocation.
+pub struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`; the counters never affect the
+// returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Running totals of the counting allocator: (allocation calls, bytes
+/// requested). Zeros forever when [`CountingAllocator`] is not the
+/// installed global allocator.
+pub fn alloc_stats() -> (u64, u64) {
+    (ALLOC_COUNT.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// Is [`CountingAllocator`] actually installed as the global allocator?
+/// Probed by making a real allocation and watching the counter.
+pub fn counting_allocator_active() -> bool {
+    let before = alloc_stats().0;
+    let v: Vec<u8> = std::hint::black_box(Vec::with_capacity(64));
+    drop(v);
+    alloc_stats().0 != before
+}
+
+/// One measured hot-path entry: ns/iter plus — when the counting
+/// allocator is installed — allocations and allocated bytes per
+/// iteration.
+#[derive(Clone, Debug)]
+pub struct HotpathResult {
+    /// Stable bench name (the results-log key in EXPERIMENTS.md).
+    pub name: String,
+    /// Mean wall nanoseconds per iteration.
+    pub ns_per_iter: f64,
+    /// Iterations timed.
+    pub iters: u64,
+    /// Heap allocations per iteration (`None` without the counting
+    /// allocator).
+    pub allocs_per_iter: Option<f64>,
+    /// Heap bytes requested per iteration (`None` without the counting
+    /// allocator).
+    pub alloc_bytes_per_iter: Option<f64>,
+}
+
+impl HotpathResult {
+    /// One human-readable report line (the console twin of the JSON row).
+    pub fn report(&self) -> String {
+        let ns = self.ns_per_iter;
+        let human = if ns >= 1e6 {
+            format!("{:.3} ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.3} µs", ns / 1e3)
+        } else {
+            format!("{ns:.1} ns")
+        };
+        let allocs = match self.allocs_per_iter {
+            Some(a) => format!("{a:>10.2} allocs/iter"),
+            None => "         - allocs/iter".to_string(),
+        };
+        format!("{:<44} {:>12}/iter  {}  ({} iters)",
+                self.name, human, allocs, self.iters)
+    }
+}
+
+/// Time a closure — THE micro-bench timing loop of the repo (criterion
+/// is unavailable offline, DESIGN.md §6): 3 warmup calls, then doubling
+/// batches until `min_time_s` is filled — and attribute the counting
+/// allocator's deltas to it. Warmup runs happen before the counter
+/// snapshot, so they don't pollute the per-iteration averages.
+pub fn measure<F: FnMut()>(name: &str, min_time_s: f64,
+                           mut f: F) -> HotpathResult {
+    let counted = counting_allocator_active();
+    for _ in 0..3 {
+        f(); // warmup, outside the counter window
+    }
+    let (a0, b0) = alloc_stats();
+    let start = std::time::Instant::now();
+    let mut iters = 0u64;
+    let mut batch = 1u64;
+    let total_ns = loop {
+        for _ in 0..batch {
+            f();
+        }
+        iters += batch;
+        let elapsed = start.elapsed();
+        if elapsed.as_secs_f64() >= min_time_s {
+            break elapsed.as_nanos();
+        }
+        batch = (batch * 2).min(1 << 20);
+    };
+    let (a1, b1) = alloc_stats();
+    HotpathResult {
+        name: name.to_string(),
+        ns_per_iter: total_ns as f64 / iters as f64,
+        iters,
+        allocs_per_iter: counted
+            .then(|| (a1 - a0) as f64 / iters as f64),
+        alloc_bytes_per_iter: counted
+            .then(|| (b1 - b0) as f64 / iters as f64),
+    }
+}
+
+/// The L3 hot-path suite: every per-wake cost center (EXPERIMENTS.md
+/// §Methodology). `quick` shrinks the per-bench timing window for smoke
+/// runs (`RFAST_BENCH_QUICK` / CI).
+pub fn hotpath_suite(quick: bool) -> Vec<HotpathResult> {
+    let mut results: Vec<HotpathResult> = Vec::new();
+    let t = if quick { 0.05 } else { 0.3 };
+
+    // ---- linalg primitives at logreg and transformer-e2e sizes ---------
+    for &p in &[785usize, 4_236_800] {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..p).map(|_| rng.f32()).collect();
+        let mut y: Vec<f32> = (0..p).map(|_| rng.f32()).collect();
+        let label = if p < 1000 { "p=785" } else { "p=4.2M" };
+        results.push(measure(&format!("linalg::axpy {label}"), t, || {
+            crate::linalg::axpy(std::hint::black_box(&mut y), 0.5,
+                                std::hint::black_box(&x));
+        }));
+        results.push(measure(&format!("linalg::dot  {label}"), t, || {
+            std::hint::black_box(crate::linalg::dot(&x, &y));
+        }));
+        let a = x.clone();
+        let b = y.clone();
+        let mut z = vec![0.0f32; p];
+        results.push(measure(&format!("linalg::add_diff {label}"), t, || {
+            crate::linalg::add_diff(std::hint::black_box(&mut z), &a, &b);
+        }));
+    }
+
+    // ---- full R-FAST wakes (coordination only, p=785) -------------------
+    // ring-8: out-degree 1 in both graphs — the no-fan-out floor.
+    {
+        let topo = Topology::ring(8);
+        let quad = QuadraticOracle::heterogeneous(785, 8, 0.5, 2.0, 3);
+        let mut set = quad.into_set();
+        let mut nodes = AlgoKind::RFast.build(&topo, &vec![0.0; 785], 0.01, 1);
+        let mut out = Vec::new();
+        results.push(measure("rfast wake+msgs (p=785, ring-8)", t, || {
+            nodes[0].wake(set.nodes[0].as_mut(), &mut out);
+            out.clear();
+        }));
+    }
+    // exponential-16: out-degree 4 — the broadcast fan-out path the
+    // zero-copy fabric collapses from O(out-degree) to O(1) v-payload
+    // allocations per wake.
+    {
+        let topo = Topology::exponential(16);
+        let quad = QuadraticOracle::heterogeneous(785, 16, 0.5, 2.0, 3);
+        let mut set = quad.into_set();
+        let mut nodes = AlgoKind::RFast.build(&topo, &vec![0.0; 785], 0.01, 1);
+        let mut out = Vec::new();
+        results.push(measure("rfast wake+msgs (p=785, exp-16 deg-4)", t, || {
+            nodes[0].wake(set.nodes[0].as_mut(), &mut out);
+            out.clear();
+        }));
+    }
+
+    // ---- gradient oracles ------------------------------------------------
+    {
+        let o = LogRegOracle::paper_workload(1, 32, 0.0, 5);
+        let mut set = o.into_set();
+        let theta = vec![0.01f32; set.dim];
+        let mut g = vec![0.0f32; set.dim];
+        results.push(measure("logreg grad (rust, B=32, d=784)", t, || {
+            set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
+        }));
+    }
+    {
+        let o = MlpOracle::paper_workload(1, 32, 0.0, 5);
+        let mut set = o.into_set();
+        let theta = MlpOracle::init_theta(1);
+        let mut g = vec![0.0f32; set.dim];
+        results.push(measure("mlp grad (rust, B=32, 784-128-64-10)", t, || {
+            set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
+        }));
+    }
+
+    // ---- simulator event throughput --------------------------------------
+    {
+        let topo = Topology::ring(8);
+        results.push(measure("sim: 10k grad wakes (quad p=16, ring-8)",
+                             if quick { 0.2 } else { 1.0 }, || {
+            let quad = QuadraticOracle::heterogeneous(16, 8, 0.5, 2.0, 7);
+            let cfg = crate::config::SimConfig {
+                seed: 7,
+                gamma: 0.02,
+                compute_mean: 0.01,
+                compute_jitter: 0.2,
+                link_latency: 0.002,
+                eval_every: 1e6, // no evals: pure engine cost
+                ..crate::config::SimConfig::default()
+            };
+            let mut sim = crate::sim::Simulator::new(cfg, &topo,
+                                                     AlgoKind::RFast,
+                                                     quad.into_set());
+            sim.run(StopRule::Iterations(10_000));
+        }));
+    }
+
+    // ---- PJRT round trip (optional) --------------------------------------
+    if let Some(dir) = crate::runtime::default_artifact_dir() {
+        use std::sync::Arc;
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        let (train, eval) = crate::data::Dataset::mnist01_like(3)
+            .split_eval(2000);
+        let task = crate::runtime::PjrtTask::LogReg {
+            data: Arc::new(train.clone()),
+            eval: Arc::new(eval),
+            partition: crate::data::Partition::iid(&train, 1, 0),
+        };
+        let mut set =
+            crate::runtime::build_pjrt_set(&manifest, &task, 1, 3).unwrap();
+        let theta = manifest.load_init("logreg").unwrap();
+        let mut g = vec![0.0f32; set.dim];
+        results.push(measure("logreg grad (PJRT round trip, B=32)", t, || {
+            set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
+        }));
+    } else {
+        // make the absence legible in the console AND the perf
+        // trajectory: a comparator must be able to tell "bench skipped"
+        // from "bench removed" when diffing BENCH_hotpath.json rows
+        println!("(artifacts/ not built — skipping PJRT round-trip bench)");
+        results.push(HotpathResult {
+            name: "logreg grad (PJRT round trip, B=32) [SKIPPED: no \
+                   artifacts/]"
+                .to_string(),
+            ns_per_iter: 0.0,
+            iters: 0,
+            allocs_per_iter: None,
+            alloc_bytes_per_iter: None,
+        });
+    }
+
+    results
+}
+
+/// One node-count point of the scaling sweep: a full R-FAST simulator
+/// run on the binary tree at a fixed epoch budget.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    /// Node count (binary tree of this size).
+    pub nodes: usize,
+    /// Virtual seconds the epoch budget took (the paper's Fig 4b axis).
+    pub virtual_time: f64,
+    /// Real wall seconds the single-threaded simulation took — the
+    /// engine-cost number the perf trajectory tracks.
+    pub wall_seconds: f64,
+    /// Gradient computations across all nodes.
+    pub grad_wakes: f64,
+    /// Messages emitted (before loss/backpressure).
+    pub msgs_sent: f64,
+    /// Payload bytes put on the (virtual) wire.
+    pub bytes_sent: f64,
+    /// Global epochs completed when the run stopped.
+    pub epoch: f64,
+    /// Final evaluated loss of the mean model.
+    pub final_loss: f64,
+}
+
+/// Run the scaling sweep: R-FAST, logreg workload, binary tree (the Fig
+/// 4b setup), one simulator run per entry of `node_counts`, each stopped
+/// at `epochs` global epochs. Deterministic given the fixed seed — only
+/// `wall_seconds` varies between hosts.
+pub fn scaling_sweep(node_counts: &[usize], epochs: f64) -> Vec<ScalingPoint> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let topo = Topology::binary_tree(n);
+            let mut cfg = Workload::LogReg.paper_config();
+            cfg.seed = 2;
+            let t0 = std::time::Instant::now();
+            let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo,
+                                 &cfg, StopRule::Epochs(epochs));
+            let wall = t0.elapsed().as_secs_f64();
+            let s = |k: &str| report.scalars.get(k).copied().unwrap_or(0.0);
+            ScalingPoint {
+                nodes: n,
+                virtual_time: s("virtual_time"),
+                wall_seconds: wall,
+                grad_wakes: s("grad_wakes"),
+                msgs_sent: s("msgs_sent"),
+                bytes_sent: s("bytes_sent"),
+                epoch: s("epoch"),
+                final_loss: report.series["loss_vs_time"]
+                    .last_y()
+                    .unwrap_or(f64::INFINITY),
+            }
+        })
+        .collect()
+}
+
+/// Build the `BENCH_hotpath.json` document (schema: EXPERIMENTS.md).
+pub fn hotpath_json(results: &[HotpathResult], quick: bool) -> Json {
+    let rows = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", r.name.as_str().into()),
+                ("ns_per_iter", r.ns_per_iter.into()),
+                ("iters", (r.iters as f64).into()),
+                ("allocs_per_iter",
+                 r.allocs_per_iter.map_or(Json::Null, Json::Num)),
+                ("alloc_bytes_per_iter",
+                 r.alloc_bytes_per_iter.map_or(Json::Null, Json::Num)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", HOTPATH_SCHEMA.into()),
+        ("quick", quick.into()),
+        ("allocs_counted", counting_allocator_active().into()),
+        ("results", Json::Arr(rows)),
+    ])
+}
+
+/// Build the `BENCH_scaling.json` document (schema: EXPERIMENTS.md).
+pub fn scaling_json(points: &[ScalingPoint], epochs: f64) -> Json {
+    let rows = points
+        .iter()
+        .map(|p| {
+            let per_epoch = if p.epoch > 0.0 {
+                p.bytes_sent / p.epoch
+            } else {
+                0.0
+            };
+            Json::obj(vec![
+                ("nodes", p.nodes.into()),
+                ("virtual_time", p.virtual_time.into()),
+                ("wall_seconds", p.wall_seconds.into()),
+                ("grad_wakes", p.grad_wakes.into()),
+                ("msgs_sent", p.msgs_sent.into()),
+                ("bytes_sent", p.bytes_sent.into()),
+                ("bytes_per_epoch", per_epoch.into()),
+                ("epoch", p.epoch.into()),
+                ("final_loss", p.final_loss.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", SCALING_SCHEMA.into()),
+        ("workload", "logreg".into()),
+        ("algo", AlgoKind::RFast.name().into()),
+        ("topology", "binary_tree".into()),
+        ("epoch_budget", epochs.into()),
+        ("points", Json::Arr(rows)),
+    ])
+}
+
+fn require_num(obj: &Json, key: &str, ctx: &str) -> Result<(), String> {
+    match obj.get(key) {
+        Some(Json::Num(_)) => Ok(()),
+        Some(other) => Err(format!("{ctx}: {key} must be a number, got {other:?}")),
+        None => Err(format!("{ctx}: missing {key}")),
+    }
+}
+
+fn require_num_or_null(obj: &Json, key: &str, ctx: &str) -> Result<(), String> {
+    match obj.get(key) {
+        Some(Json::Num(_)) | Some(Json::Null) => Ok(()),
+        Some(other) => {
+            Err(format!("{ctx}: {key} must be number|null, got {other:?}"))
+        }
+        None => Err(format!("{ctx}: missing {key}")),
+    }
+}
+
+/// Validate a parsed `BENCH_hotpath.json` against [`HOTPATH_SCHEMA`] —
+/// the check the CI bench-smoke step gates on.
+pub fn validate_hotpath_json(j: &Json) -> Result<(), String> {
+    match j.get("schema").and_then(Json::as_str) {
+        Some(s) if s == HOTPATH_SCHEMA => {}
+        other => return Err(format!("schema must be {HOTPATH_SCHEMA:?}, got {other:?}")),
+    }
+    if !matches!(j.get("quick"), Some(Json::Bool(_))) {
+        return Err("quick must be a bool".into());
+    }
+    if !matches!(j.get("allocs_counted"), Some(Json::Bool(_))) {
+        return Err("allocs_counted must be a bool".into());
+    }
+    let rows = j
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or("results must be an array")?;
+    if rows.is_empty() {
+        return Err("results must be non-empty".into());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let ctx = format!("results[{i}]");
+        if row.get("name").and_then(Json::as_str).is_none() {
+            return Err(format!("{ctx}: missing string name"));
+        }
+        require_num(row, "ns_per_iter", &ctx)?;
+        require_num(row, "iters", &ctx)?;
+        require_num_or_null(row, "allocs_per_iter", &ctx)?;
+        require_num_or_null(row, "alloc_bytes_per_iter", &ctx)?;
+    }
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_scaling.json` against [`SCALING_SCHEMA`].
+pub fn validate_scaling_json(j: &Json) -> Result<(), String> {
+    match j.get("schema").and_then(Json::as_str) {
+        Some(s) if s == SCALING_SCHEMA => {}
+        other => return Err(format!("schema must be {SCALING_SCHEMA:?}, got {other:?}")),
+    }
+    for key in ["workload", "algo", "topology"] {
+        if j.get(key).and_then(Json::as_str).is_none() {
+            return Err(format!("missing string {key}"));
+        }
+    }
+    require_num(j, "epoch_budget", "document")?;
+    let rows = j
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("points must be an array")?;
+    if rows.is_empty() {
+        return Err("points must be non-empty".into());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let ctx = format!("points[{i}]");
+        for key in ["nodes", "virtual_time", "wall_seconds", "grad_wakes",
+                    "msgs_sent", "bytes_sent", "bytes_per_epoch", "epoch",
+                    "final_loss"] {
+            require_num(row, key, &ctx)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    #[test]
+    fn measure_times_without_counting_allocator() {
+        // cargo test does not install CountingAllocator: the timing side
+        // must work and the allocation columns must degrade to None
+        let mut acc = 0u64;
+        let r = measure("noop-ish", 0.01, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 100);
+        assert!(r.ns_per_iter < 1e6);
+        assert!(!counting_allocator_active());
+        assert!(r.allocs_per_iter.is_none());
+        assert!(r.alloc_bytes_per_iter.is_none());
+        assert!(r.report().contains("allocs/iter"));
+    }
+
+    #[test]
+    fn hotpath_json_validates_and_rejects_tampering() {
+        let results = vec![HotpathResult {
+            name: "x".into(),
+            ns_per_iter: 12.5,
+            iters: 1000,
+            allocs_per_iter: None,
+            alloc_bytes_per_iter: None,
+        }];
+        let j = hotpath_json(&results, true);
+        // round-trip through text, like the CI gate does
+        let parsed = jsonio::parse(&j.to_string()).unwrap();
+        validate_hotpath_json(&parsed).unwrap();
+        // tampered: wrong schema tag
+        let bad = jsonio::parse(
+            &j.to_string().replace(HOTPATH_SCHEMA, "bogus/v0")).unwrap();
+        assert!(validate_hotpath_json(&bad).is_err());
+        // tampered: a required field renamed away
+        let bad = jsonio::parse(
+            &j.to_string().replace("ns_per_iter", "ns")).unwrap();
+        assert!(validate_hotpath_json(&bad).is_err());
+        // empty results
+        let empty = hotpath_json(&[], false);
+        assert!(validate_hotpath_json(&empty).is_err());
+    }
+
+    #[test]
+    fn scaling_sweep_point_is_schema_valid_and_sane() {
+        // one small point keeps the test fast; the real sweep is CI's job
+        let points = scaling_sweep(&[4], 0.2);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!(p.nodes, 4);
+        assert!(p.grad_wakes > 0.0, "{p:?}");
+        assert!(p.bytes_sent > 0.0, "{p:?}");
+        assert!(p.epoch >= 0.2, "{p:?}");
+        assert!(p.virtual_time > 0.0, "{p:?}");
+        assert!(p.final_loss.is_finite(), "{p:?}");
+        let j = scaling_json(&points, 0.2);
+        let parsed = jsonio::parse(&j.to_string()).unwrap();
+        validate_scaling_json(&parsed).unwrap();
+        // bytes_per_epoch is derived consistently
+        let row = &parsed.get("points").unwrap().as_arr().unwrap()[0];
+        let bpe = row.get("bytes_per_epoch").unwrap().as_f64().unwrap();
+        assert!((bpe - p.bytes_sent / p.epoch).abs() < 1e-6 * bpe.max(1.0));
+        // tampered: a point field removed
+        let bad = jsonio::parse(
+            &j.to_string().replace("bytes_per_epoch", "bpe")).unwrap();
+        assert!(validate_scaling_json(&bad).is_err());
+    }
+}

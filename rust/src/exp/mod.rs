@@ -1,7 +1,10 @@
 //! Experiment harness shared by `examples/` and `rust/benches/` — the glue
 //! that turns (workload, topology, algorithm, timing model) into a
 //! [`Report`], so every paper figure/table is regenerated through one code
-//! path.
+//! path. The perf-baseline harness (allocation-counting micro benches,
+//! scaling sweep, `BENCH_*.json` schema) lives in [`bench`].
+
+pub mod bench;
 
 use crate::algo::AlgoKind;
 use crate::config::SimConfig;
@@ -191,58 +194,6 @@ pub fn save_comparison_csvs(dir: &Path, prefix: &str,
     Ok(())
 }
 
-/// Simple wall-clock timer for micro benches (criterion is unavailable
-/// offline — DESIGN.md §6). Runs `f` in batches until ≥ `min_time` elapsed
-/// and reports ns/iter statistics.
-pub struct BenchTimer {
-    pub name: String,
-    pub iters: u64,
-    pub total_ns: u128,
-}
-
-impl BenchTimer {
-    pub fn run<F: FnMut()>(name: &str, min_time_s: f64, mut f: F) -> BenchTimer {
-        // warmup
-        for _ in 0..3 {
-            f();
-        }
-        let mut iters = 0u64;
-        let start = std::time::Instant::now();
-        let mut batch = 1u64;
-        loop {
-            for _ in 0..batch {
-                f();
-            }
-            iters += batch;
-            let elapsed = start.elapsed();
-            if elapsed.as_secs_f64() >= min_time_s {
-                return BenchTimer {
-                    name: name.to_string(),
-                    iters,
-                    total_ns: elapsed.as_nanos(),
-                };
-            }
-            batch = (batch * 2).min(1 << 20);
-        }
-    }
-
-    pub fn ns_per_iter(&self) -> f64 {
-        self.total_ns as f64 / self.iters as f64
-    }
-
-    pub fn report(&self) -> String {
-        let ns = self.ns_per_iter();
-        let human = if ns >= 1e6 {
-            format!("{:.3} ms", ns / 1e6)
-        } else if ns >= 1e3 {
-            format!("{:.3} µs", ns / 1e3)
-        } else {
-            format!("{ns:.1} ns")
-        };
-        format!("{:<44} {:>12}/iter  ({} iters)", self.name, human, self.iters)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,16 +250,6 @@ mod tests {
                                    &cfg, None, None,
                                    RunUntil::WallSeconds(0.1))
             .is_err());
-    }
-
-    #[test]
-    fn bench_timer_measures() {
-        let mut acc = 0u64;
-        let t = BenchTimer::run("noop-ish", 0.01, || {
-            acc = acc.wrapping_add(std::hint::black_box(1));
-        });
-        assert!(t.iters > 100);
-        assert!(t.ns_per_iter() < 1e6);
     }
 
     #[test]

@@ -212,7 +212,10 @@ impl FaultSpec {
     }
 
     /// Payload size in bytes as the link layer charges it (f32 + f64
-    /// lanes).
+    /// lanes). Payloads are shared `Arc` slices (DESIGN.md §8), but the
+    /// wire cost is the *logical* length — a zero-copy broadcast still
+    /// pays full serialization per link under a bandwidth cap, exactly
+    /// like a real NIC transmitting the same buffer to n peers.
     pub fn payload_bytes(msg: &Msg) -> f64 {
         (msg.payload.len() * 4 + msg.payload64.len() * 8) as f64
     }

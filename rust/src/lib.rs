@@ -8,7 +8,8 @@
 //! * [`graph`] — directed topologies, row/column-stochastic weight matrices,
 //!   spanning-tree root sets, Assumption 1-2 validation.
 //! * [`algo`] — the R-FAST state machine plus six baselines (sync Push-Pull,
-//!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven.
+//!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven, all
+//!   emitting shared zero-copy payloads ([`algo::Payload`], DESIGN.md §8).
 //! * [`sim`] — deterministic discrete-event simulator: per-node compute
 //!   times, stragglers, link latency, packet loss with send-until-ack.
 //! * [`scenario`] — declarative fault injection over both engines:
@@ -24,6 +25,9 @@
 //!   produced by `python/compile/aot.py`; python is never on this path.
 //! * [`oracle`] — gradient oracles: closed-form quadratics, pure-rust
 //!   logistic regression, and PJRT-backed model gradients.
+//! * [`exp`] — experiment harness for benches/examples, plus the
+//!   perf-baseline harness ([`exp::bench`]) behind `repro bench-baseline`
+//!   (methodology and schema: EXPERIMENTS.md).
 //! * [`data`] — synthetic datasets + heterogeneity-controlled partitioning.
 //! * Substrates built in-repo because the offline registry only carries the
 //!   `xla` crate closure: [`prng`], [`linalg`], [`jsonio`], [`config`],
@@ -66,6 +70,30 @@
 //! assert!(sim.stats().msgs_lost > 0); // the ramp was live
 //! assert!(report.final_gap.is_some());
 //! ```
+//!
+//! ## Zero-copy message fabric
+//!
+//! A broadcast allocates its payload once; every out-neighbor's message
+//! shares it ([`algo::Payload`], an `Arc<[f32]>` newtype with a
+//! copy-on-write escape hatch — DESIGN.md §8, perf numbers in
+//! EXPERIMENTS.md):
+//!
+//! ```
+//! use rfast::prelude::*;
+//! use rfast::algo::MsgKind;
+//! use rfast::oracle::GradOracle;
+//!
+//! let topo = Topology::binary_tree(3); // root 0 broadcasts v to {1, 2}
+//! let quad = QuadraticOracle::heterogeneous(4, 3, 1.0, 1.0, 1);
+//! let mut set = quad.into_set();
+//! let mut nodes = AlgoKind::RFast.build(&topo, &[0.0; 4], 0.1, 1);
+//! let mut out = Vec::new();
+//! nodes[0].wake(set.nodes[0].as_mut(), &mut out);
+//! let v: Vec<_> = out.iter().filter(|m| m.kind == MsgKind::V).collect();
+//! assert_eq!(v.len(), 2);
+//! // two out-neighbor messages, ONE payload allocation:
+//! assert!(Payload::ptr_eq(&v[0].payload, &v[1].payload));
+//! ```
 
 pub mod algo;
 pub mod cli;
@@ -87,7 +115,7 @@ pub mod testutil;
 
 /// Convenience re-exports for examples/benches.
 pub mod prelude {
-    pub use crate::algo::{AlgoKind, NodeState, RFastParams};
+    pub use crate::algo::{AlgoKind, NodeState, Payload, Payload64, RFastParams};
     pub use crate::config::SimConfig;
     pub use crate::data::{Dataset, Partition};
     pub use crate::graph::{Topology, TopologyKind, WeightMatrices};

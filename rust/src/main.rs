@@ -8,6 +8,8 @@
 //!               [--time T | --iters K] [--oracle pjrt|rust]
 //!               [--out runs/NAME]
 //! repro scenarios [--export DIR]       # list / export the fault presets
+//! repro bench-baseline [--out DIR]     # perf baselines: hot-path suite +
+//!                                      # scaling sweep → BENCH_*.json
 //! repro graph   --topology binary_tree --nodes 7      # inspect W/A, roots
 //! repro check-artifacts                               # load + smoke-run
 //! repro algos                                         # list algorithms
@@ -33,6 +35,13 @@ use rfast::sim::{Simulator, StopRule};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+/// Counting allocator (exp::bench) so `bench-baseline` and the hot-path
+/// suite report real allocations-per-wake; two relaxed atomic adds per
+/// allocation, negligible for every other subcommand.
+#[global_allocator]
+static ALLOC: rfast::exp::bench::CountingAllocator =
+    rfast::exp::bench::CountingAllocator;
+
 fn main() {
     let mut raw: Vec<String> = std::env::args().skip(1).collect();
     // a bare option list (e.g. `repro --scenario lossy_30pct`) is a train run
@@ -56,6 +65,7 @@ fn main() {
         "graph" => cmd_graph(&args),
         "check-artifacts" => cmd_check_artifacts(),
         "scenarios" => cmd_scenarios(&args),
+        "bench-baseline" => cmd_bench_baseline(&args),
         "algos" => {
             cmd_algos();
             Ok(())
@@ -78,6 +88,7 @@ fn print_help() {
          subcommands:\n  \
          train            run one training experiment (virtual-time simulator or\n                          wall-clock threaded runner; see --engine)\n  \
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
+         bench-baseline   run the hot-path suite + 8→64-node scaling sweep and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode). Fails if\n                          the emitted JSON is schema-invalid (EXPERIMENTS.md).\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
          algos            list implemented algorithms\n  \
@@ -145,6 +156,84 @@ fn cmd_scenarios(args: &Args) -> Result<(), String> {
     } else {
         println!("\nrun one with:  repro train --scenario NAME");
         println!("export JSON:   repro scenarios --export DIR");
+    }
+    Ok(())
+}
+
+/// `repro bench-baseline [--out DIR]` — seed/refresh the perf trajectory:
+/// run the hot-path micro suite (ns/iter + allocs/iter via the counting
+/// allocator installed above) and the 8→64-node scaling sweep, write
+/// `BENCH_hotpath.json` / `BENCH_scaling.json`, then re-read both and
+/// fail on schema-invalid output (the CI bench-smoke gate). Methodology
+/// and schema: EXPERIMENTS.md.
+fn cmd_bench_baseline(args: &Args) -> Result<(), String> {
+    use rfast::exp::bench;
+
+    let out = PathBuf::from(args.get_or("out", "."));
+    std::fs::create_dir_all(&out)
+        .map_err(|e| format!("create {}: {e}", out.display()))?;
+    let epochs: f64 = match std::env::var("RFAST_BENCH_EPOCHS") {
+        Ok(v) => v
+            .parse()
+            .map_err(|_| format!("RFAST_BENCH_EPOCHS: bad value {v:?}"))?,
+        Err(_) => 3.0,
+    };
+    if !(epochs > 0.0) {
+        return Err(format!("RFAST_BENCH_EPOCHS must be > 0, got {epochs}"));
+    }
+    let quick = std::env::var("RFAST_BENCH_QUICK").is_ok() || epochs <= 1.0;
+    println!(
+        "bench-baseline: hot-path suite (quick={quick}, allocs \
+         counted={}) + scaling sweep ({epochs} epochs, nodes {:?})",
+        bench::counting_allocator_active(),
+        bench::SCALING_NODES,
+    );
+
+    let hot = bench::hotpath_suite(quick);
+    println!("\n== hot-path suite ==");
+    for r in &hot {
+        println!("{}", r.report());
+    }
+    let hot_path = out.join("BENCH_hotpath.json");
+    std::fs::write(&hot_path, bench::hotpath_json(&hot, quick).to_string())
+        .map_err(|e| format!("write {}: {e}", hot_path.display()))?;
+
+    let points = bench::scaling_sweep(bench::SCALING_NODES, epochs);
+    let mut t = Table::new(
+        "scaling sweep (R-FAST, logreg, binary tree)",
+        &["nodes", "virtual s", "wall s", "grad wakes", "MB sent",
+          "MB/epoch"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.nodes.to_string(),
+            format!("{:.2}", p.virtual_time),
+            format!("{:.2}", p.wall_seconds),
+            format!("{:.0}", p.grad_wakes),
+            format!("{:.2}", p.bytes_sent / 1e6),
+            format!("{:.2}", p.bytes_sent / 1e6 / p.epoch.max(1e-9)),
+        ]);
+    }
+    t.print();
+    let scaling_path = out.join("BENCH_scaling.json");
+    std::fs::write(&scaling_path,
+                   bench::scaling_json(&points, epochs).to_string())
+        .map_err(|e| format!("write {}: {e}", scaling_path.display()))?;
+
+    // the gate: re-read what landed on disk and validate the schema
+    type Validator = fn(&rfast::jsonio::Json) -> Result<(), String>;
+    let gates: [(&PathBuf, Validator); 2] = [
+        (&hot_path, bench::validate_hotpath_json),
+        (&scaling_path, bench::validate_scaling_json),
+    ];
+    for (path, validate) in gates {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("re-read {}: {e}", path.display()))?;
+        let j = rfast::jsonio::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        validate(&j)
+            .map_err(|e| format!("{}: schema invalid: {e}", path.display()))?;
+        println!("schema-valid: {}", path.display());
     }
     Ok(())
 }

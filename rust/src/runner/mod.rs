@@ -8,7 +8,10 @@
 //!
 //! * every node thread loops: drain mailbox → if `ready`, run one local
 //!   iteration (for PJRT oracles the gradient is a real XLA execution on
-//!   this thread) → send messages;
+//!   this thread) → send messages; payloads are shared
+//!   ([`Payload`](crate::algo::Payload) is an `Arc`, hence `Send`), so a
+//!   cross-thread `mpsc` send moves a pointer-sized handle and a
+//!   broadcast's messages all reference one allocation (DESIGN.md §8);
 //! * links: the shared [`faults`](crate::faults) layer — sender-side
 //!   Bernoulli drop + at-most-one-unacked-packet per (link, channel),
 //!   with an atomic in-flight flag the receiver's ack clears — exactly
@@ -75,6 +78,10 @@ pub struct RunnerStats {
     /// Messages whose send was delayed by a scenario latency ramp or
     /// bandwidth cap (the sender thread slept before the channel send).
     pub msgs_paced: u64,
+    /// Payload bytes actually sent (Deliver verdicts only) — the logical
+    /// communication volume; shared payloads are charged by length, not
+    /// by the pointer-sized handle that crosses the channel.
+    pub bytes_sent: u64,
 }
 
 struct Shared {
@@ -87,6 +94,7 @@ struct Shared {
     msgs_lost: AtomicU64,
     msgs_backpressured: AtomicU64,
     msgs_paced: AtomicU64,
+    bytes_sent: AtomicU64,
     /// current step size as f32 bits; the coordinator writes decays, the
     /// workers pick them up at the top of their loop
     gamma_bits: AtomicU32,
@@ -156,6 +164,7 @@ impl ThreadedRunner {
             msgs_lost: AtomicU64::new(0),
             msgs_backpressured: AtomicU64::new(0),
             msgs_paced: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
             gamma_bits: AtomicU32::new(self.cfg.gamma.to_bits()),
             train_loss: (0..n).map(|_| Mutex::new((0.0, 0))).collect(),
             snapshots: (0..n).map(|_| Mutex::new(self.x0.clone())).collect(),
@@ -275,6 +284,7 @@ impl ThreadedRunner {
             msgs_lost: shared.msgs_lost.load(Ordering::Relaxed),
             msgs_backpressured: shared.msgs_backpressured.load(Ordering::Relaxed),
             msgs_paced: shared.msgs_paced.load(Ordering::Relaxed),
+            bytes_sent: shared.bytes_sent.load(Ordering::Relaxed),
         };
         let total_steps = stats.steps_per_node.iter().sum::<u64>();
         report.set_scalar("wall_seconds", stats.wall_seconds);
@@ -285,6 +295,7 @@ impl ThreadedRunner {
         report.set_scalar("msgs_backpressured",
                           stats.msgs_backpressured as f64);
         report.set_scalar("msgs_paced", stats.msgs_paced as f64);
+        report.set_scalar("bytes_sent", stats.bytes_sent as f64);
         report.set_scalar("final_loss", e.loss);
         if let Some(acc) = e.accuracy {
             report.set_scalar("final_accuracy", acc);
@@ -337,10 +348,11 @@ fn send_all(
             }
             SendVerdict::Deliver => {}
         }
+        let bytes = FaultSpec::payload_bytes(&m);
+        shared.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
         let now = shared.faults.clock.now();
         let mut delay = shared.faults.spec.injected_latency(now);
-        let bw_delay = shared.faults.spec.bandwidth_delay(
-            m.from, m.to, FaultSpec::payload_bytes(&m));
+        let bw_delay = shared.faults.spec.bandwidth_delay(m.from, m.to, bytes);
         if bw_delay > 0.0 {
             // each directed link has exactly one sender (this thread), so
             // the per-worker FIFO queue is the link's transmission queue

@@ -20,7 +20,11 @@
 //!
 //! Link discipline and fault queries are the shared
 //! [`faults`](crate::faults) layer (the threaded runner drives the same
-//! code against a wall clock). Fault injection beyond the scalar knobs
+//! code against a wall clock). Messages carry shared payloads
+//! ([`Payload`](crate::algo::Payload), DESIGN.md §8), so routing and
+//! delivery move `Arc`s — a scheduled `Deliver` event never copies
+//! payload bytes, and the byte accounting (`SimStats::bytes_sent`)
+//! charges logical payload size, not allocations. Fault injection beyond the scalar knobs
 //! goes through the declarative [`Scenario`](crate::scenario::Scenario)
 //! in `SimConfig::scenario`. The scenario is consulted at exactly four
 //! points, each a pure function of virtual time (so both invariants
@@ -70,6 +74,11 @@ pub struct SimStats {
     pub msgs_lost: u64,
     /// Discarded because the link still had an unacked packet in flight.
     pub msgs_backpressured: u64,
+    /// Payload bytes actually put on the wire (Deliver verdicts only —
+    /// lost and backpressured sends transmit nothing). The communication
+    /// volume the bench baseline tracks as bytes-per-epoch
+    /// (EXPERIMENTS.md §Schema).
+    pub bytes_sent: u64,
     pub virtual_time: f64,
 }
 
@@ -273,11 +282,10 @@ impl Simulator {
             // other so the configured byte rate is a real throughput
             // bound for every algorithm (for loss-tolerant ones the
             // one-unacked-packet channel already throttles on top)
-            let bw_delay = self.faults.spec.bandwidth_delay(
-                msg.from,
-                msg.to,
-                FaultSpec::payload_bytes(&msg),
-            );
+            let bytes = FaultSpec::payload_bytes(&msg);
+            self.stats.bytes_sent += bytes as u64;
+            let bw_delay =
+                self.faults.spec.bandwidth_delay(msg.from, msg.to, bytes);
             let sent_at = if bw_delay > 0.0 {
                 self.bw.sent_at(msg.from * self.n + msg.to, self.time, bw_delay)
             } else {
@@ -447,6 +455,7 @@ impl Simulator {
         report.set_scalar("msgs_delivered", s.msgs_delivered as f64);
         report.set_scalar("msgs_lost", s.msgs_lost as f64);
         report.set_scalar("msgs_backpressured", s.msgs_backpressured as f64);
+        report.set_scalar("bytes_sent", s.bytes_sent as f64);
         report.set_scalar("epoch", self.epoch);
         if let Some(opt) = &self.set.optimum {
             mean_param(&self.nodes, &mut self.mean_buf);

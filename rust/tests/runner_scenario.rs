@@ -93,12 +93,24 @@ fn churn_pause_window_freezes_the_paused_node() {
 
 #[test]
 fn lossy_30pct_keeps_rfast_converging() {
+    // also the threaded-engine gate for the zero-copy message fabric:
+    // payloads crossing the worker mpsc channels are shared Arcs
+    // (DESIGN.md §8), and R-FAST must still converge under 30% loss with
+    // the byte accounting live
     let mut cfg = fast_cfg(23);
     cfg.gamma = 0.02;
     cfg.scenario = Some(Scenario::by_name("lossy_30pct").unwrap());
     let (report, stats, gap) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
                                         RunUntil::TotalSteps(8_000));
     assert!(stats.msgs_lost > 0, "loss injection active: {stats:?}");
+    assert!(stats.bytes_sent > 0, "payload byte accounting active");
+    // lost/backpressured sends transmit nothing, so the transmitted
+    // volume is bounded by DELIVERED sends times the largest message on
+    // this workload (a ρ packet, 6 f64 = 48 bytes) — charging rejected
+    // sends would push bytes_sent past this bound
+    let delivered = stats.msgs_sent - stats.msgs_lost - stats.msgs_backpressured;
+    assert!(stats.bytes_sent <= delivered * 48,
+            "rejected sends must not be charged: {stats:?}");
     let first = report.series["loss_vs_wall"].points[0].1;
     let last = report.series["loss_vs_wall"].last_y().unwrap();
     // directional: no divergence (both points may already sit at the
