@@ -21,7 +21,8 @@ use rfast::config::SimConfig;
 use rfast::graph::Topology;
 use rfast::metrics::save_series_csv;
 use rfast::oracle::Eval;
-use rfast::runner::{RunUntil, ThreadedRunner};
+use rfast::exp::Stop;
+use rfast::runner::ThreadedRunner;
 use rfast::runtime::{self, Engine, Input, Manifest, PjrtFactory, PjrtTask};
 use std::path::Path;
 
@@ -105,7 +106,7 @@ fn main() {
 
     let t0 = std::time::Instant::now();
     let (report, stats) =
-        runner.run(&factory, &mut eval_fn, RunUntil::TotalSteps(steps));
+        runner.run(&factory, &mut eval_fn, Stop::Iterations(steps));
     let wall = t0.elapsed().as_secs_f64();
 
     let s = &report.series["loss_vs_wall"];

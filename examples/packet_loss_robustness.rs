@@ -6,24 +6,26 @@
 //! injected through the declarative `scenario` layer; a final row runs a
 //! full named preset (default `lossy_30pct`, override with `--scenario`).
 //! `--engine threaded` reruns the sweep on the wall-clock thread-per-node
-//! runner (gap measured as ‖x̄ − x*‖ of the last evaluated mean).
+//! runner through the SAME `Experiment` chain — both engines report the
+//! gap as `final_gap` (the threaded engine measures it on the last
+//! evaluated mean).
 //!
 //!     cargo run --release --example packet_loss_robustness
 //!                                     [--scenario NAME|FILE.json]
 //!                                     [--engine sim|threaded]
 
 use rfast::algo::AlgoKind;
-use rfast::config::SimConfig;
 use rfast::cli::Args;
+use rfast::config::SimConfig;
+use rfast::exp::{Engine, Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
-use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::runner::{RunUntil, ThreadedRunner};
 use rfast::scenario::Scenario;
-use rfast::sim::{Simulator, StopRule};
-use rfast::testutil::{tracking_quad_eval, QuadFactory};
 
-fn cfg_for(seed: u64, scenario: &Scenario) -> SimConfig {
+const SPEC: QuadSpec =
+    QuadSpec { dim: 16, h_min: 0.5, h_max: 3.0, spread: 1.5, noise: 0.0 };
+
+fn cfg_for(seed: u64, threaded: bool) -> SimConfig {
     SimConfig {
         seed,
         gamma: 0.03,
@@ -31,42 +33,36 @@ fn cfg_for(seed: u64, scenario: &Scenario) -> SimConfig {
         compute_jitter: 0.3,
         link_latency: 0.002,
         latency_cap: 0.05,
-        scenario: if scenario.is_empty() { None } else { Some(scenario.clone()) },
-        eval_every: 5.0,
+        eval_every: if threaded { 0.05 } else { 5.0 },
         ..SimConfig::default()
     }
 }
 
-fn gap(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
-    let topo = Topology::ring(6);
-    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
-    let cfg = cfg_for(seed, scenario);
-    let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
-    let report = sim.run(StopRule::Iterations(60_000));
-    report.final_gap.unwrap()
-}
-
-/// Same comparison on the wall-clock runner: distance of the last
-/// evaluated mean model to the closed-form optimum.
-fn gap_threaded(algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
-    let topo = Topology::ring(6);
-    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
-    let xs = quad.optimum();
-    let mut cfg = cfg_for(seed, scenario);
-    cfg.eval_every = 0.05;
-    let runner = ThreadedRunner::new(cfg, &topo, algo, vec![0.0; 16])
-        .with_pace(1e-4);
-    let (mut eval, last_mean) = tracking_quad_eval(quad.clone());
-    runner.run(&QuadFactory(quad), &mut eval, RunUntil::TotalSteps(15_000));
-    rfast::linalg::dist(&last_mean.lock().unwrap(), &xs)
-}
-
-fn mean_gap(engine: &str, algo: AlgoKind, scenario: &Scenario) -> f64 {
-    if engine == "threaded" {
-        // one seed: wall-clock runs are slower and not bitwise-repeatable
-        gap_threaded(algo, scenario, 10)
+/// One gap measurement — the engine picks the clock, the chain is shared.
+fn gap(engine: Engine, algo: AlgoKind, scenario: &Scenario, seed: u64) -> f64 {
+    let threaded = matches!(engine, Engine::Threaded { .. });
+    let stop = if threaded {
+        Stop::Iterations(15_000)
     } else {
-        (0..3).map(|s| gap(algo, scenario, 10 + s)).sum::<f64>() / 3.0
+        Stop::Iterations(60_000)
+    };
+    let run = Experiment::new(Workload::Quadratic(SPEC), algo)
+        .topology(&Topology::ring(6))
+        .config(cfg_for(seed, threaded))
+        .maybe_scenario((!scenario.is_empty()).then_some(scenario))
+        .engine(engine)
+        .stop(stop)
+        .run()
+        .expect("gap run");
+    run.report.final_gap.unwrap()
+}
+
+fn mean_gap(engine: Engine, algo: AlgoKind, scenario: &Scenario) -> f64 {
+    if matches!(engine, Engine::Threaded { .. }) {
+        // one seed: wall-clock runs are slower and not bitwise-repeatable
+        gap(engine, algo, scenario, 10)
+    } else {
+        (0..3).map(|s| gap(engine, algo, scenario, 10 + s)).sum::<f64>() / 3.0
     }
 }
 
@@ -75,14 +71,17 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
-    let engine = args.get_or("engine", "sim");
-    if engine != "sim" && engine != "threaded" {
-        eprintln!("error: unknown --engine {engine:?} (sim|threaded)");
-        std::process::exit(2);
-    }
+    let engine = match args.get_or("engine", "sim").as_str() {
+        "sim" => Engine::Sim,
+        "threaded" => Engine::Threaded { pace: Some(1e-4) },
+        other => {
+            eprintln!("error: unknown --engine {other:?} (sim|threaded)");
+            std::process::exit(2);
+        }
+    };
     let mut table = Table::new(
         &format!("optimality gap vs packet-loss probability (6-node ring, \
-                  quadratics, engine: {engine})"),
+                  quadratics, engine: {})", engine.name()),
         &["scenario", "R-FAST (robust ρ)", "naive GT", "OSGP"],
     );
     for loss_prob in [0.0, 0.1, 0.2, 0.3, 0.4] {
@@ -93,9 +92,9 @@ fn main() {
         };
         table.row(vec![
             format!("{:.0}% loss", loss_prob * 100.0),
-            format!("{:.3e}", mean_gap(&engine, AlgoKind::RFast, &sc)),
-            format!("{:.3e}", mean_gap(&engine, AlgoKind::RFastNaive, &sc)),
-            format!("{:.3e}", mean_gap(&engine, AlgoKind::Osgp, &sc)),
+            format!("{:.3e}", mean_gap(engine, AlgoKind::RFast, &sc)),
+            format!("{:.3e}", mean_gap(engine, AlgoKind::RFastNaive, &sc)),
+            format!("{:.3e}", mean_gap(engine, AlgoKind::Osgp, &sc)),
         ]);
     }
     // one full named preset on top of the sweep (ramps/churn welcome)
@@ -106,9 +105,9 @@ fn main() {
     });
     table.row(vec![
         format!("preset: {}", sc.name),
-        format!("{:.3e}", mean_gap(&engine, AlgoKind::RFast, &sc)),
-        format!("{:.3e}", mean_gap(&engine, AlgoKind::RFastNaive, &sc)),
-        format!("{:.3e}", mean_gap(&engine, AlgoKind::Osgp, &sc)),
+        format!("{:.3e}", mean_gap(engine, AlgoKind::RFast, &sc)),
+        format!("{:.3e}", mean_gap(engine, AlgoKind::RFastNaive, &sc)),
+        format!("{:.3e}", mean_gap(engine, AlgoKind::Osgp, &sc)),
     ]);
     table.print();
     println!("\nExpected shape: R-FAST's gap is loss-invariant (running sums \

@@ -1,15 +1,15 @@
-//! Quickstart: train R-FAST over a binary tree in the virtual-time
-//! simulator, on both a closed-form quadratic (exact optimality gap) and
-//! the paper's logistic-regression workload.
+//! Quickstart: train R-FAST over a binary tree through the one
+//! `Experiment` builder — on both a closed-form quadratic (exact
+//! optimality gap) and the paper's logistic-regression workload. The
+//! same chain runs on the wall-clock engine by swapping
+//! `.engine(Engine::Threaded { pace })` in.
 //!
 //!     cargo run --release --example quickstart
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
-use rfast::exp::{run_sim, Workload};
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::Topology;
-use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::sim::{Simulator, StopRule};
 
 fn main() {
     // --- 1. Exact convergence on heterogeneous quadratics ---------------
@@ -17,7 +17,6 @@ fn main() {
     println!("topology: binary tree, 7 nodes, common roots = {:?}",
              topo.weights.common_roots());
 
-    let quad = QuadraticOracle::heterogeneous(32, 7, 0.5, 2.0, 42);
     let cfg = SimConfig {
         seed: 42,
         gamma: 0.02,
@@ -27,24 +26,32 @@ fn main() {
         eval_every: 2.0,
         ..SimConfig::default()
     };
-    let mut sim = Simulator::new(cfg.clone(), &topo, AlgoKind::RFast,
-                                 quad.into_set());
-    let report = sim.run(StopRule::Iterations(30_000));
+    let run = Experiment::new(
+            Workload::Quadratic(QuadSpec { dim: 32, h_min: 0.5, h_max: 2.0,
+                                           spread: 1.0, noise: 0.0 }),
+            AlgoKind::RFast)
+        .topology(&topo)
+        .config(cfg)
+        .stop(Stop::Iterations(30_000))
+        .run()
+        .expect("quadratic run");
     println!(
         "quadratic: optimality gap {:.3e} after {} asynchronous wakes \
          ({} messages)",
-        report.final_gap.unwrap(),
-        report.scalars["grad_wakes"],
-        report.scalars["msgs_delivered"],
+        run.report.final_gap.unwrap(),
+        run.stats.total_steps(),
+        run.stats.msgs_delivered.unwrap(),
     );
 
     // --- 2. The paper's §VI-A logreg workload ----------------------------
-    let mut cfg = Workload::LogReg.paper_config();
-    cfg.seed = 7;
-    let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
-                         StopRule::VirtualTime(60.0));
-    let loss = &report.series["loss_vs_time"];
-    let acc = &report.series["acc_vs_time"];
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&topo)
+        .seed(7)
+        .stop(Stop::Time(60.0))
+        .run()
+        .expect("logreg run");
+    let loss = &run.report.series["loss_vs_time"];
+    let acc = &run.report.series["acc_vs_time"];
     println!(
         "logreg: eval loss {:.4} → {:.4}, accuracy {:.1}%, \
          time-to-loss-0.1 = {:.1}s (virtual)",
@@ -53,6 +60,6 @@ fn main() {
         100.0 * acc.last_y().unwrap(),
         loss.time_to_reach(0.1).unwrap_or(f64::NAN),
     );
-    report.save(std::path::Path::new("runs"), "quickstart").unwrap();
+    run.report.save(std::path::Path::new("runs"), "quickstart").unwrap();
     println!("full report: runs/quickstart.json");
 }

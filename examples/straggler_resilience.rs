@@ -11,17 +11,16 @@
 //! (pause/resume windows). Without `--scenario`, a permanent single
 //! straggler of `--factor` on node 1 is built, matching the paper.
 //! `--engine threaded` runs the same comparison on the wall-clock
-//! thread-per-node runner (real threads sleeping the straggler factor)
-//! instead of the virtual-time simulator.
+//! thread-per-node runner (real threads sleeping the straggler factor) —
+//! through the SAME `Experiment` chain: only the `.engine(..)` call and
+//! the stop deadline differ.
 
 use rfast::algo::AlgoKind;
 use rfast::cli::Args;
-use rfast::exp::{run_sim_under, run_threaded_under, Workload};
+use rfast::exp::{Engine, Experiment, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
-use rfast::runner::RunUntil;
 use rfast::scenario::Scenario;
-use rfast::sim::StopRule;
 
 fn main() {
     let args = Args::parse_opts(std::env::args().skip(1)).unwrap_or_else(|e| {
@@ -40,19 +39,33 @@ fn main() {
         None => Scenario::single_straggler(1, factor),
     };
 
-    let engine = args.get_or("engine", "sim");
-    if engine != "sim" && engine != "threaded" {
-        eprintln!("error: unknown --engine {engine:?} (sim|threaded)");
-        std::process::exit(2);
-    }
+    let target = 0.15; // eval-loss target for "time-to-target"
+    let mut cfg = Workload::LogReg.paper_config();
+    cfg.seed = 3;
+    // engine + stop are the ONLY things that differ between the two
+    // clocks; everything else is one shared builder chain
+    let (engine, stop) = match args.get_or("engine", "sim").as_str() {
+        "sim" => (Engine::Sim,
+                  Stop::TargetLoss { loss: target, max_time: 600.0 }),
+        "threaded" => {
+            // wall clock: pace each local iteration at compute_mean so
+            // the cadence matches the simulator's calibration
+            cfg.eval_every = 0.25;
+            (Engine::Threaded { pace: Some(cfg.compute_mean) },
+             Stop::TargetLoss { loss: target, max_time: 60.0 })
+        }
+        other => {
+            eprintln!("error: unknown --engine {other:?} (sim|threaded)");
+            std::process::exit(2);
+        }
+    };
     let algos = [AlgoKind::RFast, AlgoKind::RingAllReduce, AlgoKind::DPsgd,
                  AlgoKind::AdPsgd];
-    let target = 0.15; // eval-loss target for "time-to-target"
 
     let mut table = Table::new(
-        &format!("straggler resilience ({n} nodes, engine: {engine}, \
+        &format!("straggler resilience ({n} nodes, engine: {}, \
                   scenario: {})",
-                 scenario.name),
+                 engine.name(), scenario.name),
         &["algorithm", "t→target clean (s)", "t→target faulty (s)",
           "slowdown", "grad wakes (faulty)"],
     );
@@ -61,32 +74,18 @@ fn main() {
         let mut time_to = [f64::NAN; 2];
         let mut wakes = String::new();
         for (k, sc) in [None, Some(&scenario)].into_iter().enumerate() {
-            let mut cfg = Workload::LogReg.paper_config();
-            cfg.seed = 3;
-            let (series, steps) = if engine == "threaded" {
-                // wall clock: pace each local iteration at compute_mean so
-                // the cadence matches the simulator's calibration
-                cfg.eval_every = 0.25;
-                let (report, stats) = run_threaded_under(
-                    Workload::LogReg, algo, &topo, &cfg, sc,
-                    Some(cfg.compute_mean),
-                    RunUntil::TargetLoss { loss: target, max_seconds: 60.0 })
-                    .expect("threaded run");
-                (report.series["loss_vs_wall"].clone(),
-                 stats.steps_per_node.iter().sum::<u64>() as f64)
-            } else {
-                let report = run_sim_under(Workload::LogReg, algo, &topo,
-                                           &cfg, sc,
-                                           StopRule::TargetLoss {
-                                               loss: target,
-                                               max_time: 600.0,
-                                           });
-                (report.series["loss_vs_time"].clone(),
-                 report.scalars["grad_wakes"])
-            };
+            let run = Experiment::new(Workload::LogReg, algo)
+                .topology(&topo)
+                .config(cfg.clone())
+                .maybe_scenario(sc)
+                .engine(engine)
+                .stop(stop)
+                .run()
+                .expect("straggler run");
+            let series = run.loss_series().expect("loss series");
             time_to[k] = series.time_to_reach(target).unwrap_or(f64::INFINITY);
             if sc.is_some() {
-                wakes = format!("{steps:.0}");
+                wakes = format!("{}", run.stats.total_steps());
             }
         }
         table.row(vec![

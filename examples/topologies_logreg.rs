@@ -1,16 +1,15 @@
 //! Paper §VI-A (Fig 4a) as a runnable example: R-FAST trains the same
 //! logistic-regression problem over five different topologies — including
 //! the NON-strongly-connected binary tree and line graphs that only
-//! Assumption 2 permits.
+//! Assumption 2 permits. One sweep-native builder chain drives all five.
 //!
 //!     cargo run --release --example topologies_logreg [--nodes N]
 
 use rfast::algo::AlgoKind;
 use rfast::cli::Args;
-use rfast::exp::{run_sim, save_comparison_csvs, Workload};
+use rfast::exp::{Experiment, Stop, Workload};
 use rfast::graph::TopologyKind;
 use rfast::metrics::Table;
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -25,37 +24,34 @@ fn main() {
         TopologyKind::Mesh,
     ];
 
+    let cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .seed(1)
+        .stop(Stop::Time(120.0))
+        .sweep_topologies(&kinds, n)
+        .expect("topology sweep");
+
     let mut table = Table::new(
         &format!("R-FAST over general topologies ({n} nodes, logreg)"),
         &["topology", "common roots", "final loss", "final acc(%)",
           "epochs", "time→0.1 (s)"],
     );
-    let mut reports = Vec::new();
-    for kind in kinds {
+    for (kind, run) in kinds.iter().zip(&cmp.runs) {
         let topo = kind.build(n);
-        let mut cfg = Workload::LogReg.paper_config();
-        cfg.seed = 1;
-        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
-                             StopRule::VirtualTime(120.0));
-        let loss = &report.series["loss_vs_time"];
-        let acc = &report.series["acc_vs_time"];
+        let loss = &run.report.series["loss_vs_time"];
+        let acc = &run.report.series["acc_vs_time"];
         table.row(vec![
-            kind.name().to_string(),
+            run.report.label.clone(),
             format!("{:?}", topo.weights.common_roots()),
             format!("{:.4}", loss.last_y().unwrap()),
             format!("{:.1}", 100.0 * acc.last_y().unwrap()),
-            format!("{:.0}", report.scalars["epoch"]),
+            format!("{:.0}", run.report.scalars["epoch"]),
             loss.time_to_reach(0.1)
                 .map(|t| format!("{t:.1}"))
                 .unwrap_or_else(|| "—".into()),
         ]);
-        let mut r = report;
-        r.label = kind.name().to_string();
-        reports.push(r);
     }
     table.print();
-    let refs: Vec<&_> = reports.iter().collect();
-    save_comparison_csvs(Path::new("runs"), "topologies", &refs).unwrap();
+    cmp.save_csvs(Path::new("runs"), "topologies").unwrap();
     println!("\ncurves: runs/topologies_loss_vs_epoch.csv (and friends)");
     println!("Every topology converges — including tree/line, which are NOT \
               strongly connected (Assumption 2 at work).");

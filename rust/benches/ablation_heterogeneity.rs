@@ -7,11 +7,9 @@
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
-use rfast::exp::{run_sim, Workload};
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
-use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::sim::{Simulator, StopRule};
 
 const ALGOS: [AlgoKind; 4] = [
     AlgoKind::RFast,
@@ -27,27 +25,28 @@ fn main() {
         &["spread (∝ς)", "ς²@x*", "R-FAST", "D-PSGD", "AD-PSGD", "OSGP"],
     );
     for spread in [0.0f32, 0.5, 1.0, 2.0, 4.0] {
-        let quad = QuadraticOracle::new(16, 6, 0.5, 2.0, spread, 0.0, 31);
-        let sigma2 = quad.heterogeneity_at_optimum();
+        let spec = QuadSpec { dim: 16, h_min: 0.5, h_max: 2.0, spread,
+                              noise: 0.0 };
+        let sigma2 = spec.build(6, 31).heterogeneity_at_optimum();
+        let cfg = SimConfig {
+            seed: 31,
+            gamma: 0.03,
+            compute_mean: 0.01,
+            compute_jitter: 0.3,
+            link_latency: 0.002,
+            latency_cap: 0.05,
+            eval_every: 5.0,
+            ..SimConfig::default()
+        };
+        let cmp = Experiment::new(Workload::Quadratic(spec), AlgoKind::RFast)
+            .topology(&Topology::ring(6))
+            .config(cfg)
+            .stop(Stop::Iterations(60_000))
+            .sweep_algos(&ALGOS)
+            .expect("quad sweep");
         let mut row = vec![format!("{spread}"), format!("{sigma2:.2}")];
-        for algo in ALGOS {
-            let topo = Topology::ring(6);
-            let cfg = SimConfig {
-                seed: 31,
-                gamma: 0.03,
-                compute_mean: 0.01,
-                compute_jitter: 0.3,
-                link_latency: 0.002,
-                latency_cap: 0.05,
-                eval_every: 5.0,
-                ..SimConfig::default()
-            };
-            let mut sim =
-                Simulator::new(cfg, &topo, algo, quad.clone().into_set());
-            let gap = sim
-                .run(StopRule::Iterations(60_000))
-                .final_gap
-                .unwrap_or(f64::NAN);
+        for run in &cmp.runs {
+            let gap = run.report.final_gap.unwrap_or(f64::NAN);
             row.push(format!("{gap:.3e}"));
         }
         t1.row(row);
@@ -61,16 +60,19 @@ fn main() {
         &["skew α", "R-FAST", "D-PSGD", "AD-PSGD", "OSGP"],
     );
     for alpha in [0.0, 0.5, 0.9, 1.0] {
+        let mut cfg = Workload::LogReg.paper_config();
+        cfg.seed = 13;
+        cfg.skew_alpha = alpha;
+        let cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&Topology::ring(8))
+            .config(cfg)
+            .stop(Stop::Time(60.0))
+            .sweep_algos(&ALGOS)
+            .expect("logreg sweep");
         let mut row = vec![format!("{alpha}")];
-        for algo in ALGOS {
-            let topo = Topology::ring(8);
-            let mut cfg = Workload::LogReg.paper_config();
-            cfg.seed = 13;
-            cfg.skew_alpha = alpha;
-            let r = run_sim(Workload::LogReg, algo, &topo, &cfg,
-                            StopRule::VirtualTime(60.0));
-            let loss = r.series["loss_vs_time"].last_y().unwrap();
-            let acc = r.series["acc_vs_time"].last_y().unwrap();
+        for run in &cmp.runs {
+            let loss = run.report.series["loss_vs_time"].last_y().unwrap();
+            let acc = run.report.series["acc_vs_time"].last_y().unwrap();
             row.push(format!("{loss:.3} / {:.1}", acc * 100.0));
         }
         t2.row(row);

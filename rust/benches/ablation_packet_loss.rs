@@ -8,11 +8,9 @@
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
-use rfast::exp::{run_sim, Workload};
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
-use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::sim::{Simulator, StopRule};
 
 const ALGOS: [AlgoKind; 4] = [
     AlgoKind::RFast,
@@ -22,8 +20,6 @@ const ALGOS: [AlgoKind; 4] = [
 ];
 
 fn quad_gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
-    let topo = Topology::ring(6);
-    let quad = QuadraticOracle::new(16, 6, 0.5, 3.0, 1.5, 0.0, seed);
     let cfg = SimConfig {
         seed,
         gamma: 0.03,
@@ -35,8 +31,15 @@ fn quad_gap(algo: AlgoKind, loss_prob: f64, seed: u64) -> f64 {
         eval_every: 5.0,
         ..SimConfig::default()
     };
-    let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
-    let g = sim.run(StopRule::Iterations(60_000)).final_gap.unwrap();
+    let spec = QuadSpec { dim: 16, h_min: 0.5, h_max: 3.0, spread: 1.5,
+                          noise: 0.0 };
+    let run = Experiment::new(Workload::Quadratic(spec), algo)
+        .topology(&Topology::ring(6))
+        .config(cfg)
+        .stop(Stop::Iterations(60_000))
+        .run()
+        .expect("quad run");
+    let g = run.report.final_gap.unwrap();
     if g.is_finite() { g } else { f64::INFINITY }
 }
 
@@ -64,16 +67,19 @@ fn main() {
         &["loss prob", "R-FAST", "naive GT", "AD-PSGD", "OSGP"],
     );
     for &lp in &sweeps {
+        let mut cfg = Workload::LogReg.paper_config();
+        cfg.seed = 9;
+        cfg.loss_prob = lp;
+        let cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&Topology::ring(8))
+            .config(cfg)
+            .stop(Stop::Time(40.0))
+            .sweep_algos(&ALGOS)
+            .expect("logreg sweep");
         let mut row = vec![format!("{:.0}%", lp * 100.0)];
-        for algo in ALGOS {
-            let topo = Topology::ring(8);
-            let mut cfg = Workload::LogReg.paper_config();
-            cfg.seed = 9;
-            cfg.loss_prob = lp;
-            let r = run_sim(Workload::LogReg, algo, &topo, &cfg,
-                            StopRule::VirtualTime(40.0));
-            let loss = r.series["loss_vs_time"].last_y().unwrap();
-            let acc = r.series["acc_vs_time"].last_y().unwrap();
+        for run in &cmp.runs {
+            let loss = run.report.series["loss_vs_time"].last_y().unwrap();
+            let acc = run.report.series["acc_vs_time"].last_y().unwrap();
             row.push(format!("{loss:.3} / {:.1}", acc * 100.0));
         }
         t2.row(row);

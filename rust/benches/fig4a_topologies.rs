@@ -8,10 +8,9 @@
 //! baseline supports.
 
 use rfast::algo::AlgoKind;
-use rfast::exp::{run_sim, save_comparison_csvs, Workload};
+use rfast::exp::{Experiment, Stop, Workload};
 use rfast::graph::TopologyKind;
 use rfast::metrics::Table;
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -27,21 +26,24 @@ fn main() {
         TopologyKind::Exponential,
         TopologyKind::Mesh,
     ];
+    let mut cfg = Workload::LogReg.paper_config();
+    cfg.seed = 1;
+    cfg.gamma = 4e-3; // root-concentration makes ring/mesh slower at
+                      // the paper's 1e-3; 4e-3 keeps all five in frame
+    // sweep-native: one chain, five topologies, labeled reports
+    let cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .config(cfg)
+        .stop(Stop::Epochs(epochs))
+        .sweep_topologies(&kinds, n)
+        .expect("fig4a sweep");
+
     let mut table = Table::new(
         &format!("Fig 4a: R-FAST loss vs epoch over topologies \
                   ({n} nodes, {epochs} epochs)"),
         &["topology", "loss@25%", "loss@50%", "final loss", "final acc(%)"],
     );
-    let mut reports = Vec::new();
-    for kind in kinds {
-        let topo = kind.build(n);
-        let mut cfg = Workload::LogReg.paper_config();
-        cfg.seed = 1;
-        cfg.gamma = 4e-3; // root-concentration makes ring/mesh slower at
-                          // the paper's 1e-3; 4e-3 keeps all five in frame
-        let mut r = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
-                            StopRule::Epochs(epochs));
-        let s = &r.series["loss_vs_epoch"];
+    for run in &cmp.runs {
+        let s = &run.report.series["loss_vs_epoch"];
         let probe = |frac: f64| -> f64 {
             let target_x = epochs * frac;
             s.points
@@ -56,18 +58,15 @@ fn main() {
                 .unwrap_or(f64::NAN)
         };
         table.row(vec![
-            kind.name().to_string(),
+            run.report.label.clone(),
             format!("{:.4}", probe(0.25)),
             format!("{:.4}", probe(0.5)),
             format!("{:.4}", s.last_y().unwrap()),
             format!("{:.1}",
-                    100.0 * r.series["acc_vs_epoch"].last_y().unwrap()),
+                    100.0 * run.report.series["acc_vs_epoch"].last_y().unwrap()),
         ]);
-        r.label = kind.name().to_string();
-        reports.push(r);
     }
     table.print();
-    let refs: Vec<&_> = reports.iter().collect();
-    save_comparison_csvs(Path::new("runs"), "fig4a", &refs).unwrap();
+    cmp.save_csvs(Path::new("runs"), "fig4a").unwrap();
     println!("series: runs/fig4a_loss_vs_epoch.csv");
 }

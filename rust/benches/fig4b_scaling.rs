@@ -3,9 +3,8 @@
 //! with the number of nodes.
 
 use rfast::algo::AlgoKind;
-use rfast::exp::{run_sim, Workload};
+use rfast::exp::{Experiment, Stop, Workload};
 use rfast::metrics::{save_series_csv, Series, Table};
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -21,12 +20,13 @@ fn main() {
         let topo = rfast::graph::Topology::binary_tree(n);
         let mut cfg = Workload::LogReg.paper_config();
         cfg.seed = 2;
-        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
-                             StopRule::TargetLoss {
-                                 loss: target,
-                                 max_time: 2_000.0,
-                             });
-        let t = report.series["loss_vs_time"]
+        let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::TargetLoss { loss: target, max_time: 2_000.0 })
+            .run()
+            .expect("fig4b run");
+        let t = run.report.series["loss_vs_time"]
             .time_to_reach(target)
             .unwrap_or(f64::INFINITY);
         let b = *base.get_or_insert(t);
@@ -34,8 +34,8 @@ fn main() {
             n.to_string(),
             format!("{t:.2}"),
             format!("{:.2}×", b / t),
-            format!("{:.0}", report.scalars["grad_wakes"]),
-            format!("{:.1}", report.scalars["bytes_sent"] / 1e6),
+            format!("{}", run.stats.total_steps()),
+            format!("{:.1}", run.stats.bytes_sent as f64 / 1e6),
         ]);
         curve.push(n as f64, t);
     }

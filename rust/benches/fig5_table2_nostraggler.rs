@@ -13,11 +13,11 @@
 //!   * async AD-PSGD / OSGP are similarly fast but land at lower accuracy
 //!     under packet loss; R-FAST matches the synchronous accuracy.
 
-use rfast::exp::{run_sim, save_comparison_csvs, Workload, PAPER_BASELINES};
+use rfast::algo::AlgoKind;
+use rfast::exp::{Experiment, Stop, Workload, PAPER_BASELINES};
 use rfast::graph::Topology;
 use rfast::metrics::{fmt_mins, Table};
 use rfast::scenario::Scenario;
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -28,38 +28,39 @@ fn main() {
         .unwrap_or(10.0);
     let topo = Topology::ring(n);
 
+    // §VI ¶1 as a named scenario: 2% loss — the link layer applies it to
+    // the loss-tolerant (async) algorithms only
+    let mut cfg = Workload::Mlp.paper_config();
+    cfg.seed = 4;
+    cfg.gamma_decay = Some((5.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — ÷10 per 5 of our 10
+    cfg.scenario = Some(Scenario::by_name("paper_fig5").unwrap());
+    // sweep-native: the per-algorithm tuned γ is applied by the sweep
+    let cmp = Experiment::new(Workload::Mlp, AlgoKind::RFast)
+        .topology(&topo)
+        .config(cfg)
+        .stop(Stop::Epochs(epochs))
+        .sweep_algos_tuned(&PAPER_BASELINES)
+        .expect("fig5 sweep");
+
     let mut table = Table::new(
         &format!("Table II (no straggler): {epochs} epochs on {n}-node ring, \
                   MLP proxy"),
         &["algorithm", "time(mins)", "acc(%)", "rel. time vs R-FAST"],
     );
-    let mut reports = Vec::new();
     let mut rfast_time = None;
-    for algo in PAPER_BASELINES {
-        let mut cfg = Workload::Mlp.paper_config();
-        cfg.seed = 4;
-        cfg.gamma = rfast::exp::tuned_gamma(Workload::Mlp, algo);
-        cfg.gamma_decay = Some((5.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — ÷10 per 5 of our 10
-        // §VI ¶1 as a named scenario: 2% loss — the link layer applies it
-        // to the loss-tolerant (async) algorithms only
-        cfg.scenario = Some(Scenario::by_name("paper_fig5").unwrap());
-        let mut r = run_sim(Workload::Mlp, algo, &topo, &cfg,
-                            StopRule::Epochs(epochs));
-        let time = r.scalars["virtual_time"];
-        let acc = r.series["acc_vs_time"].last_y().unwrap_or(0.0);
+    for run in &cmp.runs {
+        let time = run.report.scalars["virtual_time"];
+        let acc = run.report.series["acc_vs_time"].last_y().unwrap_or(0.0);
         let base = *rfast_time.get_or_insert(time);
         table.row(vec![
-            algo.name().to_string(),
+            run.report.label.clone(),
             fmt_mins(time),
             format!("{:.2}", acc * 100.0),
             format!("{:.2}×", time / base),
         ]);
-        r.label = algo.name().to_string();
-        reports.push(r);
     }
     table.print();
-    let refs: Vec<&_> = reports.iter().collect();
-    save_comparison_csvs(Path::new("runs"), "fig5", &refs).unwrap();
+    cmp.save_csvs(Path::new("runs"), "fig5").unwrap();
     println!("Fig 5a: runs/fig5_loss_vs_time.csv");
     println!("Fig 5b: runs/fig5_loss_vs_epoch.csv");
     println!("Fig 5c: runs/fig5_acc_vs_epoch.csv");

@@ -8,11 +8,11 @@
 //! AD-PSGD / OSGP barely move; R-FAST keeps the best accuracy among the
 //! asynchronous ones.
 
-use rfast::exp::{run_sim, save_comparison_csvs, Workload, PAPER_BASELINES};
+use rfast::algo::AlgoKind;
+use rfast::exp::{Comparison, Experiment, Stop, Workload, PAPER_BASELINES};
 use rfast::graph::Topology;
 use rfast::metrics::{fmt_mins, Table};
 use rfast::scenario::Scenario;
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -29,6 +29,23 @@ fn main() {
     let clean_scenario = Scenario::by_name("paper_fig5").unwrap();
     let topo = Topology::ring(n);
 
+    // one base chain, two scenario sweeps (clean = same 2% loss, no
+    // straggler — the "slowdown vs clean" denominator)
+    let sweep = |sc: &Scenario| -> Comparison {
+        let mut cfg = Workload::Mlp.paper_config();
+        cfg.seed = 4;
+        cfg.gamma_decay = Some((5.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — ÷10 per 5 of our 10
+        cfg.scenario = Some(sc.clone());
+        Experiment::new(Workload::Mlp, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Epochs(epochs))
+            .sweep_algos_tuned(&PAPER_BASELINES)
+            .expect("fig6 sweep")
+    };
+    let clean = sweep(&clean_scenario);
+    let faulty = sweep(&scenario);
+
     let mut table = Table::new(
         &format!("Table II (scenario {}): {epochs} epochs, \
                   {n}-node ring, MLP proxy",
@@ -36,36 +53,20 @@ fn main() {
         &["algorithm", "time(mins)", "acc(%)", "slowdown vs clean",
           "rel. time vs R-FAST"],
     );
-    let mut reports = Vec::new();
     let mut rfast_time = None;
-    for algo in PAPER_BASELINES {
-        // clean run (same 2% loss, no straggler) for the slowdown column
-        let mut cfg = Workload::Mlp.paper_config();
-        cfg.seed = 4;
-        cfg.gamma = rfast::exp::tuned_gamma(Workload::Mlp, algo);
-        cfg.gamma_decay = Some((5.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — ÷10 per 5 of our 10
-        cfg.scenario = Some(clean_scenario.clone());
-        let clean = run_sim(Workload::Mlp, algo, &topo, &cfg,
-                            StopRule::Epochs(epochs));
-        // faulty run
-        cfg.scenario = Some(scenario.clone());
-        let mut r = run_sim(Workload::Mlp, algo, &topo, &cfg,
-                            StopRule::Epochs(epochs));
-        let time = r.scalars["virtual_time"];
-        let acc = r.series["acc_vs_time"].last_y().unwrap_or(0.0);
+    for (run, clean_run) in faulty.runs.iter().zip(&clean.runs) {
+        let time = run.report.scalars["virtual_time"];
+        let acc = run.report.series["acc_vs_time"].last_y().unwrap_or(0.0);
         let base = *rfast_time.get_or_insert(time);
         table.row(vec![
-            algo.name().to_string(),
+            run.report.label.clone(),
             fmt_mins(time),
             format!("{:.2}", acc * 100.0),
-            format!("{:.2}×", time / clean.scalars["virtual_time"]),
+            format!("{:.2}×", time / clean_run.report.scalars["virtual_time"]),
             format!("{:.2}×", time / base),
         ]);
-        r.label = algo.name().to_string();
-        reports.push(r);
     }
     table.print();
-    let refs: Vec<&_> = reports.iter().collect();
-    save_comparison_csvs(Path::new("runs"), "fig6", &refs).unwrap();
+    faulty.save_csvs(Path::new("runs"), "fig6").unwrap();
     println!("Fig 6a-c: runs/fig6_{{loss_vs_time,loss_vs_epoch,acc_vs_epoch}}.csv");
 }

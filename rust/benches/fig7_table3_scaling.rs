@@ -10,10 +10,9 @@
 //! set (Appendix G) — whose log-diameter keeps mixing fast at every n.
 
 use rfast::algo::AlgoKind;
-use rfast::exp::{run_sim, save_comparison_csvs, Workload};
+use rfast::exp::{tuned_gamma, Comparison, Experiment, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::{fmt_mins, Table};
-use rfast::sim::StopRule;
 use std::path::Path;
 
 fn main() {
@@ -26,19 +25,23 @@ fn main() {
                   MLP proxy)"),
         &["nodes", "time(mins)", "acc(%)", "speedup vs 4"],
     );
-    let mut reports = Vec::new();
+    let mut cmp = Comparison::default();
     let mut base = None;
     for n in [4usize, 8, 16] {
         let topo = Topology::exponential(n);
         let mut cfg = Workload::Mlp.paper_config();
         cfg.seed = 6;
-        cfg.gamma = rfast::exp::tuned_gamma(Workload::Mlp, AlgoKind::RFast);
+        cfg.gamma = tuned_gamma(Workload::Mlp, AlgoKind::RFast);
         cfg.gamma_decay = Some((10.0, 0.1)); // paper: lr ÷10 per 30 of 90 epochs — scaled
         cfg.loss_prob = 0.02;
-        let mut r = run_sim(Workload::Mlp, AlgoKind::RFast, &topo, &cfg,
-                            StopRule::Epochs(epochs));
-        let time = r.scalars["virtual_time"];
-        let acc = r.series["acc_vs_time"].last_y().unwrap_or(0.0);
+        let mut run = Experiment::new(Workload::Mlp, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Epochs(epochs))
+            .run()
+            .expect("fig7 run");
+        let time = run.report.scalars["virtual_time"];
+        let acc = run.report.series["acc_vs_time"].last_y().unwrap_or(0.0);
         let b = *base.get_or_insert(time);
         table.row(vec![
             n.to_string(),
@@ -46,12 +49,11 @@ fn main() {
             format!("{:.2}", acc * 100.0),
             format!("{:.2}×", b / time),
         ]);
-        r.label = format!("{n}-nodes");
-        reports.push(r);
+        run.report.label = format!("{n}-nodes");
+        cmp.runs.push(run);
     }
     table.print();
-    let refs: Vec<&_> = reports.iter().collect();
-    save_comparison_csvs(Path::new("runs"), "fig7", &refs).unwrap();
+    cmp.save_csvs(Path::new("runs"), "fig7").unwrap();
     println!("Fig 7: runs/fig7_acc_vs_time.csv");
     println!("Expected shape: near-linear time scaling, small accuracy loss \
               (paper: 79.29/79.12/79.01%).");

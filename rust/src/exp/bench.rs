@@ -19,13 +19,12 @@
 //!   step fails on schema-invalid output).
 
 use crate::algo::{AlgoKind, NodeState};
-use crate::exp::{run_sim, Workload};
+use crate::exp::{Experiment, Stop, Workload};
 use crate::graph::Topology;
 use crate::jsonio::Json;
 use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, NodeOracle,
                     QuadraticOracle};
 use crate::prng::Rng;
-use crate::sim::StopRule;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -261,7 +260,7 @@ pub fn hotpath_suite(quick: bool) -> Vec<HotpathResult> {
             let mut sim = crate::sim::Simulator::new(cfg, &topo,
                                                      AlgoKind::RFast,
                                                      quad.into_set());
-            sim.run(StopRule::Iterations(10_000));
+            sim.run(Stop::Iterations(10_000));
         }));
     }
 
@@ -337,8 +336,13 @@ pub fn scaling_sweep(node_counts: &[usize], epochs: f64) -> Vec<ScalingPoint> {
             let mut cfg = Workload::LogReg.paper_config();
             cfg.seed = 2;
             let t0 = std::time::Instant::now();
-            let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo,
-                                 &cfg, StopRule::Epochs(epochs));
+            let report = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+                .topology(&topo)
+                .config(cfg)
+                .stop(Stop::Epochs(epochs))
+                .run()
+                .expect("scaling sweep run")
+                .report;
             let wall = t0.elapsed().as_secs_f64();
             let s = |k: &str| report.scalars.get(k).copied().unwrap_or(0.0);
             ScalingPoint {

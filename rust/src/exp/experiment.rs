@@ -1,0 +1,672 @@
+//! The `Experiment` builder — ONE typed entry point over both engines.
+//!
+//! Every paper figure needs the same (workload, algorithm, topology,
+//! scenario) run driven through *both* engines: virtual time for
+//! controlled comparisons, wall clock for the straggler/async claims.
+//! The builder replaces the positional-argument `run_*` free functions
+//! (now deprecated shims) with one chain:
+//!
+//! ```text
+//! Experiment::new(Workload::LogReg, AlgoKind::RFast)
+//!     .topology(&topo)
+//!     .config(cfg)
+//!     .scenario(&sc)
+//!     .engine(Engine::Threaded { pace: Some(0.01) })
+//!     .stop(Stop::Epochs(10.0))
+//!     .run()?
+//! ```
+//!
+//! and returns a [`Run`]: the familiar [`Report`] plus a unified
+//! [`RunStats`] whose scalar fields mean the same thing on both engines
+//! (engine-specific extras are `Option`s). Misuse is a typed
+//! [`ExpError`], never a panic or a bare string. Sweeps are native:
+//! [`Experiment::sweep_algos`] / [`Experiment::sweep_topologies`] /
+//! [`Experiment::sweep_engines`] return a [`Comparison`] that feeds
+//! [`save_comparison_csvs`](super::save_comparison_csvs) directly.
+//!
+//! Stop-rule ↔ engine semantics (DESIGN.md §9):
+//!
+//! | `Stop`          | `Engine::Sim`                  | `Engine::Threaded`            |
+//! |-----------------|--------------------------------|-------------------------------|
+//! | `Time(s)`       | `s` *virtual* seconds          | `s` *wall* seconds            |
+//! | `Iterations(k)` | `k` gradient steps, all nodes  | `k` gradient steps, all nodes |
+//! | `Epochs(e)`     | global epoch counter ≥ `e`     | steps × epoch-mapping ≥ `e`   |
+//! | `TargetLoss`    | eval loss ≤ target or deadline | eval loss ≤ target or deadline|
+
+use super::{tuned_gamma, Workload};
+use crate::algo::AlgoKind;
+use crate::config::SimConfig;
+use crate::graph::{Topology, TopologyKind};
+use crate::metrics::{Report, Series};
+use crate::oracle::{LogRegFactory, OracleFactory};
+use crate::runner::{RunnerStats, ThreadedRunner};
+use crate::scenario::Scenario;
+use crate::sim::{SimStats, Simulator};
+use std::io::Write;
+use std::path::Path;
+
+/// Engine-agnostic stop rule — the merge of the simulator's old
+/// `StopRule` and the runner's old `RunUntil`. `Time` reads the engine's
+/// own clock: virtual seconds on [`Engine::Sim`], wall seconds on
+/// [`Engine::Threaded`]; the other variants mean the same thing on both.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Stop {
+    /// Seconds on the engine's clock (virtual for Sim, wall for Threaded).
+    Time(f64),
+    /// Total gradient computations across all nodes.
+    Iterations(u64),
+    /// Global epochs (needs a workload with an epoch mapping; the paper's
+    /// Table II protocol).
+    Epochs(f64),
+    /// Stop once the evaluated loss reaches `loss`, or at `max_time`
+    /// seconds on the engine's clock — whichever comes first.
+    TargetLoss { loss: f64, max_time: f64 },
+}
+
+impl Stop {
+    /// Default deadline for a bare `loss:L` spec (one hour on the
+    /// engine's clock) — finite, so an unreachable loss target ends the
+    /// run instead of hanging it.
+    pub const DEFAULT_TARGET_DEADLINE: f64 = 3_600.0;
+
+    /// Parse a CLI spec: `time:T`, `iters:K`, `epochs:E`,
+    /// `loss:L[:MAX_TIME]` (the `repro train --stop` grammar; MAX_TIME
+    /// defaults to [`Stop::DEFAULT_TARGET_DEADLINE`]).
+    pub fn parse(spec: &str) -> Result<Stop, String> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("--stop wants kind:value, got {spec:?}"))?;
+        // NaN/inf parse as valid f64 but make a stop rule that never
+        // fires (every `>=` comparison is false against NaN) — reject
+        // them here so a typo can't hang the run
+        let num = |v: &str, what: &str| -> Result<f64, String> {
+            let x = v
+                .parse::<f64>()
+                .map_err(|_| format!("--stop {what}: bad number {v:?}"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!(
+                    "--stop {what}: wants a finite non-negative number, \
+                     got {v:?}"
+                ));
+            }
+            Ok(x)
+        };
+        match kind {
+            "time" => Ok(Stop::Time(num(rest, "time")?)),
+            "iters" => Ok(Stop::Iterations(
+                rest.parse::<u64>()
+                    .map_err(|_| format!("--stop iters: bad count {rest:?}"))?,
+            )),
+            "epochs" => Ok(Stop::Epochs(num(rest, "epochs")?)),
+            "loss" => {
+                let (l, max) = match rest.split_once(':') {
+                    Some((l, m)) => (num(l, "loss")?, num(m, "loss max")?),
+                    // finite fallback deadline: an unreachable target
+                    // must end the run, not hang it
+                    None => (num(rest, "loss")?, Stop::DEFAULT_TARGET_DEADLINE),
+                };
+                Ok(Stop::TargetLoss { loss: l, max_time: max })
+            }
+            other => Err(format!(
+                "--stop: unknown kind {other:?} (time|iters|epochs|loss)"
+            )),
+        }
+    }
+}
+
+/// Which engine executes the run. (Not to be confused with the PJRT
+/// executor `runtime::Engine` — this picks the *training* engine.)
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Engine {
+    /// Deterministic discrete-event simulator (virtual time).
+    Sim,
+    /// Thread-per-node wall-clock runner. `pace` bounds the minimum
+    /// per-iteration duration in seconds (`None` when the oracle is
+    /// naturally paced by real compute).
+    Threaded { pace: Option<f64> },
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Sim => "sim",
+            Engine::Threaded { .. } => "threaded",
+        }
+    }
+}
+
+/// Typed failure of [`Experiment::run`] — replaces the stringly
+/// `Result<_, String>` of the old free functions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExpError {
+    /// `.topology(..)` was never called.
+    MissingTopology,
+    /// `.stop(..)` was never called.
+    MissingStop,
+    /// The workload cannot run on the chosen engine; `hint` says where
+    /// that combination actually lives (e.g. the PJRT wall-clock path).
+    UnsupportedWorkload {
+        workload: &'static str,
+        engine: &'static str,
+        hint: String,
+    },
+    /// `Stop::Epochs` on a workload with no dataset-epoch mapping
+    /// (closed-form quadratics count steps, not passes over data).
+    NoEpochMapping { workload: &'static str },
+    /// `SimConfig::validate` failed.
+    InvalidConfig(String),
+    /// Scenario validation failed; `field` is a JSON-path-like pointer to
+    /// the offending entry (`"stragglers[0].factor"`).
+    InvalidScenario {
+        scenario: String,
+        field: String,
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for ExpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExpError::MissingTopology => {
+                write!(f, "experiment has no topology (call .topology(..))")
+            }
+            ExpError::MissingStop => {
+                write!(f, "experiment has no stop rule (call .stop(..))")
+            }
+            ExpError::UnsupportedWorkload { workload, engine, hint } => {
+                write!(f, "workload {workload:?} does not run on the \
+                           {engine} engine: {hint}")
+            }
+            ExpError::NoEpochMapping { workload } => {
+                write!(f, "Stop::Epochs needs a workload with an epoch \
+                           mapping; {workload:?} has none (use \
+                           Stop::Iterations or Stop::Time)")
+            }
+            ExpError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
+            ExpError::InvalidScenario { scenario, field, detail } => {
+                write!(f, "invalid scenario {scenario:?} at {field}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExpError {}
+
+/// Unified run counters — the merge of [`SimStats`] and [`RunnerStats`]:
+/// the shared fields mean the same thing on both engines; fields only
+/// one engine can produce are `Option`s tagged with their engine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Messages emitted (before loss/backpressure verdicts).
+    pub msgs_sent: u64,
+    /// Sender-side Bernoulli drops (async algorithms only).
+    pub msgs_lost: u64,
+    /// Discarded because the link still had an unacked packet in flight.
+    pub msgs_backpressured: u64,
+    /// Sends delayed by scenario link degradation (bandwidth FIFO on both
+    /// engines; the threaded runner also counts injected-latency sleeps).
+    pub msgs_paced: u64,
+    /// Payload bytes actually transmitted (Deliver verdicts only).
+    pub bytes_sent: u64,
+    /// Gradient steps per node (sums to the engines' total step count).
+    pub steps_per_node: Vec<u64>,
+    /// Sim only: deliveries are explicit events there.
+    pub msgs_delivered: Option<u64>,
+    /// Sim only: non-gradient wakes (ring phases etc.).
+    pub comm_wakes: Option<u64>,
+    /// Sim only: virtual seconds when the run stopped.
+    pub virtual_time: Option<f64>,
+    /// Threaded only: wall seconds the run took.
+    pub wall_seconds: Option<f64>,
+}
+
+impl RunStats {
+    pub fn from_sim(s: SimStats, steps_per_node: Vec<u64>) -> RunStats {
+        RunStats {
+            msgs_sent: s.msgs_sent,
+            msgs_lost: s.msgs_lost,
+            msgs_backpressured: s.msgs_backpressured,
+            msgs_paced: s.msgs_paced,
+            bytes_sent: s.bytes_sent,
+            steps_per_node,
+            msgs_delivered: Some(s.msgs_delivered),
+            comm_wakes: Some(s.comm_wakes),
+            virtual_time: Some(s.virtual_time),
+            wall_seconds: None,
+        }
+    }
+
+    pub fn from_runner(s: RunnerStats) -> RunStats {
+        RunStats {
+            msgs_sent: s.msgs_sent,
+            msgs_lost: s.msgs_lost,
+            msgs_backpressured: s.msgs_backpressured,
+            msgs_paced: s.msgs_paced,
+            bytes_sent: s.bytes_sent,
+            steps_per_node: s.steps_per_node,
+            msgs_delivered: None,
+            comm_wakes: None,
+            virtual_time: None,
+            wall_seconds: Some(s.wall_seconds),
+        }
+    }
+
+    /// Total gradient steps across all nodes.
+    pub fn total_steps(&self) -> u64 {
+        self.steps_per_node.iter().sum()
+    }
+
+    /// Seconds on whichever clock the engine ran (virtual or wall).
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.virtual_time.or(self.wall_seconds).unwrap_or(0.0)
+    }
+}
+
+/// One finished experiment: the [`Report`] (series + scalar summary) plus
+/// the unified [`RunStats`] and the engine that produced them.
+#[derive(Clone, Debug)]
+pub struct Run {
+    pub report: Report,
+    pub stats: RunStats,
+    pub engine: Engine,
+}
+
+impl Run {
+    /// The engine's eval-loss curve: `loss_vs_time` on Sim,
+    /// `loss_vs_wall` on Threaded — so callers comparing engines never
+    /// branch on the series name.
+    pub fn loss_series(&self) -> Option<&Series> {
+        let name = match self.engine {
+            Engine::Sim => "loss_vs_time",
+            Engine::Threaded { .. } => "loss_vs_wall",
+        };
+        self.report.series.get(name)
+    }
+}
+
+/// A labeled set of [`Run`]s from a sweep; feeds
+/// [`save_comparison_csvs`](super::save_comparison_csvs) directly.
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    pub runs: Vec<Run>,
+}
+
+impl Comparison {
+    pub fn reports(&self) -> Vec<&Report> {
+        self.runs.iter().map(|r| &r.report).collect()
+    }
+
+    /// Write every shared series as `DIR/PREFIX_<series>.csv` (one column
+    /// per run, like the benches always did) plus
+    /// `DIR/PREFIX_scalars.csv` — the side-by-side scalar table that
+    /// stays meaningful even when the runs share no series (e.g. a
+    /// sim-vs-threaded engine sweep, whose curves live on different
+    /// clocks but whose scalar keys are unified).
+    pub fn save_csvs(&self, dir: &Path, prefix: &str) -> std::io::Result<()> {
+        super::save_comparison_csvs(dir, prefix, &self.reports())?;
+        self.save_scalars_csv(&dir.join(format!("{prefix}_scalars.csv")))
+    }
+
+    /// Column labels of the side-by-side scalar table (one per run).
+    pub fn labels(&self) -> Vec<&str> {
+        self.runs.iter().map(|r| r.report.label.as_str()).collect()
+    }
+
+    /// Rows of the side-by-side scalar table: the union of scalar keys
+    /// (sorted) with one `Option<f64>` cell per run, in run order —
+    /// the single source both the CSV emit and console renderings use.
+    pub fn scalar_rows(&self) -> Vec<(String, Vec<Option<f64>>)> {
+        use std::collections::BTreeSet;
+        let mut keys: BTreeSet<&str> = BTreeSet::new();
+        for r in &self.runs {
+            keys.extend(r.report.scalars.keys().map(|k| k.as_str()));
+        }
+        keys.into_iter()
+            .map(|key| {
+                let cells = self
+                    .runs
+                    .iter()
+                    .map(|r| r.report.scalars.get(key).copied())
+                    .collect();
+                (key.to_string(), cells)
+            })
+            .collect()
+    }
+
+    /// The scalar table alone: rows = union of scalar keys, one column
+    /// per run (empty cell where a run lacks the key).
+    pub fn save_scalars_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "metric")?;
+        for label in self.labels() {
+            write!(f, ",{label}")?;
+        }
+        writeln!(f)?;
+        for (key, cells) in self.scalar_rows() {
+            write!(f, "{key}")?;
+            for cell in cells {
+                match cell {
+                    Some(v) => write!(f, ",{v}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Builder for one run (or a sweep of runs) — see the module docs for
+/// the full chain. `Clone` so sweeps can fan a base experiment out.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    workload: Workload,
+    algo: AlgoKind,
+    topology: Option<Topology>,
+    cfg: Option<SimConfig>,
+    /// Shortcut overrides, applied on top of the effective config at
+    /// `run()` time so `.seed(..)`/`.gamma(..)` win regardless of where
+    /// they sit in the chain relative to `.config(..)`.
+    seed_override: Option<u64>,
+    gamma_override: Option<f32>,
+    scenario: Option<Scenario>,
+    engine: Engine,
+    stop: Option<Stop>,
+}
+
+impl Experiment {
+    /// Start a builder; workload + algorithm are the two axes every
+    /// experiment has. Defaults: no topology (required), the workload's
+    /// paper-calibrated config, no scenario, [`Engine::Sim`], no stop
+    /// rule (required).
+    pub fn new(workload: Workload, algo: AlgoKind) -> Experiment {
+        Experiment {
+            workload,
+            algo,
+            topology: None,
+            cfg: None,
+            seed_override: None,
+            gamma_override: None,
+            scenario: None,
+            engine: Engine::Sim,
+            stop: None,
+        }
+    }
+
+    /// Communication topology (required before [`Experiment::run`]).
+    pub fn topology(mut self, topo: &Topology) -> Experiment {
+        self.topology = Some(topo.clone());
+        self
+    }
+
+    /// Full config override. Without it the workload's
+    /// [`paper_config`](Workload::paper_config) is used. A scenario
+    /// already embedded in the config is honored; one set through
+    /// [`Experiment::scenario`] takes precedence (and labels the report).
+    pub fn config(mut self, cfg: SimConfig) -> Experiment {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Seed shortcut — overrides the effective config's seed at `run()`
+    /// time, so it wins no matter where it sits relative to `.config(..)`
+    /// in the chain.
+    pub fn seed(mut self, seed: u64) -> Experiment {
+        self.seed_override = Some(seed);
+        self
+    }
+
+    /// Step-size shortcut — overrides the effective config's γ at
+    /// `run()` time, order-independent like [`Experiment::seed`].
+    pub fn gamma(mut self, gamma: f32) -> Experiment {
+        self.gamma_override = Some(gamma);
+        self
+    }
+
+    /// Fault-injection scenario; the report label gains a ` [name]`
+    /// suffix, like `run_sim_under` always did.
+    pub fn scenario(mut self, sc: &Scenario) -> Experiment {
+        self.scenario = Some(sc.clone());
+        self
+    }
+
+    /// `Option`-shaped scenario setter — handy in clean-vs-faulty
+    /// comparison loops.
+    pub fn maybe_scenario(mut self, sc: Option<&Scenario>) -> Experiment {
+        self.scenario = sc.cloned();
+        self
+    }
+
+    /// Which engine runs it (default [`Engine::Sim`]).
+    pub fn engine(mut self, engine: Engine) -> Experiment {
+        self.engine = engine;
+        self
+    }
+
+    /// Stop rule (required before [`Experiment::run`]).
+    pub fn stop(mut self, stop: Stop) -> Experiment {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// Can `workload` execute on `engine` at all? Checked up front (and
+    /// by sweeps over every leg before running any), so an engine sweep
+    /// never burns a full run on one engine only to error on the next.
+    fn check_workload_on(&self, engine: Engine) -> Result<(), ExpError> {
+        match (self.workload, engine) {
+            (Workload::Mlp, Engine::Threaded { .. }) => {
+                Err(ExpError::UnsupportedWorkload {
+                    workload: self.workload.name(),
+                    engine: "threaded",
+                    hint: "the threaded engine drives the logreg and \
+                           quadratic workloads with pure-rust oracles; the \
+                           MLP proxy needs the PJRT path \
+                           (examples/e2e_transformer.rs)"
+                        .into(),
+                })
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Validate the chain and execute it on the configured engine.
+    pub fn run(&self) -> Result<Run, ExpError> {
+        let topo = self.topology.as_ref().ok_or(ExpError::MissingTopology)?;
+        let stop = self.stop.ok_or(ExpError::MissingStop)?;
+        self.check_workload_on(self.engine)?;
+        if matches!(stop, Stop::Epochs(_)) && !self.workload.has_epoch_mapping()
+        {
+            return Err(ExpError::NoEpochMapping {
+                workload: self.workload.name(),
+            });
+        }
+        let mut cfg = self
+            .cfg
+            .clone()
+            .unwrap_or_else(|| self.workload.paper_config());
+        if let Some(s) = self.seed_override {
+            cfg.seed = s;
+        }
+        if let Some(g) = self.gamma_override {
+            cfg.gamma = g;
+        }
+        if self.scenario.is_some() {
+            cfg.scenario = self.scenario.clone();
+        }
+        if let Some(sc) = &cfg.scenario {
+            sc.validate_detailed(Some(topo.n())).map_err(
+                |(field, detail)| ExpError::InvalidScenario {
+                    scenario: sc.name.clone(),
+                    field,
+                    detail,
+                },
+            )?;
+        }
+        cfg.validate().map_err(ExpError::InvalidConfig)?;
+        match self.engine {
+            Engine::Sim => self.run_on_sim(topo, cfg, stop),
+            Engine::Threaded { pace } => {
+                self.run_on_threaded(topo, cfg, stop, pace)
+            }
+        }
+    }
+
+    fn label_scenario(&self, report: &mut Report) {
+        if let Some(sc) = &self.scenario {
+            report.label = format!("{} [{}]", report.label, sc.name);
+        }
+    }
+
+    fn run_on_sim(&self, topo: &Topology, cfg: SimConfig,
+                  stop: Stop) -> Result<Run, ExpError> {
+        let set = self.workload.build_set(topo.n(), &cfg);
+        let x0 = self.workload.x0(set.dim, cfg.seed);
+        let mut sim = Simulator::with_x0(cfg, topo, self.algo, set, &x0);
+        let mut report = sim.run(stop);
+        self.label_scenario(&mut report);
+        let stats =
+            RunStats::from_sim(sim.stats(), sim.steps_per_node().to_vec());
+        Ok(Run { report, stats, engine: Engine::Sim })
+    }
+
+    fn run_on_threaded(&self, topo: &Topology, cfg: SimConfig, stop: Stop,
+                       pace: Option<f64>) -> Result<Run, ExpError> {
+        let engine = Engine::Threaded { pace };
+        match self.workload {
+            Workload::LogReg => {
+                let factory = LogRegFactory::paper_workload(
+                    topo.n(), cfg.batch, cfg.skew_alpha, cfg.seed);
+                let x0 = self.workload.x0(factory.dim(), cfg.seed);
+                let mut runner =
+                    ThreadedRunner::new(cfg, topo, self.algo, x0);
+                if let Some(p) = pace {
+                    runner = runner.with_pace(p);
+                }
+                let mut eval = factory.eval_fn();
+                let (mut report, stats) = runner.run(&factory, &mut eval, stop);
+                self.label_scenario(&mut report);
+                Ok(Run {
+                    report,
+                    stats: RunStats::from_runner(stats),
+                    engine,
+                })
+            }
+            Workload::Quadratic(spec) => {
+                let quad = spec.build(topo.n(), cfg.seed);
+                let xs = quad.optimum();
+                // same init source as the sim path — the engine-parity
+                // contract needs both engines starting from one x0 rule
+                let x0 = self.workload.x0(spec.dim, cfg.seed);
+                let mut runner =
+                    ThreadedRunner::new(cfg, topo, self.algo, x0);
+                if let Some(p) = pace {
+                    runner = runner.with_pace(p);
+                }
+                let (mut eval, last_mean) =
+                    crate::testutil::tracking_quad_eval(quad.clone());
+                let (mut report, stats) = runner.run(
+                    &crate::testutil::QuadFactory(quad), &mut eval, stop);
+                // wall-clock engines cannot snapshot at the exact stop
+                // instant, so the gap is measured on the last evaluated
+                // mean — the convention every quadratic runner test used
+                report.final_gap = Some(crate::linalg::dist(
+                    &last_mean.lock().unwrap(), &xs));
+                self.label_scenario(&mut report);
+                Ok(Run {
+                    report,
+                    stats: RunStats::from_runner(stats),
+                    engine,
+                })
+            }
+            // unreachable in practice: run() pre-flights workload/engine
+            // compatibility — kept as the authoritative error for direct
+            // calls
+            Workload::Mlp => {
+                Err(self.check_workload_on(Engine::Threaded { pace })
+                    .expect_err("Mlp is not threadable"))
+            }
+        }
+    }
+
+    // ---- sweeps ---------------------------------------------------------
+
+    /// Label for one sweep leg: the swept dimension's name, keeping the
+    /// ` [scenario]` suffix when a scenario was set through the builder —
+    /// sweep artifacts must stay distinguishable from their clean twins.
+    fn sweep_label(&self, base: &str) -> String {
+        match &self.scenario {
+            Some(sc) => format!("{base} [{}]", sc.name),
+            None => base.to_string(),
+        }
+    }
+
+    /// Run once per algorithm; each run's report is labeled with the
+    /// algorithm name.
+    pub fn sweep_algos(&self,
+                       algos: &[AlgoKind]) -> Result<Comparison, ExpError> {
+        let mut runs = Vec::with_capacity(algos.len());
+        for &algo in algos {
+            let mut exp = self.clone();
+            exp.algo = algo;
+            let mut run = exp.run()?;
+            run.report.label = self.sweep_label(algo.name());
+            runs.push(run);
+        }
+        Ok(Comparison { runs })
+    }
+
+    /// [`sweep_algos`](Experiment::sweep_algos) with the per-algorithm
+    /// [`tuned_gamma`] applied on top of the effective config — the Fig
+    /// 5/6 protocol, where gradient-tracking methods get a larger step.
+    pub fn sweep_algos_tuned(
+        &self, algos: &[AlgoKind],
+    ) -> Result<Comparison, ExpError> {
+        let mut runs = Vec::with_capacity(algos.len());
+        for &algo in algos {
+            let mut exp = self.clone();
+            exp.algo = algo;
+            exp = exp.gamma(tuned_gamma(self.workload, algo));
+            let mut run = exp.run()?;
+            run.report.label = self.sweep_label(algo.name());
+            runs.push(run);
+        }
+        Ok(Comparison { runs })
+    }
+
+    /// Run once per topology kind at `n` nodes; each run's report is
+    /// labeled with the topology name.
+    pub fn sweep_topologies(
+        &self, kinds: &[TopologyKind], n: usize,
+    ) -> Result<Comparison, ExpError> {
+        let mut runs = Vec::with_capacity(kinds.len());
+        for &kind in kinds {
+            let exp = self.clone().topology(&kind.build(n));
+            let mut run = exp.run()?;
+            run.report.label = self.sweep_label(kind.name());
+            runs.push(run);
+        }
+        Ok(Comparison { runs })
+    }
+
+    /// Run once per engine (the `repro train --engine both` path); each
+    /// run's report is labeled `sim` / `threaded`. Every engine is
+    /// pre-flighted against the workload before ANY leg runs, so an
+    /// incompatible pairing fails fast instead of after a full first run.
+    pub fn sweep_engines(
+        &self, engines: &[Engine],
+    ) -> Result<Comparison, ExpError> {
+        for &engine in engines {
+            self.check_workload_on(engine)?;
+        }
+        let mut runs = Vec::with_capacity(engines.len());
+        for &engine in engines {
+            let mut run = self.clone().engine(engine).run()?;
+            run.report.label = self.sweep_label(engine.name());
+            runs.push(run);
+        }
+        Ok(Comparison { runs })
+    }
+}

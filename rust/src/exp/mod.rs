@@ -1,24 +1,67 @@
-//! Experiment harness shared by `examples/` and `rust/benches/` — the glue
-//! that turns (workload, topology, algorithm, timing model) into a
-//! [`Report`], so every paper figure/table is regenerated through one code
-//! path. The perf-baseline harness (allocation-counting micro benches,
-//! scaling sweep, `BENCH_*.json` schema) lives in [`bench`].
+//! Experiment harness shared by `examples/`, `rust/benches/` and the
+//! CLI. The canonical entry point is the [`Experiment`] builder
+//! ([`experiment`] module): one typed chain that drives either engine,
+//! returns unified [`RunStats`], and fans out into sweeps
+//! ([`Comparison`]). The old `run_*` free functions survive as
+//! `#[deprecated]` shims over it for one release. The perf-baseline
+//! harness (allocation-counting micro benches, scaling sweep,
+//! `BENCH_*.json` schema) lives in [`bench`].
 
 pub mod bench;
+pub mod experiment;
+
+pub use experiment::{Comparison, Engine, ExpError, Experiment, Run, RunStats,
+                     Stop};
 
 use crate::algo::AlgoKind;
 use crate::config::SimConfig;
 use crate::graph::Topology;
 use crate::metrics::Report;
-use crate::oracle::{GradOracle, LogRegFactory, LogRegOracle, MlpOracle,
-                    OracleFactory, OracleSet};
-use crate::runner::{RunUntil, RunnerStats, ThreadedRunner};
+use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, OracleSet,
+                    QuadraticOracle};
+use crate::runner::RunnerStats;
 use crate::scenario::Scenario;
-use crate::sim::{Simulator, StopRule};
 use std::path::Path;
 
+/// Parameters of a closed-form heterogeneous quadratic family
+/// ([`Workload::Quadratic`]): the per-node curvature range, minimizer
+/// spread (∝ ς of Definition 2) and gradient noise. The node count and
+/// seed come from the experiment (topology / config), so one spec sweeps
+/// cleanly across both.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuadSpec {
+    pub dim: usize,
+    /// Curvature range: per-coordinate H_i diagonals are log-uniform in
+    /// `[h_min, h_max]`.
+    pub h_min: f32,
+    pub h_max: f32,
+    /// Minimizer spread (0 = IID objectives, growing spread grows ς).
+    pub spread: f32,
+    /// Per-entry gradient noise σ (Assumption 5).
+    pub noise: f32,
+}
+
+impl QuadSpec {
+    /// The standard heterogeneous test instance (spread 1, no noise) —
+    /// the builder twin of [`QuadraticOracle::heterogeneous`].
+    pub fn heterogeneous(dim: usize, h_min: f32, h_max: f32) -> QuadSpec {
+        QuadSpec { dim, h_min, h_max, spread: 1.0, noise: 0.0 }
+    }
+
+    /// With stochastic gradients — the twin of [`QuadraticOracle::noisy`].
+    pub fn noisy(dim: usize, sigma: f32) -> QuadSpec {
+        QuadSpec { dim, h_min: 0.5, h_max: 4.0, spread: 1.0, noise: sigma }
+    }
+
+    /// Materialize the family for `n` nodes from the experiment seed.
+    pub fn build(&self, n: usize, seed: u64) -> QuadraticOracle {
+        QuadraticOracle::new(self.dim, n, self.h_min, self.h_max, self.spread,
+                             self.noise, seed)
+    }
+}
+
 /// Which training workload an experiment drives.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Workload {
     /// §VI-A: regularized logreg on the synthetic two-digit set
     /// (pure-rust oracle — exact twin of the Pallas kernel).
@@ -26,6 +69,9 @@ pub enum Workload {
     /// §VI-B proxy: 10-class MLP on synthetic images (ResNet-50 stand-in;
     /// DESIGN.md §4).
     Mlp,
+    /// Closed-form heterogeneous quadratics (exact optimality gap) —
+    /// the convergence-proof workload of the test suites and ablations.
+    Quadratic(QuadSpec),
 }
 
 impl Workload {
@@ -39,14 +85,17 @@ impl Workload {
                 n, cfg.batch, cfg.skew_alpha, cfg.seed,
             )
             .into_set(),
+            Workload::Quadratic(spec) => spec.build(n, cfg.seed).into_set(),
         }
     }
 
-    /// Paper-calibrated timing model for this workload.
+    /// Paper-calibrated timing model for this workload (quadratics are
+    /// not a paper workload; they default to `SimConfig::default()`).
     pub fn paper_config(&self) -> SimConfig {
         match self {
             Workload::LogReg => SimConfig::logreg_paper(),
             Workload::Mlp => SimConfig::resnet_paper(),
+            Workload::Quadratic(_) => SimConfig::default(),
         }
     }
 
@@ -58,7 +107,24 @@ impl Workload {
                 (0..n_dim).map(|_| rng.normal_f32(0.0, 0.01)).collect()
             }
             Workload::Mlp => MlpOracle::init_theta(seed),
+            Workload::Quadratic(_) => vec![0.0; n_dim],
         }
+    }
+
+    /// Stable lowercase name (error messages, CLI, report labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::LogReg => "logreg",
+            Workload::Mlp => "mlp",
+            Workload::Quadratic(_) => "quadratic",
+        }
+    }
+
+    /// Does one minibatch map onto a fraction of a dataset epoch?
+    /// Dataset workloads do; closed-form quadratics have steps, not
+    /// passes over data, so `Stop::Epochs` is a typed error there.
+    pub fn has_epoch_mapping(&self) -> bool {
+        !matches!(self, Workload::Quadratic(_))
     }
 }
 
@@ -82,39 +148,52 @@ pub fn tuned_gamma(workload: Workload, algo: AlgoKind) -> f32 {
 }
 
 /// One simulated run.
+///
+/// Migration: `run_sim(w, a, &topo, &cfg, stop)` ≡
+/// `Experiment::new(w, a).topology(&topo).config(cfg.clone())
+///      .stop(stop).run()?.report`.
+#[deprecated(note = "use exp::Experiment")]
 pub fn run_sim(workload: Workload, algo: AlgoKind, topo: &Topology,
-               cfg: &SimConfig, stop: StopRule) -> Report {
-    let set = workload.build_set(topo.n(), cfg);
-    let x0 = workload.x0(set.dim, cfg.seed);
-    let mut sim = Simulator::with_x0(cfg.clone(), topo, algo, set, &x0);
-    sim.run(stop)
+               cfg: &SimConfig, stop: impl Into<Stop>) -> Report {
+    Experiment::new(workload, algo)
+        .topology(topo)
+        .config(cfg.clone())
+        .stop(stop.into())
+        .run()
+        .unwrap_or_else(|e| panic!("run_sim: {e}"))
+        .report
 }
 
-/// One simulated run under a fault-injection scenario: `cfg`'s scalar
-/// knobs stay as the baseline and `scenario` layers on top (pass
-/// `None` to run clean — handy for clean-vs-faulty comparison loops).
+/// One simulated run under a fault-injection scenario.
+///
+/// Migration: append `.maybe_scenario(scenario)` to the
+/// [`run_sim`]-equivalent builder chain.
+#[deprecated(note = "use exp::Experiment with .scenario(..)")]
 pub fn run_sim_under(workload: Workload, algo: AlgoKind, topo: &Topology,
                      cfg: &SimConfig, scenario: Option<&Scenario>,
-                     stop: StopRule) -> Report {
+                     stop: impl Into<Stop>) -> Report {
+    // historical contract: the scenario argument REPLACES cfg.scenario
+    // unconditionally ("pass None to run clean"), so clear the embedded
+    // one before handing over
     let mut cfg = cfg.clone();
-    cfg.scenario = scenario.cloned();
-    let mut report = run_sim(workload, algo, topo, &cfg, stop);
-    if let Some(sc) = scenario {
-        report.label = format!("{} [{}]", report.label, sc.name);
-    }
-    report
+    cfg.scenario = None;
+    Experiment::new(workload, algo)
+        .topology(topo)
+        .config(cfg)
+        .maybe_scenario(scenario)
+        .stop(stop.into())
+        .run()
+        .unwrap_or_else(|e| panic!("run_sim_under: {e}"))
+        .report
 }
 
-/// Wall-clock counterpart of [`run_sim_under`]: the same workload,
-/// algorithm and scenario driven through the thread-per-node
-/// [`ThreadedRunner`] instead of the simulator. `pace` (seconds) bounds
-/// the minimum per-iteration duration — pass `Some(cfg.compute_mean)` to
-/// emulate the virtual-time cadence on the wall clock, or `None` when the
-/// oracle is naturally paced by real compute.
+/// Wall-clock counterpart of [`run_sim_under`].
 ///
-/// Currently supports [`Workload::LogReg`] with the pure-rust oracle; the
-/// MLP proxy lives in the PJRT artifacts and has its own wall-clock
-/// driver (`examples/e2e_transformer.rs`).
+/// Migration: same chain with
+/// `.engine(Engine::Threaded { pace }).stop(stop)`; the builder returns
+/// the unified [`RunStats`] instead of `RunnerStats` and a typed
+/// [`ExpError`] instead of a `String`.
+#[deprecated(note = "use exp::Experiment with .engine(Engine::Threaded { .. })")]
 pub fn run_threaded_under(
     workload: Workload,
     algo: AlgoKind,
@@ -122,33 +201,29 @@ pub fn run_threaded_under(
     cfg: &SimConfig,
     scenario: Option<&Scenario>,
     pace: Option<f64>,
-    until: RunUntil,
+    until: impl Into<Stop>,
 ) -> Result<(Report, RunnerStats), String> {
+    // as in `run_sim_under`: the scenario argument replaces cfg.scenario
     let mut cfg = cfg.clone();
-    cfg.scenario = scenario.cloned();
-    match workload {
-        Workload::LogReg => {
-            let factory = LogRegFactory::paper_workload(
-                topo.n(), cfg.batch, cfg.skew_alpha, cfg.seed);
-            let x0 = workload.x0(factory.dim(), cfg.seed);
-            let mut runner = ThreadedRunner::new(cfg, topo, algo, x0);
-            if let Some(p) = pace {
-                runner = runner.with_pace(p);
-            }
-            let mut eval = factory.eval_fn();
-            let (mut report, stats) = runner.run(&factory, &mut eval, until);
-            if let Some(sc) = scenario {
-                report.label = format!("{} [{}]", report.label, sc.name);
-            }
-            Ok((report, stats))
-        }
-        Workload::Mlp => Err(
-            "the threaded engine drives the logreg workload with the \
-             pure-rust oracle; the MLP proxy needs the PJRT path \
-             (examples/e2e_transformer.rs)"
-                .into(),
-        ),
-    }
+    cfg.scenario = None;
+    let run = Experiment::new(workload, algo)
+        .topology(topo)
+        .config(cfg)
+        .maybe_scenario(scenario)
+        .engine(Engine::Threaded { pace })
+        .stop(until.into())
+        .run()
+        .map_err(|e| e.to_string())?;
+    let stats = RunnerStats {
+        wall_seconds: run.stats.wall_seconds.unwrap_or(0.0),
+        steps_per_node: run.stats.steps_per_node.clone(),
+        msgs_sent: run.stats.msgs_sent,
+        msgs_lost: run.stats.msgs_lost,
+        msgs_backpressured: run.stats.msgs_backpressured,
+        msgs_paced: run.stats.msgs_paced,
+        bytes_sent: run.stats.bytes_sent,
+    };
+    Ok((run.report, stats))
 }
 
 /// The six-algorithm comparison set of paper §VI-B (Figs 5/6, Table II).
@@ -162,7 +237,8 @@ pub const PAPER_BASELINES: [AlgoKind; 6] = [
 ];
 
 /// Write every series of several reports as per-series CSVs under `dir`,
-/// one file per series name with one column per report.
+/// one file per series name with one column per report. ([`Comparison`]
+/// wraps this plus a side-by-side scalar table.)
 pub fn save_comparison_csvs(dir: &Path, prefix: &str,
                             reports: &[&Report]) -> std::io::Result<()> {
     use std::collections::BTreeSet;
@@ -171,19 +247,21 @@ pub fn save_comparison_csvs(dir: &Path, prefix: &str,
         names.extend(r.series.keys().map(|s| s.as_str()));
     }
     for name in names {
-        let series: Vec<_> = reports
+        // pair each series with ITS OWN report's label — reports missing
+        // this series contribute no column (an engine sweep's curves live
+        // on different clocks, so series sets are often disjoint)
+        let labeled: Vec<crate::metrics::Series> = reports
             .iter()
-            .filter_map(|r| r.series.get(name))
+            .filter_map(|r| {
+                r.series.get(name).map(|s| {
+                    let mut c = s.clone();
+                    c.name = r.label.clone();
+                    c
+                })
+            })
             .collect();
-        if series.is_empty() {
+        if labeled.is_empty() {
             continue;
-        }
-        // label each column with its report label
-        let mut labeled: Vec<crate::metrics::Series> = Vec::new();
-        for (r, s) in reports.iter().zip(&series) {
-            let mut c = (*s).clone();
-            c.name = r.label.clone();
-            labeled.push(c);
         }
         let refs: Vec<&crate::metrics::Series> = labeled.iter().collect();
         crate::metrics::save_series_csv(
@@ -198,6 +276,14 @@ pub fn save_comparison_csvs(dir: &Path, prefix: &str,
 mod tests {
     use super::*;
 
+    /// Per-test unique temp dir: seeded by test name + pid so parallel
+    /// test binaries (and parallel CI shards) never collide on a shared
+    /// fixed path.
+    fn unique_tmp(test: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("rfast_{test}_{}", std::process::id()))
+    }
+
     #[test]
     fn logreg_sim_run_end_to_end() {
         let cfg = SimConfig {
@@ -205,11 +291,19 @@ mod tests {
             ..SimConfig::logreg_paper()
         };
         let topo = Topology::ring(4);
-        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
-                             StopRule::VirtualTime(10.0));
-        let s = &report.series["loss_vs_time"];
+        let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Time(10.0))
+            .run()
+            .unwrap();
+        let s = &run.report.series["loss_vs_time"];
         assert!(s.last_y().unwrap() < s.points[0].1);
-        assert!(report.series.contains_key("acc_vs_time"));
+        assert!(run.report.series.contains_key("acc_vs_time"));
+        assert_eq!(run.stats.total_steps(),
+                   run.report.scalars["grad_wakes"] as u64);
+        assert!(run.stats.virtual_time.is_some());
+        assert!(run.stats.wall_seconds.is_none());
     }
 
     #[test]
@@ -220,14 +314,17 @@ mod tests {
         };
         let topo = Topology::ring(3);
         let sc = Scenario::by_name("lossy_30pct").unwrap();
-        let report = run_sim_under(Workload::LogReg, AlgoKind::RFast, &topo,
-                                   &cfg, Some(&sc),
-                                   StopRule::VirtualTime(3.0));
-        assert!(report.label.contains("lossy_30pct"), "{}", report.label);
-        assert!(report.scalars["msgs_lost"] > 0.0);
-        let clean = run_sim_under(Workload::LogReg, AlgoKind::RFast, &topo,
-                                  &cfg, None, StopRule::VirtualTime(3.0));
-        assert_eq!(clean.scalars["msgs_lost"], 0.0);
+        let base = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Time(3.0));
+        let run = base.clone().scenario(&sc).run().unwrap();
+        assert!(run.report.label.contains("lossy_30pct"), "{}",
+                run.report.label);
+        assert!(run.report.scalars["msgs_lost"] > 0.0);
+        assert!(run.stats.msgs_lost > 0);
+        let clean = base.run().unwrap();
+        assert_eq!(clean.report.scalars["msgs_lost"], 0.0);
     }
 
     #[test]
@@ -238,23 +335,61 @@ mod tests {
         };
         let topo = Topology::ring(3);
         let sc = Scenario::by_name("lossy_30pct").unwrap();
-        let (report, stats) = run_threaded_under(
-            Workload::LogReg, AlgoKind::RFast, &topo, &cfg, Some(&sc),
-            Some(5e-4), RunUntil::WallSeconds(0.3))
+        let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg.clone())
+            .scenario(&sc)
+            .engine(Engine::Threaded { pace: Some(5e-4) })
+            .stop(Stop::Time(0.3))
+            .run()
             .unwrap();
-        assert!(report.label.contains("lossy_30pct"), "{}", report.label);
-        assert!(stats.msgs_lost > 0, "loss ramp active in the runner");
-        assert!(stats.steps_per_node.iter().sum::<u64>() > 0);
-        // the MLP proxy is PJRT-only on this engine
-        assert!(run_threaded_under(Workload::Mlp, AlgoKind::RFast, &topo,
-                                   &cfg, None, None,
-                                   RunUntil::WallSeconds(0.1))
-            .is_err());
+        assert!(run.report.label.contains("lossy_30pct"), "{}",
+                run.report.label);
+        assert!(run.stats.msgs_lost > 0, "loss ramp active in the runner");
+        assert!(run.stats.total_steps() > 0);
+        assert!(run.stats.wall_seconds.is_some());
+        // the MLP proxy is PJRT-only on this engine — typed error with
+        // the pointer to the PJRT path
+        let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .engine(Engine::Threaded { pace: None })
+            .stop(Stop::Time(0.1))
+            .run()
+            .unwrap_err();
+        match err {
+            ExpError::UnsupportedWorkload { hint, .. } => {
+                assert!(hint.contains("PJRT"), "{hint}");
+            }
+            other => panic!("expected UnsupportedWorkload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_builder() {
+        // one release of back-compat: the shims must reproduce the
+        // builder's output exactly (they are thin wrappers over it)
+        let cfg = SimConfig {
+            eval_every: 1.0,
+            ..SimConfig::logreg_paper()
+        };
+        let topo = Topology::ring(3);
+        let via_shim = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &cfg,
+                               Stop::Time(3.0));
+        let via_builder = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Time(3.0))
+            .run()
+            .unwrap();
+        assert_eq!(via_shim.to_json().to_string(),
+                   via_builder.report.to_json().to_string());
     }
 
     #[test]
     fn comparison_csvs_written() {
-        let dir = std::env::temp_dir().join("rfast_cmp_csv");
+        let dir = unique_tmp("comparison_csvs_written");
         let mut r1 = Report::new("A");
         r1.series_mut("loss_vs_time", "t", "l").push(0.0, 1.0);
         let mut r2 = Report::new("B");
@@ -264,5 +399,61 @@ mod tests {
             std::fs::read_to_string(dir.join("test_loss_vs_time.csv")).unwrap();
         assert!(text.starts_with("x,A,B"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_algos_feeds_comparison_csvs() {
+        let cfg = SimConfig {
+            seed: 5,
+            gamma: 0.03,
+            compute_mean: 0.01,
+            link_latency: 0.002,
+            latency_cap: 0.05,
+            eval_every: 2.0,
+            ..SimConfig::default()
+        };
+        let topo = Topology::ring(4);
+        let cmp = Experiment::new(
+                Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)),
+                AlgoKind::RFast)
+            .topology(&topo)
+            .config(cfg)
+            .stop(Stop::Iterations(2_000))
+            .sweep_algos(&[AlgoKind::RFast, AlgoKind::DPsgd])
+            .unwrap();
+        assert_eq!(cmp.runs.len(), 2);
+        assert_eq!(cmp.runs[0].report.label, "R-FAST");
+        assert_eq!(cmp.runs[1].report.label, "D-PSGD");
+        assert!(cmp.runs.iter().all(|r| r.report.final_gap.is_some()));
+        let dir = unique_tmp("sweep_algos_csvs");
+        cmp.save_csvs(&dir, "quad").unwrap();
+        let scalars =
+            std::fs::read_to_string(dir.join("quad_scalars.csv")).unwrap();
+        assert!(scalars.starts_with("metric,R-FAST,D-PSGD"), "{scalars}");
+        assert!(scalars.lines().any(|l| l.starts_with("msgs_lost,")));
+        assert!(dir.join("quad_loss_vs_time.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stop_parse_grammar() {
+        assert_eq!(Stop::parse("iters:200").unwrap(), Stop::Iterations(200));
+        assert_eq!(Stop::parse("time:2.5").unwrap(), Stop::Time(2.5));
+        assert_eq!(Stop::parse("epochs:10").unwrap(), Stop::Epochs(10.0));
+        assert_eq!(Stop::parse("loss:0.1:60").unwrap(),
+                   Stop::TargetLoss { loss: 0.1, max_time: 60.0 });
+        // bare loss target gets a FINITE fallback deadline (no hangs)
+        assert_eq!(Stop::parse("loss:0.1").unwrap(),
+                   Stop::TargetLoss {
+                       loss: 0.1,
+                       max_time: Stop::DEFAULT_TARGET_DEADLINE,
+                   });
+        assert!(Stop::parse("iters:abc").is_err());
+        assert!(Stop::parse("bogus:1").is_err());
+        assert!(Stop::parse("200").is_err());
+        // non-finite/negative values would make a rule that never fires
+        assert!(Stop::parse("time:nan").is_err());
+        assert!(Stop::parse("epochs:inf").is_err());
+        assert!(Stop::parse("time:-5").is_err());
     }
 }

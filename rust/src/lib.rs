@@ -25,9 +25,11 @@
 //!   produced by `python/compile/aot.py`; python is never on this path.
 //! * [`oracle`] — gradient oracles: closed-form quadratics, pure-rust
 //!   logistic regression, and PJRT-backed model gradients.
-//! * [`exp`] — experiment harness for benches/examples, plus the
-//!   perf-baseline harness ([`exp::bench`]) behind `repro bench-baseline`
-//!   (methodology and schema: EXPERIMENTS.md).
+//! * [`exp`] — THE run API: the [`exp::Experiment`] builder drives both
+//!   engines through one chain (unified [`exp::Stop`] rules, unified
+//!   [`exp::RunStats`], native sweeps → [`exp::Comparison`]; DESIGN.md
+//!   §9), plus the perf-baseline harness ([`exp::bench`]) behind
+//!   `repro bench-baseline` (methodology and schema: EXPERIMENTS.md).
 //! * [`data`] — synthetic datasets + heterogeneity-controlled partitioning.
 //! * Substrates built in-repo because the offline registry only carries the
 //!   `xla` crate closure: [`prng`], [`linalg`], [`jsonio`], [`config`],
@@ -35,41 +37,64 @@
 //!
 //! ## Quickstart
 //!
+//! One [`exp::Experiment`] chain drives either engine — the virtual-time
+//! simulator for controlled comparisons, the thread-per-node wall-clock
+//! runner for the asynchrony claims — with one [`exp::Stop`] vocabulary
+//! and unified [`exp::RunStats`]:
+//!
 //! ```
 //! use rfast::prelude::*;
-//! use rfast::oracle::GradOracle;
 //!
 //! let topo = Topology::binary_tree(7);
-//! let quad = QuadraticOracle::heterogeneous(16, 7, 1.0, 4.0, 1);
 //! let cfg = SimConfig { seed: 7, gamma: 0.05, compute_mean: 0.01,
 //!                       eval_every: 1.0, ..SimConfig::default() };
-//! let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, quad.into_set());
-//! let report = sim.run(StopRule::Iterations(5_000));
-//! println!("final optimality gap: {:.3e}", report.final_gap.unwrap());
+//! let run = Experiment::new(
+//!         Workload::Quadratic(QuadSpec::heterogeneous(16, 1.0, 4.0)),
+//!         AlgoKind::RFast)
+//!     .topology(&topo)
+//!     .config(cfg)
+//!     .engine(Engine::Sim) // Engine::Threaded { pace } = wall clock
+//!     .stop(Stop::Iterations(5_000))
+//!     .run()
+//!     .unwrap();
+//! println!("final optimality gap: {:.3e}", run.report.final_gap.unwrap());
+//! assert_eq!(run.stats.total_steps(), 5_000);
 //! ```
 //!
 //! ## Fault-injection scenarios
 //!
 //! The paper's §VI regimes are named presets; any composition of
 //! stragglers, loss/latency ramps, churn and bandwidth caps can also be
-//! loaded from JSON (`--scenario file.json` on the CLI):
+//! loaded from JSON (`--scenario file.json` on the CLI). A scenario slots
+//! into the same chain — and misuse (bad scenario, missing topology, a
+//! workload the engine can't drive) is a typed [`exp::ExpError`], not a
+//! panic:
 //!
 //! ```
 //! use rfast::prelude::*;
-//! use rfast::oracle::GradOracle;
 //!
 //! let topo = Topology::ring(5);
-//! let quad = QuadraticOracle::heterogeneous(8, 5, 0.5, 2.0, 7);
-//! let cfg = SimConfig {
-//!     seed: 7, gamma: 0.04, compute_mean: 0.01, eval_every: 1.0,
-//!     scenario: Some(Scenario::by_name("lossy_30pct").unwrap()),
-//!     ..SimConfig::default()
-//! };
-//! let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, quad.into_set());
-//! let report = sim.run(StopRule::Iterations(2_000));
-//! assert!(sim.stats().msgs_lost > 0); // the ramp was live
-//! assert!(report.final_gap.is_some());
+//! let cfg = SimConfig { seed: 7, gamma: 0.04, compute_mean: 0.01,
+//!                       eval_every: 1.0, ..SimConfig::default() };
+//! let run = Experiment::new(
+//!         Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)),
+//!         AlgoKind::RFast)
+//!     .topology(&topo)
+//!     .config(cfg)
+//!     .scenario(&Scenario::by_name("lossy_30pct").unwrap())
+//!     .stop(Stop::Iterations(2_000))
+//!     .run()
+//!     .unwrap();
+//! assert!(run.stats.msgs_lost > 0); // the ramp was live
+//! assert!(run.report.final_gap.is_some());
+//! assert!(run.report.label.contains("lossy_30pct"));
 //! ```
+//!
+//! Sweeps are native: [`exp::Experiment::sweep_algos`] /
+//! [`sweep_topologies`](exp::Experiment::sweep_topologies) /
+//! [`sweep_engines`](exp::Experiment::sweep_engines) return an
+//! [`exp::Comparison`] whose `save_csvs` writes the per-series CSVs the
+//! paper figures use plus a side-by-side scalar table.
 //!
 //! ## Zero-copy message fabric
 //!
@@ -118,11 +143,18 @@ pub mod prelude {
     pub use crate::algo::{AlgoKind, NodeState, Payload, Payload64, RFastParams};
     pub use crate::config::SimConfig;
     pub use crate::data::{Dataset, Partition};
+    pub use crate::exp::{Comparison, Engine, ExpError, Experiment, QuadSpec,
+                         Run, RunStats, Stop, Workload};
     pub use crate::graph::{Topology, TopologyKind, WeightMatrices};
     pub use crate::linalg as la;
     pub use crate::metrics::{Report, Series};
     pub use crate::oracle::{GradOracle, LogRegOracle, QuadraticOracle};
     pub use crate::prng::Rng;
     pub use crate::scenario::Scenario;
-    pub use crate::sim::{Simulator, StopRule};
+    pub use crate::sim::Simulator;
+    // kept for the one-release deprecation window of exp::Stop's
+    // predecessor — downstream `prelude::*` users get a warning at THEIR
+    // StopRule call sites, not a compile break here
+    #[allow(deprecated)]
+    pub use crate::sim::StopRule;
 }

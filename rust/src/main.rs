@@ -24,14 +24,12 @@ use rfast::algo::AlgoKind;
 use rfast::cli::Args;
 use rfast::config::SimConfig;
 use rfast::data::{Dataset, Partition};
-use rfast::exp;
+use rfast::exp::{Engine, Experiment, Stop, Workload};
 use rfast::graph::TopologyKind;
 use rfast::metrics::Table;
-use rfast::oracle::{GradOracle, LogRegOracle};
-use rfast::runner::RunUntil;
 use rfast::runtime::{self, Manifest, PjrtTask};
 use rfast::scenario::Scenario;
-use rfast::sim::{Simulator, StopRule};
+use rfast::sim::Simulator;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -98,7 +96,7 @@ fn print_help() {
          --topology NAME    binary_tree|line|ring|exponential|mesh|star|gossip\n  \
          --nodes N          node count (default 8)\n  \
          --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
-         --engine E         sim (virtual time, default) | threaded\n                          (thread-per-node, wall clock; logreg + rust oracle)\n  \
+         --engine E         sim (virtual time, default) | threaded (thread-per-\n                          node, wall clock; logreg + rust oracle) | both (run\n                          sim AND threaded, emit side-by-side comparison CSVs)\n  \
          --oracle KIND      rust|pjrt (default rust; pjrt needs `make artifacts`)\n  \
          --scenario S       fault preset name or scenario .json path; drives\n                          either engine (see `repro scenarios`)\n  \
          --gamma G          step size\n  --seed S\n  \
@@ -106,9 +104,10 @@ fn print_help() {
          --loss-prob P      packet loss probability (async algos)\n  \
          --skew A           label-skew heterogeneity in [0,1]\n  \
          --pace S           threaded engine: min seconds per local iteration\n                          (default compute_mean; 0 disables)\n  \
-         --time T           stop after T virtual seconds (default 300; threaded:\n                          wall seconds, default 30)\n  \
-         --iters K          stop after K total gradient steps\n  \
-         --out PATH         write the JSON report here (default runs/train.json)"
+         --stop SPEC        unified stop rule: time:T | iters:K | epochs:E |\n                          loss:L[:MAX_T]  (time is virtual s on sim, wall s on\n                          threaded — DESIGN.md \u{a7}9)\n  \
+         --time T           shorthand for --stop time:T (default 300; threaded:\n                          30). Rejected with --engine both (clock-ambiguous;\n                          default there is iters:2000 — use --stop to override)\n  \
+         --iters K          shorthand for --stop iters:K\n  \
+         --out PATH         write the JSON report here (default runs/train.json;\n                          --engine both also writes PATH-stem comparison CSVs)"
     );
 }
 
@@ -335,6 +334,35 @@ fn cmd_check_artifacts() -> Result<(), String> {
     Ok(())
 }
 
+/// The unified stop rule: `--stop kind:value` wins, then the `--iters` /
+/// `--time` shorthands, then the per-engine default.
+fn resolve_stop(args: &Args, engine: &str) -> Result<Stop, String> {
+    // Stop::Time reads each engine's own clock, so --time is ambiguous
+    // with --engine both; rejected up front so it can never be silently
+    // shadowed by --stop/--iters either
+    if engine == "both" && args.get("time").is_some() {
+        return Err("--time is ambiguous with --engine both (virtual \
+                    seconds on sim, wall seconds on threaded); use \
+                    --stop time:T to opt into the per-engine clocks, or \
+                    --stop iters:K"
+            .into());
+    }
+    if let Some(spec) = args.get("stop") {
+        return Stop::parse(spec);
+    }
+    if let Some(iters) = args.get("iters") {
+        return Ok(Stop::Iterations(
+            iters.parse().map_err(|_| "--iters: bad count")?));
+    }
+    match engine {
+        // default for both engines at once: an iteration budget — the
+        // one rule meaning the same amount of work on both
+        "both" => Ok(Stop::Iterations(2_000)),
+        "threaded" => Ok(Stop::Time(args.parse_num("time", 30.0f64)?)),
+        _ => Ok(Stop::Time(args.parse_num("time", 300.0f64)?)),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<(), String> {
     let algo = AlgoKind::from_name(&args.get_or("algo", "rfast"))
         .ok_or("unknown --algo (see `repro algos`)")?;
@@ -370,73 +398,120 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 
     let topo = kind.build(n);
     let engine = args.get_or("engine", "sim");
+    if !["sim", "threaded", "both"].contains(&engine.as_str()) {
+        return Err(format!("unknown --engine {engine:?} (sim|threaded|both)"));
+    }
+    let stop = resolve_stop(args, &engine)?;
 
     println!(
         "train: {} on {} ({} nodes), engine={engine} model={model} \
-         oracle={oracle_kind} γ={} seed={}",
+         oracle={oracle_kind} γ={} seed={} stop={stop:?}",
         algo.name(), kind.name(), n, cfg.gamma, cfg.seed
     );
     if let Some(sc) = &cfg.scenario {
         println!("scenario: {} — {}", sc.name, sc.description);
     }
 
-    if engine == "threaded" {
-        if model != "logreg" || oracle_kind != "rust" {
-            return Err("--engine threaded drives --model logreg --oracle \
-                        rust; the PJRT wall-clock path is \
-                        examples/e2e_transformer.rs"
+    // the PJRT oracle stays an engine-level path (the builder drives the
+    // pure-rust workloads); sim-only for now
+    if oracle_kind == "pjrt" {
+        if engine != "sim" {
+            return Err("--oracle pjrt runs on --engine sim; the PJRT \
+                        wall-clock path is examples/e2e_transformer.rs"
                 .into());
         }
-        let until = if let Some(iters) = args.get("iters") {
-            RunUntil::TotalSteps(iters.parse().map_err(|_| "--iters")?)
-        } else {
-            RunUntil::WallSeconds(args.parse_num("time", 30.0f64)?)
-        };
-        // default pace = compute_mean: the wall-clock cadence matches the
-        // virtual-time calibration unless overridden (0 disables pacing)
-        let pace: f64 = args.parse_num("pace", cfg.compute_mean)?;
-        let scenario = cfg.scenario.take();
-        let (report, stats) = exp::run_threaded_under(
-            exp::Workload::LogReg, algo, &topo, &cfg, scenario.as_ref(),
-            (pace > 0.0).then_some(pace), until)?;
-        println!("steps/node: {:?}", stats.steps_per_node);
-        return save_and_print(&report, args, "loss_vs_wall");
+        let dir = runtime::default_artifact_dir()
+            .ok_or("no artifacts/ — run `make artifacts`")?;
+        let manifest = Manifest::load(&dir)?;
+        let task = pjrt_task_for(&model, n, &cfg)?;
+        let set = runtime::build_pjrt_set(&manifest, &task, n, cfg.seed)
+            .map_err(|e| e.to_string())?;
+        let x0 = manifest.load_init(&task.model_name())?;
+        let report =
+            Simulator::with_x0(cfg.clone(), &topo, algo, set, &x0).run(stop);
+        return save_and_print(&report, args, "loss_vs_time");
     }
-    if engine != "sim" {
-        return Err(format!("unknown --engine {engine:?} (sim|threaded)"));
+    if oracle_kind != "rust" {
+        return Err(format!("unknown --oracle {oracle_kind:?} (rust|pjrt)"));
     }
 
-    let stop = if let Some(iters) = args.get("iters") {
-        StopRule::Iterations(iters.parse().map_err(|_| "--iters")?)
+    let workload = match model.as_str() {
+        "logreg" => Workload::LogReg,
+        "mlp" => Workload::Mlp,
+        other => return Err(format!("unknown --model {other:?} (logreg|mlp)")),
+    };
+    // default pace = compute_mean: the wall-clock cadence matches the
+    // virtual-time calibration unless overridden (0 disables pacing)
+    let pace: f64 = args.parse_num("pace", cfg.compute_mean)?;
+    let threaded = Engine::Threaded { pace: (pace > 0.0).then_some(pace) };
+    // pass the scenario through the builder's own setter so the saved
+    // report labels carry the ` [scenario]` suffix on every engine
+    let scenario = cfg.scenario.take();
+    let exp = Experiment::new(workload, algo)
+        .topology(&topo)
+        .config(cfg)
+        .maybe_scenario(scenario.as_ref())
+        .stop(stop);
+
+    if engine == "both" {
+        // one chain, two engines, one side-by-side artifact set
+        let cmp = exp
+            .sweep_engines(&[Engine::Sim, threaded])
+            .map_err(|e| e.to_string())?;
+        let (dir, stem) = out_dir_and_stem(args);
+        let mut headers = vec!["metric"];
+        headers.extend(cmp.labels());
+        let mut t = Table::new("engine comparison (scalars)", &headers);
+        for (key, cells) in cmp.scalar_rows() {
+            let mut row = vec![key];
+            row.extend(cells.iter().map(|c| {
+                c.map(|v| format!("{v:.4}")).unwrap_or_else(|| "—".into())
+            }));
+            t.row(row);
+        }
+        t.print();
+        for run in &cmp.runs {
+            // file names key on the engine, not the display label — a
+            // scenario-suffixed label would put spaces/brackets in paths
+            let name = format!("{stem}_{}", run.engine.name());
+            run.report.save(&dir, &name).map_err(|e| e.to_string())?;
+            println!("report: {}", dir.join(format!("{name}.json")).display());
+        }
+        let prefix = format!("{stem}_cmp");
+        cmp.save_csvs(&dir, &prefix).map_err(|e| e.to_string())?;
+        println!("side-by-side scalars: {}",
+                 dir.join(format!("{prefix}_scalars.csv")).display());
+        return Ok(());
+    }
+
+    let run = if engine == "threaded" {
+        exp.engine(threaded).run().map_err(|e| e.to_string())?
     } else {
-        StopRule::VirtualTime(args.parse_num("time", 300.0f64)?)
+        exp.run().map_err(|e| e.to_string())?
     };
+    if engine == "threaded" {
+        println!("steps/node: {:?}", run.stats.steps_per_node);
+        save_and_print(&run.report, args, "loss_vs_wall")
+    } else {
+        save_and_print(&run.report, args, "loss_vs_time")
+    }
+}
 
-    let report = match (model.as_str(), oracle_kind.as_str()) {
-        ("logreg", "rust") => {
-            let oracle = LogRegOracle::paper_workload(n, cfg.batch,
-                                                      cfg.skew_alpha, cfg.seed);
-            let set = oracle.into_set();
-            Simulator::new(cfg.clone(), &topo, algo, set).run(stop)
-        }
-        (m, "pjrt") => {
-            let dir = runtime::default_artifact_dir()
-                .ok_or("no artifacts/ — run `make artifacts`")?;
-            let manifest = Manifest::load(&dir)?;
-            let task = pjrt_task_for(m, n, &cfg)?;
-            let set = runtime::build_pjrt_set(&manifest, &task, n, cfg.seed)
-                .map_err(|e| e.to_string())?;
-            let x0 = manifest.load_init(&task.model_name())?;
-            Simulator::with_x0(cfg.clone(), &topo, algo, set, &x0).run(stop)
-        }
-        ("mlp", "rust") => {
-            return Err("mlp requires --oracle pjrt (the MLP lives in the \
-                        AOT artifacts)".into())
-        }
-        (m, o) => return Err(format!("unsupported --model {m} / --oracle {o}")),
-    };
-
-    save_and_print(&report, args, "loss_vs_time")
+/// One rule for where `--out PATH` lands, shared by every train branch:
+/// dir = PATH's parent (cwd for a bare filename, `runs/` when absent),
+/// stem = PATH's file stem (default `train`).
+fn out_dir_and_stem(args: &Args) -> (PathBuf, String) {
+    let out = PathBuf::from(args.get_or("out", "runs/train.json"));
+    let dir = out
+        .parent()
+        .unwrap_or(std::path::Path::new("runs"))
+        .to_path_buf();
+    let stem = out
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("train")
+        .to_string();
+    (dir, stem)
 }
 
 /// Persist the report JSON and print the result table (shared by both
@@ -444,11 +519,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 fn save_and_print(report: &rfast::metrics::Report, args: &Args,
                   loss_series: &str) -> Result<(), String> {
     let out = PathBuf::from(args.get_or("out", "runs/train.json"));
-    let (dir, name) = (
-        out.parent().unwrap_or(std::path::Path::new("runs")),
-        out.file_stem().and_then(|s| s.to_str()).unwrap_or("train"),
-    );
-    report.save(dir, name).map_err(|e| e.to_string())?;
+    let (dir, name) = out_dir_and_stem(args);
+    report.save(&dir, &name).map_err(|e| e.to_string())?;
 
     let mut t = Table::new("result", &["metric", "value"]);
     for (k, v) in &report.scalars {

@@ -38,6 +38,7 @@
 
 use crate::algo::{AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
+use crate::exp::Stop;
 use crate::faults::{BwPacer, Clock, FaultSpec, RunnerFaultLayer, SendVerdict,
                     WallClock};
 use crate::graph::Topology;
@@ -56,7 +57,15 @@ use std::time::{Duration, Instant};
 /// let a bandwidth-capped link transmit above its configured rate).
 const MAX_PACING_SLEEP: f64 = 0.05;
 
-/// Wall-clock stopping criteria.
+/// Wall-clock stopping criteria (legacy runner-only spelling).
+///
+/// Superseded by the engine-agnostic [`Stop`](crate::exp::Stop):
+/// `ThreadedRunner::run` takes `impl Into<Stop>`, so existing `RunUntil`
+/// call sites keep compiling through the `From` conversion below. The
+/// unified enum also adds `Stop::Epochs` on this engine (the coordinator
+/// maps total steps × `OracleFactory::epoch_per_node_batch` to epochs).
+#[deprecated(note = "use exp::Stop (Stop::Time is wall seconds on the \
+                     threaded runner)")]
 #[derive(Clone, Copy, Debug)]
 pub enum RunUntil {
     WallSeconds(f64),
@@ -65,6 +74,19 @@ pub enum RunUntil {
     TargetLoss { loss: f64, max_seconds: f64 },
     /// Stop when total gradient steps across nodes reach this count.
     TotalSteps(u64),
+}
+
+#[allow(deprecated)]
+impl From<RunUntil> for Stop {
+    fn from(u: RunUntil) -> Stop {
+        match u {
+            RunUntil::WallSeconds(s) => Stop::Time(s),
+            RunUntil::TargetLoss { loss, max_seconds } => {
+                Stop::TargetLoss { loss, max_time: max_seconds }
+            }
+            RunUntil::TotalSteps(k) => Stop::Iterations(k),
+        }
+    }
 }
 
 /// Final counters for the run.
@@ -143,12 +165,18 @@ impl ThreadedRunner {
 
     /// Run to completion; `eval` is called on the coordinator thread with
     /// the mean parameter snapshot every `cfg.eval_every` *wall* seconds.
+    ///
+    /// Takes the engine-agnostic [`Stop`]; `Stop::Time` means *wall*
+    /// seconds here, `Stop::Iterations` counts total gradient steps
+    /// across nodes, and `Stop::Epochs` uses the factory's epoch mapping.
+    /// Legacy [`RunUntil`] values convert transparently.
     pub fn run(
         &self,
         factory: &dyn OracleFactory,
         eval: &mut dyn FnMut(&[f32]) -> Eval,
-        until: RunUntil,
+        until: impl Into<Stop>,
     ) -> (Report, RunnerStats) {
+        let until: Stop = until.into();
         let n = self.topo.n();
         let p = self.x0.len();
         assert_eq!(factory.dim(), p, "factory dim vs x0");
@@ -252,11 +280,17 @@ impl ThreadedRunner {
                     }
                 }
                 let done = match until {
-                    RunUntil::WallSeconds(s) => elapsed >= s,
-                    RunUntil::TargetLoss { loss, max_seconds } => {
-                        e.loss <= loss || elapsed >= max_seconds
+                    Stop::Time(s) => elapsed >= s,
+                    Stop::TargetLoss { loss, max_time } => {
+                        e.loss <= loss || elapsed >= max_time
                     }
-                    RunUntil::TotalSteps(k) => total >= k,
+                    Stop::Iterations(k) => total >= k,
+                    // the coordinator's epoch mapping: total steps ×
+                    // epoch-per-node-batch, same conversion the γ-decay
+                    // schedule and the `epoch` scalar use
+                    Stop::Epochs(target) => {
+                        total as f64 * epoch_per_batch >= target
+                    }
                 };
                 if done {
                     break;
@@ -531,7 +565,7 @@ mod tests {
         let (mut eval, last_mean) = tracking_quad_eval(q.clone());
         let (report, stats) =
             runner.run(&QuadFactory(q), &mut eval,
-                       RunUntil::TotalSteps(60_000));
+                       Stop::Iterations(60_000));
         assert!(stats.steps_per_node.iter().all(|&s| s > 100),
                 "{:?}", stats.steps_per_node);
         let last = report.series["loss_vs_wall"].last_y().unwrap();
@@ -559,7 +593,7 @@ mod tests {
                                          vec![0.0; 6]);
         let (mut eval, _) = tracking_quad_eval(q.clone());
         let (_, stats) =
-            runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(300));
+            runner.run(&QuadFactory(q), &mut eval, Stop::Iterations(300));
         assert!(stats.steps_per_node.iter().sum::<u64>() >= 300);
         // lock-step: per-node counts within one round of each other
         let min = *stats.steps_per_node.iter().min().unwrap();
@@ -584,7 +618,7 @@ mod tests {
                 .with_pace(1e-4);
         let (mut eval, _) = tracking_quad_eval(q.clone());
         let (_, stats) =
-            runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(5_000));
+            runner.run(&QuadFactory(q), &mut eval, Stop::Iterations(5_000));
         assert!(stats.msgs_lost > 0);
     }
 }

@@ -227,88 +227,107 @@ impl Scenario {
     /// Range checks; pass the node count to also bound-check node indices
     /// (the simulator does), or `None` for count-independent validation.
     pub fn validate(&self, n_nodes: Option<usize>) -> Result<(), String> {
-        let check_node = |node: usize, what: &str| -> Result<(), String> {
-            if let Some(n) = n_nodes {
-                if node >= n {
-                    return Err(format!(
-                        "scenario {:?}: {what} node {node} out of range (n = {n})",
-                        self.name
-                    ));
+        self.validate_detailed(n_nodes).map_err(|(field, detail)| {
+            format!("scenario {:?}: {field}: {detail}", self.name)
+        })
+    }
+
+    /// Structured twin of [`Scenario::validate`]: `Err((field, detail))`
+    /// where `field` is a JSON-path-like pointer into the scenario
+    /// (`"stragglers[0].factor"`, `"churn[2]"`, ...). The typed
+    /// [`ExpError::InvalidScenario`](crate::exp::ExpError) surfaces both
+    /// pieces so callers never parse an error string for the failing
+    /// field.
+    pub fn validate_detailed(
+        &self, n_nodes: Option<usize>,
+    ) -> Result<(), (String, String)> {
+        let check_node =
+            |node: usize, field: String| -> Result<(), (String, String)> {
+                if let Some(n) = n_nodes {
+                    if node >= n {
+                        return Err((
+                            field,
+                            format!("node {node} out of range (n = {n})"),
+                        ));
+                    }
                 }
-            }
-            Ok(())
-        };
-        for s in &self.stragglers {
-            check_node(s.node, "straggler")?;
+                Ok(())
+            };
+        for (i, s) in self.stragglers.iter().enumerate() {
+            check_node(s.node, format!("stragglers[{i}].node"))?;
             if !(s.factor >= 1.0) {
-                return Err(format!(
-                    "scenario {:?}: straggler factor must be ≥ 1, got {}",
-                    self.name, s.factor
+                return Err((
+                    format!("stragglers[{i}].factor"),
+                    format!("must be ≥ 1, got {}", s.factor),
                 ));
             }
             match s.schedule {
                 StragglerSchedule::Permanent => {}
                 StragglerSchedule::FromTime { at } => {
                     if !(at >= 0.0) {
-                        return Err(format!(
-                            "scenario {:?}: straggler onset must be ≥ 0, got {at}",
-                            self.name
+                        return Err((
+                            format!("stragglers[{i}].schedule.at"),
+                            format!("onset must be ≥ 0, got {at}"),
                         ));
                     }
                 }
                 StragglerSchedule::Intermittent { period, duty } => {
                     if !(period > 0.0) || !(0.0..=1.0).contains(&duty) {
-                        return Err(format!(
-                            "scenario {:?}: intermittent wants period > 0 and \
-                             duty in [0,1], got period {period} duty {duty}",
-                            self.name
+                        return Err((
+                            format!("stragglers[{i}].schedule"),
+                            format!(
+                                "intermittent wants period > 0 and duty in \
+                                 [0,1], got period {period} duty {duty}"
+                            ),
                         ));
                     }
                 }
             }
         }
         for (ramp, what, lo, hi) in [
-            (&self.loss_ramp, "loss", 0.0, 1.0),
-            (&self.latency_ramp, "latency multiplier", 0.0, f64::INFINITY),
+            (&self.loss_ramp, "loss_ramp", 0.0, 1.0),
+            (&self.latency_ramp, "latency_ramp", 0.0, f64::INFINITY),
         ] {
             let mut prev = f64::NEG_INFINITY;
-            for p in ramp.iter() {
+            for (i, p) in ramp.iter().enumerate() {
                 if !(p.from_time >= 0.0) || p.from_time < prev {
-                    return Err(format!(
-                        "scenario {:?}: {what} ramp times must be ≥ 0 and \
-                         non-decreasing",
-                        self.name
+                    return Err((
+                        format!("{what}[{i}].from_time"),
+                        "phase times must be ≥ 0 and non-decreasing".into(),
                     ));
                 }
                 prev = p.from_time;
-                if !(p.value >= lo) || p.value >= hi && what == "loss" {
-                    return Err(format!(
-                        "scenario {:?}: {what} ramp value {} out of range",
-                        self.name, p.value
+                if !(p.value >= lo) || p.value >= hi && what == "loss_ramp" {
+                    return Err((
+                        format!("{what}[{i}].value"),
+                        format!("value {} out of range", p.value),
                     ));
                 }
             }
         }
-        for c in &self.churn {
-            check_node(c.node, "churn")?;
+        for (i, c) in self.churn.iter().enumerate() {
+            check_node(c.node, format!("churn[{i}].node"))?;
             if !(c.pause_at >= 0.0 && c.resume_at > c.pause_at) {
-                return Err(format!(
-                    "scenario {:?}: churn window [{}, {}) is empty or negative",
-                    self.name, c.pause_at, c.resume_at
+                return Err((
+                    format!("churn[{i}]"),
+                    format!(
+                        "window [{}, {}) is empty or negative",
+                        c.pause_at, c.resume_at
+                    ),
                 ));
             }
         }
-        for b in &self.bandwidth {
+        for (i, b) in self.bandwidth.iter().enumerate() {
             if let Some(f) = b.from {
-                check_node(f, "bandwidth.from")?;
+                check_node(f, format!("bandwidth[{i}].from"))?;
             }
             if let Some(t) = b.to {
-                check_node(t, "bandwidth.to")?;
+                check_node(t, format!("bandwidth[{i}].to"))?;
             }
             if !(b.bytes_per_sec > 0.0) {
-                return Err(format!(
-                    "scenario {:?}: bandwidth rate must be > 0, got {}",
-                    self.name, b.bytes_per_sec
+                return Err((
+                    format!("bandwidth[{i}].bytes_per_sec"),
+                    format!("rate must be > 0, got {}", b.bytes_per_sec),
                 ));
             }
         }
@@ -753,6 +772,30 @@ mod tests {
         bad_bw.bandwidth =
             vec![BandwidthCap { from: None, to: None, bytes_per_sec: 0.0 }];
         assert!(bad_bw.validate(None).is_err());
+    }
+
+    #[test]
+    fn validate_detailed_names_the_failing_field() {
+        // the structured twin drives exp::ExpError::InvalidScenario —
+        // field pointers must be stable JSON-path-like strings
+        let s = Scenario::single_straggler(3, 0.5);
+        let (field, detail) = s.validate_detailed(None).unwrap_err();
+        assert_eq!(field, "stragglers[0].factor");
+        assert!(detail.contains("0.5"), "{detail}");
+
+        let s = Scenario::single_straggler(9, 2.0);
+        let (field, _) = s.validate_detailed(Some(4)).unwrap_err();
+        assert_eq!(field, "stragglers[0].node");
+
+        let mut s = Scenario::named("b", "");
+        s.bandwidth =
+            vec![BandwidthCap { from: None, to: Some(9), bytes_per_sec: 1.0 }];
+        let (field, _) = s.validate_detailed(Some(4)).unwrap_err();
+        assert_eq!(field, "bandwidth[0].to");
+
+        // the stringly wrapper embeds both pieces
+        let err = Scenario::single_straggler(3, 0.5).validate(None).unwrap_err();
+        assert!(err.contains("stragglers[0].factor"), "{err}");
     }
 
     #[test]

@@ -40,6 +40,7 @@
 
 use crate::algo::{mean_param, AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
+use crate::exp::Stop;
 use crate::faults::{BwPacer, FaultSpec, SendVerdict, SimFaultLayer,
                     VirtualClock};
 use crate::graph::Topology;
@@ -49,7 +50,13 @@ use crate::prng::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// When to stop a run.
+/// When to stop a run (legacy simulator-only spelling).
+///
+/// Superseded by the engine-agnostic [`Stop`](crate::exp::Stop):
+/// `Simulator::run` takes `impl Into<Stop>`, so existing `StopRule` call
+/// sites keep compiling through the `From` conversion below.
+#[deprecated(note = "use exp::Stop (Stop::Time is virtual seconds on the \
+                     simulator)")]
 #[derive(Clone, Copy, Debug)]
 pub enum StopRule {
     /// Total gradient computations across all nodes.
@@ -64,6 +71,20 @@ pub enum StopRule {
     Epochs(f64),
 }
 
+#[allow(deprecated)]
+impl From<StopRule> for Stop {
+    fn from(s: StopRule) -> Stop {
+        match s {
+            StopRule::Iterations(k) => Stop::Iterations(k),
+            StopRule::VirtualTime(t) => Stop::Time(t),
+            StopRule::TargetLoss { loss, max_time } => {
+                Stop::TargetLoss { loss, max_time }
+            }
+            StopRule::Epochs(e) => Stop::Epochs(e),
+        }
+    }
+}
+
 /// Aggregate counters the report exposes.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimStats {
@@ -74,6 +95,11 @@ pub struct SimStats {
     pub msgs_lost: u64,
     /// Discarded because the link still had an unacked packet in flight.
     pub msgs_backpressured: u64,
+    /// Sends whose transmission was delayed by a scenario bandwidth cap
+    /// (the FIFO serialization queue pushed `sent_at` past the send
+    /// time). The virtual-time twin of the runner's paced counter, so
+    /// both engines expose a `msgs_paced` scalar.
+    pub msgs_paced: u64,
     /// Payload bytes actually put on the wire (Deliver verdicts only —
     /// lost and backpressured sends transmit nothing). The communication
     /// volume the bench baseline tracks as bytes-per-epoch
@@ -138,6 +164,9 @@ pub struct Simulator {
     /// FIFO transmission queue per directed link (bandwidth caps)
     bw: BwPacer,
     stats: SimStats,
+    /// Per-node gradient-step counts (the simulator twin of
+    /// `RunnerStats::steps_per_node`, surfaced through `exp::RunStats`).
+    steps_per_node: Vec<u64>,
     mean_buf: Vec<f32>,
     epoch: f64,
     /// rolling sum/count of minibatch losses between eval ticks
@@ -149,6 +178,12 @@ pub struct Simulator {
 impl Simulator {
     /// Build a simulator; nodes start from `x0 = 0` (override with
     /// [`Simulator::with_x0`] before the first `run`).
+    ///
+    /// Note: as an *entry point* for experiments this is superseded by
+    /// [`exp::Experiment`](crate::exp::Experiment), which owns workload
+    /// construction, validates misuse into typed errors, and returns
+    /// unified stats. Construct a `Simulator` directly only when you need
+    /// engine-level control (custom oracle sets, mid-run inspection).
     pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                set: OracleSet) -> Simulator {
         cfg.validate().expect("invalid SimConfig");
@@ -186,6 +221,7 @@ impl Simulator {
             resume_scheduled: vec![false; n],
             bw: BwPacer::new(n * n),
             stats: SimStats::default(),
+            steps_per_node: vec![0; n],
             mean_buf: Vec::new(),
             epoch: 0.0,
             train_loss_acc: (0.0, 0),
@@ -287,6 +323,7 @@ impl Simulator {
             let bw_delay =
                 self.faults.spec.bandwidth_delay(msg.from, msg.to, bytes);
             let sent_at = if bw_delay > 0.0 {
+                self.stats.msgs_paced += 1;
                 self.bw.sent_at(msg.from * self.n + msg.to, self.time, bw_delay)
             } else {
                 self.time
@@ -296,9 +333,10 @@ impl Simulator {
         }
     }
 
-    fn record_train_loss(&mut self, loss: Option<f32>) {
+    fn record_train_loss(&mut self, node: usize, loss: Option<f32>) {
         if let Some(l) = loss {
             self.stats.grad_wakes += 1;
+            self.steps_per_node[node] += 1;
             self.epoch += self.set.epoch_per_node_batch;
             if let Some((interval, factor)) = self.cfg.gamma_decay {
                 let due = (self.epoch / interval) as u32;
@@ -352,7 +390,14 @@ impl Simulator {
 
     /// Run until the stop rule fires; returns the report (evaluations,
     /// counters, final optimality gap when the oracle has a closed form).
-    pub fn run(&mut self, stop: StopRule) -> Report {
+    ///
+    /// Takes the engine-agnostic [`Stop`]; `Stop::Time` means seconds of
+    /// *virtual* time here. Legacy [`StopRule`] values convert
+    /// transparently. (Prefer driving whole runs through
+    /// [`exp::Experiment`](crate::exp::Experiment) — it owns workload
+    /// construction and returns unified stats for both engines.)
+    pub fn run(&mut self, stop: impl Into<Stop>) -> Report {
+        let stop: Stop = stop.into();
         let mut report = Report::new(self.algo.name());
         // kick off: every node attempts its first iteration at t=0
         for i in 0..self.n {
@@ -378,16 +423,16 @@ impl Simulator {
                     self.busy[i] = false;
                     let loss =
                         self.nodes[i].wake(self.set.nodes[i].as_mut(), &mut outbox);
-                    self.record_train_loss(loss);
+                    self.record_train_loss(i, loss);
                     self.route(&mut outbox);
                     self.try_start(i);
                     match stop {
-                        StopRule::Iterations(max) => {
+                        Stop::Iterations(max) => {
                             if self.stats.grad_wakes >= max {
                                 done = true;
                             }
                         }
-                        StopRule::Epochs(e) => {
+                        Stop::Epochs(e) => {
                             if self.epoch >= e {
                                 done = true;
                             }
@@ -425,17 +470,17 @@ impl Simulator {
                     let next = self.time + self.cfg.eval_every;
                     self.push_event(next, Event::EvalTick);
                     match stop {
-                        StopRule::TargetLoss { loss: target, max_time } => {
+                        Stop::TargetLoss { loss: target, max_time } => {
                             if loss <= target || self.time >= max_time {
                                 done = true;
                             }
                         }
-                        StopRule::VirtualTime(t) => {
+                        Stop::Time(t) => {
                             if self.time >= t {
                                 done = true;
                             }
                         }
-                        StopRule::Iterations(_) | StopRule::Epochs(_) => {}
+                        Stop::Iterations(_) | Stop::Epochs(_) => {}
                     }
                 }
             }
@@ -455,6 +500,7 @@ impl Simulator {
         report.set_scalar("msgs_delivered", s.msgs_delivered as f64);
         report.set_scalar("msgs_lost", s.msgs_lost as f64);
         report.set_scalar("msgs_backpressured", s.msgs_backpressured as f64);
+        report.set_scalar("msgs_paced", s.msgs_paced as f64);
         report.set_scalar("bytes_sent", s.bytes_sent as f64);
         report.set_scalar("epoch", self.epoch);
         if let Some(opt) = &self.set.optimum {
@@ -465,6 +511,12 @@ impl Simulator {
 
     pub fn stats(&self) -> SimStats {
         self.stats
+    }
+
+    /// Gradient steps per node so far (sums to `stats().grad_wakes`) —
+    /// the simulator half of the unified `steps_per_node` stat.
+    pub fn steps_per_node(&self) -> &[u64] {
+        &self.steps_per_node
     }
 
     pub fn nodes(&self) -> &[Box<dyn NodeState>] {
@@ -506,7 +558,7 @@ mod tests {
         let topo = Topology::binary_tree(7);
         let (set, xs) = quad_set(7, 3);
         let mut sim = Simulator::new(fast_cfg(1), &topo, AlgoKind::RFast, set);
-        let report = sim.run(StopRule::Iterations(40_000));
+        let report = sim.run(Stop::Iterations(40_000));
         let gap = report.final_gap.unwrap();
         assert!(gap < 1e-2, "gap {gap}");
         let _ = xs;
@@ -519,7 +571,7 @@ mod tests {
         let mut cfg = fast_cfg(2);
         cfg.loss_prob = 0.25;
         let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, set);
-        let report = sim.run(StopRule::Iterations(40_000));
+        let report = sim.run(Stop::Iterations(40_000));
         assert!(sim.stats().msgs_lost > 100, "loss emulation active");
         let gap = report.final_gap.unwrap();
         assert!(gap < 2e-2, "gap {gap} under 25% loss");
@@ -532,7 +584,7 @@ mod tests {
             let topo = Topology::ring(4);
             let (set, _) = quad_set(4, 11);
             let mut sim = Simulator::new(fast_cfg(3), &topo, algo, set);
-            let report = sim.run(StopRule::Iterations(2_000));
+            let report = sim.run(Stop::Iterations(2_000));
             assert!(report.scalars.get("drained_early").is_none(),
                     "{} drained", algo.name());
             assert!(sim.stats().grad_wakes >= 2_000, "{}", algo.name());
@@ -546,7 +598,7 @@ mod tests {
             let (set, _) = quad_set(4, 5);
             let mut sim =
                 Simulator::new(fast_cfg(9), &topo, AlgoKind::RFast, set);
-            let r = sim.run(StopRule::Iterations(3_000));
+            let r = sim.run(Stop::Iterations(3_000));
             (r.final_gap.unwrap(), sim.stats().msgs_sent,
              sim.virtual_time())
         };
@@ -565,7 +617,7 @@ mod tests {
             let mut cfg = fast_cfg(4);
             cfg.straggler = straggler;
             let mut sim = Simulator::new(cfg, &topo, algo, set);
-            sim.run(StopRule::Iterations(4_000));
+            sim.run(Stop::Iterations(4_000));
             sim.stats().virtual_time
         };
         let sync_clean = run(AlgoKind::RingAllReduce, None);
@@ -594,7 +646,7 @@ mod tests {
         cfg.latency_cap = 0.4;
         cfg.compute_mean = 0.001;
         let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast, set);
-        sim.run(StopRule::Iterations(2_000));
+        sim.run(Stop::Iterations(2_000));
         assert!(sim.stats().msgs_backpressured > 0);
     }
 
@@ -610,7 +662,7 @@ mod tests {
             cfg.gamma_decay = decay;
             let mut sim = Simulator::new(cfg, &topo, AlgoKind::RFast,
                                          q.into_set());
-            sim.run(StopRule::Iterations(30_000)).final_gap.unwrap()
+            sim.run(Stop::Iterations(30_000)).final_gap.unwrap()
         };
         let constant = run(None);
         let decayed = run(Some((5_000.0, 0.5))); // quadratic epoch == 1 per wake
@@ -625,7 +677,7 @@ mod tests {
         let topo = Topology::ring(3);
         let (set, _) = quad_set(3, 19);
         let mut sim = Simulator::new(fast_cfg(6), &topo, AlgoKind::RFast, set);
-        let report = sim.run(StopRule::VirtualTime(20.0));
+        let report = sim.run(Stop::Time(20.0));
         let s = &report.series["loss_vs_time"];
         assert!(s.points.len() >= 10);
         assert!(report.series.contains_key("gap_vs_time"));

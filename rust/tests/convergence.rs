@@ -1,12 +1,12 @@
 //! Cross-algorithm convergence matrix through the full simulator stack —
 //! every algorithm × several topologies on closed-form quadratics, plus
-//! the paper's structural claims (who works where).
+//! the paper's structural claims (who works where). Driven through the
+//! `exp::Experiment` builder (the engines' canonical entry point).
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::{Topology, TopologyKind};
-use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::sim::{Simulator, StopRule};
 
 fn cfg(seed: u64, gamma: f32) -> SimConfig {
     SimConfig {
@@ -24,10 +24,17 @@ fn cfg(seed: u64, gamma: f32) -> SimConfig {
 
 fn final_gap(algo: AlgoKind, topo: &Topology, gamma: f32, spread: f32,
              iters: u64, seed: u64) -> f64 {
-    let quad =
-        QuadraticOracle::new(8, topo.n(), 0.5, 2.0, spread, 0.0, seed);
-    let mut sim = Simulator::new(cfg(seed, gamma), topo, algo, quad.into_set());
-    sim.run(StopRule::Iterations(iters)).final_gap.unwrap()
+    let spec =
+        QuadSpec { dim: 8, h_min: 0.5, h_max: 2.0, spread, noise: 0.0 };
+    Experiment::new(Workload::Quadratic(spec), algo)
+        .topology(topo)
+        .config(cfg(seed, gamma))
+        .stop(Stop::Iterations(iters))
+        .run()
+        .expect("quad run")
+        .report
+        .final_gap
+        .unwrap()
 }
 
 #[test]
@@ -86,17 +93,15 @@ fn rfast_works_on_every_assumption2_topology() {
 fn rfast_scales_with_more_nodes() {
     // time-to-target must decrease when more nodes share the work
     // (Fig 4b, on the paper's logreg workload)
-    use rfast::exp::{run_sim, Workload};
     let time_for = |n: usize| -> f64 {
         let topo = Topology::binary_tree(n);
-        let mut c = Workload::LogReg.paper_config();
-        c.seed = 5;
-        let report = run_sim(Workload::LogReg, AlgoKind::RFast, &topo, &c,
-                             StopRule::TargetLoss {
-                                 loss: 0.12,
-                                 max_time: 2_000.0,
-                             });
-        report.series["loss_vs_time"]
+        let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            .topology(&topo)
+            .seed(5)
+            .stop(Stop::TargetLoss { loss: 0.12, max_time: 2_000.0 })
+            .run()
+            .expect("logreg run");
+        run.report.series["loss_vs_time"]
             .time_to_reach(0.12)
             .unwrap_or(f64::INFINITY)
     };
@@ -126,9 +131,17 @@ fn synchronous_rfast_schedule_matches_pushpull_asymptote() {
         ..SimConfig::default()
     };
     let run = |algo| {
-        let quad = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 9);
-        let mut sim = Simulator::new(mk_cfg(9), &topo, algo, quad.into_set());
-        sim.run(StopRule::Iterations(40_000)).final_gap.unwrap()
+        Experiment::new(
+                Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)),
+                algo)
+            .topology(&topo)
+            .config(mk_cfg(9))
+            .stop(Stop::Iterations(40_000))
+            .run()
+            .expect("sync run")
+            .report
+            .final_gap
+            .unwrap()
     };
     let g_rfast = run(AlgoKind::RFast);
     let g_pp = run(AlgoKind::PushPull);
@@ -142,12 +155,17 @@ fn straggler_immunity_is_asynchrony_specific() {
     // monotone response of the sync slowdown while async stays flat
     let time_for = |algo: AlgoKind, factor: Option<f64>| -> f64 {
         let topo = Topology::ring(4);
-        let quad = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 13);
         let mut c = cfg(13, 0.03);
         c.straggler = factor.map(|f| (2, f));
-        let mut sim = Simulator::new(c, &topo, algo, quad.into_set());
-        sim.run(StopRule::Iterations(8_000));
-        sim.virtual_time()
+        let run = Experiment::new(
+                Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)),
+                algo)
+            .topology(&topo)
+            .config(c)
+            .stop(Stop::Iterations(8_000))
+            .run()
+            .expect("straggler run");
+        run.stats.virtual_time.unwrap()
     };
     let sync_base = time_for(AlgoKind::RingAllReduce, None);
     let async_base = time_for(AlgoKind::RFast, None);

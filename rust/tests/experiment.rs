@@ -1,0 +1,328 @@
+//! The `exp::Experiment` surface: builder-misuse errors are typed (never
+//! a panic or a bare string), the unified `Stop` vocabulary converts from
+//! both legacy enums, and — the dashboard contract — the same run driven
+//! through BOTH engines exposes the same scalar key set, so downstream
+//! tooling never branches on the engine.
+//!
+//! The parity test spins real threads; CI runs this file in the
+//! single-threaded wall-clock step alongside the runner suites.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::exp::{Engine, ExpError, Experiment, QuadSpec, Stop, Workload};
+use rfast::graph::Topology;
+use rfast::scenario::Scenario;
+
+fn quad() -> Workload {
+    Workload::Quadratic(QuadSpec::heterogeneous(6, 0.5, 2.0))
+}
+
+fn fast_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        gamma: 0.03,
+        compute_mean: 0.001,
+        eval_every: 0.05,
+        ..SimConfig::default()
+    }
+}
+
+// ---- builder misuse is typed -------------------------------------------
+
+#[test]
+fn missing_topology_is_a_typed_error() {
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .stop(Stop::Iterations(10))
+        .run()
+        .unwrap_err();
+    assert_eq!(err, ExpError::MissingTopology);
+    // and the message is self-explanatory
+    assert!(err.to_string().contains("topology"), "{err}");
+}
+
+#[test]
+fn missing_stop_is_a_typed_error() {
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .run()
+        .unwrap_err();
+    assert_eq!(err, ExpError::MissingStop);
+}
+
+#[test]
+fn epochs_without_an_epoch_mapping_is_a_typed_error() {
+    // quadratics count steps, not passes over a dataset — Stop::Epochs
+    // must be rejected up front on EITHER engine
+    for engine in [Engine::Sim, Engine::Threaded { pace: Some(1e-4) }] {
+        let err = Experiment::new(quad(), AlgoKind::RFast)
+            .topology(&Topology::ring(3))
+            .config(fast_cfg(1))
+            .engine(engine)
+            .stop(Stop::Epochs(2.0))
+            .run()
+            .unwrap_err();
+        match err {
+            ExpError::NoEpochMapping { workload } => {
+                assert_eq!(workload, "quadratic");
+            }
+            other => panic!("expected NoEpochMapping, got {other:?}"),
+        }
+    }
+    // the same stop rule is fine on a dataset workload (sim side —
+    // threaded epoch support is covered in runner_integration)
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .seed(1)
+        .stop(Stop::Epochs(0.1))
+        .run()
+        .unwrap();
+    assert!(run.report.scalars["epoch"] >= 0.1);
+}
+
+#[test]
+fn mlp_on_threaded_surfaces_the_pjrt_hint() {
+    let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .engine(Engine::Threaded { pace: None })
+        .stop(Stop::Time(0.1))
+        .run()
+        .unwrap_err();
+    match &err {
+        ExpError::UnsupportedWorkload { workload, engine, hint } => {
+            assert_eq!(*workload, "mlp");
+            assert_eq!(*engine, "threaded");
+            assert!(hint.contains("PJRT"), "{hint}");
+            assert!(hint.contains("e2e_transformer"), "{hint}");
+        }
+        other => panic!("expected UnsupportedWorkload, got {other:?}"),
+    }
+    // the Display impl carries the hint through to string contexts
+    assert!(err.to_string().contains("PJRT"), "{err}");
+}
+
+#[test]
+fn scenario_validation_names_the_failing_field() {
+    // straggler factor < 1 → stragglers[0].factor
+    let mut sc = Scenario::named("bad_factor", "");
+    sc.stragglers.push(rfast::scenario::StragglerSpec {
+        node: 0,
+        factor: 0.5,
+        schedule: rfast::scenario::StragglerSchedule::Permanent,
+    });
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(fast_cfg(1))
+        .scenario(&sc)
+        .stop(Stop::Iterations(10))
+        .run()
+        .unwrap_err();
+    match &err {
+        ExpError::InvalidScenario { scenario, field, detail } => {
+            assert_eq!(scenario, "bad_factor");
+            assert_eq!(field, "stragglers[0].factor");
+            assert!(detail.contains("≥ 1"), "{detail}");
+        }
+        other => panic!("expected InvalidScenario, got {other:?}"),
+    }
+
+    // node index beyond the topology → churn[1].node (the second entry)
+    let mut sc = Scenario::named("bad_node", "");
+    sc.churn.push(rfast::scenario::ChurnEvent {
+        node: 0, pause_at: 0.0, resume_at: 1.0,
+    });
+    sc.churn.push(rfast::scenario::ChurnEvent {
+        node: 9, pause_at: 0.0, resume_at: 1.0,
+    });
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(fast_cfg(1))
+        .scenario(&sc)
+        .stop(Stop::Iterations(10))
+        .run()
+        .unwrap_err();
+    match &err {
+        ExpError::InvalidScenario { field, detail, .. } => {
+            assert_eq!(field, "churn[1].node");
+            assert!(detail.contains("out of range"), "{detail}");
+        }
+        other => panic!("expected InvalidScenario, got {other:?}"),
+    }
+}
+
+#[test]
+fn invalid_config_is_a_typed_error() {
+    let mut cfg = fast_cfg(1);
+    cfg.gamma = -1.0;
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(cfg)
+        .stop(Stop::Iterations(10))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, ExpError::InvalidConfig(_)), "{err:?}");
+}
+
+#[test]
+fn seed_and_gamma_shortcuts_are_chain_order_independent() {
+    // .seed()/.gamma() are overrides applied at run() time: chaining
+    // .config() after them must NOT silently discard them
+    let cfg = fast_cfg(1); // seed 1, gamma 0.03
+    let before = Experiment::new(quad(), AlgoKind::RFast)
+        .seed(7)
+        .gamma(0.02)
+        .config(cfg.clone())
+        .topology(&Topology::ring(3))
+        .stop(Stop::Iterations(500))
+        .run()
+        .unwrap();
+    let after = Experiment::new(quad(), AlgoKind::RFast)
+        .config(cfg)
+        .seed(7)
+        .gamma(0.02)
+        .topology(&Topology::ring(3))
+        .stop(Stop::Iterations(500))
+        .run()
+        .unwrap();
+    // identical seed ⇒ identical deterministic sim trajectory
+    assert_eq!(before.report.to_json().to_string(),
+               after.report.to_json().to_string());
+}
+
+#[test]
+fn engine_sweep_preflights_every_leg_before_running_any() {
+    // MLP cannot run threaded: the sweep pre-flights all legs and must
+    // return the typed error instead of running the sim leg first and
+    // erroring halfway through
+    let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .stop(Stop::Iterations(1))
+        .sweep_engines(&[Engine::Sim, Engine::Threaded { pace: None }])
+        .unwrap_err();
+    assert!(matches!(err, ExpError::UnsupportedWorkload { .. }), "{err:?}");
+}
+
+// ---- legacy stop enums convert losslessly ------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn legacy_stop_enums_convert() {
+    use rfast::runner::RunUntil;
+    use rfast::sim::StopRule;
+    assert_eq!(Stop::from(StopRule::VirtualTime(5.0)), Stop::Time(5.0));
+    assert_eq!(Stop::from(StopRule::Iterations(7)), Stop::Iterations(7));
+    assert_eq!(Stop::from(StopRule::Epochs(2.0)), Stop::Epochs(2.0));
+    assert_eq!(
+        Stop::from(StopRule::TargetLoss { loss: 0.1, max_time: 9.0 }),
+        Stop::TargetLoss { loss: 0.1, max_time: 9.0 }
+    );
+    assert_eq!(Stop::from(RunUntil::WallSeconds(3.0)), Stop::Time(3.0));
+    assert_eq!(Stop::from(RunUntil::TotalSteps(11)), Stop::Iterations(11));
+    assert_eq!(
+        Stop::from(RunUntil::TargetLoss { loss: 0.2, max_seconds: 4.0 }),
+        Stop::TargetLoss { loss: 0.2, max_time: 4.0 }
+    );
+}
+
+// ---- engine parity audit (the dashboard contract) ----------------------
+
+/// The scalar keys every dashboard may rely on without branching on the
+/// engine. Both engines must expose ALL of them.
+const UNIFIED_SCALARS: [&str; 5] = [
+    "msgs_lost",
+    "bytes_sent",
+    "msgs_backpressured",
+    "msgs_paced",
+    "epoch",
+];
+
+#[test]
+fn both_engines_expose_the_same_unified_scalar_keys() {
+    // same lossy_30pct logreg run through both engines via the new API
+    let sc = Scenario::by_name("lossy_30pct").unwrap();
+    let base = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(SimConfig {
+            eval_every: 0.05,
+            ..SimConfig::logreg_paper()
+        })
+        .scenario(&sc);
+    let sim_run = base
+        .clone()
+        .engine(Engine::Sim)
+        .stop(Stop::Time(2.0))
+        .run()
+        .unwrap();
+    let thr_run = base
+        .engine(Engine::Threaded { pace: Some(5e-4) })
+        .stop(Stop::Time(0.3))
+        .run()
+        .unwrap();
+    for key in UNIFIED_SCALARS {
+        assert!(sim_run.report.scalars.contains_key(key),
+                "sim report missing {key}: {:?}",
+                sim_run.report.scalars.keys().collect::<Vec<_>>());
+        assert!(thr_run.report.scalars.contains_key(key),
+                "threaded report missing {key}: {:?}",
+                thr_run.report.scalars.keys().collect::<Vec<_>>());
+    }
+    // the unified RunStats agrees with the report scalars on both
+    for run in [&sim_run, &thr_run] {
+        assert_eq!(run.stats.msgs_lost as f64,
+                   run.report.scalars["msgs_lost"]);
+        assert_eq!(run.stats.bytes_sent as f64,
+                   run.report.scalars["bytes_sent"]);
+        assert_eq!(run.stats.msgs_paced as f64,
+                   run.report.scalars["msgs_paced"]);
+    }
+    // and the loss was genuinely injected on both engines
+    assert!(sim_run.stats.msgs_lost > 0);
+    assert!(thr_run.stats.msgs_lost > 0);
+    // engine-specific extras stay engine-tagged
+    assert!(sim_run.stats.virtual_time.is_some()
+            && sim_run.stats.wall_seconds.is_none());
+    assert!(thr_run.stats.wall_seconds.is_some()
+            && thr_run.stats.virtual_time.is_none());
+}
+
+#[test]
+fn engine_sweep_produces_the_side_by_side_artifacts() {
+    // the `repro train --engine both` path as a library call: two labeled
+    // runs, one scalars CSV whose columns are the engines
+    let cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(SimConfig {
+            eval_every: 0.05,
+            ..SimConfig::logreg_paper()
+        })
+        .stop(Stop::Iterations(200))
+        .sweep_engines(&[Engine::Sim, Engine::Threaded { pace: Some(1e-4) }])
+        .unwrap();
+    assert_eq!(cmp.runs.len(), 2);
+    assert_eq!(cmp.runs[0].report.label, "sim");
+    assert_eq!(cmp.runs[1].report.label, "threaded");
+    let dir = std::env::temp_dir().join(format!(
+        "rfast_engine_sweep_{}", std::process::id()));
+    cmp.save_csvs(&dir, "both").unwrap();
+    let scalars =
+        std::fs::read_to_string(dir.join("both_scalars.csv")).unwrap();
+    assert!(scalars.starts_with("metric,sim,threaded"), "{scalars}");
+    for key in UNIFIED_SCALARS {
+        let row = scalars
+            .lines()
+            .find(|l| l.starts_with(&format!("{key},")))
+            .unwrap_or_else(|| panic!("no {key} row in:\n{scalars}"));
+        // both engines filled their cell (no trailing empty column)
+        let cells: Vec<&str> = row.split(',').collect();
+        assert_eq!(cells.len(), 3, "{row}");
+        assert!(!cells[1].is_empty() && !cells[2].is_empty(), "{row}");
+    }
+    // engine-exclusive series must carry the OWNING engine's label —
+    // never the other column's (disjoint-series labeling regression)
+    let wall =
+        std::fs::read_to_string(dir.join("both_loss_vs_wall.csv")).unwrap();
+    assert!(wall.starts_with("x,threaded"), "{wall}");
+    let virt =
+        std::fs::read_to_string(dir.join("both_loss_vs_time.csv")).unwrap();
+    assert!(virt.starts_with("x,sim"), "{virt}");
+    std::fs::remove_dir_all(&dir).ok();
+}

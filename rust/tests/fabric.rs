@@ -14,9 +14,10 @@
 
 use rfast::algo::{AlgoKind, Msg, MsgKind, NodeState, Payload};
 use rfast::config::SimConfig;
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::oracle::{GradOracle, QuadraticOracle};
-use rfast::sim::{Simulator, StopRule};
+use rfast::sim::Simulator;
 
 fn fast_cfg(seed: u64) -> SimConfig {
     SimConfig {
@@ -146,7 +147,7 @@ fn golden_run(seed: u64) -> (String, rfast::sim::SimStats) {
     let quad = QuadraticOracle::heterogeneous(8, 5, 0.5, 2.0, seed);
     let mut sim = Simulator::new(fast_cfg(seed), &topo, AlgoKind::RFast,
                                  quad.into_set());
-    let report = sim.run(StopRule::Iterations(3_000));
+    let report = sim.run(Stop::Iterations(3_000));
     (report.to_json().to_string(), sim.stats())
 }
 
@@ -168,6 +169,28 @@ fn golden_seed_run_emits_byte_identical_report_json() {
 }
 
 #[test]
+fn experiment_builder_reproduces_the_golden_report_bitwise() {
+    // the api_redesign acceptance gate: the Experiment chain is a pure
+    // re-plumbing of the sim entry point — same seed through the builder
+    // emits the byte-identical Report JSON the direct Simulator does
+    // (same oracle family, same zero x0, same event trajectory)
+    let (direct_json, direct_stats) = golden_run(42);
+    let run = Experiment::new(
+            Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)),
+            AlgoKind::RFast)
+        .topology(&Topology::ring(5))
+        .config(fast_cfg(42))
+        .stop(Stop::Iterations(3_000))
+        .run()
+        .expect("builder golden run");
+    assert_eq!(run.report.to_json().to_string(), direct_json,
+               "builder sim path must be bitwise identical");
+    assert_eq!(run.stats.bytes_sent, direct_stats.bytes_sent);
+    assert_eq!(run.stats.msgs_sent, direct_stats.msgs_sent);
+    assert_eq!(run.stats.total_steps(), direct_stats.grad_wakes);
+}
+
+#[test]
 fn bytes_sent_matches_payload_sizes_exactly_on_reliable_ring() {
     // Ring-AllReduce is loss-free and backpressure-free (reliable links
     // bypass the channel discipline), so every sent message transmits:
@@ -177,7 +200,7 @@ fn bytes_sent_matches_payload_sizes_exactly_on_reliable_ring() {
     let quad = QuadraticOracle::heterogeneous(8, 4, 0.5, 2.0, 21);
     let mut sim = Simulator::new(fast_cfg(3), &topo, AlgoKind::RingAllReduce,
                                  quad.into_set());
-    sim.run(StopRule::Iterations(400));
+    sim.run(Stop::Iterations(400));
     let s = sim.stats();
     assert!(s.msgs_sent > 0);
     assert_eq!(s.bytes_sent, s.msgs_sent * 8,

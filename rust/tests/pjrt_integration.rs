@@ -188,7 +188,8 @@ fn pjrt_simulator_trains_logreg() {
     use rfast::data::Partition;
     use rfast::graph::Topology;
     use rfast::runtime::{build_pjrt_set, PjrtTask};
-    use rfast::sim::{Simulator, StopRule};
+    use rfast::exp::Stop;
+    use rfast::sim::Simulator;
     use std::sync::Arc;
 
     let Some(m) = manifest() else {
@@ -208,7 +209,7 @@ fn pjrt_simulator_trains_logreg() {
     cfg.eval_every = 2.0;
     let topo = Topology::binary_tree(4);
     let mut sim = Simulator::with_x0(cfg, &topo, AlgoKind::RFast, set, &x0);
-    let report = sim.run(StopRule::VirtualTime(20.0));
+    let report = sim.run(Stop::Time(20.0));
     let acc = report.series["acc_vs_time"].last_y().unwrap();
     assert!(acc > 0.95, "accuracy {acc}");
 }

@@ -1,37 +1,15 @@
 //! Threaded-runner integration: real asynchronous training on the logreg
-//! workload with the pure-rust oracle, plus stats sanity.
+//! workload, driven through the `exp::Experiment` builder (the same
+//! paper_workload data/partition derivation the simulator uses), plus
+//! stats sanity.
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
-use rfast::data::{Dataset, Partition};
+use rfast::exp::{Engine, Experiment, Stop, Workload};
 use rfast::graph::Topology;
-use rfast::oracle::{eval_logreg, LogRegFactory, OracleFactory};
-use rfast::runner::{RunUntil, ThreadedRunner};
-use std::sync::Arc;
-
-fn workload(n: usize, seed: u64) -> (LogRegFactory, Arc<Dataset>) {
-    let (train, eval) = Dataset::mnist01_like(seed).split_eval(2000);
-    let train = Arc::new(train);
-    let partition = Partition::iid(&train, n, seed);
-    let eval = Arc::new(eval);
-    (
-        LogRegFactory {
-            train: Arc::clone(&train),
-            eval_set: Arc::clone(&eval),
-            partition,
-            batch: 32,
-            l2: 1e-4,
-            seed,
-        },
-        eval,
-    )
-}
 
 #[test]
 fn threaded_rfast_trains_logreg_to_high_accuracy() {
-    let n = 4;
-    let (factory, eval_set) = workload(n, 3);
-    let topo = Topology::binary_tree(n);
     let cfg = SimConfig {
         seed: 3,
         gamma: 2e-3,
@@ -39,31 +17,24 @@ fn threaded_rfast_trains_logreg_to_high_accuracy() {
         eval_every: 0.1,
         ..SimConfig::default()
     };
-    let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
-                                     vec![0.0; factory.dim()])
-        .with_pace(2e-4);
-    let mut eval_fn = {
-        let eval_set = Arc::clone(&eval_set);
-        move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
-    };
-    let (report, stats) = runner.run(&factory, &mut eval_fn,
-                                     RunUntil::TargetLoss {
-                                         loss: 0.08,
-                                         max_seconds: 30.0,
-                                     });
-    let acc = report.scalars.get("final_accuracy").copied().unwrap_or(0.0);
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::binary_tree(4))
+        .config(cfg)
+        .engine(Engine::Threaded { pace: Some(2e-4) })
+        .stop(Stop::TargetLoss { loss: 0.08, max_time: 30.0 })
+        .run()
+        .expect("threaded logreg run");
+    let acc = run.report.scalars.get("final_accuracy").copied().unwrap_or(0.0);
     assert!(acc > 0.97, "accuracy {acc}");
-    assert!(stats.steps_per_node.iter().all(|&s| s > 50),
-            "{:?}", stats.steps_per_node);
-    assert!(stats.msgs_sent > 0);
+    assert!(run.stats.steps_per_node.iter().all(|&s| s > 50),
+            "{:?}", run.stats.steps_per_node);
+    assert!(run.stats.msgs_sent > 0);
+    assert!(run.stats.wall_seconds.is_some());
 }
 
 #[test]
 fn threaded_runner_all_async_algorithms_progress() {
     for algo in [AlgoKind::RFast, AlgoKind::AdPsgd, AlgoKind::Osgp] {
-        let n = 3;
-        let (factory, eval_set) = workload(n, 9);
-        let topo = Topology::ring(n);
         let cfg = SimConfig {
             seed: 9,
             gamma: 3e-3,
@@ -74,16 +45,14 @@ fn threaded_runner_all_async_algorithms_progress() {
         // OSGP's push-sum mass is destroyed by send discards, so it needs
         // compute ≫ RTT (the paper's regime): pace well above the
         // in-process round trip.
-        let runner = ThreadedRunner::new(cfg, &topo, algo,
-                                         vec![0.0; factory.dim()])
-            .with_pace(5e-4);
-        let mut eval_fn = {
-            let eval_set = Arc::clone(&eval_set);
-            move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
-        };
-        let (report, _) = runner.run(&factory, &mut eval_fn,
-                                     RunUntil::TotalSteps(9_000));
-        let s = &report.series["loss_vs_wall"];
+        let run = Experiment::new(Workload::LogReg, algo)
+            .topology(&Topology::ring(3))
+            .config(cfg)
+            .engine(Engine::Threaded { pace: Some(5e-4) })
+            .stop(Stop::Iterations(9_000))
+            .run()
+            .expect("threaded run");
+        let s = &run.report.series["loss_vs_wall"];
         assert!(
             s.last_y().unwrap() < s.points[0].1,
             "{}: {:?}",
@@ -96,8 +65,6 @@ fn threaded_runner_all_async_algorithms_progress() {
 #[test]
 fn threaded_runner_straggler_counts_fewer_steps() {
     let n = 4;
-    let (factory, eval_set) = workload(n, 11);
-    let topo = Topology::ring(n);
     let mut cfg = SimConfig {
         seed: 11,
         gamma: 1e-3,
@@ -106,20 +73,44 @@ fn threaded_runner_straggler_counts_fewer_steps() {
         ..SimConfig::default()
     };
     cfg.straggler = Some((2, 4.0));
-    let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
-                                     vec![0.0; factory.dim()])
-        .with_pace(2e-4);
-    let mut eval_fn = {
-        let eval_set = Arc::clone(&eval_set);
-        move |x: &[f32]| eval_logreg(&eval_set, x, 1e-4)
-    };
-    let (_, stats) =
-        runner.run(&factory, &mut eval_fn, RunUntil::WallSeconds(1.5));
-    let s = &stats.steps_per_node;
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::ring(n))
+        .config(cfg)
+        .engine(Engine::Threaded { pace: Some(2e-4) })
+        .stop(Stop::Time(1.5))
+        .run()
+        .expect("straggler run");
+    let s = &run.stats.steps_per_node;
     let others_min = (0..n).filter(|&i| i != 2).map(|i| s[i]).min().unwrap();
     assert!(
         (s[2] as f64) < 0.6 * others_min as f64,
         "straggler {} vs others min {others_min}",
         s[2]
     );
+}
+
+#[test]
+fn threaded_stop_epochs_uses_the_coordinator_mapping() {
+    // Stop::Epochs on the threaded engine: the coordinator converts total
+    // steps × epoch-per-node-batch into global epochs and stops there —
+    // the same mapping the `epoch` scalar reports
+    let cfg = SimConfig {
+        seed: 5,
+        gamma: 1e-3,
+        compute_mean: 0.001,
+        eval_every: 0.05,
+        ..SimConfig::default()
+    };
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&Topology::ring(3))
+        .config(cfg)
+        .engine(Engine::Threaded { pace: Some(1e-3) })
+        .stop(Stop::Epochs(0.05))
+        .run()
+        .expect("epoch-stopped run");
+    let epoch = run.report.scalars["epoch"];
+    assert!(epoch >= 0.05, "stopped before the epoch budget: {epoch}");
+    // a small budget must stop early, not run to the safety deadline
+    assert!(epoch < 5.0, "overshot the epoch budget wildly: {epoch}");
+    assert!(run.stats.total_steps() > 0);
 }

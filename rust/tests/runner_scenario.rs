@@ -11,9 +11,10 @@
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
+use rfast::exp::{Engine, Experiment, QuadSpec, RunStats, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::oracle::QuadraticOracle;
-use rfast::runner::{RunUntil, RunnerStats, ThreadedRunner};
+use rfast::runner::ThreadedRunner;
 use rfast::scenario::{BandwidthCap, ChurnEvent, Phase, Scenario};
 use rfast::testutil::{tracking_quad_eval, QuadFactory};
 
@@ -27,25 +28,27 @@ fn fast_cfg(seed: u64) -> SimConfig {
     }
 }
 
-/// Run a heterogeneous quadratic on the threaded runner; returns the
-/// report stats plus the last evaluated mean's distance to the optimum.
+/// Run a heterogeneous quadratic on the threaded runner via the builder;
+/// returns the report, the unified stats and the gap the builder measures
+/// on the last evaluated mean (surfaced as `Report::final_gap`).
 fn run_quad(
     algo: AlgoKind,
     n: usize,
     dim: usize,
     cfg: SimConfig,
     pace: f64,
-    until: RunUntil,
-) -> (rfast::metrics::Report, RunnerStats, f64) {
-    let q = QuadraticOracle::heterogeneous(dim, n, 0.5, 2.0, cfg.seed);
-    let xs = q.optimum();
-    let topo = Topology::ring(n);
-    let runner =
-        ThreadedRunner::new(cfg, &topo, algo, vec![0.0; dim]).with_pace(pace);
-    let (mut eval, last_mean) = tracking_quad_eval(q.clone());
-    let (report, stats) = runner.run(&QuadFactory(q), &mut eval, until);
-    let gap = rfast::linalg::dist(&last_mean.lock().unwrap(), &xs);
-    (report, stats, gap)
+    until: Stop,
+) -> (rfast::metrics::Report, RunStats, f64) {
+    let run = Experiment::new(
+            Workload::Quadratic(QuadSpec::heterogeneous(dim, 0.5, 2.0)), algo)
+        .topology(&Topology::ring(n))
+        .config(cfg)
+        .engine(Engine::Threaded { pace: Some(pace) })
+        .stop(until)
+        .run()
+        .expect("threaded quad run");
+    let gap = run.report.final_gap.expect("quadratic runs report final_gap");
+    (run.report, run.stats, gap)
 }
 
 #[test]
@@ -57,7 +60,7 @@ fn every_preset_runs_in_the_threaded_engine() {
         cfg.scenario = Some(Scenario::by_name(name).unwrap());
         let (report, stats, _) =
             run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
-                     RunUntil::WallSeconds(0.2));
+                     Stop::Time(0.2));
         assert!(stats.steps_per_node.iter().sum::<u64>() > 0,
                 "{name}: no progress");
         assert!(report.series.contains_key("loss_vs_wall"), "{name}");
@@ -73,7 +76,7 @@ fn churn_pause_window_freezes_the_paused_node() {
     let mut cfg = fast_cfg(19);
     cfg.scenario = Some(sc);
     let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
-                                 RunUntil::WallSeconds(0.3));
+                                 Stop::Time(0.3));
     assert_eq!(stats.steps_per_node[1], 0,
                "paused node stepped: {:?}", stats.steps_per_node);
     for i in [0usize, 2, 3] {
@@ -87,7 +90,7 @@ fn churn_pause_window_freezes_the_paused_node() {
     let mut cfg = fast_cfg(19);
     cfg.scenario = Some(sc);
     let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
-                                 RunUntil::WallSeconds(0.5));
+                                 Stop::Time(0.5));
     assert!(stats.steps_per_node[1] > 0, "node 1 never resumed");
 }
 
@@ -101,7 +104,7 @@ fn lossy_30pct_keeps_rfast_converging() {
     cfg.gamma = 0.02;
     cfg.scenario = Some(Scenario::by_name("lossy_30pct").unwrap());
     let (report, stats, gap) = run_quad(AlgoKind::RFast, 4, 6, cfg, 1e-4,
-                                        RunUntil::TotalSteps(8_000));
+                                        Stop::Iterations(8_000));
     assert!(stats.msgs_lost > 0, "loss injection active: {stats:?}");
     assert!(stats.bytes_sent > 0, "payload byte accounting active");
     // lost/backpressured sends transmit nothing, so the transmitted
@@ -136,7 +139,7 @@ fn gamma_decay_lowers_the_noise_floor_threaded() {
                                          vec![0.0; 8])
             .with_pace(5e-5);
         let (mut eval, last_mean) = tracking_quad_eval(q.clone());
-        runner.run(&QuadFactory(q), &mut eval, RunUntil::TotalSteps(40_000));
+        runner.run(&QuadFactory(q), &mut eval, Stop::Iterations(40_000));
         rfast::linalg::dist(&last_mean.lock().unwrap(), &xs)
     };
     let constant = run(None);
@@ -155,7 +158,7 @@ fn straggler_preset_skews_step_counts() {
     let mut cfg = fast_cfg(31);
     cfg.scenario = Some(Scenario::by_name("paper_fig6_straggler").unwrap());
     let (_, stats, _) = run_quad(AlgoKind::RFast, 4, 6, cfg, 2e-4,
-                                 RunUntil::WallSeconds(0.6));
+                                 Stop::Time(0.6));
     let s = &stats.steps_per_node;
     let others_min = (0..4).filter(|&i| i != 3).map(|i| s[i]).min().unwrap();
     assert!(
@@ -173,7 +176,7 @@ fn bandwidth_caps_pace_the_senders() {
     let clean = {
         let cfg = fast_cfg(37);
         let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
-                                     RunUntil::WallSeconds(0.3));
+                                     Stop::Time(0.3));
         stats
     };
     let capped = {
@@ -186,7 +189,7 @@ fn bandwidth_caps_pace_the_senders() {
         let mut cfg = fast_cfg(37);
         cfg.scenario = Some(sc);
         let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
-                                     RunUntil::WallSeconds(0.3));
+                                     Stop::Time(0.3));
         stats
     };
     assert_eq!(clean.msgs_paced, 0, "clean run must not pace");
@@ -208,7 +211,7 @@ fn latency_ramp_injects_wall_clock_delay() {
     cfg.latency_cap = 0.5;
     cfg.scenario = Some(sc);
     let (_, stats, _) = run_quad(AlgoKind::RFast, 3, 6, cfg, 1e-4,
-                                 RunUntil::WallSeconds(0.3));
+                                 Stop::Time(0.3));
     assert!(stats.msgs_paced > 0, "ramp never paced a send: {stats:?}");
     assert!(stats.steps_per_node.iter().sum::<u64>() > 0);
 }

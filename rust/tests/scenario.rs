@@ -5,11 +5,12 @@
 
 use rfast::algo::AlgoKind;
 use rfast::config::SimConfig;
+use rfast::exp::{Experiment, QuadSpec, RunStats, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::jsonio;
 use rfast::oracle::{GradOracle, QuadraticOracle};
 use rfast::scenario::Scenario;
-use rfast::sim::{Simulator, SimStats, StopRule};
+use rfast::sim::Simulator;
 
 fn fast_cfg(seed: u64) -> SimConfig {
     SimConfig {
@@ -26,14 +27,16 @@ fn fast_cfg(seed: u64) -> SimConfig {
 }
 
 fn run_quad(algo: AlgoKind, n: usize, scenario: Option<Scenario>, seed: u64,
-            iters: u64) -> (f64, SimStats) {
-    let topo = Topology::ring(n);
-    let quad = QuadraticOracle::heterogeneous(8, n, 0.5, 2.0, seed);
-    let mut cfg = fast_cfg(seed);
-    cfg.scenario = scenario;
-    let mut sim = Simulator::new(cfg, &topo, algo, quad.into_set());
-    let report = sim.run(StopRule::Iterations(iters));
-    (report.final_gap.unwrap(), sim.stats())
+            iters: u64) -> (f64, RunStats) {
+    let run = Experiment::new(
+            Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0)), algo)
+        .topology(&Topology::ring(n))
+        .config(fast_cfg(seed))
+        .maybe_scenario(scenario.as_ref())
+        .stop(Stop::Iterations(iters))
+        .run()
+        .expect("scenario run");
+    (run.report.final_gap.unwrap(), run.stats)
 }
 
 #[test]
@@ -90,8 +93,8 @@ fn sync_baseline_pays_the_straggler_scenario_rfast_does_not() {
         run_quad(AlgoKind::RingAllReduce, 4, Some(sc.clone()), 13, 4_000);
     let clean_async = run_quad(AlgoKind::RFast, 4, None, 13, 4_000);
     let slow_async = run_quad(AlgoKind::RFast, 4, Some(sc), 13, 4_000);
-    let sync_ratio = slow_sync.1.virtual_time / clean_sync.1.virtual_time;
-    let async_ratio = slow_async.1.virtual_time / clean_async.1.virtual_time;
+    let sync_ratio = slow_sync.1.elapsed_seconds() / clean_sync.1.elapsed_seconds();
+    let async_ratio = slow_async.1.elapsed_seconds() / clean_async.1.elapsed_seconds();
     assert!(sync_ratio > 2.0, "sync should stall: {sync_ratio}");
     assert!(async_ratio < 1.6, "async should shrug: {async_ratio}");
 }
@@ -112,10 +115,11 @@ fn late_straggler_onset_only_bites_after_t() {
                         Some(Scenario::single_straggler(1, 5.0)), 21, 4_000);
     let lately = run_quad(AlgoKind::RingAllReduce, 4, Some(late), 21, 4_000);
     assert!(
-        clean.1.virtual_time < lately.1.virtual_time
-            && lately.1.virtual_time < perm.1.virtual_time,
+        clean.1.elapsed_seconds() < lately.1.elapsed_seconds()
+            && lately.1.elapsed_seconds() < perm.1.elapsed_seconds(),
         "onset ordering: clean {} < late {} < permanent {}",
-        clean.1.virtual_time, lately.1.virtual_time, perm.1.virtual_time
+        clean.1.elapsed_seconds(), lately.1.elapsed_seconds(),
+        perm.1.elapsed_seconds()
     );
 }
 
@@ -133,7 +137,7 @@ fn churn_pauses_reduce_a_nodes_share_but_not_convergence() {
         });
     }
     let (gap, stats) = run_quad(AlgoKind::RFast, 4, Some(sc), 31, 30_000);
-    assert_eq!(stats.grad_wakes, 30_000);
+    assert_eq!(stats.total_steps(), 30_000);
     assert!(gap < 5e-2, "R-FAST gap under churn: {gap}");
 }
 
@@ -157,7 +161,8 @@ fn bandwidth_caps_congest_links() {
         "cap must congest the ack channel: {} vs {}",
         capped.1.msgs_backpressured, free.1.msgs_backpressured
     );
-    assert!(capped.1.msgs_delivered > 0);
+    assert!(capped.1.msgs_delivered.unwrap() > 0);
+    assert!(capped.1.msgs_paced > 0, "bw cap must pace sim sends");
 }
 
 #[test]
