@@ -1,14 +1,17 @@
 //! Paper §VI-A (Fig 4a) as a runnable example: R-FAST trains the same
 //! logistic-regression problem over five different topologies — including
 //! the NON-strongly-connected binary tree and line graphs that only
-//! Assumption 2 permits. One sweep-native builder chain drives all five.
+//! Assumption 2 permits — then over asymmetric (G_R, G_C) architecture
+//! pairs whose pull and push graphs are two DIFFERENT spanning trees
+//! (paper Fig. 3; `graph::arch`). One sweep-native builder chain drives
+//! each set.
 //!
 //!     cargo run --release --example topologies_logreg [--nodes N]
 
 use rfast::algo::AlgoKind;
 use rfast::cli::Args;
 use rfast::exp::{Experiment, Stop, Workload};
-use rfast::graph::TopologyKind;
+use rfast::graph::{ArchSpec, TopologyKind};
 use rfast::metrics::Table;
 use std::path::Path;
 
@@ -55,4 +58,32 @@ fn main() {
     println!("\ncurves: runs/topologies_loss_vs_epoch.csv (and friends)");
     println!("Every topology converges — including tree/line, which are NOT \
               strongly connected (Assumption 2 at work).");
+
+    // part 2: the pull and push graphs need not even be the same tree —
+    // any two spanning trees sharing a common root satisfy Assumption 2
+    let pairs = ArchSpec::paper_pairs();
+    let arch_cmp = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .seed(1)
+        .stop(Stop::Time(120.0))
+        .sweep_architectures(&pairs, n)
+        .expect("architecture sweep");
+    let mut arch_table = Table::new(
+        &format!("R-FAST over asymmetric pull+push pairs ({n} nodes)"),
+        &["architecture", "final loss", "final acc(%)"],
+    );
+    for run in &arch_cmp.runs {
+        arch_table.row(vec![
+            run.report.label.clone(),
+            format!("{:.4}",
+                    run.report.series["loss_vs_time"].last_y().unwrap()),
+            format!("{:.1}",
+                    100.0 * run.report.series["acc_vs_time"]
+                        .last_y()
+                        .unwrap()),
+        ]);
+    }
+    arch_table.print();
+    arch_cmp.save_csvs(Path::new("runs"), "architectures").unwrap();
+    println!("G_R and G_C as two different spanning trees (Fig. 3): \
+              runs/architectures_*.csv");
 }

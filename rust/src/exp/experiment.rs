@@ -21,7 +21,8 @@
 //! (engine-specific extras are `Option`s). Misuse is a typed
 //! [`ExpError`], never a panic or a bare string. Sweeps are native:
 //! [`Experiment::sweep_algos`] / [`Experiment::sweep_topologies`] /
-//! [`Experiment::sweep_engines`] return a [`Comparison`] that feeds
+//! [`Experiment::sweep_architectures`] / [`Experiment::sweep_engines`]
+//! return a [`Comparison`] that feeds
 //! [`save_comparison_csvs`](super::save_comparison_csvs) directly.
 //!
 //! Stop-rule ↔ engine semantics (DESIGN.md §9):
@@ -36,7 +37,7 @@
 use super::{tuned_gamma, Workload};
 use crate::algo::AlgoKind;
 use crate::config::SimConfig;
-use crate::graph::{Topology, TopologyKind};
+use crate::graph::{ArchSpec, Topology, TopologyKind};
 use crate::metrics::{Report, Series};
 use crate::oracle::{LogRegFactory, OracleFactory};
 use crate::runner::{RunnerStats, ThreadedRunner};
@@ -153,6 +154,14 @@ pub enum ExpError {
     /// `Stop::Epochs` on a workload with no dataset-epoch mapping
     /// (closed-form quadratics count steps, not passes over data).
     NoEpochMapping { workload: &'static str },
+    /// The topology violates Assumption 1 or 2
+    /// ([`WeightMatrices::check_assumptions`](crate::graph::WeightMatrices::check_assumptions)
+    /// found violations — e.g. an architecture pair whose spanning trees
+    /// share no common root). `topology` names the offending topology or
+    /// (G_R, G_C) pair; `detail` lists every violation. Pre-flighted by
+    /// [`Experiment::run`], so an invalid pair can never start a silent
+    /// divergent run.
+    InvalidTopology { topology: String, detail: String },
     /// `SimConfig::validate` failed.
     InvalidConfig(String),
     /// Scenario validation failed; `field` is a JSON-path-like pointer to
@@ -181,6 +190,9 @@ impl std::fmt::Display for ExpError {
                 write!(f, "Stop::Epochs needs a workload with an epoch \
                            mapping; {workload:?} has none (use \
                            Stop::Iterations or Stop::Time)")
+            }
+            ExpError::InvalidTopology { topology, detail } => {
+                write!(f, "invalid topology {topology:?}: {detail}")
             }
             ExpError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
             ExpError::InvalidScenario { scenario, field, detail } => {
@@ -476,6 +488,20 @@ impl Experiment {
     pub fn run(&self) -> Result<Run, ExpError> {
         let topo = self.topology.as_ref().ok_or(ExpError::MissingTopology)?;
         let stop = self.stop.ok_or(ExpError::MissingStop)?;
+        // Assumption 1-2 pre-flight: a hand-built (or architecture-pair)
+        // topology with no common root would run "fine" and silently
+        // diverge — surface it as the typed error instead
+        let violations = topo.weights.check_assumptions();
+        if !violations.is_empty() {
+            return Err(ExpError::InvalidTopology {
+                topology: topo.name().to_string(),
+                detail: violations
+                    .iter()
+                    .map(|e| e.to_string())
+                    .collect::<Vec<_>>()
+                    .join("; "),
+            });
+        }
         self.check_workload_on(self.engine)?;
         if matches!(stop, Stop::Epochs(_)) && !self.workload.has_epoch_mapping()
         {
@@ -646,6 +672,26 @@ impl Experiment {
             let exp = self.clone().topology(&kind.build(n));
             let mut run = exp.run()?;
             run.report.label = self.sweep_label(kind.name());
+            runs.push(run);
+        }
+        Ok(Comparison { runs })
+    }
+
+    /// Run once per asymmetric (G_R, G_C) architecture pair at `n`
+    /// nodes; each run's report is labeled with the pair's name
+    /// (`bfs@0+star@0`). An unbuildable spec (out-of-range root) or a
+    /// pair violating Assumption 2 (no common root) is the typed
+    /// [`ExpError::InvalidTopology`] — the fig3 bench path.
+    pub fn sweep_architectures(
+        &self, specs: &[ArchSpec], n: usize,
+    ) -> Result<Comparison, ExpError> {
+        let mut runs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let topo = spec.build(n).map_err(|detail| {
+                ExpError::InvalidTopology { topology: spec.name(), detail }
+            })?;
+            let mut run = self.clone().topology(&topo).run()?;
+            run.report.label = self.sweep_label(&spec.name());
             runs.push(run);
         }
         Ok(Comparison { runs })

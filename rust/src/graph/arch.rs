@@ -1,0 +1,494 @@
+//! Asymmetric architectures — (G_R, G_C) pairs built from **two
+//! independent spanning trees** (paper §II, Fig. 3).
+//!
+//! R-FAST's headline structural claim is that the pull graph G_R = G(W)
+//! and the push graph G_C = G(Aᵀ) need not be related at all: each only
+//! has to contain a spanning tree, and the two trees must share at least
+//! one common root (Assumption 2). Every [`TopologyKind`](super::TopologyKind) builder derives
+//! W and A from ONE base graph and its inverse, so that flexibility was
+//! previously unreachable. An [`ArchSpec`] makes it first-class: two
+//! [`TreeSpec`]s — one for the pull side, one for the push side — each
+//! naming a spanning-tree construction and its root, compiled together
+//! into a [`Topology`] whose W is row-stochastic over the pull tree and
+//! whose A is column-stochastic over the push tree (the Appendix-G
+//! uniform weighting, via [`Topology::from_edges`]).
+//!
+//! Constructions ([`TreeKind`]):
+//!
+//! * `balanced` — the depth-balanced binary tree of Fig 3a, re-rooted at
+//!   any node by label rotation;
+//! * `chain` — the line graph of Fig 3c, rooted anywhere;
+//! * `star` — the parameter-server shape of Remark 1;
+//! * `bfs` / `dfs` — breadth-first / depth-first spanning trees of the
+//!   exponential base digraph (`i → (i + 2^k) mod n`): shallow vs deep
+//!   trees over one base, rooted anywhere;
+//! * `random` — a loop-erased-random-walk (Wilson) spanning tree of the
+//!   complete digraph, seeded and deterministic like
+//!   [`Topology::gossip`].
+//!
+//! Grammar (the CLI's `--topology` accepts it wherever a plain name is
+//! accepted; the optional `tree:` prefix is cosmetic):
+//!
+//! ```text
+//! [tree:]PULL+PUSH        PULL, PUSH := KIND[@ROOT][:SEED]
+//! tree:bfs@0+star@0       # BFS pull tree and star push tree, root 0
+//! chain@2+balanced@2      # chain-pull / tree-push, both rooted at 2
+//! random@0:7+random@0:21  # two independent random spanning trees
+//! ```
+//!
+//! A pair whose trees have different roots violates Assumption 2 (a pure
+//! tree's root set is exactly its root), which
+//! [`Experiment::run`](crate::exp::Experiment::run) pre-flights through
+//! [`WeightMatrices::check_assumptions`](super::WeightMatrices::check_assumptions)
+//! into a typed
+//! [`ExpError::InvalidTopology`](crate::exp::ExpError::InvalidTopology)
+//! naming the pair — never a silent divergent run. DESIGN.md §10.
+
+use super::Topology;
+use crate::prng::Rng;
+
+/// Which spanning-tree construction builds one side of an [`ArchSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TreeKind {
+    /// Breadth-first tree of the exponential base digraph (shallow).
+    Bfs,
+    /// Depth-first tree of the exponential base digraph (deep).
+    Dfs,
+    /// Depth-balanced binary tree (Fig 3a, re-rooted by label rotation).
+    Balanced,
+    /// Line graph rooted anywhere (Fig 3c).
+    Chain,
+    /// Star / parameter-server shape (Remark 1).
+    Star,
+    /// Loop-erased-random-walk (Wilson) spanning tree of the complete
+    /// digraph; seeded, deterministic.
+    Random,
+}
+
+impl TreeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TreeKind::Bfs => "bfs",
+            TreeKind::Dfs => "dfs",
+            TreeKind::Balanced => "balanced",
+            TreeKind::Chain => "chain",
+            TreeKind::Star => "star",
+            TreeKind::Random => "random",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TreeKind> {
+        Some(match s {
+            "bfs" => TreeKind::Bfs,
+            "dfs" => TreeKind::Dfs,
+            "balanced" | "tree" => TreeKind::Balanced,
+            "chain" | "line" => TreeKind::Chain,
+            "star" | "ps" => TreeKind::Star,
+            "random" | "lerw" | "wilson" => TreeKind::Random,
+            _ => return None,
+        })
+    }
+}
+
+/// One spanning tree: a construction, its root, and (for
+/// [`TreeKind::Random`]) the seed of the loop-erased random walk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TreeSpec {
+    pub kind: TreeKind,
+    pub root: usize,
+    /// Consumed only by [`TreeKind::Random`]; 0 otherwise by convention.
+    pub seed: u64,
+}
+
+impl TreeSpec {
+    pub fn new(kind: TreeKind, root: usize) -> TreeSpec {
+        TreeSpec { kind, root, seed: 0 }
+    }
+
+    /// Parse one side of the pair grammar: `KIND[@ROOT][:SEED]`.
+    pub fn parse(s: &str) -> Result<TreeSpec, String> {
+        let (body, seed) = match s.split_once(':') {
+            Some((b, sd)) => (
+                b,
+                sd.parse::<u64>()
+                    .map_err(|_| format!("tree spec {s:?}: bad seed {sd:?}"))?,
+            ),
+            None => (s, 0),
+        };
+        let (kind_s, root) = match body.split_once('@') {
+            Some((k, r)) => (
+                k,
+                r.parse::<usize>()
+                    .map_err(|_| format!("tree spec {s:?}: bad root {r:?}"))?,
+            ),
+            None => (body, 0),
+        };
+        let kind = TreeKind::from_name(kind_s).ok_or_else(|| {
+            format!(
+                "tree spec {s:?}: unknown construction {kind_s:?} \
+                 (bfs|dfs|balanced|chain|star|random)"
+            )
+        })?;
+        Ok(TreeSpec { kind, root, seed })
+    }
+
+    /// Stable display name, `kind@root[:seed]`.
+    pub fn name(&self) -> String {
+        match self.kind {
+            TreeKind::Random => {
+                format!("{}@{}:{}", self.kind.name(), self.root, self.seed)
+            }
+            _ => format!("{}@{}", self.kind.name(), self.root),
+        }
+    }
+
+    /// Parent array of the spanning tree over `n` nodes:
+    /// `parents[i]` is `i`'s parent, and `parents[root] == root`.
+    pub fn parents(&self, n: usize) -> Result<Vec<usize>, String> {
+        if n == 0 {
+            return Err("tree over 0 nodes".into());
+        }
+        if self.root >= n {
+            return Err(format!(
+                "tree {}: root {} out of range (n = {n})",
+                self.name(),
+                self.root
+            ));
+        }
+        let r = self.root;
+        let mut parents = vec![usize::MAX; n];
+        parents[r] = r;
+        match self.kind {
+            TreeKind::Balanced => {
+                // heap positions 0..n hold labels (r + p) mod n; the
+                // parent of position p is (p − 1)/2 — Fig 3a re-rooted
+                for p in 1..n {
+                    let child = (r + p) % n;
+                    let parent = (r + (p - 1) / 2) % n;
+                    parents[child] = parent;
+                }
+            }
+            TreeKind::Chain => {
+                for p in 1..n {
+                    parents[(r + p) % n] = (r + p - 1) % n;
+                }
+            }
+            TreeKind::Star => {
+                for i in 0..n {
+                    if i != r {
+                        parents[i] = r;
+                    }
+                }
+            }
+            TreeKind::Bfs => {
+                let mut queue = std::collections::VecDeque::from([r]);
+                while let Some(u) = queue.pop_front() {
+                    for v in exp_neighbors(u, n) {
+                        if parents[v] == usize::MAX {
+                            parents[v] = u;
+                            queue.push_back(v);
+                        }
+                    }
+                }
+            }
+            TreeKind::Dfs => {
+                let mut stack = vec![r];
+                while let Some(u) = stack.pop() {
+                    // reversed push order: the smallest hop is explored
+                    // first, giving long hop-1 paths (a deep tree)
+                    for v in exp_neighbors(u, n).into_iter().rev() {
+                        if parents[v] == usize::MAX {
+                            parents[v] = u;
+                            stack.push(v);
+                        }
+                    }
+                }
+            }
+            TreeKind::Random => {
+                // Wilson's algorithm on the complete digraph: from each
+                // node not yet in the tree, random-walk until the tree is
+                // hit, overwriting the walk's exit pointer (loop erasure),
+                // then commit the loop-erased path. Deterministic per
+                // seed, like Topology::gossip.
+                let mut rng = Rng::stream(self.seed, 0xa2c4_7e11);
+                let mut in_tree = vec![false; n];
+                in_tree[r] = true;
+                for start in 0..n {
+                    if in_tree[start] {
+                        continue;
+                    }
+                    let mut u = start;
+                    while !in_tree[u] {
+                        let v = loop {
+                            let v = rng.below(n);
+                            if v != u {
+                                break v;
+                            }
+                        };
+                        parents[u] = v;
+                        u = v;
+                    }
+                    let mut u = start;
+                    while !in_tree[u] {
+                        in_tree[u] = true;
+                        u = parents[u];
+                    }
+                }
+            }
+        }
+        debug_assert!(
+            parents.iter().enumerate().all(|(i, &p)| p < n && (i == r) == (p == i)),
+            "not a spanning tree rooted at {r}: {parents:?}"
+        );
+        Ok(parents)
+    }
+}
+
+/// An asymmetric (G_R, G_C) architecture: an independent spanning tree
+/// per side, compiled to row-stochastic W over the pull tree and
+/// column-stochastic A over the push tree (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ArchSpec {
+    /// G_R = G(W): parameters flow root → leaves; children pull from
+    /// their parent.
+    pub pull: TreeSpec,
+    /// G_C = G(Aᵀ): gradient ρ-mass flows leaves → root; children push
+    /// to their parent.
+    pub push: TreeSpec,
+}
+
+impl ArchSpec {
+    pub fn new(pull: TreeSpec, push: TreeSpec) -> ArchSpec {
+        ArchSpec { pull, push }
+    }
+
+    /// Parse the pair grammar `[tree:]PULL+PUSH` (module docs).
+    pub fn parse(spec: &str) -> Result<ArchSpec, String> {
+        let s = spec.strip_prefix("tree:").unwrap_or(spec);
+        let (a, b) = s.split_once('+').ok_or_else(|| {
+            format!(
+                "architecture spec wants PULL+PUSH \
+                 (e.g. tree:bfs@0+star@0), got {spec:?}"
+            )
+        })?;
+        Ok(ArchSpec { pull: TreeSpec::parse(a)?, push: TreeSpec::parse(b)? })
+    }
+
+    /// Does `spec` look like pair grammar (vs a plain topology name)?
+    pub fn is_arch_spec(spec: &str) -> bool {
+        spec.contains('+') || spec.starts_with("tree:")
+    }
+
+    /// Stable display name, `pull+push` — labels sweeps, reports and the
+    /// typed `InvalidTopology` error.
+    pub fn name(&self) -> String {
+        format!("{}+{}", self.pull.name(), self.push.name())
+    }
+
+    /// Compile to a [`Topology`] over `n` nodes: uniform Appendix-G
+    /// weights on {self} ∪ tree-neighbors per side. Errs on out-of-range
+    /// roots; a *root mismatch* is deliberately NOT an error here — it
+    /// builds fine and fails Assumption 2, which
+    /// [`Experiment::run`](crate::exp::Experiment::run) (and `repro
+    /// graph`) surface as the typed violation the test suite probes.
+    pub fn build(&self, n: usize) -> Result<Topology, String> {
+        let pull = self.pull.parents(n)?;
+        let push = self.push.parents(n)?;
+        // pull tree: child i pulls from its parent ⇒ W edge (parent, i)
+        let w_edges: Vec<(usize, usize)> = (0..n)
+            .filter(|&i| pull[i] != i)
+            .map(|i| (pull[i], i))
+            .collect();
+        // push tree: child i pushes to its parent ⇒ A edge (i, parent)
+        let a_edges: Vec<(usize, usize)> = (0..n)
+            .filter(|&i| push[i] != i)
+            .map(|i| (i, push[i]))
+            .collect();
+        Ok(Topology::from_edges(n, &w_edges, &a_edges).labeled(self.name()))
+    }
+
+    /// The standard comparison set of the fig3 bench (`repro` +
+    /// EXPERIMENTS.md): four structurally distinct valid pairs sharing
+    /// root 0. A fifth, root-mismatched pair for the rejection tests is
+    /// [`ArchSpec::no_common_root_pair`].
+    pub fn paper_pairs() -> Vec<ArchSpec> {
+        ["balanced@0+star@0",
+         "chain@0+balanced@0",
+         "bfs@0+dfs@0",
+         "random@0:7+random@0:21"]
+            .iter()
+            .map(|s| ArchSpec::parse(s).expect("builtin pair"))
+            .collect()
+    }
+
+    /// A pair whose trees are rooted at different nodes — G(W)'s root set
+    /// is {0}, G(Aᵀ)'s is {1}, so Assumption 2's common-root set is empty.
+    pub fn no_common_root_pair() -> ArchSpec {
+        ArchSpec::parse("balanced@0+star@1").expect("builtin pair")
+    }
+}
+
+/// Out-neighbors of `u` in the exponential base digraph
+/// (`u → (u + 2^k) mod n` for all `2^k < n`), in increasing hop order.
+fn exp_neighbors(u: usize, n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut hop = 1;
+    while hop < n {
+        let v = (u + hop) % n;
+        if v != u && !out.contains(&v) {
+            out.push(v);
+        }
+        hop *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::AssumptionError;
+
+    fn tree(kind: TreeKind, root: usize) -> TreeSpec {
+        TreeSpec::new(kind, root)
+    }
+
+    fn is_spanning_tree(parents: &[usize], root: usize) {
+        let n = parents.len();
+        assert_eq!(parents[root], root);
+        for i in 0..n {
+            // every node walks up to the root without cycling
+            let mut u = i;
+            for _ in 0..=n {
+                if u == root {
+                    break;
+                }
+                u = parents[u];
+            }
+            assert_eq!(u, root, "node {i} does not reach root {root}");
+        }
+    }
+
+    #[test]
+    fn every_construction_spans_at_every_root() {
+        for n in [1usize, 2, 3, 5, 8, 13, 16] {
+            for kind in [TreeKind::Bfs, TreeKind::Dfs, TreeKind::Balanced,
+                         TreeKind::Chain, TreeKind::Star, TreeKind::Random] {
+                for root in [0, n / 2, n - 1] {
+                    let p = TreeSpec { kind, root, seed: 5 }
+                        .parents(n)
+                        .unwrap_or_else(|e| panic!("{kind:?}@{root} n={n}: {e}"));
+                    is_spanning_tree(&p, root);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_root_is_an_error() {
+        let e = tree(TreeKind::Star, 7).parents(4).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        assert!(ArchSpec::parse("star@7+star@7").unwrap().build(4).is_err());
+    }
+
+    #[test]
+    fn grammar_roundtrip() {
+        for s in ["bfs@0+star@0", "chain@2+balanced@2", "random@1:7+dfs@1",
+                  "random@0:7+random@0:21"] {
+            let a = ArchSpec::parse(s).unwrap();
+            assert_eq!(a.name(), s);
+            // the cosmetic tree: prefix parses to the same spec
+            assert_eq!(ArchSpec::parse(&format!("tree:{s}")).unwrap(), a);
+        }
+        // defaults: root 0, seed 0
+        let a = ArchSpec::parse("bfs+star").unwrap();
+        assert_eq!(a.pull, tree(TreeKind::Bfs, 0));
+        assert_eq!(a.push, tree(TreeKind::Star, 0));
+        assert!(ArchSpec::parse("bfs@0").is_err()); // no pair
+        assert!(ArchSpec::parse("bogus@0+star@0").is_err());
+        assert!(ArchSpec::parse("bfs@x+star@0").is_err());
+        assert!(ArchSpec::parse("random@0:z+star@0").is_err());
+        assert!(ArchSpec::is_arch_spec("bfs@0+star@0"));
+        assert!(ArchSpec::is_arch_spec("tree:bfs@0+star@0"));
+        assert!(!ArchSpec::is_arch_spec("ring"));
+    }
+
+    #[test]
+    fn shared_root_pairs_satisfy_assumption_2() {
+        for n in [2usize, 3, 7, 8, 16] {
+            for spec in ArchSpec::paper_pairs() {
+                let t = spec.build(n).unwrap();
+                let errs = t.weights.check_assumptions();
+                assert!(errs.is_empty(), "{} n={n}: {errs:?}", spec.name());
+                assert_eq!(t.weights.common_roots(), vec![0],
+                           "{} n={n}", spec.name());
+                assert_eq!(t.name(), spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn root_mismatch_has_no_common_root() {
+        let t = ArchSpec::no_common_root_pair().build(6).unwrap();
+        assert_eq!(t.weights.roots_w(), vec![0]);
+        assert_eq!(t.weights.roots_at(), vec![1]);
+        let errs = t.weights.check_assumptions();
+        assert!(errs.contains(&AssumptionError::NoCommonRoot), "{errs:?}");
+    }
+
+    #[test]
+    fn pull_and_push_sides_are_genuinely_independent() {
+        // chain pull / star push: W rows follow the chain, A columns the
+        // star — no relation between the two edge sets
+        let t = ArchSpec::parse("chain@0+star@0").unwrap().build(5).unwrap();
+        for i in 1..5 {
+            assert!(t.weights.w.get(i, i - 1) > 0.0, "chain pull edge {i}");
+            assert!(t.weights.a.get(0, i) > 0.0, "star push edge {i}");
+        }
+        // the star's direct pull edges do NOT exist in W (beyond 0→1)
+        assert_eq!(t.weights.w.get(3, 0), 0.0);
+        // and the chain's hop edges do NOT exist in A
+        assert_eq!(t.weights.a.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn random_trees_are_seed_deterministic_and_seed_sensitive() {
+        let mk = |seed| {
+            ArchSpec {
+                pull: TreeSpec { kind: TreeKind::Random, root: 2, seed },
+                push: tree(TreeKind::Star, 2),
+            }
+            .build(12)
+            .unwrap()
+        };
+        let a = mk(7);
+        let b = mk(7);
+        // bitwise: Mat is PartialEq over the raw weight storage
+        assert_eq!(a.weights.w, b.weights.w);
+        assert_eq!(a.weights.a, b.weights.a);
+        let c = mk(8);
+        assert_ne!(a.weights.w, c.weights.w, "seed must matter");
+    }
+
+    #[test]
+    fn bfs_is_shallower_than_dfs() {
+        let depth = |parents: &[usize], root: usize| -> usize {
+            (0..parents.len())
+                .map(|i| {
+                    let mut d = 0;
+                    let mut u = i;
+                    while u != root {
+                        u = parents[u];
+                        d += 1;
+                    }
+                    d
+                })
+                .max()
+                .unwrap()
+        };
+        let n = 16;
+        let bfs = tree(TreeKind::Bfs, 0).parents(n).unwrap();
+        let dfs = tree(TreeKind::Dfs, 0).parents(n).unwrap();
+        assert!(depth(&bfs, 0) < depth(&dfs, 0),
+                "bfs {} vs dfs {}", depth(&bfs, 0), depth(&dfs, 0));
+    }
+}

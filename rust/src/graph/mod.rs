@@ -15,12 +15,17 @@
 //! [`Topology`] bundles both matrices plus builders for every topology used
 //! in the paper's experiments (binary tree, line, directed ring,
 //! exponential, mesh) and the structures Appendix G calls out as special
-//! cases (star/parameter-server, random gossip).
+//! cases (star/parameter-server, random gossip). Every one of those
+//! derives W and A from a single base graph; the [`arch`] module builds
+//! the *asymmetric* case — [`ArchSpec`] pairs of two independent spanning
+//! trees (Fig. 3), reachable from the CLI via [`Topology::from_spec`].
 
+pub mod arch;
 pub mod augmented;
 mod matrix;
 mod topology;
 
+pub use arch::{ArchSpec, TreeKind, TreeSpec};
 pub use augmented::AugmentedAnalysis;
 pub use matrix::Mat;
 pub use topology::{Topology, TopologyKind};

@@ -70,11 +70,45 @@ impl TopologyKind {
 pub struct Topology {
     pub kind: TopologyKind,
     pub weights: WeightMatrices,
+    /// Display label for topologies the flat [`TopologyKind`] can't name
+    /// (asymmetric architecture pairs, hand-built edge lists). `None`
+    /// falls back to the kind's name — see [`Topology::name`].
+    pub label: Option<String>,
 }
 
 impl Topology {
     pub fn n(&self) -> usize {
         self.weights.n
+    }
+
+    /// Human-readable name: the explicit label when set (architecture
+    /// pairs like `bfs@0+star@0`), else the builder kind's name.
+    pub fn name(&self) -> &str {
+        self.label.as_deref().unwrap_or_else(|| self.kind.name())
+    }
+
+    /// Attach a display label (sweep columns, error messages).
+    pub fn labeled(mut self, label: impl Into<String>) -> Topology {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Resolve a CLI `--topology` spec over `n` nodes: a plain
+    /// [`TopologyKind`] name (`ring`, `binary_tree`, ...) or the
+    /// asymmetric pair grammar `[tree:]PULL+PUSH` of
+    /// [`ArchSpec`](super::arch::ArchSpec) (`tree:bfs@0+star@0`).
+    pub fn from_spec(spec: &str, n: usize) -> Result<Topology, String> {
+        if let Some(kind) = TopologyKind::from_name(spec) {
+            return Ok(kind.build(n));
+        }
+        if super::arch::ArchSpec::is_arch_spec(spec) {
+            return super::arch::ArchSpec::parse(spec)?.build(n);
+        }
+        Err(format!(
+            "unknown topology {spec:?} (a name like ring|binary_tree|line|\
+             exponential|mesh|star|gossip, or an architecture pair like \
+             tree:bfs@0+star@0)"
+        ))
     }
 
     /// Build from explicit directed edge lists.
@@ -101,7 +135,11 @@ impl Topology {
         }
         a.normalize_cols();
 
-        Topology { kind: TopologyKind::Custom, weights: WeightMatrices::new(w, a) }
+        Topology {
+            kind: TopologyKind::Custom,
+            weights: WeightMatrices::new(w, a),
+            label: None,
+        }
     }
 
     fn with_kind(mut self, kind: TopologyKind) -> Topology {
@@ -231,6 +269,7 @@ impl Topology {
         Topology {
             kind: TopologyKind::Ring,
             weights: WeightMatrices::new(w.clone(), w),
+            label: None,
         }
     }
 }
@@ -315,6 +354,19 @@ mod tests {
             Topology::from_edges(3, &[(1, 1)], &[])
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn from_spec_resolves_names_and_pairs() {
+        let t = Topology::from_spec("ring", 4).unwrap();
+        assert_eq!(t.kind, TopologyKind::Ring);
+        assert_eq!(t.name(), "ring");
+        let t = Topology::from_spec("tree:bfs@0+star@0", 6).unwrap();
+        assert_eq!(t.kind, TopologyKind::Custom);
+        assert_eq!(t.name(), "bfs@0+star@0");
+        assert!(t.weights.check_assumptions().is_empty());
+        assert!(Topology::from_spec("nope", 4).is_err());
+        assert!(Topology::from_spec("bogus@0+star@0", 4).is_err());
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! stack (see `DESIGN.md`):
 //!
 //! * [`graph`] — directed topologies, row/column-stochastic weight matrices,
-//!   spanning-tree root sets, Assumption 1-2 validation.
+//!   spanning-tree root sets, Assumption 1-2 validation, and asymmetric
+//!   (G_R, G_C) architectures built from two independent spanning trees
+//!   ([`graph::arch`], the paper's Fig. 3 flexibility).
 //! * [`algo`] — the R-FAST state machine plus six baselines (sync Push-Pull,
 //!   D-PSGD, S-AB, Ring-AllReduce, AD-PSGD, OSGP), all event-driven, all
 //!   emitting shared zero-copy payloads ([`algo::Payload`], DESIGN.md §8).
@@ -145,7 +147,8 @@ pub mod prelude {
     pub use crate::data::{Dataset, Partition};
     pub use crate::exp::{Comparison, Engine, ExpError, Experiment, QuadSpec,
                          Run, RunStats, Stop, Workload};
-    pub use crate::graph::{Topology, TopologyKind, WeightMatrices};
+    pub use crate::graph::{ArchSpec, Topology, TopologyKind, TreeKind,
+                           TreeSpec, WeightMatrices};
     pub use crate::linalg as la;
     pub use crate::metrics::{Report, Series};
     pub use crate::oracle::{GradOracle, LogRegOracle, QuadraticOracle};

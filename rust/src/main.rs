@@ -25,7 +25,7 @@ use rfast::cli::Args;
 use rfast::config::SimConfig;
 use rfast::data::{Dataset, Partition};
 use rfast::exp::{Engine, Experiment, Stop, Workload};
-use rfast::graph::TopologyKind;
+use rfast::graph::Topology;
 use rfast::metrics::Table;
 use rfast::runtime::{self, Manifest, PjrtTask};
 use rfast::scenario::Scenario;
@@ -93,7 +93,7 @@ fn print_help() {
          help             this text\n\n\
          train options:\n  \
          --algo NAME        rfast|rfast-naive|pushpull|sab|dpsgd|adpsgd|osgp|allreduce\n  \
-         --topology NAME    binary_tree|line|ring|exponential|mesh|star|gossip\n  \
+         --topology SPEC    binary_tree|line|ring|exponential|mesh|star|gossip, or\n                          an asymmetric pull+push spanning-tree pair\n                          [tree:]PULL+PUSH with PULL/PUSH = KIND[@ROOT][:SEED],\n                          KIND = bfs|dfs|balanced|chain|star|random —\n                          e.g. tree:bfs@0+star@0 (DESIGN.md \u{a7}10)\n  \
          --nodes N          node count (default 8)\n  \
          --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
          --engine E         sim (virtual time, default) | threaded (thread-per-\n                          node, wall clock; logreg + rust oracle) | both (run\n                          sim AND threaded, emit side-by-side comparison CSVs)\n  \
@@ -238,12 +238,11 @@ fn cmd_bench_baseline(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_graph(args: &Args) -> Result<(), String> {
-    let kind = TopologyKind::from_name(&args.get_or("topology", "binary_tree"))
-        .ok_or("unknown --topology")?;
     let n: usize = args.parse_num("nodes", 7usize)?;
-    let topo = kind.build(n);
+    let topo =
+        Topology::from_spec(&args.get_or("topology", "binary_tree"), n)?;
     let wm = &topo.weights;
-    println!("topology {} over {} nodes", kind.name(), n);
+    println!("topology {} over {} nodes", topo.name(), n);
     println!("G(W) edges (j→i, i pulls from j):");
     for i in 0..n {
         for &j in &wm.w_in[i] {
@@ -366,9 +365,11 @@ fn resolve_stop(args: &Args, engine: &str) -> Result<Stop, String> {
 fn cmd_train(args: &Args) -> Result<(), String> {
     let algo = AlgoKind::from_name(&args.get_or("algo", "rfast"))
         .ok_or("unknown --algo (see `repro algos`)")?;
-    let kind = TopologyKind::from_name(&args.get_or("topology", "ring"))
-        .ok_or("unknown --topology")?;
     let n: usize = args.parse_num("nodes", 8usize)?;
+    // plain name (ring, binary_tree, ...) or an asymmetric architecture
+    // pair (tree:bfs@0+star@0) — Assumption 1-2 violations surface as a
+    // typed error from Experiment::run, not a silent divergent run
+    let topo = Topology::from_spec(&args.get_or("topology", "ring"), n)?;
     let model = args.get_or("model", "logreg");
     let oracle_kind = args.get_or("oracle", "rust");
 
@@ -396,7 +397,6 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
     cfg.validate()?;
 
-    let topo = kind.build(n);
     let engine = args.get_or("engine", "sim");
     if !["sim", "threaded", "both"].contains(&engine.as_str()) {
         return Err(format!("unknown --engine {engine:?} (sim|threaded|both)"));
@@ -406,7 +406,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     println!(
         "train: {} on {} ({} nodes), engine={engine} model={model} \
          oracle={oracle_kind} γ={} seed={} stop={stop:?}",
-        algo.name(), kind.name(), n, cfg.gamma, cfg.seed
+        algo.name(), topo.name(), n, cfg.gamma, cfg.seed
     );
     if let Some(sc) = &cfg.scenario {
         println!("scenario: {} — {}", sc.name, sc.description);

@@ -1,0 +1,232 @@
+//! The asymmetric-architecture subsystem end to end: (G_R, G_C) pairs
+//! built from two independent spanning trees drive both engines, a pair
+//! with no common root is a typed pre-flight rejection (never a silent
+//! divergent run), seeded random-spanning-tree runs are bitwise
+//! deterministic, and a root-churn scenario probes the "at least one
+//! common root" assumption on both engines.
+//!
+//! The threaded halves spin real threads; CI runs this file in the
+//! single-threaded wall-clock step.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::exp::{Engine, ExpError, Experiment, QuadSpec, Stop, Workload};
+use rfast::graph::{ArchSpec, Topology};
+use rfast::scenario::{ChurnEvent, Scenario};
+
+fn quad() -> Workload {
+    Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0))
+}
+
+fn fast_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        gamma: 0.03,
+        compute_mean: 0.01,
+        link_latency: 0.002,
+        latency_cap: 0.05,
+        eval_every: 1.0,
+        ..SimConfig::default()
+    }
+}
+
+// ---- the flexibility claim: asymmetric pairs converge ------------------
+
+#[test]
+fn rfast_converges_on_every_paper_pair() {
+    for spec in ArchSpec::paper_pairs() {
+        let topo = spec.build(8).unwrap();
+        let run = Experiment::new(quad(), AlgoKind::RFast)
+            .topology(&topo)
+            .config(fast_cfg(3))
+            .stop(Stop::Iterations(40_000))
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+        let gap = run.report.final_gap.unwrap();
+        assert!(gap < 5e-2, "{}: gap {gap}", spec.name());
+    }
+}
+
+// ---- common-root rejection (typed, pre-flight) -------------------------
+
+#[test]
+fn no_common_root_pair_is_rejected_not_run() {
+    let err = Experiment::new(quad(), AlgoKind::RFast)
+        .config(fast_cfg(1))
+        .stop(Stop::Iterations(100))
+        .sweep_architectures(&[ArchSpec::no_common_root_pair()], 6)
+        .unwrap_err();
+    match &err {
+        ExpError::InvalidTopology { topology, detail } => {
+            // the error names the offending pair and the violated
+            // assumption
+            assert_eq!(topology, "balanced@0+star@1");
+            assert!(detail.contains("common root"), "{detail}");
+        }
+        other => panic!("expected InvalidTopology, got {other:?}"),
+    }
+    assert!(err.to_string().contains("balanced@0+star@1"), "{err}");
+}
+
+#[test]
+fn hand_built_edge_pair_without_common_root_is_rejected_on_both_engines() {
+    // previously this ran silently and diverged: G(W) rooted only at 0,
+    // G(Aᵀ) rooted only at 1 — Assumption 2 fails, run() must pre-flight
+    let topo = Topology::from_edges(
+        3,
+        &[(0, 1), (0, 2)], // 1 and 2 pull from 0 ⇒ roots_w = {0}
+        &[(0, 1), (2, 1)], // 0 and 2 push to 1 ⇒ roots_at = {1}
+    );
+    assert!(topo.weights.common_roots().is_empty());
+    for engine in [Engine::Sim, Engine::Threaded { pace: Some(1e-4) }] {
+        let err = Experiment::new(quad(), AlgoKind::RFast)
+            .topology(&topo)
+            .config(fast_cfg(1))
+            .engine(engine)
+            .stop(Stop::Iterations(100))
+            .run()
+            .unwrap_err();
+        assert!(
+            matches!(err, ExpError::InvalidTopology { .. }),
+            "{engine:?}: {err:?}"
+        );
+    }
+}
+
+// ---- seeded determinism ------------------------------------------------
+
+#[test]
+fn random_tree_pair_runs_are_bitwise_deterministic_by_seed() {
+    let mk = |tree_seed: u64| {
+        let spec =
+            ArchSpec::parse(&format!("random@0:{tree_seed}+random@0:21"))
+                .unwrap();
+        let topo = spec.build(10).unwrap();
+        Experiment::new(quad(), AlgoKind::RFast)
+            .topology(&topo)
+            .config(fast_cfg(5))
+            .stop(Stop::Iterations(3_000))
+            .run()
+            .unwrap()
+    };
+    let a = mk(7);
+    let b = mk(7);
+    // bitwise: identical tree ⇒ identical event sequence ⇒ identical JSON
+    assert_eq!(a.report.to_json().to_string(),
+               b.report.to_json().to_string());
+    assert_eq!(a.stats, b.stats);
+    // a different tree seed changes the topology, hence the trajectory
+    let c = mk(9);
+    assert_ne!(a.report.to_json().to_string(),
+               c.report.to_json().to_string());
+}
+
+// ---- engine parity on an asymmetric pair -------------------------------
+
+/// Same unified scalar contract as `tests/experiment.rs`, now on a
+/// two-tree architecture: dashboards must not branch on the engine.
+const UNIFIED_SCALARS: [&str; 5] = [
+    "msgs_lost",
+    "bytes_sent",
+    "msgs_backpressured",
+    "msgs_paced",
+    "epoch",
+];
+
+#[test]
+fn sim_and_threaded_expose_the_same_scalar_keys_on_an_asymmetric_pair() {
+    let topo = ArchSpec::parse("chain@0+balanced@0").unwrap().build(4).unwrap();
+    let base = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&topo)
+        .config(SimConfig {
+            eval_every: 0.05,
+            ..SimConfig::logreg_paper()
+        });
+    let sim_run = base
+        .clone()
+        .engine(Engine::Sim)
+        .stop(Stop::Time(2.0))
+        .run()
+        .unwrap();
+    let thr_run = base
+        .engine(Engine::Threaded { pace: Some(5e-4) })
+        .stop(Stop::Time(0.3))
+        .run()
+        .unwrap();
+    for key in UNIFIED_SCALARS {
+        assert!(sim_run.report.scalars.contains_key(key),
+                "sim missing {key}");
+        assert!(thr_run.report.scalars.contains_key(key),
+                "threaded missing {key}");
+    }
+    assert!(sim_run.stats.total_steps() > 0);
+    assert!(thr_run.stats.total_steps() > 0);
+}
+
+// ---- root churn: probing the common-root assumption under faults -------
+
+#[test]
+fn paused_common_root_stalls_but_does_not_kill_the_sim_run() {
+    // chain-pull/star-push rooted at 0: node 0 is the ONLY common root.
+    // Pause it for a third of the run — the asynchronous others keep
+    // stepping (a stalled root is not a crash), the root's own step
+    // count drops, and the run still finishes with a finite loss.
+    let topo = ArchSpec::parse("chain@0+star@0").unwrap().build(5).unwrap();
+    let mut sc = Scenario::named(
+        "root_churn",
+        "the unique common root goes dark mid-run",
+    );
+    sc.churn.push(ChurnEvent { node: 0, pause_at: 10.0, resume_at: 25.0 });
+    let run = |scenario: Option<&Scenario>| {
+        Experiment::new(quad(), AlgoKind::RFast)
+            .topology(&topo)
+            .config(fast_cfg(11))
+            .maybe_scenario(scenario)
+            .stop(Stop::Time(40.0))
+            .run()
+            .unwrap()
+    };
+    let churned = run(Some(&sc));
+    let clean = run(None);
+    let steps = &churned.stats.steps_per_node;
+    let others: u64 = steps[1..].iter().sum();
+    assert!(others > 0, "non-root nodes kept stepping: {steps:?}");
+    // the root lost ~15 s of a 40 s run: it must trail the per-node mean
+    let mean_other = others as f64 / (steps.len() - 1) as f64;
+    assert!(
+        (steps[0] as f64) < 0.85 * mean_other,
+        "root should trail while paused: {steps:?}"
+    );
+    assert!((steps[0] as f64) > 0.0, "root ran outside the window");
+    // and progress survives: final gap finite and no worse than 10× clean
+    let g_churn = churned.report.final_gap.unwrap();
+    let g_clean = clean.report.final_gap.unwrap();
+    assert!(g_churn.is_finite());
+    assert!(g_churn < (10.0 * g_clean).max(0.5),
+            "churned {g_churn} vs clean {g_clean}");
+}
+
+#[test]
+fn root_churn_runs_on_the_threaded_engine_too() {
+    // wall-clock twin, compressed: pause the common root for the middle
+    // ~0.15 s of a 0.45 s run; others keep stepping, run terminates
+    let topo = ArchSpec::parse("chain@0+star@0").unwrap().build(3).unwrap();
+    let mut sc = Scenario::named("root_churn_wall", "");
+    sc.churn.push(ChurnEvent { node: 0, pause_at: 0.15, resume_at: 0.30 });
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&topo)
+        .config(SimConfig {
+            eval_every: 0.05,
+            ..SimConfig::logreg_paper()
+        })
+        .scenario(&sc)
+        .engine(Engine::Threaded { pace: Some(1e-3) })
+        .stop(Stop::Time(0.45))
+        .run()
+        .unwrap();
+    let steps = &run.stats.steps_per_node;
+    assert!(steps[1] > 0 && steps[2] > 0,
+            "non-root nodes kept stepping: {steps:?}");
+    assert!(run.stats.wall_seconds.unwrap() >= 0.45);
+    assert!(run.report.label.contains("root_churn_wall"));
+}
