@@ -192,6 +192,14 @@ pub trait NodeState: Send {
     /// send or discard, so the sender always knows). Default: drop.
     /// Mass-conserving protocols (OSGP's push-sum) reabsorb the payload.
     fn on_send_failed(&mut self, _msg: Msg) {}
+
+    /// Concrete-type escape hatch for engine-level invariant probes
+    /// (the fuzzer's conservation oracle downcasts to
+    /// [`RFastNode`](rfast::RFastNode) through this). Algorithms that
+    /// expose no probe-able internals keep the `None` default.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// Algorithm selector (CLI / benches).

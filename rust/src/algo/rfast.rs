@@ -346,6 +346,10 @@ impl NodeState for RFastNode {
     fn local_iter(&self) -> u64 {
         self.t
     }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -484,8 +484,14 @@ impl Experiment {
         }
     }
 
-    /// Validate the chain and execute it on the configured engine.
-    pub fn run(&self) -> Result<Run, ExpError> {
+    /// The shared pre-flight of [`Experiment::run`] and
+    /// [`Experiment::run_sim_probed`]: required fields, Assumption 1-2,
+    /// workload/engine compatibility, epoch mapping, the effective config
+    /// (overrides + scenario precedence) and its validation. Returns the
+    /// pieces execution needs.
+    fn validated(
+        &self, engine: Engine,
+    ) -> Result<(&Topology, SimConfig, Stop), ExpError> {
         let topo = self.topology.as_ref().ok_or(ExpError::MissingTopology)?;
         let stop = self.stop.ok_or(ExpError::MissingStop)?;
         // Assumption 1-2 pre-flight: a hand-built (or architecture-pair)
@@ -502,7 +508,7 @@ impl Experiment {
                     .join("; "),
             });
         }
-        self.check_workload_on(self.engine)?;
+        self.check_workload_on(engine)?;
         if matches!(stop, Stop::Epochs(_)) && !self.workload.has_epoch_mapping()
         {
             return Err(ExpError::NoEpochMapping {
@@ -532,12 +538,42 @@ impl Experiment {
             )?;
         }
         cfg.validate().map_err(ExpError::InvalidConfig)?;
+        Ok((topo, cfg, stop))
+    }
+
+    /// Validate the chain and execute it on the configured engine.
+    pub fn run(&self) -> Result<Run, ExpError> {
+        let (topo, cfg, stop) = self.validated(self.engine)?;
         match self.engine {
             Engine::Sim => self.run_on_sim(topo, cfg, stop),
             Engine::Threaded { pace } => {
                 self.run_on_threaded(topo, cfg, stop, pace)
             }
         }
+    }
+
+    /// [`Experiment::run`] on the virtual-time simulator with an
+    /// invariant hook: after the run stops (and before the simulator is
+    /// dropped) `probe` sees the final `&Simulator` — node state via
+    /// [`Simulator::nodes`](crate::sim::Simulator::nodes) and the
+    /// [`NodeState::as_any`](crate::algo::NodeState::as_any) downcast,
+    /// heap/clock via its other accessors. This is how the fuzzer's
+    /// oracles (e.g. ρ-mass conservation) inspect a finished run without
+    /// the simulator growing oracle knowledge. Always executes on
+    /// [`Engine::Sim`], whatever `.engine(..)` was set to.
+    pub fn run_sim_probed<T>(
+        &self, probe: impl FnOnce(&Simulator) -> T,
+    ) -> Result<(Run, T), ExpError> {
+        let (topo, cfg, stop) = self.validated(Engine::Sim)?;
+        let set = self.workload.build_set(topo.n(), &cfg);
+        let x0 = self.workload.x0(set.dim, cfg.seed);
+        let mut sim = Simulator::with_x0(cfg, topo, self.algo, set, &x0);
+        let mut report = sim.run(stop);
+        self.label_scenario(&mut report);
+        let probed = probe(&sim);
+        let stats =
+            RunStats::from_sim(sim.stats(), sim.steps_per_node().to_vec());
+        Ok((Run { report, stats, engine: Engine::Sim }, probed))
     }
 
     fn label_scenario(&self, report: &mut Report) {

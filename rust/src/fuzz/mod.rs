@@ -1,0 +1,424 @@
+//! Deterministic fault-space fuzzer with invariant oracles and
+//! auto-shrinking repros (DESIGN.md §11).
+//!
+//! FoundationDB-style simulation testing over the R-FAST stack: a seed
+//! deterministically generates a [`FuzzCase`] — node count, a random
+//! asymmetric (G_R, G_C) spanning-tree pair, step size, iteration budget
+//! and a random fault [`Scenario`] (stragglers, loss/latency ramps,
+//! churn windows, bandwidth caps) — which runs on the virtual-time
+//! simulator through the [`Experiment`] builder. After every run a fixed
+//! catalog of invariant oracles ([`oracles`]) checks properties the
+//! algorithm must hold under ANY fault schedule: bounded optimality gap,
+//! ρ-mass conservation of the robust gradient tracker, no stuck
+//! backpressure, and counter sanity. A violation is [`shrink`]-reduced
+//! to a minimal JSON repro (`rust/tests/repros/`) that replays as a
+//! permanent regression test.
+//!
+//! Everything is a pure function of the seed: no wall clock, no global
+//! RNG — `repro fuzz --seed S --budget N` prints bitwise-identical
+//! output on every invocation.
+
+pub mod oracles;
+pub mod shrink;
+
+use crate::algo::AlgoKind;
+use crate::config::SimConfig;
+use crate::exp::{Experiment, QuadSpec, Stop, Workload};
+use crate::graph::ArchSpec;
+use crate::jsonio::{self, Json};
+use crate::prng::Rng;
+use crate::scenario::Scenario;
+
+/// Schema tag of committed repro files — bump on breaking layout change.
+pub const SCHEMA: &str = "rfast-fuzz-repro/v1";
+
+/// Cases per `repro fuzz` run when neither `--budget` nor
+/// `RFAST_FUZZ_BUDGET` is given.
+pub const DEFAULT_BUDGET: u64 = 50;
+
+/// The shrinker never reduces the iteration budget below this.
+pub const ITERS_FLOOR: u64 = 50;
+
+/// Mean compute time per gradient step (seconds of virtual time) in the
+/// fuzzer's fixed run configuration.
+const COMPUTE_MEAN: f64 = 0.01;
+
+/// One self-contained fuzz input: everything needed to reproduce a run
+/// bit-for-bit. `PartialEq` is exact (f32/f64 bit values), so repro
+/// round-trip tests can compare cases directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuzzCase {
+    /// Node count (≥ 2).
+    pub n: usize,
+    /// Asymmetric (G_R, G_C) spanning-tree pair, both rooted at node 0
+    /// so Assumption 2 survives any `n` the shrinker picks.
+    pub arch: ArchSpec,
+    /// Simulator seed (bounded below 2^48 so JSON keeps it exact).
+    pub seed: u64,
+    /// Step size; the generator stays in the contractive range for the
+    /// fixed quadratic workload.
+    pub gamma: f32,
+    /// Total gradient steps across all nodes ([`Stop::Iterations`]).
+    pub iters: u64,
+    /// Fault schedule ([`Scenario::sample`]).
+    pub scenario: Scenario,
+}
+
+impl FuzzCase {
+    /// Case `case` of the corpus seeded by `fuzz_seed` — an independent
+    /// PRNG stream per case, so verdicts never depend on corpus order or
+    /// budget.
+    pub fn sample(fuzz_seed: u64, case: u64) -> FuzzCase {
+        let mut rng = Rng::stream(fuzz_seed, case);
+        let n = 2 + rng.below(9);
+        let arch = ArchSpec::sample(&mut rng);
+        // contractive for the h ∈ [0.5, 2] quadratics: |1 − γh| < 1
+        let gamma = (0.01 + 0.04 * rng.f64()) as f32;
+        let iters = 100 + 50 * rng.below(7) as u64;
+        // rough virtual length of the run: iters steps at COMPUTE_MEAN
+        // seconds each, spread over n concurrent nodes (×2 slack for
+        // stragglers), so sampled fault windows overlap the run
+        let horizon = iters as f64 / n as f64 * COMPUTE_MEAN * 2.0;
+        let scenario = Scenario::sample(&mut rng, n, horizon);
+        let seed = rng.below(1 << 48) as u64;
+        FuzzCase { n, arch, seed, gamma, iters, scenario }
+    }
+
+    /// A case that violates `gap_bounded` by construction: γ = 16 on
+    /// curvatures h ∈ [0.5, 2] gives a per-coordinate divergence factor
+    /// |1 − γh| ≥ 7, so the quadratic dynamics blow up within a handful
+    /// of steps at ANY n ≥ 2 and ANY fault schedule — every shrink
+    /// candidate still fails, driving the shrinker to its floors. The
+    /// seed-corpus test pins its shrink endpoint against
+    /// `rust/tests/repros/diverging_gamma.json`.
+    pub fn diverging_example() -> FuzzCase {
+        use crate::scenario::{ChurnEvent, Phase, StragglerSchedule,
+                              StragglerSpec};
+        let mut scenario =
+            Scenario::named("fuzz", "generated fault scenario");
+        scenario.stragglers.push(StragglerSpec {
+            node: 1,
+            factor: 3.0,
+            schedule: StragglerSchedule::Permanent,
+        });
+        scenario.loss_ramp.push(Phase { from_time: 0.0, value: 0.2 });
+        scenario.churn.push(ChurnEvent {
+            node: 0,
+            pause_at: 0.1,
+            resume_at: 0.3,
+        });
+        FuzzCase {
+            n: 6,
+            arch: ArchSpec::parse("balanced@0+star@0")
+                .expect("literal spec parses"),
+            seed: 7,
+            gamma: 16.0,
+            iters: 400,
+            scenario,
+        }
+    }
+
+    /// The fixed run configuration: paper-calibrated logreg timing
+    /// (compute 10ms, link 2ms, cap 50ms) with the case's seed and γ.
+    /// Faults come from the scenario, not the base config.
+    fn config(&self) -> SimConfig {
+        SimConfig {
+            seed: self.seed,
+            gamma: self.gamma,
+            compute_mean: COMPUTE_MEAN,
+            link_latency: 0.002,
+            latency_cap: 0.05,
+            eval_every: 0.25,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Execute on the virtual-time simulator and check every oracle.
+    /// Setup failures (unbuildable architecture, invalid config) are a
+    /// `"setup"` violation — the generator is supposed to never produce
+    /// them, so they are fuzz findings too, not panics.
+    pub fn run(&self) -> CaseOutcome {
+        let topo = match self.arch.build(self.n) {
+            Ok(t) => t,
+            Err(e) => {
+                return CaseOutcome::fail("setup", format!("arch build: {e}"))
+            }
+        };
+        let spec = QuadSpec::heterogeneous(4, 0.5, 2.0);
+        let exp = Experiment::new(Workload::Quadratic(spec), AlgoKind::RFast)
+            .topology(&topo)
+            .config(self.config())
+            .scenario(&self.scenario)
+            .stop(Stop::Iterations(self.iters));
+        match exp.run_sim_probed(oracles::MassProbe::capture) {
+            Ok((run, probe)) => oracles::check(self, &run, &probe),
+            Err(e) => CaseOutcome::fail("setup", e.to_string()),
+        }
+    }
+}
+
+/// Verdict of one case: which oracle fired (if any) and a human-readable
+/// detail line. Details are pure functions of the run, so two corpus
+/// runs compare bitwise-equal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CaseOutcome {
+    /// `None` = every oracle passed; otherwise the oracle's name (one of
+    /// [`oracles::ORACLES`] or `"setup"`).
+    pub violation: Option<&'static str>,
+    pub detail: String,
+}
+
+impl CaseOutcome {
+    pub fn pass() -> CaseOutcome {
+        CaseOutcome { violation: None, detail: String::new() }
+    }
+
+    pub fn fail(oracle: &'static str, detail: String) -> CaseOutcome {
+        CaseOutcome { violation: Some(oracle), detail }
+    }
+
+    pub fn is_fail(&self) -> bool {
+        self.violation.is_some()
+    }
+}
+
+/// A committed (or to-be-committed) repro file: the case plus its
+/// recorded verdict. `expect: "pass"` pins a formerly-shrunk case that
+/// has since been fixed; `expect: "fail"` demands the SAME oracle still
+/// fires on replay (a different oracle or a pass is a regression of the
+/// repro's meaning).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Repro {
+    pub case: FuzzCase,
+    /// `"pass"` or `"fail"`.
+    pub expect: String,
+    /// The firing oracle's name when `expect == "fail"`.
+    pub violation: Option<String>,
+}
+
+impl Repro {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", SCHEMA.into()),
+            ("n", self.case.n.into()),
+            ("arch", self.case.arch.name().into()),
+            ("seed", (self.case.seed as f64).into()),
+            ("gamma", (self.case.gamma as f64).into()),
+            ("iters", (self.case.iters as f64).into()),
+            ("scenario", self.case.scenario.to_json()),
+            ("expect", self.expect.as_str().into()),
+            (
+                "violation",
+                match &self.violation {
+                    Some(v) => v.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Repro, String> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("repro: missing schema tag")?;
+        if schema != SCHEMA {
+            return Err(format!(
+                "repro: schema {schema:?}, this build reads {SCHEMA:?}"
+            ));
+        }
+        let int = |key: &str| -> Result<u64, String> {
+            let x = j
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("repro: missing number {key:?}"))?;
+            if x.fract() != 0.0 || !(0.0..9.0e15).contains(&x) {
+                return Err(format!("repro: {key} = {x} is not a valid count"));
+            }
+            Ok(x as u64)
+        };
+        let n = int("n")? as usize;
+        if n < 2 {
+            return Err(format!("repro: n = {n} (needs ≥ 2)"));
+        }
+        let arch_str = j
+            .get("arch")
+            .and_then(Json::as_str)
+            .ok_or("repro: missing arch")?;
+        let arch = ArchSpec::parse(arch_str)
+            .map_err(|e| format!("repro: bad arch {arch_str:?}: {e}"))?;
+        let gamma = j
+            .get("gamma")
+            .and_then(Json::as_f64)
+            .ok_or("repro: missing gamma")? as f32;
+        let iters = int("iters")?;
+        let scenario = Scenario::from_json(
+            j.get("scenario").ok_or("repro: missing scenario")?,
+        )?;
+        scenario
+            .validate(Some(n))
+            .map_err(|e| format!("repro: scenario invalid at n={n}: {e}"))?;
+        let expect = j
+            .get("expect")
+            .and_then(Json::as_str)
+            .ok_or("repro: missing expect")?
+            .to_string();
+        if expect != "pass" && expect != "fail" {
+            return Err(format!("repro: expect {expect:?} (pass|fail)"));
+        }
+        let violation = match j.get("violation") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or("repro: violation must be a string or null")?
+                    .to_string(),
+            ),
+        };
+        if expect == "fail" && violation.is_none() {
+            return Err("repro: expect \"fail\" needs a violation name".into());
+        }
+        Ok(Repro {
+            case: FuzzCase { n, arch, seed: int("seed")?, gamma, iters,
+                             scenario },
+            expect,
+            violation,
+        })
+    }
+
+    /// Read and parse one repro file.
+    pub fn load(path: &std::path::Path) -> Result<Repro, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let j = jsonio::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Repro::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Replay the case and compare against the recorded verdict.
+    /// `Ok(())` = behaves as committed; `Err` describes the mismatch.
+    pub fn replay(&self) -> Result<(), String> {
+        let outcome = self.case.run();
+        match (self.expect.as_str(), outcome.violation) {
+            ("pass", None) => Ok(()),
+            ("pass", Some(v)) => Err(format!(
+                "expected pass, oracle {v} fired: {}",
+                outcome.detail
+            )),
+            ("fail", Some(v)) => {
+                if Some(v) == self.violation.as_deref() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "expected {:?} to fire, got {v}: {}",
+                        self.violation.as_deref().unwrap_or("?"),
+                        outcome.detail
+                    ))
+                }
+            }
+            ("fail", None) => Err(format!(
+                "expected {:?} to fire, but every oracle passed — if the \
+                 underlying bug is fixed, flip this repro to expect \
+                 \"pass\"",
+                self.violation.as_deref().unwrap_or("?")
+            )),
+            _ => unreachable!("expect validated at parse"),
+        }
+    }
+}
+
+/// One corpus failure: the generated case, its verdict, and (with
+/// shrinking on) the minimal case that still fires the same oracle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Failure {
+    pub case_index: u64,
+    pub case: FuzzCase,
+    pub violation: &'static str,
+    pub detail: String,
+    pub shrunk: Option<FuzzCase>,
+}
+
+/// Result of a corpus run — `PartialEq` so the determinism tests compare
+/// two full runs directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub budget: u64,
+    pub failures: Vec<Failure>,
+}
+
+/// Run `budget` generated cases from `seed`; optionally shrink each
+/// failure to its minimal form. Pure function of `(seed, budget,
+/// shrink_failures)`.
+pub fn run_corpus(seed: u64, budget: u64,
+                  shrink_failures: bool) -> FuzzReport {
+    let mut failures = Vec::new();
+    for case_index in 0..budget {
+        let case = FuzzCase::sample(seed, case_index);
+        let outcome = case.run();
+        if let Some(violation) = outcome.violation {
+            let shrunk = shrink_failures
+                .then(|| shrink::shrink(&case, violation));
+            failures.push(Failure {
+                case_index,
+                case,
+                violation,
+                detail: outcome.detail,
+                shrunk,
+            });
+        }
+    }
+    FuzzReport { seed, budget, failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_stream_independent() {
+        let a = FuzzCase::sample(42, 3);
+        let b = FuzzCase::sample(42, 3);
+        assert_eq!(a, b);
+        // neighboring case indices draw from independent streams
+        assert_ne!(FuzzCase::sample(42, 3), FuzzCase::sample(42, 4));
+    }
+
+    #[test]
+    fn sampled_seeds_survive_f64_json() {
+        for i in 0..64 {
+            let c = FuzzCase::sample(9, i);
+            assert!(c.seed < (1 << 48));
+            assert_eq!(c.seed as f64 as u64, c.seed);
+        }
+    }
+
+    #[test]
+    fn repro_json_rejects_garbage() {
+        let bad = |src: &str| {
+            Repro::from_json(&jsonio::parse(src).unwrap()).unwrap_err()
+        };
+        assert!(bad("{}").contains("schema"));
+        assert!(bad(r#"{"schema":"rfast-fuzz-repro/v0"}"#)
+            .contains("schema"));
+        let repro = Repro {
+            case: FuzzCase::diverging_example(),
+            expect: "fail".into(),
+            violation: None,
+        };
+        let err = Repro::from_json(&repro.to_json()).unwrap_err();
+        assert!(err.contains("violation"), "{err}");
+    }
+
+    #[test]
+    fn diverging_example_roundtrips() {
+        let repro = Repro {
+            case: FuzzCase::diverging_example(),
+            expect: "fail".into(),
+            violation: Some("gap_bounded".into()),
+        };
+        let text = repro.to_json().to_string();
+        let back = Repro::from_json(&jsonio::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, repro);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}

@@ -1,0 +1,182 @@
+//! The fuzzer's invariant catalog — properties every R-FAST run must
+//! hold under ANY generated fault schedule, checked in a FIXED order so
+//! one root cause always reports the same oracle name (shrinking
+//! preserves "same violation", so order stability is load-bearing):
+//!
+//! 1. `gap_bounded` — the run converged to a neighborhood: `final_gap`
+//!    exists, is finite and ≤ [`GAP_LIMIT`]. Owns every divergence/NaN
+//!    failure, so later oracles never fire on fp noise at blown-up
+//!    magnitudes.
+//! 2. `mass_conservation` — the robust gradient tracker's ρ running-sum
+//!    mass balance ([`crate::testutil::rho_mass_residual`], the Lemma 3
+//!    analogue) holds on the final simulator state to f32 accumulation
+//!    accuracy, scaled by the state's magnitude.
+//! 3. `no_stuck` — the event heap never drained before the stop rule
+//!    (`drained_early`) and the full iteration budget executed: a
+//!    permanently-backpressured `LinkSlots` or a never-resumed node
+//!    would starve the step counter.
+//! 4. `scalar_sanity` — conservation of message counters (every verdict
+//!    ≤ sends, verdicts don't double-count) and report/stats agreement.
+
+use super::{CaseOutcome, FuzzCase};
+use crate::algo::RFastNode;
+use crate::exp::Run;
+use crate::sim::Simulator;
+use crate::testutil::rho_mass_residual;
+
+/// Oracle names in check order (see module docs).
+pub const ORACLES: [&str; 4] =
+    ["gap_bounded", "mass_conservation", "no_stuck", "scalar_sanity"];
+
+/// `gap_bounded` threshold: generated cases use contractive step sizes
+/// on O(1)-scale quadratics, so a final gap anywhere near this is a
+/// genuine blow-up, not a slow run.
+pub const GAP_LIMIT: f64 = 1e3;
+
+/// Relative tolerance of `mass_conservation`: the residual accumulates
+/// f32 rounding from every z/gradient update, so it scales with the
+/// final state's magnitude.
+pub const MASS_RTOL: f64 = 1e-2;
+
+/// Conservation evidence captured from the final simulator state (the
+/// [`Experiment::run_sim_probed`](crate::exp::Experiment::run_sim_probed)
+/// probe runs before the simulator drops).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MassProbe {
+    /// Max per-coordinate |Σz + Σ(ρ − ρ̃) − Σ∇f| — `None` when the nodes
+    /// are not [`RFastNode`]s (nothing to probe).
+    pub residual: Option<f64>,
+    /// Σ|z| + Σ|∇f| over initialized nodes: the f32 magnitude the
+    /// residual tolerance tracks.
+    pub scale: f64,
+}
+
+impl MassProbe {
+    pub fn capture(sim: &Simulator) -> MassProbe {
+        let mut refs: Vec<&RFastNode> =
+            Vec::with_capacity(sim.nodes().len());
+        for nd in sim.nodes() {
+            match nd.as_any().and_then(|a| a.downcast_ref::<RFastNode>()) {
+                Some(r) => refs.push(r),
+                None => return MassProbe { residual: None, scale: 0.0 },
+            }
+        }
+        let mut scale = 0.0f64;
+        for r in &refs {
+            if !r.is_initialized() {
+                continue;
+            }
+            scale +=
+                r.z().iter().map(|&v| v.abs() as f64).sum::<f64>();
+            scale +=
+                r.last_grad().iter().map(|&v| v.abs() as f64).sum::<f64>();
+        }
+        MassProbe { residual: Some(rho_mass_residual(&refs)), scale }
+    }
+}
+
+/// Run the full catalog against a finished run. Returns the FIRST
+/// violation in catalog order, or a pass.
+pub fn check(case: &FuzzCase, run: &Run, probe: &MassProbe) -> CaseOutcome {
+    // 1. gap_bounded
+    let gap = match run.report.final_gap {
+        Some(g) => g,
+        None => {
+            return CaseOutcome::fail(
+                "gap_bounded",
+                "no final_gap on a quadratic run".into(),
+            )
+        }
+    };
+    if !gap.is_finite() || gap > GAP_LIMIT {
+        return CaseOutcome::fail(
+            "gap_bounded",
+            format!("final gap {gap:e} exceeds {GAP_LIMIT:e}"),
+        );
+    }
+
+    // 2. mass_conservation (only meaningful once magnitudes are bounded)
+    if let Some(residual) = probe.residual {
+        let tol = MASS_RTOL * probe.scale.max(1.0);
+        if !(residual <= tol) {
+            return CaseOutcome::fail(
+                "mass_conservation",
+                format!(
+                    "residual {residual:e} > tol {tol:e} (state scale \
+                     {:e})",
+                    probe.scale
+                ),
+            );
+        }
+    }
+
+    // 3. no_stuck
+    if run.report.scalars.contains_key("drained_early") {
+        return CaseOutcome::fail(
+            "no_stuck",
+            "event heap drained before the stop rule".into(),
+        );
+    }
+    let steps = run.stats.total_steps();
+    if steps < case.iters {
+        return CaseOutcome::fail(
+            "no_stuck",
+            format!("only {steps} of {} budgeted steps ran", case.iters),
+        );
+    }
+
+    // 4. scalar_sanity
+    let s = &run.stats;
+    let delivered = s.msgs_delivered.unwrap_or(0);
+    for (what, count) in [
+        ("msgs_lost", s.msgs_lost),
+        ("msgs_backpressured", s.msgs_backpressured),
+        ("msgs_delivered", delivered),
+    ] {
+        if count > s.msgs_sent {
+            return CaseOutcome::fail(
+                "scalar_sanity",
+                format!("{what} {count} > msgs_sent {}", s.msgs_sent),
+            );
+        }
+    }
+    // verdicts are mutually exclusive per send; the remainder is in
+    // flight at the stop instant
+    let verdicts = s.msgs_lost + s.msgs_backpressured + delivered;
+    if verdicts > s.msgs_sent {
+        return CaseOutcome::fail(
+            "scalar_sanity",
+            format!(
+                "verdicts double-counted: lost {} + backpressured {} + \
+                 delivered {delivered} > sent {}",
+                s.msgs_lost, s.msgs_backpressured, s.msgs_sent
+            ),
+        );
+    }
+    // the report's scalar table must agree with the engine counters
+    for (key, expect) in [
+        ("msgs_sent", s.msgs_sent as f64),
+        ("msgs_lost", s.msgs_lost as f64),
+        ("msgs_backpressured", s.msgs_backpressured as f64),
+        ("msgs_delivered", delivered as f64),
+    ] {
+        if let Some(&got) = run.report.scalars.get(key) {
+            if got != expect {
+                return CaseOutcome::fail(
+                    "scalar_sanity",
+                    format!("report scalar {key} = {got}, stats say \
+                             {expect}"),
+                );
+            }
+        }
+    }
+    if let Some(vt) = s.virtual_time {
+        if !vt.is_finite() || vt < 0.0 {
+            return CaseOutcome::fail(
+                "scalar_sanity",
+                format!("virtual_time {vt} is not a valid clock reading"),
+            );
+        }
+    }
+    CaseOutcome::pass()
+}

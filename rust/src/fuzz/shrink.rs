@@ -1,0 +1,264 @@
+//! Greedy auto-shrinker: reduce a failing [`FuzzCase`] to a minimal one
+//! that still fires the SAME oracle (DESIGN.md §11).
+//!
+//! Classic property-testing shrink loop, specialized to the fault
+//! grammar. Each round enumerates every single-step reduction of the
+//! current case in a FIXED order — drop one fault clause, shrink the
+//! node count, halve the iteration budget, halve one fault magnitude
+//! toward its neutral value — and re-runs candidates until one
+//! reproduces the violation; that candidate becomes current. The loop
+//! ends at a fixpoint: no candidate still fails.
+//!
+//! Termination: clause drops and n/iters reductions strictly shrink
+//! integers; magnitude halvings are only generated while the value is a
+//! significance threshold away from neutral, so each clause admits
+//! finitely many. [`MAX_STEPS`] is a defensive backstop, not the normal
+//! exit.
+
+use super::{FuzzCase, ITERS_FLOOR};
+use crate::scenario::Scenario;
+
+/// Backstop on accepted reductions (each strictly shrinks the case, so
+/// real chains are far shorter).
+const MAX_STEPS: usize = 512;
+
+/// Shrink `case` — which must currently fire `violation` — to a minimal
+/// case still firing it. Deterministic: candidate order is fixed and
+/// every re-run is seeded by the case itself.
+pub fn shrink(case: &FuzzCase, violation: &'static str) -> FuzzCase {
+    let mut cur = case.clone();
+    for _ in 0..MAX_STEPS {
+        let next = candidates(&cur)
+            .into_iter()
+            .find(|c| c.run().violation == Some(violation));
+        match next {
+            Some(c) => cur = c,
+            None => break,
+        }
+    }
+    cur
+}
+
+/// Every single-step reduction of `case`, in acceptance-priority order:
+/// structure first (fewer clauses beat smaller magnitudes in a minimal
+/// repro), then scale (n, iters), then magnitudes.
+fn candidates(case: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out = Vec::new();
+    let sc = &case.scenario;
+
+    // 1. drop one whole fault clause
+    for i in 0..sc.stragglers.len() {
+        let mut s = sc.clone();
+        s.stragglers.remove(i);
+        out.push(with_scenario(case, s));
+    }
+    for i in 0..sc.loss_ramp.len() {
+        let mut s = sc.clone();
+        s.loss_ramp.remove(i);
+        out.push(with_scenario(case, s));
+    }
+    for i in 0..sc.latency_ramp.len() {
+        let mut s = sc.clone();
+        s.latency_ramp.remove(i);
+        out.push(with_scenario(case, s));
+    }
+    for i in 0..sc.churn.len() {
+        let mut s = sc.clone();
+        s.churn.remove(i);
+        out.push(with_scenario(case, s));
+    }
+    for i in 0..sc.bandwidth.len() {
+        let mut s = sc.clone();
+        s.bandwidth.remove(i);
+        out.push(with_scenario(case, s));
+    }
+
+    // 2. shrink the node count (both trees are rooted at 0, so any
+    //    n ≥ 2 builds; clauses naming dropped nodes go with them)
+    let half = (case.n / 2).max(2);
+    if half < case.n {
+        out.push(with_n(case, half));
+    }
+    if case.n > 2 && case.n - 1 != half {
+        out.push(with_n(case, case.n - 1));
+    }
+
+    // 3. halve the iteration budget
+    let half_iters = (case.iters / 2).max(ITERS_FLOOR);
+    if half_iters < case.iters {
+        let mut c = case.clone();
+        c.iters = half_iters;
+        out.push(c);
+    }
+
+    // 4. halve one magnitude toward neutral (thresholds keep the
+    //    chain finite; below them the clause is dropped, not dimmed)
+    for i in 0..sc.stragglers.len() {
+        let f = sc.stragglers[i].factor;
+        if f - 1.0 >= 0.5 {
+            let mut s = sc.clone();
+            s.stragglers[i].factor = 1.0 + (f - 1.0) / 2.0;
+            out.push(with_scenario(case, s));
+        }
+    }
+    for i in 0..sc.loss_ramp.len() {
+        let v = sc.loss_ramp[i].value;
+        if v >= 0.05 {
+            let mut s = sc.clone();
+            s.loss_ramp[i].value = v / 2.0;
+            out.push(with_scenario(case, s));
+        }
+    }
+    for i in 0..sc.latency_ramp.len() {
+        let v = sc.latency_ramp[i].value;
+        if (v - 1.0).abs() >= 0.25 {
+            let mut s = sc.clone();
+            s.latency_ramp[i].value = 1.0 + (v - 1.0) / 2.0;
+            out.push(with_scenario(case, s));
+        }
+    }
+    for i in 0..sc.churn.len() {
+        let dur = sc.churn[i].resume_at - sc.churn[i].pause_at;
+        if dur >= 0.02 {
+            let mut s = sc.clone();
+            s.churn[i].resume_at = s.churn[i].pause_at + dur / 2.0;
+            out.push(with_scenario(case, s));
+        }
+    }
+    for i in 0..sc.bandwidth.len() {
+        let rate = sc.bandwidth[i].bytes_per_sec;
+        // a cap weakens as the rate grows; 1 MB/s ≈ uncapped for these
+        // payloads
+        if rate <= 1e6 {
+            let mut s = sc.clone();
+            s.bandwidth[i].bytes_per_sec = rate * 2.0;
+            out.push(with_scenario(case, s));
+        }
+    }
+    out
+}
+
+fn with_scenario(case: &FuzzCase, scenario: Scenario) -> FuzzCase {
+    let mut c = case.clone();
+    c.scenario = scenario;
+    c
+}
+
+/// Reduce the node count, dropping every clause that names a node the
+/// smaller run no longer has (a wildcard bandwidth endpoint survives).
+fn with_n(case: &FuzzCase, n: usize) -> FuzzCase {
+    let mut c = case.clone();
+    c.n = n;
+    c.scenario.stragglers.retain(|s| s.node < n);
+    c.scenario.churn.retain(|e| e.node < n);
+    c.scenario.bandwidth.retain(|b| {
+        b.from.map_or(true, |f| f < n) && b.to.map_or(true, |t| t < n)
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ArchSpec;
+    use crate::scenario::{BandwidthCap, ChurnEvent, Phase,
+                          StragglerSchedule, StragglerSpec};
+
+    fn full_case() -> FuzzCase {
+        let mut scenario = Scenario::named("fuzz", "test");
+        scenario.stragglers.push(StragglerSpec {
+            node: 5,
+            factor: 4.0,
+            schedule: StragglerSchedule::Permanent,
+        });
+        scenario.loss_ramp.push(Phase { from_time: 0.0, value: 0.4 });
+        scenario.latency_ramp.push(Phase { from_time: 0.0, value: 3.0 });
+        scenario.churn.push(ChurnEvent {
+            node: 2,
+            pause_at: 0.1,
+            resume_at: 0.5,
+        });
+        scenario.bandwidth.push(BandwidthCap {
+            from: Some(7),
+            to: None,
+            bytes_per_sec: 2e4,
+        });
+        FuzzCase {
+            n: 8,
+            arch: ArchSpec::parse("bfs@0+chain@0").unwrap(),
+            seed: 1,
+            gamma: 0.02,
+            iters: 200,
+            scenario,
+        }
+    }
+
+    #[test]
+    fn candidates_cover_every_reduction_family() {
+        let c = full_case();
+        let cands = candidates(&c);
+        // 5 clause drops + 2 n-shrinks + 1 iters + 5 magnitude halvings
+        assert_eq!(cands.len(), 13);
+        // every candidate is strictly "smaller or dimmer", never equal
+        for cand in &cands {
+            assert_ne!(*cand, c);
+            cand.scenario
+                .validate(Some(cand.n))
+                .expect("candidates stay valid");
+        }
+    }
+
+    #[test]
+    fn n_shrink_drops_out_of_range_clauses() {
+        let c = with_n(&full_case(), 4);
+        assert_eq!(c.n, 4);
+        assert!(c.scenario.stragglers.is_empty()); // named node 5
+        assert!(c.scenario.bandwidth.is_empty()); // from node 7
+        assert_eq!(c.scenario.churn.len(), 1); // node 2 survives
+        c.scenario.validate(Some(4)).unwrap();
+    }
+
+    #[test]
+    fn minimal_case_is_a_fixpoint() {
+        let c = FuzzCase {
+            n: 2,
+            arch: ArchSpec::parse("balanced@0+star@0").unwrap(),
+            seed: 7,
+            gamma: 16.0,
+            iters: ITERS_FLOOR,
+            scenario: Scenario::named("fuzz", "generated fault scenario"),
+        };
+        assert!(candidates(&c).is_empty());
+        // shrink() on a fixpoint returns it unchanged without running
+        // the simulator at all
+        assert_eq!(shrink(&c, "gap_bounded"), c);
+    }
+
+    #[test]
+    fn magnitude_halving_terminates() {
+        let mut c = full_case();
+        // keep only magnitude moves in play
+        c.scenario.bandwidth.clear();
+        for _ in 0..200 {
+            let magnitude_only: Vec<FuzzCase> = candidates(&c)
+                .into_iter()
+                .filter(|k| {
+                    k.n == c.n
+                        && k.iters == c.iters
+                        && k.scenario.stragglers.len()
+                            == c.scenario.stragglers.len()
+                        && k.scenario.loss_ramp.len()
+                            == c.scenario.loss_ramp.len()
+                        && k.scenario.latency_ramp.len()
+                            == c.scenario.latency_ramp.len()
+                        && k.scenario.churn.len() == c.scenario.churn.len()
+                })
+                .collect();
+            match magnitude_only.into_iter().next() {
+                Some(next) => c = next,
+                None => return, // chain ended — finite as promised
+            }
+        }
+        panic!("magnitude halving did not terminate in 200 steps");
+    }
+}

@@ -22,6 +22,11 @@
 //!   one-unacked-packet channel discipline, scalar+scenario fault
 //!   queries, and the [`Clock`](faults::Clock) abstraction mapping
 //!   virtual seconds to wall seconds.
+//! * [`fuzz`] — deterministic fault-space fuzzer: seeded case generation
+//!   (random scenarios × random architecture pairs), invariant oracles
+//!   (gap bound, ρ-mass conservation, stuck detection, counter sanity)
+//!   and greedy auto-shrinking to JSON repros replayed as regression
+//!   tests (`repro fuzz`; DESIGN.md §11).
 //! * [`runner`] — real thread-per-node asynchronous engine (wall clock).
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`)
 //!   produced by `python/compile/aot.py`; python is never on this path.
@@ -128,6 +133,7 @@ pub mod config;
 pub mod data;
 pub mod exp;
 pub mod faults;
+pub mod fuzz;
 pub mod graph;
 pub mod jsonio;
 pub mod linalg;

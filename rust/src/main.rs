@@ -8,6 +8,8 @@
 //!               [--time T | --iters K] [--oracle pjrt|rust]
 //!               [--out runs/NAME]
 //! repro scenarios [--export DIR]       # list / export the fault presets
+//! repro fuzz    [--seed S] [--budget N] [--shrink] [--out DIR]
+//!               [--replay DIR]         # deterministic fault-space fuzzer
 //! repro bench-baseline [--out DIR]     # perf baselines: hot-path suite +
 //!                                      # scaling sweep → BENCH_*.json
 //! repro graph   --topology binary_tree --nodes 7      # inspect W/A, roots
@@ -63,6 +65,7 @@ fn main() {
         "graph" => cmd_graph(&args),
         "check-artifacts" => cmd_check_artifacts(),
         "scenarios" => cmd_scenarios(&args),
+        "fuzz" => cmd_fuzz(&args),
         "bench-baseline" => cmd_bench_baseline(&args),
         "algos" => {
             cmd_algos();
@@ -86,6 +89,7 @@ fn print_help() {
          subcommands:\n  \
          train            run one training experiment (virtual-time simulator or\n                          wall-clock threaded runner; see --engine)\n  \
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
+         fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11)\n  \
          bench-baseline   run the hot-path suite + 8→64-node scaling sweep and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode). Fails if\n                          the emitted JSON is schema-invalid (EXPERIMENTS.md).\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
@@ -157,6 +161,116 @@ fn cmd_scenarios(args: &Args) -> Result<(), String> {
         println!("export JSON:   repro scenarios --export DIR");
     }
     Ok(())
+}
+
+/// `repro fuzz` — the deterministic fault-space fuzzer (DESIGN.md §11).
+/// Output is a pure function of (--seed, --budget, --shrink): no wall
+/// clock, no ambient randomness — two invocations print identical bytes,
+/// which CI relies on. Exit 1 on any invariant violation (generated or
+/// replayed), so the command is a gate, not a report.
+fn cmd_fuzz(args: &Args) -> Result<(), String> {
+    use rfast::fuzz::{self, Repro};
+
+    if let Some(dir) = args.get("replay") {
+        return fuzz_replay(PathBuf::from(dir));
+    }
+    let seed: u64 = args.parse_num("seed", 0u64)?;
+    let budget: u64 = match args.get("budget") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("--budget: bad count {v:?}"))?,
+        None => match std::env::var("RFAST_FUZZ_BUDGET") {
+            Ok(v) => v.parse().map_err(|_| {
+                format!("RFAST_FUZZ_BUDGET: bad value {v:?}")
+            })?,
+            Err(_) => fuzz::DEFAULT_BUDGET,
+        },
+    };
+    let do_shrink = args.has_flag("shrink");
+    println!("fuzz: seed={seed} budget={budget} shrink={do_shrink}");
+
+    let report = fuzz::run_corpus(seed, budget, do_shrink);
+    if report.failures.is_empty() {
+        println!("fuzz: {budget} cases, every invariant held");
+        return Ok(());
+    }
+    let out_dir = PathBuf::from(args.get_or("out", "rust/tests/repros"));
+    for f in &report.failures {
+        println!("case {}: VIOLATION {} — {}", f.case_index, f.violation,
+                 f.detail);
+        println!(
+            "  generated: n={} arch={} iters={} gamma={} seed={} \
+             clauses={}",
+            f.case.n, f.case.arch.name(), f.case.iters, f.case.gamma,
+            f.case.seed, fault_clauses(&f.case),
+        );
+        let minimal = f.shrunk.as_ref().unwrap_or(&f.case);
+        if f.shrunk.is_some() {
+            println!(
+                "  shrunk to: n={} arch={} iters={} gamma={} clauses={}",
+                minimal.n, minimal.arch.name(), minimal.iters,
+                minimal.gamma, fault_clauses(minimal),
+            );
+        }
+        std::fs::create_dir_all(&out_dir)
+            .map_err(|e| format!("create {}: {e}", out_dir.display()))?;
+        let path = out_dir
+            .join(format!("fuzz_seed{}_case{}.json", seed, f.case_index));
+        let repro = Repro {
+            case: minimal.clone(),
+            expect: "fail".into(),
+            violation: Some(f.violation.to_string()),
+        };
+        std::fs::write(&path, repro.to_json().to_string())
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        println!("  repro: {}", path.display());
+    }
+    Err(format!(
+        "fuzz: {} of {budget} cases violated an invariant",
+        report.failures.len()
+    ))
+}
+
+fn fault_clauses(c: &rfast::fuzz::FuzzCase) -> usize {
+    let s = &c.scenario;
+    s.stragglers.len() + s.loss_ramp.len() + s.latency_ramp.len()
+        + s.churn.len() + s.bandwidth.len()
+}
+
+/// `repro fuzz --replay DIR`: re-run every committed `*.json` repro and
+/// compare against its recorded verdict.
+fn fuzz_replay(dir: PathBuf) -> Result<(), String> {
+    use rfast::fuzz::Repro;
+
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("read {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("no *.json repros in {}", dir.display()));
+    }
+    let mut regressed = 0usize;
+    for path in &paths {
+        let repro = Repro::load(path)?;
+        match repro.replay() {
+            Ok(()) => println!(
+                "replay {}: ok (expect {})",
+                path.display(), repro.expect
+            ),
+            Err(e) => {
+                println!("replay {}: REGRESSED — {e}", path.display());
+                regressed += 1;
+            }
+        }
+    }
+    if regressed > 0 {
+        Err(format!("{regressed} of {} repro(s) regressed", paths.len()))
+    } else {
+        println!("replay: {} repro(s) behave as committed", paths.len());
+        Ok(())
+    }
 }
 
 /// `repro bench-baseline [--out DIR]` — seed/refresh the perf trajectory:

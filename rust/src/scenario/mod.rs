@@ -39,6 +39,7 @@
 //! [`Clock`]: crate::faults::Clock
 
 use crate::jsonio::{self, Json};
+use crate::prng::Rng;
 use std::path::Path;
 
 /// When a straggler's slowdown is in effect.
@@ -211,6 +212,68 @@ impl Scenario {
         } else {
             0.0
         }
+    }
+
+    // ---- random sampling (fuzzer) --------------------------------------
+
+    /// Seeded random scenario for the fault-space fuzzer
+    /// ([`fuzz`](crate::fuzz)). Every draw is range-bounded so the result
+    /// always passes [`Scenario::validate_detailed`]`(Some(n))`:
+    /// straggler factors in [1, 8], loss values in [0, 0.5], ramp times
+    /// sorted, churn windows non-empty, byte rates positive, node indices
+    /// < `n` (node 0 is eligible everywhere — root churn / a straggling
+    /// root are exactly the regimes Assumption 2 makes interesting).
+    /// `horizon` scales every event time; pass the run's expected virtual
+    /// length. Deterministic per RNG state; `n` must be ≥ 1.
+    pub fn sample(rng: &mut Rng, n: usize, horizon: f64) -> Scenario {
+        let horizon = horizon.max(1e-3);
+        let mut s = Scenario::named("fuzz", "generated fault scenario");
+        for _ in 0..rng.below(3) {
+            let schedule = match rng.below(3) {
+                0 => StragglerSchedule::Permanent,
+                1 => StragglerSchedule::FromTime { at: rng.f64() * horizon },
+                _ => StragglerSchedule::Intermittent {
+                    period: (0.05 + rng.f64()) * horizon,
+                    duty: rng.f64(),
+                },
+            };
+            s.stragglers.push(StragglerSpec {
+                node: rng.below(n),
+                factor: 1.0 + 7.0 * rng.f64(),
+                schedule,
+            });
+        }
+        if rng.chance(0.5) {
+            let mut t = 0.0;
+            for _ in 0..1 + rng.below(3) {
+                s.loss_ramp.push(Phase { from_time: t, value: 0.5 * rng.f64() });
+                t += rng.f64() * horizon;
+            }
+        }
+        if rng.chance(0.4) {
+            let mut t = 0.0;
+            for _ in 0..1 + rng.below(3) {
+                s.latency_ramp
+                    .push(Phase { from_time: t, value: 0.5 + 3.5 * rng.f64() });
+                t += rng.f64() * horizon;
+            }
+        }
+        for _ in 0..rng.below(3) {
+            let node = rng.below(n);
+            let pause_at = rng.f64() * horizon;
+            let resume_at = pause_at + (0.02 + 0.3 * rng.f64()) * horizon;
+            s.churn.push(ChurnEvent { node, pause_at, resume_at });
+        }
+        if rng.chance(0.3) {
+            let from = if rng.chance(0.5) { Some(rng.below(n)) } else { None };
+            let to = if rng.chance(0.5) { Some(rng.below(n)) } else { None };
+            s.bandwidth.push(BandwidthCap {
+                from,
+                to,
+                bytes_per_sec: 1e3 * (1.0 + 99.0 * rng.f64()),
+            });
+        }
+        s
     }
 
     /// Does this scenario carry any fault primitive at all?
@@ -796,6 +859,23 @@ mod tests {
         // the stringly wrapper embeds both pieces
         let err = Scenario::single_straggler(3, 0.5).validate(None).unwrap_err();
         assert!(err.contains("stragglers[0].factor"), "{err}");
+    }
+
+    #[test]
+    fn sampled_scenarios_always_validate() {
+        // the generator's contract: no draw can leave the valid range
+        // (the fuzzer feeds these straight into Experiment::run)
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(seed);
+            let n = 1 + rng.below(10);
+            let horizon = rng.f64() * 10.0; // including ~0: clamped inside
+            let s = Scenario::sample(&mut rng, n, horizon);
+            s.validate_detailed(Some(n))
+                .unwrap_or_else(|(f, d)| panic!("seed {seed}: {f}: {d}"));
+        }
+        // deterministic per RNG state
+        let mk = || Scenario::sample(&mut Rng::new(7), 5, 4.0);
+        assert_eq!(mk(), mk());
     }
 
     #[test]

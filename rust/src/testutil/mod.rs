@@ -93,6 +93,64 @@ pub fn rand_vec(rng: &mut Rng, p: usize) -> Vec<f32> {
     (0..p).map(|_| 2.0 * rng.f32() - 1.0).collect()
 }
 
+/// Mass-conservation residual of the robust ρ/ρ̃ scheme — the Lemma 3
+/// analogue over the real (non-augmented) system, shared by
+/// `tests/invariants.rs` and the fuzzer's conservation oracle (one
+/// definition, no drift).
+///
+/// `nodes[i]` must be node `i` (slice ordered by id) and every node must
+/// run the **robust** scheme (`RFastParams { robust: true }`): tracked
+/// mass Σ z_i plus every A-edge's generated-but-unconsumed running-sum
+/// difference (ρ_ji at the sender minus ρ̃_ij at the receiver) equals the
+/// sum of the latest gradient samples, at ANY point of ANY schedule —
+/// ρ_ji accumulates at wake time before any send verdict, so in-flight,
+/// dropped and backpressured packets all cancel edge-wise. Returns the
+/// max absolute per-coordinate residual.
+pub fn rho_mass_residual(nodes: &[&crate::algo::RFastNode]) -> f64 {
+    let p = nodes[0].z().len();
+    let mut lhs = vec![0.0f64; p];
+    for nd in nodes {
+        if !nd.is_initialized() {
+            continue;
+        }
+        for (a, &z) in lhs.iter_mut().zip(nd.z()) {
+            *a += z as f64;
+        }
+    }
+    // edge mass: ρ_out at the sender minus ρ̃ at the receiver
+    for (j, sender) in nodes.iter().enumerate() {
+        let outs = sender.a_out_ids();
+        for (k, &i) in outs.iter().enumerate() {
+            let rho_out = &sender.rho_out_sums()[k];
+            let recv = &nodes[i];
+            let pos = recv
+                .a_in_ids()
+                .iter()
+                .position(|&jj| jj == j)
+                .expect("edge sets consistent");
+            let rho_tilde = &recv.rho_tilde_sums()[pos];
+            for ((a, &ro), &rt) in
+                lhs.iter_mut().zip(rho_out.iter()).zip(rho_tilde.iter())
+            {
+                *a += ro - rt;
+            }
+        }
+    }
+    let mut rhs = vec![0.0f64; p];
+    for nd in nodes {
+        if !nd.is_initialized() {
+            continue;
+        }
+        for (a, &g) in rhs.iter_mut().zip(nd.last_grad()) {
+            *a += g as f64;
+        }
+    }
+    lhs.iter()
+        .zip(&rhs)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -59,52 +59,12 @@ impl Adversary {
         assert!(replies.is_empty());
     }
 
-    /// Lemma 3 analogue over the real (non-augmented) system: tracked mass
-    /// plus every edge's generated-but-unconsumed running-sum difference
-    /// equals the sum of the latest gradient samples.
+    /// Lemma 3 analogue over the real (non-augmented) system — delegates
+    /// to the shared oracle in `rfast::testutil` (one definition for the
+    /// property tests AND the fuzzer's conservation invariant).
     fn conservation_residual(&self) -> f64 {
-        let p = self.nodes[0].param().len();
-        let mut lhs = vec![0.0f64; p];
-        for nd in &self.nodes {
-            if !nd.is_initialized() {
-                continue;
-            }
-            for (a, &z) in lhs.iter_mut().zip(nd.z()) {
-                *a += z as f64;
-            }
-        }
-        // edge mass: ρ_out at the sender minus ρ̃ at the receiver
-        for (j, sender) in self.nodes.iter().enumerate() {
-            let outs = sender.a_out_ids();
-            for (k, &i) in outs.iter().enumerate() {
-                let rho_out = &sender.rho_out_sums()[k];
-                let recv = &self.nodes[i];
-                let pos = recv
-                    .a_in_ids()
-                    .iter()
-                    .position(|&jj| jj == j)
-                    .expect("edge sets consistent");
-                let rho_tilde = &recv.rho_tilde_sums()[pos];
-                for ((a, &ro), &rt) in
-                    lhs.iter_mut().zip(rho_out.iter()).zip(rho_tilde.iter())
-                {
-                    *a += ro - rt;
-                }
-            }
-        }
-        let mut rhs = vec![0.0f64; p];
-        for nd in &self.nodes {
-            if !nd.is_initialized() {
-                continue;
-            }
-            for (a, &g) in rhs.iter_mut().zip(nd.last_grad()) {
-                *a += g as f64;
-            }
-        }
-        lhs.iter()
-            .zip(&rhs)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f64::max)
+        let refs: Vec<&RFastNode> = self.nodes.iter().collect();
+        rfast::testutil::rho_mass_residual(&refs)
     }
 }
 
