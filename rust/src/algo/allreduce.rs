@@ -117,10 +117,12 @@ impl RingAllReduceNode {
     }
 
     fn apply_pending(&mut self) {
+        // lint:allow(panic-path): only called from comm phases, where awaited_key is always Some
         let key = self.awaited_key().expect("apply only in comm phases");
         let payload = self
             .pending
             .remove(&key)
+            // lint:allow(panic-path): wake() is gated on ready(), which requires this chunk
             .expect("wake gated on ready() ⇒ awaited chunk present");
         let (_, is_gather, step) = key;
         if !is_gather {

@@ -95,6 +95,7 @@ impl<T: Clone> PayloadOf<T> {
             let copied: Arc<[T]> = Arc::from(&self.0[..]);
             self.0 = copied;
         }
+        // lint:allow(panic-path): the branch above just restored unique ownership
         Arc::get_mut(&mut self.0).expect("uniquely owned after copy-on-write")
     }
 }

@@ -48,6 +48,7 @@ impl RoundBuf {
     pub fn take(&mut self, k: usize, stamp: u64) -> Payload {
         self.per[k]
             .remove(&stamp)
+            // lint:allow(panic-path): documented contract — callers must check has_all first
             .unwrap_or_else(|| panic!("round {stamp} payload missing for peer index {k}"))
     }
 

@@ -39,6 +39,7 @@ impl Args {
                 out.opts.insert(k.to_string(), v.to_string());
             } else if it.peek().map(|nx| !nx.starts_with("--")).unwrap_or(false)
             {
+                // lint:allow(panic-path): peek() above just proved the next item exists
                 out.opts.insert(key.to_string(), it.next().unwrap());
             } else {
                 out.flags.push(key.to_string());

@@ -267,6 +267,7 @@ pub fn hotpath_suite(quick: bool) -> Vec<HotpathResult> {
     // ---- PJRT round trip (optional) --------------------------------------
     if let Some(dir) = crate::runtime::default_artifact_dir() {
         use std::sync::Arc;
+        // lint:allow(panic-path): bench harness fails fast on a broken artifact dir
         let manifest = crate::runtime::Manifest::load(&dir).unwrap();
         let (train, eval) = crate::data::Dataset::mnist01_like(3)
             .split_eval(2000);
@@ -276,8 +277,9 @@ pub fn hotpath_suite(quick: bool) -> Vec<HotpathResult> {
             partition: crate::data::Partition::iid(&train, 1, 0),
         };
         let mut set =
+            // lint:allow(panic-path): bench harness fails fast on a broken artifact dir
             crate::runtime::build_pjrt_set(&manifest, &task, 1, 3).unwrap();
-        let theta = manifest.load_init("logreg").unwrap();
+        let theta = manifest.load_init("logreg").unwrap(); // lint:allow(panic-path): same fail-fast contract
         let mut g = vec![0.0f32; set.dim];
         results.push(measure("logreg grad (PJRT round trip, B=32)", t, || {
             set.nodes[0].grad(std::hint::black_box(&theta), &mut g);
@@ -341,6 +343,7 @@ pub fn scaling_sweep(node_counts: &[usize], epochs: f64) -> Vec<ScalingPoint> {
                 .config(cfg)
                 .stop(Stop::Epochs(epochs))
                 .run()
+                // lint:allow(panic-path): bench harness fails fast on a misconfigured sweep
                 .expect("scaling sweep run")
                 .report;
             let wall = t0.elapsed().as_secs_f64();

@@ -635,6 +635,7 @@ impl Experiment {
                 // instant, so the gap is measured on the last evaluated
                 // mean — the convention every quadratic runner test used
                 report.final_gap = Some(crate::linalg::dist(
+                    // lint:allow(panic-path): lock poisoning means a worker already panicked
                     &last_mean.lock().unwrap(), &xs));
                 self.label_scenario(&mut report);
                 Ok(Run {

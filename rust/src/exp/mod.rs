@@ -160,6 +160,7 @@ pub fn run_sim(workload: Workload, algo: AlgoKind, topo: &Topology,
         .config(cfg.clone())
         .stop(stop.into())
         .run()
+        // lint:allow(panic-path): deprecated shim keeps its historical panic-on-error contract
         .unwrap_or_else(|e| panic!("run_sim: {e}"))
         .report
 }
@@ -183,6 +184,7 @@ pub fn run_sim_under(workload: Workload, algo: AlgoKind, topo: &Topology,
         .maybe_scenario(scenario)
         .stop(stop.into())
         .run()
+        // lint:allow(panic-path): deprecated shim keeps its historical panic-on-error contract
         .unwrap_or_else(|e| panic!("run_sim_under: {e}"))
         .report
 }

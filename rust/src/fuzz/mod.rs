@@ -110,6 +110,7 @@ impl FuzzCase {
         FuzzCase {
             n: 6,
             arch: ArchSpec::parse("balanced@0+star@0")
+                // lint:allow(panic-path): literal spec, parse covered by arch tests
                 .expect("literal spec parses"),
             seed: 7,
             gamma: 16.0,
@@ -321,6 +322,7 @@ impl Repro {
                  \"pass\"",
                 self.violation.as_deref().unwrap_or("?")
             )),
+            // lint:allow(panic-path): Repro::load rejects any expect value other than pass/fail
             _ => unreachable!("expect validated at parse"),
         }
     }

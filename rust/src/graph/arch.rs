@@ -317,6 +317,7 @@ impl ArchSpec {
          "bfs@0+dfs@0",
          "random@0:7+random@0:21"]
             .iter()
+            // lint:allow(panic-path): literal builtin specs, parse covered by tests
             .map(|s| ArchSpec::parse(s).expect("builtin pair"))
             .collect()
     }
@@ -324,6 +325,7 @@ impl ArchSpec {
     /// A pair whose trees are rooted at different nodes — G(W)'s root set
     /// is {0}, G(Aᵀ)'s is {1}, so Assumption 2's common-root set is empty.
     pub fn no_common_root_pair() -> ArchSpec {
+        // lint:allow(panic-path): literal builtin spec, parse covered by tests
         ArchSpec::parse("balanced@0+star@1").expect("builtin pair")
     }
 

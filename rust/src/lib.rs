@@ -137,6 +137,7 @@ pub mod fuzz;
 pub mod graph;
 pub mod jsonio;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod oracle;
 pub mod prng;

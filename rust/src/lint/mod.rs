@@ -1,0 +1,529 @@
+//! `repro lint` — the determinism & hot-path static analyzer (DESIGN.md
+//! §12).
+//!
+//! Every correctness claim in this repo — geometric convergence under
+//! loss, byte-identical fuzz repros (§11), golden-JSON fabric tests —
+//! rests on bitwise-deterministic simulation. This module makes the
+//! conventions that determinism depends on *static, CI-gated invariants*
+//! instead of reviewer folklore: no `HashMap` iteration order, no wall
+//! clock, no `partial_cmp` float ordering inside sim-scope; no
+//! per-event allocation inside the `algo/` hot path; no unwaived panics
+//! in library code.
+//!
+//! Dependency-free by construction (vendored-offline builds): the scanner
+//! in [`scan`] is a hand-rolled tokenizing line scanner, JSON I/O rides
+//! the in-tree [`crate::jsonio`].
+//!
+//! Findings diff against a committed, schema-tagged `LINT_BASELINE.json`
+//! (same pattern as `BENCH_*.json`): pre-existing findings are
+//! grandfathered per-rule-per-file, counts may only ratchet *down*, and
+//! any new finding — or any malformed waiver pragma, which no baseline
+//! can absorb — fails the gate. `repro lint --fix-baseline` rewrites the
+//! baseline after a genuine improvement.
+
+pub mod scan;
+
+use crate::jsonio::{self, Json};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Schema tag of `LINT_BASELINE.json`.
+pub const BASELINE_SCHEMA: &str = "rfast-lint-baseline/v1";
+/// Schema tag of the findings artifact (`repro lint --out FILE`).
+pub const FINDINGS_SCHEMA: &str = "rfast-lint-findings/v1";
+/// Pseudo-rule for malformed waiver pragmas. Not waivable, never
+/// baseline-absorbed: a broken waiver must be fixed, not grandfathered.
+pub const BAD_WAIVER: &str = "bad-waiver";
+
+/// One lint rule: the name waiver pragmas refer to, plus where and what
+/// it guards (the full table lives in DESIGN.md §12).
+pub struct Rule {
+    pub name: &'static str,
+    pub scope: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule catalog. `bad-waiver` is deliberately absent — it cannot be
+/// waived.
+pub const RULES: [Rule; 6] = [
+    Rule {
+        name: "det-collections",
+        scope: "sim/ algo/ fuzz/ scenario/ graph/",
+        summary: "HashMap/HashSet iteration order is nondeterministic; \
+                  use BTreeMap/BTreeSet",
+    },
+    Rule {
+        name: "det-wallclock",
+        scope: "sim/ algo/ fuzz/ scenario/ graph/",
+        summary: "Instant::now/SystemTime/thread::sleep leak wall clock \
+                  into virtual time; use the Clock abstraction (runner/, \
+                  faults/ are exempt)",
+    },
+    Rule {
+        name: "det-rand",
+        scope: "sim/ algo/ fuzz/ scenario/ graph/",
+        summary: "ambient randomness breaks seed replay; use prng::Rng",
+    },
+    Rule {
+        name: "float-ord",
+        scope: "sim/ algo/ fuzz/ scenario/ graph/",
+        summary: "partial_cmp (and float sort_by_key) is NaN-unsound and \
+                  order-fragile; use total_cmp",
+    },
+    Rule {
+        name: "hot-alloc",
+        scope: "algo/* wake/receive/on_send_failed",
+        summary: "to_vec/vec!/clone in per-event code violates the \
+                  one-alloc-per-fan-out invariant (DESIGN.md, PR 3)",
+    },
+    Rule {
+        name: "panic-path",
+        scope: "rust/src/** except testutil/",
+        summary: "unwrap/expect/panic in library code needs a waiver \
+                  stating why it cannot fire",
+    },
+];
+
+/// One finding: a rule hit at a file:line, with the matched token and
+/// enclosing fn (when known) in `detail`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub detail: String,
+}
+
+/// What to scan. `paths` are root-relative files or directories;
+/// `exclude_dirs` prunes directory *names* anywhere under them (the
+/// default keeps the deliberately-bad fixture corpus out of self-scans).
+pub struct LintConfig {
+    pub root: PathBuf,
+    pub paths: Vec<String>,
+    pub exclude_dirs: Vec<String>,
+}
+
+impl LintConfig {
+    /// Default scan set: the whole library plus benches, integration
+    /// tests, and examples (the CI gate scans exactly this).
+    pub fn new(root: PathBuf) -> LintConfig {
+        LintConfig {
+            root,
+            paths: ["rust/src", "rust/benches", "rust/tests", "examples"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            exclude_dirs: vec!["lint_fixtures".to_string()],
+        }
+    }
+}
+
+/// Aggregate result of one lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub waiver_errors: Vec<Finding>,
+    pub files_scanned: usize,
+    pub waivers_used: usize,
+}
+
+/// Scan every `.rs` file selected by `cfg`, in sorted path order.
+pub fn run(cfg: &LintConfig) -> Result<LintReport, String> {
+    let mut report = LintReport::default();
+    for rel in walk(cfg)? {
+        let text = fs::read_to_string(cfg.root.join(&rel))
+            .map_err(|e| format!("read {rel}: {e}"))?;
+        let scanned = scan::scan_source(&rel, &text);
+        report.findings.extend(scanned.findings);
+        report.waiver_errors.extend(scanned.waiver_errors);
+        report.waivers_used += scanned.waivers_used;
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+/// Deterministic file discovery: sorted root-relative `/`-separated
+/// paths. Missing entries in `cfg.paths` are tolerated (a fixture root
+/// need not carry every default path).
+fn walk(cfg: &LintConfig) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for p in &cfg.paths {
+        let full = cfg.root.join(p);
+        if full.is_file() {
+            out.push(p.replace('\\', "/"));
+        } else if full.is_dir() {
+            walk_dir(&cfg.root, &full, &cfg.exclude_dirs, &mut out)?;
+        }
+    }
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn walk_dir(
+    root: &Path,
+    dir: &Path,
+    exclude: &[String],
+    out: &mut Vec<String>,
+) -> Result<(), String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> =
+        rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let name = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("");
+            if exclude.iter().any(|x| x == name) {
+                continue;
+            }
+            walk_dir(root, &path, exclude, out)?;
+        } else if path.extension().and_then(|s| s.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|_| format!("{} outside root", path.display()))?;
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+// ---- the ratcheted baseline -------------------------------------------
+
+/// Grandfathered findings: per-rule, per-file counts. Waiver errors are
+/// intentionally unrepresentable here.
+#[derive(Debug, Default, PartialEq)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+/// One per-rule-per-file count change between baseline and current scan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    pub rule: String,
+    pub file: String,
+    pub base: usize,
+    pub cur: usize,
+}
+
+/// Result of diffing a scan against the baseline. The gate passes iff
+/// `regressions` is empty (improvements pass, with a nudge to shrink the
+/// baseline via `--fix-baseline`).
+#[derive(Debug, Default)]
+pub struct Ratchet {
+    /// Cells where the current count exceeds the grandfathered count
+    /// (including brand-new rule/file cells).
+    pub regressions: Vec<Delta>,
+    /// Cells where the current count dropped below the baseline.
+    pub improvements: Vec<Delta>,
+}
+
+impl Ratchet {
+    pub fn is_clean(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+impl Baseline {
+    /// Collapse a report's findings into per-rule-per-file counts.
+    pub fn from_report(report: &LintReport) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, usize>> =
+            BTreeMap::new();
+        for f in &report.findings {
+            *counts
+                .entry(f.rule.to_string())
+                .or_default()
+                .entry(f.file.clone())
+                .or_default() += 1;
+        }
+        Baseline { counts }
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = jsonio::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Baseline::from_json(&j)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Baseline, String> {
+        let schema = j
+            .get("schema")
+            .and_then(|s| s.as_str())
+            .ok_or("missing schema tag")?;
+        if schema != BASELINE_SCHEMA {
+            return Err(format!(
+                "schema {schema:?}, expected {BASELINE_SCHEMA:?}"
+            ));
+        }
+        let raw = j
+            .get("counts")
+            .and_then(|c| c.as_obj())
+            .ok_or("missing counts object")?;
+        let mut counts: BTreeMap<String, BTreeMap<String, usize>> =
+            BTreeMap::new();
+        for (rule, files) in raw {
+            if !RULES.iter().any(|r| r.name == rule) {
+                return Err(format!("unknown rule in baseline: {rule:?}"));
+            }
+            let files = files
+                .as_obj()
+                .ok_or_else(|| format!("counts[{rule:?}] not an object"))?;
+            let mut per_file = BTreeMap::new();
+            for (file, n) in files {
+                let n = n.as_usize().ok_or_else(|| {
+                    format!("counts[{rule:?}][{file:?}] not a number")
+                })?;
+                per_file.insert(file.clone(), n);
+            }
+            counts.insert(rule.clone(), per_file);
+        }
+        Ok(Baseline { counts })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counts = self
+            .counts
+            .iter()
+            .map(|(rule, files)| {
+                let files = files
+                    .iter()
+                    .map(|(f, n)| (f.clone(), Json::from(*n)))
+                    .collect();
+                (rule.clone(), Json::Obj(files))
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::from(BASELINE_SCHEMA)),
+            ("counts", Json::Obj(counts)),
+        ])
+    }
+
+    /// Diff `current` against this (grandfathered) baseline.
+    pub fn diff(&self, current: &Baseline) -> Ratchet {
+        let mut cells: Vec<(&str, &str)> = Vec::new();
+        for (rule, files) in self.counts.iter().chain(current.counts.iter())
+        {
+            for file in files.keys() {
+                cells.push((rule, file));
+            }
+        }
+        cells.sort();
+        cells.dedup();
+        let mut out = Ratchet::default();
+        let count = |b: &Baseline, rule: &str, file: &str| {
+            b.counts
+                .get(rule)
+                .and_then(|m| m.get(file))
+                .copied()
+                .unwrap_or(0)
+        };
+        for (rule, file) in cells {
+            let base = count(self, rule, file);
+            let cur = count(current, rule, file);
+            let delta = Delta {
+                rule: rule.to_string(),
+                file: file.to_string(),
+                base,
+                cur,
+            };
+            if cur > base {
+                out.regressions.push(delta);
+            } else if cur < base {
+                out.improvements.push(delta);
+            }
+        }
+        out
+    }
+}
+
+// ---- JSON artifacts ----------------------------------------------------
+
+fn finding_json(f: &Finding) -> Json {
+    Json::obj(vec![
+        ("rule", Json::from(f.rule)),
+        ("file", Json::from(f.file.clone())),
+        ("line", Json::from(f.line)),
+        ("detail", Json::from(f.detail.clone())),
+    ])
+}
+
+fn delta_json(d: &Delta) -> Json {
+    Json::obj(vec![
+        ("rule", Json::from(d.rule.clone())),
+        ("file", Json::from(d.file.clone())),
+        ("baseline", Json::from(d.base)),
+        ("current", Json::from(d.cur)),
+    ])
+}
+
+/// The findings artifact CI uploads on failure (`--out FILE`).
+pub fn findings_json(report: &LintReport, ratchet: Option<&Ratchet>) -> Json {
+    let mut pairs = vec![
+        ("schema", Json::from(FINDINGS_SCHEMA)),
+        ("files_scanned", Json::from(report.files_scanned)),
+        ("waivers_used", Json::from(report.waivers_used)),
+        (
+            "findings",
+            Json::Arr(report.findings.iter().map(finding_json).collect()),
+        ),
+        (
+            "waiver_errors",
+            Json::Arr(
+                report.waiver_errors.iter().map(finding_json).collect(),
+            ),
+        ),
+    ];
+    if let Some(r) = ratchet {
+        pairs.push((
+            "ratchet",
+            Json::obj(vec![
+                (
+                    "regressions",
+                    Json::Arr(r.regressions.iter().map(delta_json).collect()),
+                ),
+                (
+                    "improvements",
+                    Json::Arr(
+                        r.improvements.iter().map(delta_json).collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// Two-space-indent pretty printer (sorted keys come free from
+/// `BTreeMap`). `LINT_BASELINE.json` is a committed, human-reviewed debt
+/// register; one-line JSON would bury its diffs.
+pub fn to_pretty(j: &Json) -> String {
+    let mut out = String::new();
+    pretty(j, 0, &mut out);
+    out.push('\n');
+    out
+}
+
+fn pretty(j: &Json, indent: usize, out: &mut String) {
+    match j {
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(indent + 2));
+                out.push_str(&Json::from(k.as_str()).to_string());
+                out.push_str(": ");
+                pretty(v, indent + 2, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(indent));
+            out.push('}');
+        }
+        Json::Arr(v) if !v.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(indent + 2));
+                pretty(x, indent + 2, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(indent));
+            out.push(']');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(cells: &[(&str, &str, usize)]) -> Baseline {
+        let mut b = Baseline::default();
+        for &(rule, file, n) in cells {
+            b.counts
+                .entry(rule.to_string())
+                .or_default()
+                .insert(file.to_string(), n);
+        }
+        b
+    }
+
+    #[test]
+    fn ratchet_rejects_increase_and_new_cells() {
+        let base = baseline(&[("hot-alloc", "a.rs", 2)]);
+        let cur = baseline(&[("hot-alloc", "a.rs", 3)]);
+        let r = base.diff(&cur);
+        assert!(!r.is_clean());
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!((r.regressions[0].base, r.regressions[0].cur), (2, 3));
+
+        // a brand-new rule/file cell is a regression from 0
+        let cur = baseline(&[("hot-alloc", "a.rs", 2), ("float-ord", "b.rs", 1)]);
+        let r = base.diff(&cur);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].rule, "float-ord");
+        assert_eq!(r.regressions[0].base, 0);
+    }
+
+    #[test]
+    fn ratchet_accepts_decrease_as_improvement() {
+        let base = baseline(&[("hot-alloc", "a.rs", 2), ("panic-path", "b.rs", 1)]);
+        let cur = baseline(&[("hot-alloc", "a.rs", 1)]);
+        let r = base.diff(&cur);
+        assert!(r.is_clean());
+        assert_eq!(r.improvements.len(), 2);
+        // file vanishing from the scan counts as dropping to zero
+        assert!(r
+            .improvements
+            .iter()
+            .any(|d| d.rule == "panic-path" && d.cur == 0));
+    }
+
+    #[test]
+    fn baseline_json_round_trips() {
+        let b = baseline(&[("hot-alloc", "rust/src/algo/dpsgd.rs", 2)]);
+        let j = b.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some(BASELINE_SCHEMA)
+        );
+        let text = to_pretty(&j);
+        let parsed = crate::jsonio::parse(&text).map_err(|e| e.to_string());
+        let b2 = parsed.and_then(|j| Baseline::from_json(&j));
+        assert_eq!(b2.as_ref().ok(), Some(&b));
+    }
+
+    #[test]
+    fn baseline_rejects_wrong_schema_and_unknown_rule() {
+        let j = crate::jsonio::parse(
+            "{\"schema\":\"rfast-lint-baseline/v0\",\"counts\":{}}",
+        );
+        assert!(j.is_ok_and(|j| Baseline::from_json(&j).is_err()));
+        let j = crate::jsonio::parse(&format!(
+            "{{\"schema\":\"{BASELINE_SCHEMA}\",\
+             \"counts\":{{\"no-such-rule\":{{\"a.rs\":1}}}}}}"
+        ));
+        assert!(j.is_ok_and(|j| Baseline::from_json(&j).is_err()));
+    }
+
+    #[test]
+    fn pretty_printer_shape() {
+        let b = baseline(&[("hot-alloc", "a.rs", 2)]);
+        let text = to_pretty(&b.to_json());
+        let expect = "{\n  \"counts\": {\n    \"hot-alloc\": {\n      \
+                      \"a.rs\": 2\n    }\n  },\n  \"schema\": \
+                      \"rfast-lint-baseline/v1\"\n}\n";
+        assert_eq!(text, expect);
+    }
+}

@@ -1,0 +1,726 @@
+//! The tokenizing line scanner behind `repro lint` (DESIGN.md §12).
+//!
+//! One pass per file, line by line, with persistent cross-line state for
+//! block comments, multi-line string literals (plain and raw), brace
+//! depth, `#[cfg(test)]`/`mod tests` regions, and the enclosing-function
+//! stack (the hot-path rule cares whether a line sits inside `wake`/
+//! `receive`). Rule matching runs on a *stripped* view of each line —
+//! comments removed, string-literal contents emptied — so `"HashMap"`
+//! inside a log message or a doc comment can never trip a rule, and
+//! braces inside strings can never corrupt region tracking.
+//!
+//! Waiver pragmas are parsed out of the comment text of the original
+//! line: `// lint:allow(RULE[, RULE...]): reason` waives the named rules
+//! on its own line (trailing form) or, when the line carries no code, on
+//! the next code-bearing line (standalone form). The reason is mandatory;
+//! a reasonless or malformed pragma is itself reported as a `bad-waiver`
+//! finding that no baseline can absorb.
+
+use super::{Finding, BAD_WAIVER, RULES};
+use std::collections::BTreeSet;
+
+/// Result of scanning one file.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    /// Rule findings (baseline-eligible), in line order.
+    pub findings: Vec<Finding>,
+    /// Malformed waiver pragmas (`bad-waiver`); never baseline-absorbed.
+    pub waiver_errors: Vec<Finding>,
+    /// Number of findings suppressed by valid waivers.
+    pub waivers_used: usize,
+}
+
+/// Scan one file's source text. `rel_path` is the repo-root-relative,
+/// `/`-separated path — rule scoping keys on it (DESIGN.md §12).
+pub fn scan_source(rel_path: &str, text: &str) -> FileScan {
+    let mut sc = Scanner::new(rel_path);
+    for (idx, line) in text.lines().enumerate() {
+        sc.feed(idx + 1, line);
+    }
+    FileScan {
+        findings: sc.findings,
+        waiver_errors: sc.waiver_errors,
+        waivers_used: sc.waivers_used,
+    }
+}
+
+// ---- rule scoping by path (DESIGN.md §12 table) ------------------------
+
+/// Directories whose code must stay bitwise-deterministic: everything the
+/// virtual-time simulator executes or that feeds it inputs.
+const SIM_SCOPE: [&str; 5] = [
+    "rust/src/sim/",
+    "rust/src/algo/",
+    "rust/src/fuzz/",
+    "rust/src/scenario/",
+    "rust/src/graph/",
+];
+
+/// Functions the hot-path allocation rule watches inside `algo/`: the
+/// per-event state-machine entry points (PR 3's one-alloc-per-fan-out
+/// invariant lives here).
+const HOT_FNS: [&str; 3] = ["wake", "receive", "on_send_failed"];
+
+fn in_sim_scope(path: &str) -> bool {
+    SIM_SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+fn in_lib_scope(path: &str) -> bool {
+    // testutil ships in the library but exists only to serve tests; its
+    // panics are assertions by design
+    path.starts_with("rust/src/") && !path.starts_with("rust/src/testutil/")
+}
+
+fn in_hot_file(path: &str) -> bool {
+    path.starts_with("rust/src/algo/")
+}
+
+// ---- token tables ------------------------------------------------------
+
+const DET_COLLECTIONS: [&str; 2] = ["HashMap", "HashSet"];
+const DET_WALLCLOCK: [&str; 3] = ["Instant::now", "SystemTime", "thread::sleep"];
+const DET_RAND: [&str; 4] =
+    ["thread_rng", "rand::", "RandomState", "DefaultHasher"];
+const FLOAT_ORD_ALWAYS: [&str; 1] = ["partial_cmp"];
+const FLOAT_ORD_ON_FLOATS: [&str; 2] = ["sort_by_key", "sort_unstable_by_key"];
+const HOT_ALLOC: [&str; 3] = [".to_vec()", "vec![", ".clone()"];
+const PANIC_PATH: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary substring search: a match is rejected when a token end
+/// that is an identifier character abuts another identifier character
+/// (`do_panic!` does not match `panic!`; `unwrap_or(` does not match
+/// `.unwrap()` because the parens differ).
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let (c, t) = (code.as_bytes(), tok.as_bytes());
+    if t.is_empty() || c.len() < t.len() {
+        return false;
+    }
+    let (first, last) = (t[0], t[t.len() - 1]);
+    let mut start = 0;
+    while let Some(off) = find_bytes(&c[start..], t) {
+        let i = start + off;
+        let j = i + t.len();
+        let left_ok = !is_ident(first) || i == 0 || !is_ident(c[i - 1]);
+        let right_ok = !is_ident(last) || j >= c.len() || !is_ident(c[j]);
+        if left_ok && right_ok {
+            return true;
+        }
+        start = i + 1;
+    }
+    false
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.len() > hay.len() {
+        return None;
+    }
+    (0..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+// ---- the scanner -------------------------------------------------------
+
+struct Scanner<'a> {
+    path: &'a str,
+    /// `/* */` nesting depth (Rust block comments nest).
+    block_comment: u32,
+    /// Inside a plain `"..."` string (they may span lines).
+    in_str: bool,
+    /// Pending backslash escape inside the plain string.
+    str_escape: bool,
+    /// `Some(n)`: inside a raw string closed by `"` + n `#`s.
+    raw_hashes: Option<usize>,
+    /// Brace depth of code (strings/comments excluded).
+    depth: i64,
+    /// Entry depths of active `#[cfg(test)]`/`mod tests` regions.
+    test_regions: Vec<i64>,
+    /// Saw a test attribute; the next `{` opens its region.
+    pending_test: bool,
+    /// Named-function stack: (name, body depth).
+    fn_stack: Vec<(String, i64)>,
+    /// Saw `fn NAME`; the next `{` opens its body (`;` cancels — a
+    /// body-less trait method declaration).
+    pending_fn: Option<String>,
+    /// Standalone pragma rules awaiting the next code-bearing line.
+    pending_waiver: BTreeSet<&'static str>,
+    findings: Vec<Finding>,
+    waiver_errors: Vec<Finding>,
+    waivers_used: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn new(path: &'a str) -> Scanner<'a> {
+        Scanner {
+            path,
+            block_comment: 0,
+            in_str: false,
+            str_escape: false,
+            raw_hashes: None,
+            depth: 0,
+            test_regions: Vec::new(),
+            pending_test: false,
+            fn_stack: Vec::new(),
+            pending_fn: None,
+            pending_waiver: BTreeSet::new(),
+            findings: Vec::new(),
+            waiver_errors: Vec::new(),
+            waivers_used: 0,
+        }
+    }
+
+    /// Split one raw line into (code, comment): comments removed from
+    /// `code`, string-literal contents emptied (the quotes remain so the
+    /// syntactic shape survives), comment text collected for pragma
+    /// parsing. Persistent string/comment state crosses lines.
+    fn split_line(&mut self, line: &str) -> (String, String) {
+        let b = line.as_bytes();
+        let n = b.len();
+        let mut code: Vec<u8> = Vec::with_capacity(n);
+        let mut comment: Vec<u8> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let c = b[i];
+            if let Some(hashes) = self.raw_hashes {
+                // inside a raw string: look for `"` + hashes closers
+                if c == b'"'
+                    && i + 1 + hashes <= n
+                    && b[i + 1..i + 1 + hashes].iter().all(|&x| x == b'#')
+                {
+                    i += 1 + hashes;
+                    self.raw_hashes = None;
+                    code.push(b'"');
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if self.in_str {
+                if self.str_escape {
+                    self.str_escape = false;
+                    i += 1;
+                } else if c == b'\\' {
+                    self.str_escape = true;
+                    i += 1;
+                } else if c == b'"' {
+                    self.in_str = false;
+                    code.push(b'"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if self.block_comment > 0 {
+                // block comments carry no pragmas; skip their text
+                if b[i..].starts_with(b"/*") {
+                    self.block_comment += 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    self.block_comment -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            // normal code state
+            if b[i..].starts_with(b"//") {
+                // pragmas live only in plain `//` comments: doc comments
+                // (`///`, `//!`) describe syntax, they don't direct the tool
+                let rest = &b[i + 2..];
+                let is_doc =
+                    rest.first().map(|&x| x == b'/' || x == b'!').unwrap_or(false);
+                if !is_doc {
+                    comment.extend_from_slice(rest);
+                }
+                break;
+            }
+            if b[i..].starts_with(b"/*") {
+                self.block_comment = 1;
+                i += 2;
+                continue;
+            }
+            // raw string opener: r" r#" br" br#" (not part of an ident)
+            if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+                let j = if b[i..].starts_with(b"br") {
+                    i + 2
+                } else if c == b'r' {
+                    i + 1
+                } else {
+                    0
+                };
+                if j > 0 {
+                    let mut h = 0;
+                    while j + h < n && b[j + h] == b'#' {
+                        h += 1;
+                    }
+                    if j + h < n && b[j + h] == b'"' {
+                        self.raw_hashes = Some(h);
+                        code.push(b'"');
+                        i = j + h + 1;
+                        continue;
+                    }
+                }
+            }
+            if c == b'"' {
+                self.in_str = true;
+                code.push(b'"');
+                i += 1;
+                continue;
+            }
+            if c == b'\'' {
+                // char literal vs lifetime tick
+                if i + 1 < n && b[i + 1] == b'\\' {
+                    // escaped char literal: the escaped char sits at
+                    // i + 2 (so '\'' works), the closer at or after i + 3
+                    let mut k = i + 3;
+                    while k < n && b[k] != b'\'' {
+                        k += 1;
+                    }
+                    i = (k + 1).min(n);
+                    code.extend_from_slice(b"' '");
+                    continue;
+                }
+                if i + 2 < n && b[i + 2] == b'\'' {
+                    i += 3; // plain char literal 'x'
+                    code.extend_from_slice(b"' '");
+                    continue;
+                }
+                code.push(c); // lifetime
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        (
+            String::from_utf8_lossy(&code).into_owned(),
+            String::from_utf8_lossy(&comment).into_owned(),
+        )
+    }
+
+    /// Parse every `lint:allow(...)` pragma in the line's comment text.
+    /// Valid pragmas return their rule set; malformed ones (no rule list,
+    /// unknown rule, missing/empty reason) become `bad-waiver` findings.
+    fn parse_waivers(&mut self, comment: &str, line_no: usize) -> BTreeSet<&'static str> {
+        const KEY: &str = "lint:allow";
+        let mut rules: BTreeSet<&'static str> = BTreeSet::new();
+        let mut start = 0;
+        while let Some(off) = comment[start..].find(KEY) {
+            let k = start + off;
+            let rest = &comment[k + KEY.len()..];
+            match Self::parse_one_waiver(rest) {
+                Ok(names) => rules.extend(names),
+                Err(detail) => self.waiver_errors.push(Finding {
+                    rule: BAD_WAIVER,
+                    file: self.path.to_string(),
+                    line: line_no,
+                    detail,
+                }),
+            }
+            start = k + KEY.len();
+        }
+        rules
+    }
+
+    fn parse_one_waiver(rest: &str) -> Result<Vec<&'static str>, String> {
+        let Some(body) = rest.strip_prefix('(') else {
+            return Err("expected ( after lint:allow".to_string());
+        };
+        let Some(close) = body.find(')') else {
+            return Err("unclosed lint:allow(".to_string());
+        };
+        let after = &body[close + 1..];
+        let reason_ok = after
+            .strip_prefix(':')
+            .map(|r| !r.trim().is_empty())
+            .unwrap_or(false);
+        if !reason_ok {
+            return Err(
+                "waiver needs a reason: lint:allow(RULE): reason".to_string()
+            );
+        }
+        let mut names = Vec::new();
+        for raw in body[..close].split(',') {
+            let name = raw.trim();
+            match RULES.iter().find(|r| r.name == name) {
+                Some(r) => names.push(r.name),
+                None => {
+                    return Err(format!(
+                        "unknown rule in waiver: {:?}",
+                        if name.is_empty() { "<empty>" } else { name }
+                    ))
+                }
+            }
+        }
+        Ok(names)
+    }
+
+    fn feed(&mut self, line_no: usize, line: &str) {
+        let (code, comment) = self.split_line(line);
+        let waive_here = self.parse_waivers(&comment, line_no);
+        let has_code = !code.trim().is_empty();
+        let mut active = waive_here;
+        if has_code {
+            active.extend(self.pending_waiver.iter());
+        } else {
+            // standalone pragma line: carry (accumulating) to the next
+            // code-bearing line
+            self.pending_waiver.extend(active.iter());
+        }
+
+        if code.contains("#[cfg(test") || code.contains("#[test]")
+            || has_token(&code, "mod tests")
+        {
+            self.pending_test = true;
+        }
+        if let Some(name) = find_fn_name(&code) {
+            self.pending_fn = Some(name);
+        }
+
+        let in_test = !self.test_regions.is_empty();
+        if has_code && !in_test {
+            self.match_rules(line_no, &code, &active);
+        }
+
+        // brace walk after matching: a region's own opening line (e.g.
+        // `mod tests {`) is attribute-marked but not yet inside
+        for &ch in code.as_bytes() {
+            match ch {
+                b'{' => {
+                    self.depth += 1;
+                    if self.pending_test {
+                        self.test_regions.push(self.depth);
+                        self.pending_test = false;
+                    }
+                    if let Some(name) = self.pending_fn.take() {
+                        self.fn_stack.push((name, self.depth));
+                    }
+                }
+                b'}' => {
+                    if self.test_regions.last() == Some(&self.depth) {
+                        self.test_regions.pop();
+                    }
+                    if self.fn_stack.last().map(|f| f.1) == Some(self.depth) {
+                        self.fn_stack.pop();
+                    }
+                    self.depth -= 1;
+                }
+                b';' => {
+                    // a body-less declaration: `fn ready(&self) -> bool;`
+                    self.pending_fn = None;
+                }
+                _ => {}
+            }
+        }
+
+        if has_code {
+            self.pending_waiver.clear();
+        }
+    }
+
+    fn in_hot_context(&self) -> bool {
+        if !in_hot_file(self.path) {
+            return false;
+        }
+        // pending_fn covers single-line bodies (`fn receive(..) { .. }`):
+        // matching runs before the brace walk pushes the frame
+        self.fn_stack
+            .iter()
+            .map(|(name, _)| name)
+            .chain(self.pending_fn.iter())
+            .any(|name| HOT_FNS.contains(&name.as_str()))
+    }
+
+    fn match_rules(
+        &mut self,
+        line_no: usize,
+        code: &str,
+        waived: &BTreeSet<&'static str>,
+    ) {
+        let mut hits: Vec<(&'static str, &'static str)> = Vec::new();
+        if in_sim_scope(self.path) {
+            for tok in DET_COLLECTIONS {
+                if has_token(code, tok) {
+                    hits.push(("det-collections", tok));
+                }
+            }
+            for tok in DET_WALLCLOCK {
+                if has_token(code, tok) {
+                    hits.push(("det-wallclock", tok));
+                }
+            }
+            for tok in DET_RAND {
+                if has_token(code, tok) {
+                    hits.push(("det-rand", tok));
+                }
+            }
+            for tok in FLOAT_ORD_ALWAYS {
+                if has_token(code, tok) {
+                    hits.push(("float-ord", tok));
+                }
+            }
+            for tok in FLOAT_ORD_ON_FLOATS {
+                if has_token(code, tok)
+                    && (has_token(code, "f32") || has_token(code, "f64"))
+                {
+                    hits.push(("float-ord", tok));
+                }
+            }
+        }
+        if self.in_hot_context() {
+            for tok in HOT_ALLOC {
+                if has_token(code, tok) {
+                    hits.push(("hot-alloc", tok));
+                }
+            }
+        }
+        if in_lib_scope(self.path) {
+            for tok in PANIC_PATH {
+                if has_token(code, tok) {
+                    hits.push(("panic-path", tok));
+                }
+            }
+        }
+        for (rule, tok) in hits {
+            if waived.contains(rule) {
+                self.waivers_used += 1;
+            } else {
+                let ctx = self
+                    .fn_stack
+                    .last()
+                    .map(|(name, _)| format!(" in fn {name}"))
+                    .unwrap_or_default();
+                self.findings.push(Finding {
+                    rule,
+                    file: self.path.to_string(),
+                    line: line_no,
+                    detail: format!("{tok}{ctx}"),
+                });
+            }
+        }
+    }
+}
+
+/// First `fn NAME` on the (stripped) line, if any.
+fn find_fn_name(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let mut start = 0;
+    while let Some(off) = code[start..].find("fn ") {
+        let i = start + off;
+        if i > 0 && is_ident(b[i - 1]) {
+            start = i + 3;
+            continue;
+        }
+        let mut j = i + 3;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let mut k = j;
+        while k < b.len() && is_ident(b[k]) {
+            k += 1;
+        }
+        if k > j {
+            return Some(code[j..k].to_string());
+        }
+        start = i + 3;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<(String, usize)> {
+        scan_source(path, src)
+            .findings
+            .iter()
+            .map(|f| (f.rule.to_string(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn tokens_respect_word_boundaries() {
+        assert!(has_token("let m: HashMap<u32, u32>;", "HashMap"));
+        assert!(!has_token("let m = MyHashMap::new();", "HashMap"));
+        assert!(!has_token("do_panic!()", "panic!"));
+        assert!(has_token("panic!(\"boom\")", "panic!"));
+        assert!(!has_token("x.unwrap_or(0)", ".unwrap()"));
+        assert!(has_token("x.unwrap()", ".unwrap()"));
+    }
+
+    #[test]
+    fn strings_and_comments_never_match() {
+        let src = "fn f() {\n    let s = \"HashMap in a string\";\n    \
+                   // a comment naming partial_cmp\n    \
+                   /* Instant::now in a block comment */\n}\n";
+        assert!(findings("rust/src/sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multiline_and_raw_strings_are_stripped() {
+        let src = "fn f() {\n    let s = \"line one\n        \
+                   HashMap line two\";\n    let r = r#\"raw HashMap \
+                   \"quoted\" inside\"#;\n    let t = SystemTime::now();\n}\n";
+        let got = findings("rust/src/sim/x.rs", src);
+        assert_eq!(got, vec![("det-wallclock".to_string(), 5)]);
+    }
+
+    #[test]
+    fn char_literals_do_not_derail_the_scanner() {
+        let src = "fn f() {\n    let a = '\\'';\n    let b = '{';\n    \
+                   let c = '\\u{7f}';\n    let m: HashSet<u8>;\n}\n";
+        let got = findings("rust/src/sim/x.rs", src);
+        assert_eq!(got, vec![("det-collections".to_string(), 5)]);
+    }
+
+    #[test]
+    fn cfg_test_region_is_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    \
+                   fn g() { x.partial_cmp(y); }\n}\n";
+        assert!(findings("rust/src/sim/x.rs", src).is_empty());
+        // ... and code after the region is scanned again
+        let src2 = "#[cfg(test)]\nmod tests {\n    fn g() {}\n}\n\
+                    fn h() { x.partial_cmp(y); }\n";
+        assert_eq!(
+            findings("rust/src/sim/x.rs", src2),
+            vec![("float-ord".to_string(), 5)]
+        );
+    }
+
+    #[test]
+    fn scope_gates_rules_by_path() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(findings("rust/src/sim/x.rs", src).len(), 1);
+        // wall-clock constructs stay legal in runner/ and faults/
+        assert!(findings("rust/src/runner/x.rs", src).is_empty());
+        assert!(findings("rust/src/faults/x.rs", src).is_empty());
+
+        let src = "fn f() { x.unwrap(); }\n";
+        assert_eq!(findings("rust/src/metrics/x.rs", src).len(), 1);
+        // testutil and non-src trees are outside the panic rule
+        assert!(findings("rust/src/testutil/x.rs", src).is_empty());
+        assert!(findings("rust/tests/x.rs", src).is_empty());
+        assert!(findings("examples/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_alloc_only_inside_hot_fns_of_algo() {
+        let src = "impl N {\n    pub fn new() -> N { let v = vec![0.0; 8]; \
+                   N { v } }\n    fn wake(&mut self) {\n        \
+                   let w = vec![0.0; 8];\n        let c = self.x.clone();\n    \
+                   }\n    fn receive(&mut self) { let d = self.y.to_vec(); }\n}\n";
+        let got = findings("rust/src/algo/x.rs", src);
+        assert_eq!(
+            got,
+            vec![
+                ("hot-alloc".to_string(), 4),
+                ("hot-alloc".to_string(), 5),
+                ("hot-alloc".to_string(), 7),
+            ]
+        );
+        // same fns outside algo/: no rule
+        assert!(findings("rust/src/exp/x.rs", src)
+            .iter()
+            .all(|(r, _)| r != "hot-alloc"));
+    }
+
+    #[test]
+    fn trait_method_declarations_do_not_capture_fn_context() {
+        // `fn wake(...);` has no body: the `;` cancels the pending fn, so
+        // the next body is attributed to its own fn, not to `wake`
+        let src = "trait T {\n    fn wake(&mut self);\n    \
+                   fn other(&self) { let v = vec![0u8; 4]; }\n}\n";
+        assert!(findings("rust/src/algo/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trailing_waiver_suppresses_with_reason() {
+        let src = "fn f() {\n    x.partial_cmp(y); // lint:allow(float-ord): \
+                   PartialOrd impl delegates to total order\n}\n";
+        let scan = scan_source("rust/src/sim/x.rs", src);
+        assert!(scan.findings.is_empty());
+        assert!(scan.waiver_errors.is_empty());
+        assert_eq!(scan.waivers_used, 1);
+    }
+
+    #[test]
+    fn standalone_waiver_covers_next_code_line() {
+        let src = "fn f() {\n    // lint:allow(panic-path): invariant \
+                   upheld by caller\n\n    x.unwrap();\n    y.unwrap();\n}\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        // blank line skipped; first code line waived, second is not
+        assert_eq!(scan.waivers_used, 1);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].line, 5);
+    }
+
+    #[test]
+    fn waiver_without_reason_is_a_finding_and_does_not_suppress() {
+        let src = "fn f() {\n    x.unwrap(); // lint:allow(panic-path)\n}\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        assert_eq!(scan.waiver_errors.len(), 1);
+        assert_eq!(scan.findings.len(), 1, "malformed waiver must not waive");
+        let src2 = "fn f() {\n    x.unwrap(); // lint:allow(panic-path):   \n}\n";
+        assert_eq!(scan_source("rust/src/exp/x.rs", src2).waiver_errors.len(), 1);
+    }
+
+    #[test]
+    fn doc_comments_describing_pragmas_are_inert() {
+        // `///` and `//!` may spell out the pragma grammar without being
+        // parsed as (malformed) waivers — and without waiving anything
+        let src = "//! Use `// lint:allow(RULE): reason` to waive.\n\
+                   /// Syntax: lint:allow(...) then a reason.\n\
+                   fn f() { x.unwrap(); }\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        assert!(scan.waiver_errors.is_empty());
+        assert_eq!(scan.waivers_used, 0);
+        assert_eq!(scan.findings.len(), 1);
+    }
+
+    #[test]
+    fn waiver_with_unknown_rule_is_rejected() {
+        let src = "fn f() {\n    x.unwrap(); // lint:allow(no-such-rule): y\n}\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        assert_eq!(scan.waiver_errors.len(), 1);
+        assert!(scan.waiver_errors[0].detail.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn waiver_list_covers_multiple_rules() {
+        let src = "fn wake(&mut self) {\n    let v: HashMap<u8, u8> = \
+                   x.clone(); // lint:allow(det-collections, hot-alloc): \
+                   fixture of both rules\n}\n";
+        let scan = scan_source("rust/src/algo/x.rs", src);
+        assert!(scan.findings.is_empty());
+        assert_eq!(scan.waivers_used, 2);
+    }
+
+    #[test]
+    fn sort_by_key_flags_only_with_float_types() {
+        let src = "fn f() { xs.sort_by_key(|x| x.id); }\n";
+        assert!(findings("rust/src/graph/x.rs", src).is_empty());
+        let src = "fn f() { xs.sort_by_key(|x| x.t as f64 as u64); }\n";
+        assert_eq!(findings("rust/src/graph/x.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn fn_names_are_tracked_through_nested_braces() {
+        let src = "impl N {\n    fn wake(&mut self) {\n        \
+                   if x {\n            for _ in 0..3 { let v = vec![1]; }\n        \
+                   }\n    }\n    fn calm(&self) { let v = vec![1]; }\n}\n";
+        let got = findings("rust/src/algo/x.rs", src);
+        assert_eq!(got, vec![("hot-alloc".to_string(), 4)]);
+    }
+}

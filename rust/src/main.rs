@@ -12,6 +12,9 @@
 //!               [--replay DIR]         # deterministic fault-space fuzzer
 //! repro bench-baseline [--out DIR]     # perf baselines: hot-path suite +
 //!                                      # scaling sweep → BENCH_*.json
+//! repro lint    [--baseline LINT_BASELINE.json] [--fix-baseline]
+//!               [--root DIR] [--paths a,b,c] [--out FILE]
+//!                                      # determinism & hot-path analyzer
 //! repro graph   --topology binary_tree --nodes 7      # inspect W/A, roots
 //! repro check-artifacts                               # load + smoke-run
 //! repro algos                                         # list algorithms
@@ -67,6 +70,7 @@ fn main() {
         "scenarios" => cmd_scenarios(&args),
         "fuzz" => cmd_fuzz(&args),
         "bench-baseline" => cmd_bench_baseline(&args),
+        "lint" => cmd_lint(&args),
         "algos" => {
             cmd_algos();
             Ok(())
@@ -91,6 +95,7 @@ fn print_help() {
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
          fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11)\n  \
          bench-baseline   run the hot-path suite + 8→64-node scaling sweep and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode). Fails if\n                          the emitted JSON is schema-invalid (EXPERIMENTS.md).\n  \
+         lint             determinism & hot-path static analyzer (DESIGN.md \u{a7}12):\n                          scans rust/src, rust/benches, rust/tests, examples;\n                          --baseline LINT_BASELINE.json gates on the ratchet\n                          (counts may only shrink), --fix-baseline rewrites it,\n                          --out FILE writes the findings JSON, --root/--paths\n                          override the scan set. Waive a finding in place with\n                          `// lint:allow(RULE): reason` (reason mandatory)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
          algos            list implemented algorithms\n  \
@@ -142,7 +147,8 @@ fn cmd_scenarios(args: &Args) -> Result<(), String> {
     let mut t = Table::new("fault-injection scenario presets",
                            &["name", "description"]);
     for name in Scenario::preset_names() {
-        let s = Scenario::by_name(name).expect("preset");
+        let s = Scenario::by_name(name)
+            .ok_or_else(|| format!("preset {name:?} missing from registry"))?;
         t.row(vec![name.to_string(), s.description.clone()]);
     }
     t.print();
@@ -150,7 +156,8 @@ fn cmd_scenarios(args: &Args) -> Result<(), String> {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
         for name in Scenario::preset_names() {
-            let s = Scenario::by_name(name).expect("preset");
+            let s = Scenario::by_name(name)
+                .ok_or_else(|| format!("preset {name:?} missing from registry"))?;
             let path = dir.join(format!("{name}.json"));
             std::fs::write(&path, s.to_json().to_string())
                 .map_err(|e| format!("write {}: {e}", path.display()))?;
@@ -270,6 +277,145 @@ fn fuzz_replay(dir: PathBuf) -> Result<(), String> {
     } else {
         println!("replay: {} repro(s) behave as committed", paths.len());
         Ok(())
+    }
+}
+
+/// `repro lint` — the determinism & hot-path static analyzer (DESIGN.md
+/// §12). Scans the default path set (or `--paths a,b,c`) under `--root`
+/// (auto-detected: the nearest ancestor holding `rust/src`), prints every
+/// finding, and gates:
+///
+/// * with `--baseline FILE`: diff against the grandfathered counts —
+///   regressions or malformed waivers exit non-zero, improvements pass
+///   with a nudge to `--fix-baseline`;
+/// * with `--fix-baseline`: rewrite FILE from this scan (refused while
+///   malformed waivers exist — they are never baselineable);
+/// * with neither: any finding at all exits non-zero.
+///
+/// `--out FILE` additionally writes the findings JSON
+/// (`rfast-lint-findings/v1`) — CI uploads it on failure.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use rfast::lint;
+
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => detect_repo_root()?,
+    };
+    let mut cfg = lint::LintConfig::new(root);
+    if let Some(paths) = args.get("paths") {
+        cfg.paths = paths
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if cfg.paths.is_empty() {
+            return Err("--paths: empty list".into());
+        }
+    }
+    let report = lint::run(&cfg)?;
+
+    for f in report.findings.iter().chain(report.waiver_errors.iter()) {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.detail);
+    }
+    println!(
+        "lint: {} file(s), {} finding(s), {} waiver(s) used, {} bad \
+         waiver(s)",
+        report.files_scanned,
+        report.findings.len(),
+        report.waivers_used,
+        report.waiver_errors.len(),
+    );
+
+    let baseline_path = args.get("baseline").map(PathBuf::from);
+    let current = lint::Baseline::from_report(&report);
+
+    let ratchet = match &baseline_path {
+        Some(path) if !args.has_flag("fix-baseline") => {
+            Some(lint::Baseline::load(path)?.diff(&current))
+        }
+        _ => None,
+    };
+    if let Some(out) = args.get("out") {
+        let j = lint::findings_json(&report, ratchet.as_ref());
+        std::fs::write(out, lint::to_pretty(&j))
+            .map_err(|e| format!("write {out}: {e}"))?;
+        println!("findings: {out}");
+    }
+    if !report.waiver_errors.is_empty() {
+        return Err(format!(
+            "{} malformed waiver pragma(s) — fix them; bad waivers are \
+             never baselineable",
+            report.waiver_errors.len()
+        ));
+    }
+    match (baseline_path, args.has_flag("fix-baseline")) {
+        (Some(path), true) => {
+            std::fs::write(&path, lint::to_pretty(&current.to_json()))
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            println!("baseline rewritten: {}", path.display());
+            Ok(())
+        }
+        (None, true) => Err("--fix-baseline needs --baseline FILE".into()),
+        (Some(path), false) => {
+            // ratchet was computed above; unwrap-free by construction
+            let r = ratchet.unwrap_or_default();
+            for d in &r.regressions {
+                println!(
+                    "RATCHET: {} in {} went {} -> {} (new findings need a \
+                     fix or a waiver, not a bigger baseline)",
+                    d.rule, d.file, d.base, d.cur
+                );
+            }
+            if !r.improvements.is_empty() {
+                println!(
+                    "ratchet: {} cell(s) improved — run `repro lint \
+                     --baseline {} --fix-baseline` to lock the gain in",
+                    r.improvements.len(),
+                    path.display()
+                );
+            }
+            if r.is_clean() {
+                println!("lint: clean against {}", path.display());
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} ratchet regression(s) vs {}",
+                    r.regressions.len(),
+                    path.display()
+                ))
+            }
+        }
+        (None, false) => {
+            if report.findings.is_empty() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} finding(s) (no --baseline given)",
+                    report.findings.len()
+                ))
+            }
+        }
+    }
+}
+
+/// Nearest ancestor of the cwd containing `rust/src` — lets `repro lint`
+/// run from the repo root or anywhere inside it.
+fn detect_repo_root() -> Result<PathBuf, String> {
+    let cwd = std::env::current_dir().map_err(|e| e.to_string())?;
+    let mut dir = cwd.as_path();
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => {
+                return Err(format!(
+                    "no rust/src above {} — pass --root DIR",
+                    cwd.display()
+                ))
+            }
+        }
     }
 }
 

@@ -61,7 +61,7 @@ impl Series {
         self.points
             .iter()
             .map(|&(_, y)| y)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(|a, b| a.total_cmp(b))
     }
 
     pub fn to_json(&self) -> Json {
@@ -150,7 +150,7 @@ pub fn save_series_csv(path: &Path, series: &[&Series]) -> std::io::Result<()> {
         .iter()
         .flat_map(|s| s.points.iter().map(|&(x, _)| x))
         .collect();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
     xs.dedup();
     let mut f = std::fs::File::create(path)?;
     write!(f, "x")?;

@@ -142,11 +142,13 @@ pub struct ThreadedRunner {
 impl ThreadedRunner {
     pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                x0: Vec<f32>) -> ThreadedRunner {
+        // lint:allow(panic-path): engine-level constructor fails fast; Experiment pre-validates into typed errors
         cfg.validate().expect("invalid SimConfig");
         if let Some(sc) = &cfg.scenario {
             // bound-check node indices against this topology, like the
             // simulator does
             sc.validate(Some(topo.n()))
+                // lint:allow(panic-path): engine-level constructor fails fast; Experiment pre-validates into typed errors
                 .expect("invalid scenario for this topology");
         }
         ThreadedRunner { cfg, algo, topo: topo.clone(), x0, pace: None }
@@ -214,6 +216,7 @@ impl ThreadedRunner {
         let mut mean = vec![0.0f32; p];
         std::thread::scope(|scope| {
             for (i, node) in nodes.into_iter().enumerate() {
+                // lint:allow(panic-path): each receiver is taken exactly once, i is unique per iteration
                 let rx = receivers[i].take().unwrap();
                 let routes = senders.clone();
                 let shared_i = Arc::clone(&shared);
@@ -226,6 +229,7 @@ impl ThreadedRunner {
                         worker_loop(i, node, factory, rx, routes, shared_i,
                                     cfg, algo, pace);
                     })
+                    // lint:allow(panic-path): thread spawn failure is unrecoverable resource exhaustion
                     .expect("spawn worker");
             }
             drop(senders);
@@ -256,6 +260,7 @@ impl ThreadedRunner {
                 {
                     let (mut sum, mut count) = (0.0f64, 0u64);
                     for slot in &shared.train_loss {
+                        // lint:allow(panic-path): lock poisoning means a worker already panicked
                         let mut acc = slot.lock().unwrap();
                         sum += acc.0;
                         count += acc.1;
@@ -340,6 +345,7 @@ impl ThreadedRunner {
     fn snapshot_mean(&self, shared: &Shared, mean: &mut [f32]) {
         mean.iter_mut().for_each(|v| *v = 0.0);
         for snap in &shared.snapshots {
+            // lint:allow(panic-path): lock poisoning means a worker already panicked
             let guard = snap.lock().unwrap();
             crate::linalg::axpy(mean, 1.0, &guard);
         }
@@ -498,12 +504,14 @@ fn worker_loop(
                 shared.total_steps.fetch_add(1, Ordering::Relaxed);
                 if let Some(l) = loss {
                     // uncontended: this node's own accumulator
+                    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
                     let mut acc = shared.train_loss[id].lock().unwrap();
                     acc.0 += l as f64;
                     acc.1 += 1;
                 }
                 // snapshot for the coordinator
                 {
+                    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
                     let mut guard = shared.snapshots[id].lock().unwrap();
                     guard.copy_from_slice(node.param());
                 }
@@ -534,6 +542,7 @@ fn worker_loop(
         }
     }
     // final snapshot
+    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
     let mut guard = shared.snapshots[id].lock().unwrap();
     guard.copy_from_slice(node.param());
 }

@@ -120,10 +120,13 @@ impl NodeOracle for PjrtOracle {
                     .run(&self.grad_name, &[Input::F32(x), Input::I32(&toks)])
             }
         }
+        // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
         .expect("PJRT grad execution failed");
+        // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
         let loss = outputs[0].scalar_f32().expect("loss scalar");
         let grad = match &outputs[1] {
             super::engine::Output::F32(v) => v,
+            // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
             _ => panic!("grad output must be f32"),
         };
         grad_out.copy_from_slice(grad);
@@ -180,8 +183,11 @@ impl PjrtEval {
                         .engine
                         .run(&self.eval_name,
                              &[Input::F32(x), Input::F32(&xbuf), labels])
+                        // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
                         .expect("PJRT eval failed");
+                    // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
                     total_loss += out[0].scalar_f32().unwrap() as f64 * *chunk as f64;
+                    // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
                     total_correct += out[1].scalar_i32().unwrap() as i64;
                     counted += chunk;
                 }
@@ -196,7 +202,9 @@ impl PjrtEval {
                     let out = self
                         .engine
                         .run(&self.eval_name, &[Input::F32(x), Input::I32(b)])
+                        // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
                         .expect("PJRT eval failed");
+                    // lint:allow(panic-path): executable shapes/dtypes are fixed by the AOT manifest; a mismatch is a build error
                     total += out[0].scalar_f32().unwrap() as f64;
                 }
                 Eval { loss: total / blocks.len() as f64, accuracy: None }
@@ -379,10 +387,12 @@ impl OracleFactory for PjrtFactory {
         let eval_name = self.task.eval_artifact();
         let engine = Rc::new(
             Engine::load(&self.manifest, &[&grad_name, &eval_name])
+                // lint:allow(panic-path): per-worker factory fails fast; the main thread validated the same manifest already
                 .expect("worker engine"),
         );
         let mut set = build_single_node(engine, &self.manifest, &self.task,
                                         node, self.seed)
+            // lint:allow(panic-path): per-worker factory fails fast; the main thread validated the same manifest already
             .expect("worker oracle");
         set.nodes.remove(0)
     }

@@ -132,6 +132,7 @@ impl PartialEq for Key {
 }
 impl Eq for Key {}
 impl PartialOrd for Key {
+    // lint:allow(float-ord): delegates to the total order below (bit-keyed, NaN-free)
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
@@ -186,6 +187,7 @@ impl Simulator {
     /// engine-level control (custom oracle sets, mid-run inspection).
     pub fn new(cfg: SimConfig, topo: &Topology, algo: AlgoKind,
                set: OracleSet) -> Simulator {
+        // lint:allow(panic-path): engine-level constructor fails fast; Experiment pre-validates into typed errors
         cfg.validate().expect("invalid SimConfig");
         let n = topo.n();
         assert_eq!(set.n_nodes(), n, "oracle set vs topology node count");
@@ -197,6 +199,7 @@ impl Simulator {
                    set: OracleSet, x0: &[f32]) -> Simulator {
         let n = topo.n();
         if let Some(sc) = &cfg.scenario {
+            // lint:allow(panic-path): engine-level constructor fails fast; Experiment pre-validates into typed errors
             sc.validate(Some(n)).expect("invalid scenario for this topology");
         }
         let nodes = algo.build(topo, x0, cfg.gamma, cfg.seed);
@@ -417,6 +420,7 @@ impl Simulator {
             };
             self.time = at;
             self.faults.clock.advance_to(at);
+            // lint:allow(panic-path): heap index points at a live slot by construction; firing twice is a real bug
             let ev = self.events[idx].take().expect("event consumed twice");
             match ev {
                 Event::NodeFinish(i) => {

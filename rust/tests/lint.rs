@@ -1,0 +1,189 @@
+//! Integration tests for `repro lint` (DESIGN.md §12): fixture corpus,
+//! waiver policy, baseline ratchet, and the live-tree self-scan against
+//! the committed `LINT_BASELINE.json`.
+
+use rfast::lint::{self, Baseline, LintConfig};
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf()
+}
+
+/// Scan the fixture corpus (exclude_dirs emptied — the corpus IS the
+/// lint_fixtures directory the default config prunes).
+fn scan_fixtures() -> lint::LintReport {
+    let cfg = LintConfig {
+        root: fixtures_root(),
+        paths: vec!["rust/src".to_string()],
+        exclude_dirs: vec![],
+    };
+    lint::run(&cfg).expect("fixture scan")
+}
+
+fn findings_for<'a>(
+    report: &'a lint::LintReport,
+    file: &str,
+) -> Vec<(&'a str, usize)> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.file == file)
+        .map(|f| (f.rule, f.line))
+        .collect()
+}
+
+#[test]
+fn bad_fixtures_trip_their_rule_and_good_pairs_stay_clean() {
+    let r = scan_fixtures();
+
+    // float ordering: partial_cmp always, sort_by_key only next to floats
+    assert_eq!(
+        findings_for(&r, "rust/src/sim/bad_float.rs"),
+        vec![("float-ord", 6), ("float-ord", 10)]
+    );
+    assert!(findings_for(&r, "rust/src/sim/good_float.rs").is_empty());
+
+    // unordered collections, including the use declaration itself
+    let coll = findings_for(&r, "rust/src/sim/bad_collections.rs");
+    assert_eq!(coll.len(), 5);
+    assert!(coll.iter().all(|&(rule, _)| rule == "det-collections"));
+    assert!(findings_for(&r, "rust/src/sim/good_collections.rs").is_empty());
+
+    // wall clock and ambient randomness
+    let wc = findings_for(&r, "rust/src/sim/bad_wallclock.rs");
+    assert_eq!(wc.len(), 3);
+    assert!(wc.iter().all(|&(rule, _)| rule == "det-wallclock"));
+    let rand = findings_for(&r, "rust/src/sim/bad_rand.rs");
+    assert_eq!(rand.len(), 3);
+    assert!(rand.iter().all(|&(rule, _)| rule == "det-rand"));
+
+    // hot-path allocation: one hit per wake/receive/on_send_failed body,
+    // none for construction-time allocation
+    assert_eq!(
+        findings_for(&r, "rust/src/algo/bad_hot.rs"),
+        vec![("hot-alloc", 9), ("hot-alloc", 14), ("hot-alloc", 18)]
+    );
+    assert!(findings_for(&r, "rust/src/algo/good_hot.rs").is_empty());
+
+    // panic discipline, with a reasoned waiver clearing the good pair
+    assert_eq!(
+        findings_for(&r, "rust/src/exp/bad_panic.rs"),
+        vec![("panic-path", 4), ("panic-path", 6)]
+    );
+    assert!(findings_for(&r, "rust/src/exp/good_panic.rs").is_empty());
+}
+
+#[test]
+fn scope_exemptions_hold() {
+    let r = scan_fixtures();
+    // #[cfg(test)] regions are out of scope even in lib paths
+    assert!(findings_for(&r, "rust/src/exp/cfg_test_exempt.rs").is_empty());
+    // wall clock is legal in runner/ (Clock abstraction territory)
+    assert!(findings_for(&r, "rust/src/runner/wallclock_ok.rs").is_empty());
+    // testutil/ panics are assertions by design
+    assert!(findings_for(&r, "rust/src/testutil/panics_ok.rs").is_empty());
+}
+
+#[test]
+fn reasonless_waiver_is_rejected_and_suppresses_nothing() {
+    let r = scan_fixtures();
+    let errs: Vec<_> = r
+        .waiver_errors
+        .iter()
+        .filter(|f| f.file == "rust/src/exp/bad_waiver.rs")
+        .collect();
+    assert_eq!(errs.len(), 1);
+    assert!(errs[0].detail.contains("reason"));
+    // the finding the malformed waiver tried to cover is still reported
+    assert_eq!(
+        findings_for(&r, "rust/src/exp/bad_waiver.rs"),
+        vec![("panic-path", 4)]
+    );
+}
+
+#[test]
+fn ratchet_accepts_decrease_and_rejects_increase() {
+    let r = scan_fixtures();
+    let grandfathered = Baseline::from_report(&r);
+
+    // identical scan: clean, no deltas
+    let same = grandfathered.diff(&Baseline::from_report(&r));
+    assert!(same.is_clean());
+    assert!(same.improvements.is_empty());
+
+    // one more finding in a known cell: regression, gate fails
+    let mut worse = Baseline::from_report(&r);
+    if let Some(n) = worse
+        .counts
+        .get_mut("hot-alloc")
+        .and_then(|m| m.get_mut("rust/src/algo/bad_hot.rs"))
+    {
+        *n += 1;
+    }
+    let d = grandfathered.diff(&worse);
+    assert!(!d.is_clean());
+    assert_eq!(d.regressions.len(), 1);
+
+    // a brand-new rule/file cell is also a regression (from zero)
+    let mut new_cell = Baseline::from_report(&r);
+    new_cell
+        .counts
+        .entry("float-ord".to_string())
+        .or_default()
+        .insert("rust/src/sim/fresh.rs".to_string(), 1);
+    assert!(!grandfathered.diff(&new_cell).is_clean());
+
+    // fixing a finding: improvement, gate passes and suggests shrink
+    let mut better = Baseline::from_report(&r);
+    if let Some(m) = better.counts.get_mut("panic-path") {
+        m.remove("rust/src/exp/bad_panic.rs");
+    }
+    let d = grandfathered.diff(&better);
+    assert!(d.is_clean());
+    assert!(d
+        .improvements
+        .iter()
+        .any(|x| x.file == "rust/src/exp/bad_panic.rs" && x.cur == 0));
+}
+
+#[test]
+fn baseline_file_round_trips_through_fix_baseline_format() {
+    let r = scan_fixtures();
+    let b = Baseline::from_report(&r);
+    let text = lint::to_pretty(&b.to_json());
+    let parsed = rfast::jsonio::parse(&text).expect("pretty output parses");
+    assert_eq!(Baseline::from_json(&parsed).expect("schema"), b);
+}
+
+/// The tentpole gate, run as a test: the live tree must match the
+/// committed baseline EXACTLY — no regressions (ratchet) and no stale
+/// grandfathered cells (a fixed finding must shrink the baseline too, so
+/// the register never overstates the debt).
+#[test]
+fn self_scan_matches_committed_baseline_exactly() {
+    let root = repo_root();
+    let baseline_path = root.join("LINT_BASELINE.json");
+    let committed = Baseline::load(&baseline_path).expect("committed baseline");
+    let report = lint::run(&LintConfig::new(root)).expect("self scan");
+    assert!(
+        report.waiver_errors.is_empty(),
+        "malformed waivers in tree: {:?}",
+        report.waiver_errors
+    );
+    let live = Baseline::from_report(&report);
+    assert_eq!(
+        live, committed,
+        "live tree diverges from LINT_BASELINE.json — fix the new \
+         findings or run `repro lint --baseline LINT_BASELINE.json \
+         --fix-baseline` after a genuine improvement"
+    );
+    // sanity: the scan actually covered the tree
+    assert!(report.files_scanned > 30, "only {} files", report.files_scanned);
+}

@@ -1,0 +1,20 @@
+// Fixture: allocations inside the per-event hot path.
+
+pub struct Node {
+    buf: Vec<f32>,
+}
+
+impl Node {
+    pub fn wake(&mut self) -> Vec<f32> {
+        let scratch = vec![0.0f32; self.buf.len()];
+        scratch
+    }
+
+    pub fn receive(&mut self, payload: &[f32]) {
+        self.buf = payload.to_vec();
+    }
+
+    pub fn on_send_failed(&mut self) {
+        let _copy = self.buf.clone();
+    }
+}

@@ -1,0 +1,22 @@
+// Fixture: allocations confined to construction; the hot path reuses
+// preallocated buffers.
+
+pub struct Node {
+    buf: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl Node {
+    pub fn new(dim: usize) -> Node {
+        Node { buf: vec![0.0; dim], scratch: vec![0.0; dim] }
+    }
+
+    pub fn wake(&mut self) -> &[f32] {
+        self.scratch.copy_from_slice(&self.buf);
+        &self.scratch
+    }
+
+    pub fn receive(&mut self, payload: &[f32]) {
+        self.buf.copy_from_slice(payload);
+    }
+}

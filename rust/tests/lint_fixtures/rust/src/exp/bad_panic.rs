@@ -1,0 +1,9 @@
+// Fixture: unwaived panics in library code.
+
+pub fn first(xs: &[u32]) -> u32 {
+    let head = xs.first().unwrap();
+    if *head > 10 {
+        panic!("too big");
+    }
+    *head
+}

@@ -1,0 +1,6 @@
+// Fixture: a reasonless waiver is itself a finding and suppresses nothing.
+
+pub fn first(xs: &[u32]) -> u32 {
+    let head = xs.first().unwrap(); // lint:allow(panic-path)
+    *head
+}

@@ -1,0 +1,18 @@
+// Fixture: panics inside #[cfg(test)] regions are out of scope.
+
+pub fn double(x: u32) -> u32 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles() {
+        let xs = vec![1u32];
+        assert_eq!(double(*xs.first().unwrap()), 2);
+        let m: std::collections::HashMap<u32, u32> = Default::default();
+        let _ = m;
+    }
+}

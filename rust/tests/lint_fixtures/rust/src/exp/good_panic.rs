@@ -1,0 +1,7 @@
+// Fixture: panics carrying waivers with reasons.
+
+pub fn first(xs: &[u32]) -> u32 {
+    // lint:allow(panic-path): callers guarantee a non-empty slice
+    let head = xs.first().unwrap();
+    *head
+}

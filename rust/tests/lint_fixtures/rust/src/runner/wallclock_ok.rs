@@ -1,0 +1,7 @@
+// Fixture: wall-clock constructs are legal in runner/ (behind the Clock
+// abstraction) — only the panic rule applies here.
+
+pub fn pace() -> std::time::Instant {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    std::time::Instant::now()
+}

@@ -1,0 +1,13 @@
+// Fixture: nondeterministic collections in sim scope.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn tally(xs: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    let mut seen = HashSet::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+        seen.insert(x);
+    }
+    m
+}

@@ -1,0 +1,11 @@
+// Fixture: float-ord violations in sim scope (not compiled by cargo).
+
+pub fn pick_min(xs: &[f64]) -> Option<f64> {
+    xs.iter()
+        .copied()
+        .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+}
+
+pub fn sort_times(xs: &mut Vec<(f64, usize)>) {
+    xs.sort_by_key(|p| p.0 as f64 as u64);
+}

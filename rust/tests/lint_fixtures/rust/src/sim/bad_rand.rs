@@ -1,0 +1,9 @@
+// Fixture: ambient randomness in sim scope breaks seed replay.
+
+pub fn jitter() -> u64 {
+    let h = std::collections::hash_map::DefaultHasher::new();
+    let _ = h;
+    let r = rand::thread_rng();
+    let _ = r;
+    0
+}

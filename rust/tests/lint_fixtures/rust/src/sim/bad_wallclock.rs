@@ -1,0 +1,8 @@
+// Fixture: wall clock leaking into virtual time.
+
+pub fn stamp() -> std::time::Instant {
+    let t = std::time::Instant::now();
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _ = std::time::SystemTime::UNIX_EPOCH;
+    t
+}

@@ -1,0 +1,14 @@
+// Fixture: ordered collections, clean in sim scope.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+pub fn tally(xs: &[u32]) -> BTreeMap<u32, usize> {
+    let mut m = BTreeMap::new();
+    let mut seen = BTreeSet::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+        seen.insert(x);
+    }
+    let _ = seen;
+    m
+}

@@ -1,0 +1,9 @@
+// Fixture: total_cmp float ordering, clean in sim scope.
+
+pub fn pick_min(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().min_by(f64::total_cmp)
+}
+
+pub fn sort_times(xs: &mut Vec<(f64, usize)>) {
+    xs.sort_by(|a, b| a.0.total_cmp(&b.0));
+}

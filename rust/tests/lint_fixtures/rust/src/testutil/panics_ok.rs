@@ -1,0 +1,6 @@
+// Fixture: testutil/ is exempt from the panic rule — its panics are
+// assertions by design.
+
+pub fn must(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
