@@ -19,7 +19,7 @@
 //!   step fails on schema-invalid output).
 
 use crate::algo::{AlgoKind, NodeState};
-use crate::exp::{Experiment, Stop, Workload};
+use crate::exp::{Experiment, QuadSpec, Stop, Workload};
 use crate::graph::Topology;
 use crate::jsonio::Json;
 use crate::oracle::{GradOracle, LogRegOracle, MlpOracle, NodeOracle,
@@ -30,45 +30,82 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Schema tag of `BENCH_hotpath.json` (bump on breaking changes).
 pub const HOTPATH_SCHEMA: &str = "rfast-bench-hotpath/v1";
-/// Schema tag of `BENCH_scaling.json`.
-pub const SCALING_SCHEMA: &str = "rfast-bench-scaling/v1";
+/// Schema tag of `BENCH_scaling.json`. v2: per-point `topology` and
+/// `workload` strings (the sweep is no longer binary-tree/logreg-only).
+pub const SCALING_SCHEMA: &str = "rfast-bench-scaling/v2";
 /// Node counts of the baseline scaling sweep (binary tree, Fig 4b's
 /// topology, 8→64 nodes).
 pub const SCALING_NODES: &[usize] = &[8, 16, 32, 64];
 
+/// One entry of the scaling sweep: a topology spec
+/// ([`Topology::from_spec`] grammar) and a workload name at a node count.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingSpec {
+    pub nodes: usize,
+    pub topology: &'static str,
+    pub workload: &'static str,
+}
+
+/// The sparse-era extension of the sweep (DESIGN.md §13): chain, random
+/// tree, and star at 1k–50k nodes. Logreg shards its 10k-sample dataset,
+/// so the 50k point switches to the closed-form quadratic workload
+/// (steps, not epochs). Gate with `RFAST_BENCH_SCALE_MAX`.
+pub const SCALING_LARGE: &[ScalingSpec] = &[
+    ScalingSpec { nodes: 1_000, topology: "line", workload: "logreg" },
+    ScalingSpec { nodes: 10_000, topology: "tree:random@0:7+random@0:21",
+                  workload: "logreg" },
+    ScalingSpec { nodes: 50_000, topology: "star", workload: "quadratic" },
+];
+
 static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
 static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_LIVE: AtomicU64 = AtomicU64::new(0);
+static ALLOC_PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn track_alloc(bytes: u64) {
+    ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(bytes, Ordering::Relaxed);
+    let live = ALLOC_LIVE.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    ALLOC_PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+fn track_dealloc(bytes: u64) {
+    // saturating: a buffer allocated before reset_peak() may be freed
+    // after it, and the live gauge must not wrap
+    let _ = ALLOC_LIVE.fetch_update(Ordering::Relaxed, Ordering::Relaxed,
+                                    |l| Some(l.saturating_sub(bytes)));
+}
 
 /// Allocation-counting global allocator: delegates to [`System`] and
-/// keeps running totals of calls and requested bytes. Install it in a
-/// binary with
+/// keeps running totals of calls and requested bytes plus a live-bytes
+/// gauge with a high-water mark (the scale-smoke memory ceiling).
+/// Install it in a binary with
 /// `#[global_allocator] static A: CountingAllocator = CountingAllocator;`
-/// — the overhead is two relaxed atomic adds per allocation.
+/// — the overhead is a few relaxed atomic ops per allocation.
 pub struct CountingAllocator;
 
 // SAFETY: pure delegation to `System`; the counters never affect the
 // returned pointers or layouts.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        track_alloc(layout.size() as u64);
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        track_alloc(layout.size() as u64);
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
                       new_size: usize) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        track_alloc(new_size as u64);
+        track_dealloc(layout.size() as u64);
         System.realloc(ptr, layout, new_size)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        track_dealloc(layout.size() as u64);
         System.dealloc(ptr, layout)
     }
 }
@@ -78,6 +115,18 @@ unsafe impl GlobalAlloc for CountingAllocator {
 /// installed global allocator.
 pub fn alloc_stats() -> (u64, u64) {
     (ALLOC_COUNT.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// (currently live heap bytes, high-water mark since the last
+/// [`reset_peak`]). Zeros forever without the counting allocator.
+pub fn live_peak_stats() -> (u64, u64) {
+    (ALLOC_LIVE.load(Ordering::Relaxed), ALLOC_PEAK.load(Ordering::Relaxed))
+}
+
+/// Rebase the high-water mark to the current live bytes, so a test can
+/// assert a ceiling over just the region it brackets.
+pub fn reset_peak() {
+    ALLOC_PEAK.store(ALLOC_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
 /// Is [`CountingAllocator`] actually installed as the global allocator?
@@ -303,12 +352,16 @@ pub fn hotpath_suite(quick: bool) -> Vec<HotpathResult> {
     results
 }
 
-/// One node-count point of the scaling sweep: a full R-FAST simulator
-/// run on the binary tree at a fixed epoch budget.
+/// One point of the scaling sweep: a full R-FAST simulator run on one
+/// [`ScalingSpec`] at a fixed epoch budget.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
-    /// Node count (binary tree of this size).
+    /// Node count.
     pub nodes: usize,
+    /// Topology spec the point ran on.
+    pub topology: String,
+    /// Workload name (`logreg` or `quadratic`).
+    pub workload: String,
     /// Virtual seconds the epoch budget took (the paper's Fig 4b axis).
     pub virtual_time: f64,
     /// Real wall seconds the single-threaded simulation took — the
@@ -326,22 +379,53 @@ pub struct ScalingPoint {
     pub final_loss: f64,
 }
 
-/// Run the scaling sweep: R-FAST, logreg workload, binary tree (the Fig
-/// 4b setup), one simulator run per entry of `node_counts`, each stopped
-/// at `epochs` global epochs. Deterministic given the fixed seed — only
-/// `wall_seconds` varies between hosts.
+/// Run the baseline scaling sweep (R-FAST, logreg, binary tree — the
+/// Fig 4b setup) over `node_counts`, each run stopped at `epochs` global
+/// epochs. Deterministic given the fixed seed — only `wall_seconds`
+/// varies between hosts.
 pub fn scaling_sweep(node_counts: &[usize], epochs: f64) -> Vec<ScalingPoint> {
-    node_counts
+    let specs: Vec<ScalingSpec> = node_counts
         .iter()
-        .map(|&n| {
-            let topo = Topology::binary_tree(n);
-            let mut cfg = Workload::LogReg.paper_config();
+        .map(|&n| ScalingSpec {
+            nodes: n,
+            topology: "binary_tree",
+            workload: "logreg",
+        })
+        .collect();
+    scaling_sweep_specs(&specs, epochs)
+}
+
+/// Run one R-FAST simulator point per [`ScalingSpec`]. `epochs` is the
+/// budget: dataset workloads stop at `Stop::Epochs(epochs)`; the
+/// quadratic workload has no epoch mapping, so it stops at
+/// `epochs × nodes` iterations — the same per-node wake budget.
+pub fn scaling_sweep_specs(specs: &[ScalingSpec],
+                           epochs: f64) -> Vec<ScalingPoint> {
+    specs
+        .iter()
+        .map(|spec| {
+            let topo = Topology::from_spec(spec.topology, spec.nodes)
+                // lint:allow(panic-path): bench harness fails fast on a misconfigured sweep
+                .expect("scaling sweep topology spec");
+            let workload = match spec.workload {
+                "quadratic" => {
+                    Workload::Quadratic(QuadSpec::heterogeneous(16, 0.5, 2.0))
+                }
+                _ => Workload::LogReg,
+            };
+            let mut cfg = workload.paper_config();
             cfg.seed = 2;
+            let stop = if workload.has_epoch_mapping() {
+                Stop::Epochs(epochs)
+            } else {
+                let iters = (epochs * spec.nodes as f64).ceil().max(1.0);
+                Stop::Iterations(iters as u64)
+            };
             let t0 = std::time::Instant::now();
-            let report = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+            let report = Experiment::new(workload, AlgoKind::RFast)
                 .topology(&topo)
                 .config(cfg)
-                .stop(Stop::Epochs(epochs))
+                .stop(stop)
                 .run()
                 // lint:allow(panic-path): bench harness fails fast on a misconfigured sweep
                 .expect("scaling sweep run")
@@ -349,7 +433,9 @@ pub fn scaling_sweep(node_counts: &[usize], epochs: f64) -> Vec<ScalingPoint> {
             let wall = t0.elapsed().as_secs_f64();
             let s = |k: &str| report.scalars.get(k).copied().unwrap_or(0.0);
             ScalingPoint {
-                nodes: n,
+                nodes: spec.nodes,
+                topology: spec.topology.to_string(),
+                workload: spec.workload.to_string(),
                 virtual_time: s("virtual_time"),
                 wall_seconds: wall,
                 grad_wakes: s("grad_wakes"),
@@ -400,6 +486,8 @@ pub fn scaling_json(points: &[ScalingPoint], epochs: f64) -> Json {
             };
             Json::obj(vec![
                 ("nodes", p.nodes.into()),
+                ("topology", p.topology.as_str().into()),
+                ("workload", p.workload.as_str().into()),
                 ("virtual_time", p.virtual_time.into()),
                 ("wall_seconds", p.wall_seconds.into()),
                 ("grad_wakes", p.grad_wakes.into()),
@@ -413,9 +501,7 @@ pub fn scaling_json(points: &[ScalingPoint], epochs: f64) -> Json {
         .collect();
     Json::obj(vec![
         ("schema", SCALING_SCHEMA.into()),
-        ("workload", "logreg".into()),
         ("algo", AlgoKind::RFast.name().into()),
-        ("topology", "binary_tree".into()),
         ("epoch_budget", epochs.into()),
         ("points", Json::Arr(rows)),
     ])
@@ -478,10 +564,8 @@ pub fn validate_scaling_json(j: &Json) -> Result<(), String> {
         Some(s) if s == SCALING_SCHEMA => {}
         other => return Err(format!("schema must be {SCALING_SCHEMA:?}, got {other:?}")),
     }
-    for key in ["workload", "algo", "topology"] {
-        if j.get(key).and_then(Json::as_str).is_none() {
-            return Err(format!("missing string {key}"));
-        }
+    if j.get("algo").and_then(Json::as_str).is_none() {
+        return Err("missing string algo".into());
     }
     require_num(j, "epoch_budget", "document")?;
     let rows = j
@@ -493,6 +577,11 @@ pub fn validate_scaling_json(j: &Json) -> Result<(), String> {
     }
     for (i, row) in rows.iter().enumerate() {
         let ctx = format!("points[{i}]");
+        for key in ["topology", "workload"] {
+            if row.get(key).and_then(Json::as_str).is_none() {
+                return Err(format!("{ctx}: missing string {key}"));
+            }
+        }
         for key in ["nodes", "virtual_time", "wall_seconds", "grad_wakes",
                     "msgs_sent", "bytes_sent", "bytes_per_epoch", "epoch",
                     "final_loss"] {
@@ -561,6 +650,8 @@ mod tests {
         assert!(p.epoch >= 0.2, "{p:?}");
         assert!(p.virtual_time > 0.0, "{p:?}");
         assert!(p.final_loss.is_finite(), "{p:?}");
+        assert_eq!(p.topology, "binary_tree");
+        assert_eq!(p.workload, "logreg");
         let j = scaling_json(&points, 0.2);
         let parsed = jsonio::parse(&j.to_string()).unwrap();
         validate_scaling_json(&parsed).unwrap();
@@ -572,5 +663,35 @@ mod tests {
         let bad = jsonio::parse(
             &j.to_string().replace("bytes_per_epoch", "bpe")).unwrap();
         assert!(validate_scaling_json(&bad).is_err());
+        // tampered: per-point topology removed (the v2 addition)
+        let bad = jsonio::parse(
+            &j.to_string().replace("\"topology\"", "\"topo\"")).unwrap();
+        assert!(validate_scaling_json(&bad).is_err());
+    }
+
+    #[test]
+    fn scaling_spec_quadratic_point_uses_iteration_budget() {
+        // the 50k star point's shape at toy size: no epoch mapping, so
+        // the budget maps to epochs × nodes iterations
+        let specs = [ScalingSpec { nodes: 6, topology: "star",
+                                   workload: "quadratic" }];
+        let points = scaling_sweep_specs(&specs, 2.0);
+        let p = &points[0];
+        assert_eq!((p.nodes, p.workload.as_str()), (6, "quadratic"));
+        assert_eq!(p.grad_wakes, 12.0, "Stop::Iterations(2 × 6): {p:?}");
+        assert!(p.virtual_time > 0.0 && p.final_loss.is_finite(), "{p:?}");
+        let j = scaling_json(&points, 2.0);
+        validate_scaling_json(&jsonio::parse(&j.to_string()).unwrap())
+            .unwrap();
+    }
+
+    #[test]
+    fn live_peak_stats_degrade_without_counting_allocator() {
+        // cargo test does not install CountingAllocator; the gauge and
+        // high-water mark must read zero and reset_peak must be a no-op
+        reset_peak();
+        let v: Vec<u8> = std::hint::black_box(Vec::with_capacity(4096));
+        drop(v);
+        assert_eq!(live_peak_stats(), (0, 0));
     }
 }

@@ -25,11 +25,79 @@
 
 use crate::algo::{Msg, MsgKind};
 use crate::config::SimConfig;
+use crate::graph::WeightMatrices;
 use crate::prng::Rng;
 use crate::scenario::Scenario;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
+
+/// CSR-style index over the directed links a topology can actually use —
+/// the sparse alternative to addressing `n × n` dense link ids. Built
+/// once per run from the union of a node's neighbor lists in *every*
+/// message direction (W in/out, A in/out): v-broadcasts travel to
+/// `w_out`, ρ-pushes to `a_out`, and protocol replies (the AD-PSGD leg)
+/// return along the corresponding in-lists, so the union covers every
+/// `(from, to)` the engines route.
+#[derive(Clone, Debug)]
+pub struct LinkIndex {
+    n: usize,
+    /// `offsets[u]..offsets[u+1]` indexes `targets` for from-node u.
+    offsets: Vec<u32>,
+    /// Per from-node sorted target lists, concatenated.
+    targets: Vec<u32>,
+}
+
+impl LinkIndex {
+    /// Union of per-node neighbor lists (each `lists[k][u]` a set of
+    /// peers of u); duplicates collapse, targets sort ascending.
+    pub fn from_neighbor_lists(n: usize, lists: [&[Vec<usize>]; 4]) -> LinkIndex {
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        let mut targets = Vec::new();
+        let mut buf: Vec<u32> = Vec::new();
+        for u in 0..n {
+            buf.clear();
+            for l in lists {
+                buf.extend(l[u].iter().map(|&v| v as u32));
+            }
+            buf.sort_unstable();
+            buf.dedup();
+            targets.extend_from_slice(&buf);
+            assert!(targets.len() < u32::MAX as usize, "link count overflow");
+            offsets.push(targets.len() as u32);
+        }
+        LinkIndex { n, offsets, targets }
+    }
+
+    /// The link universe of a topology's weight structure.
+    pub fn from_weights(wm: &WeightMatrices) -> LinkIndex {
+        LinkIndex::from_neighbor_lists(
+            wm.n,
+            [&wm.w_in, &wm.w_out, &wm.a_in, &wm.a_out],
+        )
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total directed links indexed.
+    pub fn links(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Dense id of directed link `from → to`, `None` when the topology
+    /// holds no such link. O(log degree).
+    pub fn link_id(&self, from: usize, to: usize) -> Option<usize> {
+        debug_assert!(from < self.n && to < self.n);
+        let (s, e) = (self.offsets[from] as usize, self.offsets[from + 1] as usize);
+        self.targets[s..e]
+            .binary_search(&(to as u32))
+            .ok()
+            .map(|k| s + k)
+    }
+}
 
 /// Engine time base: seconds since the start of the run.
 pub trait Clock {
@@ -233,10 +301,42 @@ pub enum SendVerdict {
     Lost,
 }
 
+/// How `(from, to)` pairs map to channel-slot indices: the dense `n × n`
+/// address space (small n, and unit tests that probe arbitrary pairs) or
+/// a [`LinkIndex`] over the topology's actual links (slots scale with
+/// edge count, not n²).
+enum LinkMap {
+    Dense { n: usize },
+    Sparse(LinkIndex),
+}
+
+impl LinkMap {
+    fn n(&self) -> usize {
+        match self {
+            LinkMap::Dense { n } => *n,
+            LinkMap::Sparse(ix) => ix.n(),
+        }
+    }
+
+    fn slots(&self) -> usize {
+        match self {
+            LinkMap::Dense { n } => n * n * MsgKind::CHANNELS,
+            LinkMap::Sparse(ix) => ix.links() * MsgKind::CHANNELS,
+        }
+    }
+
+    fn link_id(&self, from: usize, to: usize) -> Option<usize> {
+        match self {
+            LinkMap::Dense { n } => Some(from * n + to),
+            LinkMap::Sparse(ix) => ix.link_id(from, to),
+        }
+    }
+}
+
 /// The shared fault/link layer: a clock, the fault spec, and the
 /// one-unacked-packet channel slots, indexed identically in both engines.
 pub struct FaultLayer<C: Clock, L: LinkSlots> {
-    n: usize,
+    map: LinkMap,
     pub clock: C,
     pub spec: FaultSpec,
     links: L,
@@ -248,21 +348,45 @@ pub type SimFaultLayer = FaultLayer<VirtualClock, LocalLinks>;
 pub type RunnerFaultLayer = FaultLayer<WallClock, SharedLinks>;
 
 impl<C: Clock, L: LinkSlots> FaultLayer<C, L> {
+    /// Dense-addressed layer (`n² × CHANNELS` slots) — the small-n
+    /// compatibility constructor the runner and unit tests use.
     pub fn new(n: usize, clock: C, spec: FaultSpec) -> FaultLayer<C, L> {
-        FaultLayer {
-            n,
-            clock,
-            spec,
-            links: L::with_slots(n * n * MsgKind::CHANNELS),
-        }
+        Self::with_map(LinkMap::Dense { n }, clock, spec)
+    }
+
+    /// Sparse-addressed layer: slots only for the links `index` holds.
+    pub fn with_links(index: LinkIndex, clock: C,
+                      spec: FaultSpec) -> FaultLayer<C, L> {
+        Self::with_map(LinkMap::Sparse(index), clock, spec)
+    }
+
+    fn with_map(map: LinkMap, clock: C, spec: FaultSpec) -> FaultLayer<C, L> {
+        let slots = map.slots();
+        FaultLayer { map, clock, spec, links: L::with_slots(slots) }
     }
 
     pub fn n(&self) -> usize {
-        self.n
+        self.map.n()
     }
 
-    fn idx(&self, from: usize, to: usize, chan: usize) -> usize {
-        (from * self.n + to) * MsgKind::CHANNELS + chan
+    /// Stable per-link id for `from → to` (`None` only under sparse
+    /// addressing, for a pair the topology never routes). Callers size
+    /// auxiliary per-link state (e.g. [`BwPacer`]) by `link_count` and
+    /// index it with this.
+    pub fn link_id(&self, from: usize, to: usize) -> Option<usize> {
+        self.map.link_id(from, to)
+    }
+
+    /// Number of distinct link ids `link_id` can return.
+    pub fn link_count(&self) -> usize {
+        match &self.map {
+            LinkMap::Dense { n } => n * n,
+            LinkMap::Sparse(ix) => ix.links(),
+        }
+    }
+
+    fn idx(&self, from: usize, to: usize, chan: usize) -> Option<usize> {
+        self.map.link_id(from, to).map(|l| l * MsgKind::CHANNELS + chan)
     }
 
     /// Decide one send. For loss-tolerant algorithms: backpressure if the
@@ -274,7 +398,13 @@ impl<C: Clock, L: LinkSlots> FaultLayer<C, L> {
         if !lossy {
             return SendVerdict::Deliver;
         }
-        let i = self.idx(msg.from, msg.to, msg.kind.chan());
+        let Some(i) = self.idx(msg.from, msg.to, msg.kind.chan()) else {
+            // Engines only send along topology links, so a sparse miss is
+            // a routing bug; deliver rather than wedge a release build.
+            debug_assert!(false, "send on unindexed link {} -> {}",
+                          msg.from, msg.to);
+            return SendVerdict::Deliver;
+        };
         if self.links.busy(i) {
             return SendVerdict::Backpressured;
         }
@@ -289,7 +419,11 @@ impl<C: Clock, L: LinkSlots> FaultLayer<C, L> {
     /// The receipt confirmation for channel `(from → to, chan)` arrived
     /// back at the sender: the channel is free again.
     pub fn ack(&self, from: usize, to: usize, chan: usize) {
-        self.links.release(self.idx(from, to, chan));
+        if let Some(i) = self.idx(from, to, chan) {
+            self.links.release(i);
+        } else {
+            debug_assert!(false, "ack on unindexed link {from} -> {to}");
+        }
     }
 }
 
@@ -436,6 +570,82 @@ mod tests {
         // but the v channel itself is now busy
         assert_eq!(layer.send_verdict(true, &v, &mut rng),
                    SendVerdict::Backpressured);
+    }
+
+    #[test]
+    fn link_index_matches_neighbor_lists() {
+        // node 0 ↔ 1 (both matrices), 1 → 2 in W only, duplicates across
+        // the four direction lists collapse to one link id.
+        let w_in = vec![vec![1], vec![0], vec![1]];
+        let w_out = vec![vec![1], vec![0, 2], vec![]];
+        let a_in = vec![vec![1], vec![0], vec![]];
+        let a_out = vec![vec![1], vec![0], vec![]];
+        let ix = LinkIndex::from_neighbor_lists(3, [&w_in, &w_out, &a_in, &a_out]);
+        assert_eq!(ix.n(), 3);
+        assert_eq!(ix.links(), 3); // 0→1, 1→0, 1→2
+        assert_eq!(ix.link_id(0, 1), Some(0));
+        assert_eq!(ix.link_id(1, 0), Some(1));
+        assert_eq!(ix.link_id(1, 2), Some(2));
+        assert_eq!(ix.link_id(2, 1), None, "W-in-only peers point the other way");
+        assert_eq!(ix.link_id(0, 2), None);
+        assert_eq!(ix.link_id(0, 0), None, "self-links are never indexed");
+    }
+
+    #[test]
+    fn link_index_from_weights_covers_every_routed_pair() {
+        let topo = crate::graph::Topology::binary_tree(7);
+        let ix = LinkIndex::from_weights(&topo.weights);
+        let wm = &topo.weights;
+        for i in 0..7 {
+            for &j in wm.w_out[i].iter().chain(&wm.w_in[i])
+                .chain(&wm.a_out[i]).chain(&wm.a_in[i])
+            {
+                assert!(ix.link_id(i, j).is_some(), "missing link {i} -> {j}");
+            }
+        }
+        // ids are dense and unique
+        let mut seen = vec![false; ix.links()];
+        for i in 0..7 {
+            for j in 0..7 {
+                if let Some(l) = ix.link_id(i, j) {
+                    assert!(!seen[l], "duplicate link id {l}");
+                    seen[l] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "link ids must be dense 0..links()");
+    }
+
+    #[test]
+    fn sparse_layer_mirrors_dense_verdicts_on_topology_links() {
+        let topo = crate::graph::Topology::ring(4);
+        let mut cfg = SimConfig::default();
+        cfg.loss_prob = 0.5;
+        let spec = FaultSpec::from_config(&cfg);
+        let dense: FaultLayer<VirtualClock, LocalLinks> =
+            FaultLayer::new(4, VirtualClock::new(), spec.clone());
+        let sparse: FaultLayer<VirtualClock, LocalLinks> =
+            FaultLayer::with_links(LinkIndex::from_weights(&topo.weights),
+                                   VirtualClock::new(), spec);
+        assert_eq!(sparse.n(), 4);
+        assert!(sparse.link_count() < dense.link_count());
+        let mut rd = Rng::new(11);
+        let mut rs = Rng::new(11);
+        // replay an identical lossy traffic pattern on ring links; the
+        // verdict sequence (and hence rng consumption) must be identical
+        let pattern = [(0, 1), (1, 2), (0, 1), (2, 3), (3, 0), (1, 2)];
+        for (k, &(f, t)) in pattern.iter().enumerate() {
+            let m = msg(f, t);
+            let vd = dense.send_verdict(true, &m, &mut rd);
+            let vs = sparse.send_verdict(true, &m, &mut rs);
+            assert_eq!(vd, vs, "verdict diverged at step {k}");
+            if vd == SendVerdict::Deliver && k % 2 == 0 {
+                dense.ack(f, t, m.kind.chan());
+                sparse.ack(f, t, m.kind.chan());
+            }
+        }
+        assert_eq!(rd.next_u64(), rs.next_u64(),
+                   "loss rng streams must stay in lockstep");
     }
 
     #[test]

@@ -70,7 +70,15 @@ impl FuzzCase {
     /// budget.
     pub fn sample(fuzz_seed: u64, case: u64) -> FuzzCase {
         let mut rng = Rng::stream(fuzz_seed, case);
-        let n = 2 + rng.below(9);
+        // every 8th case draws a large n (up to 256) to exercise the
+        // sparse topology + calendar-queue path; the gate keeps all other
+        // case indices bitwise identical to the pre-sparse corpus (both
+        // branches consume exactly one `below` draw)
+        let n = if case % 8 == 7 {
+            10 + rng.below(247)
+        } else {
+            2 + rng.below(9)
+        };
         let arch = ArchSpec::sample(&mut rng);
         // contractive for the h ∈ [0.5, 2] quadratics: |1 − γh| < 1
         let gamma = (0.01 + 0.04 * rng.f64()) as f32;
@@ -383,6 +391,18 @@ mod tests {
         assert_eq!(a, b);
         // neighboring case indices draw from independent streams
         assert_ne!(FuzzCase::sample(42, 3), FuzzCase::sample(42, 4));
+    }
+
+    #[test]
+    fn large_n_cases_appear_only_on_the_gated_indices() {
+        for i in 0..32 {
+            let c = FuzzCase::sample(5, i);
+            if i % 8 == 7 {
+                assert!((10..=256).contains(&c.n), "case {i}: n = {}", c.n);
+            } else {
+                assert!((2..=10).contains(&c.n), "case {i}: n = {}", c.n);
+            }
+        }
     }
 
     #[test]

@@ -510,7 +510,7 @@ mod tests {
         };
         let a = mk(7);
         let b = mk(7);
-        // bitwise: Mat is PartialEq over the raw weight storage
+        // bitwise: SparseWeights is PartialEq over the raw weight storage
         assert_eq!(a.weights.w, b.weights.w);
         assert_eq!(a.weights.a, b.weights.a);
         let c = mk(8);

@@ -1,5 +1,8 @@
-//! Dense n×n matrix for mixing weights (n is the node count — tens, not
-//! thousands — so dense row-major storage is the right call).
+//! Dense n×n matrix — the *small-n compatibility boundary* for mixing
+//! weights. Production topologies live in [`super::SparseWeights`]
+//! (DESIGN.md §13); `Mat` remains for hand-built matrices in tests, the
+//! dense reference construction path (`Topology::from_edges_dense`), and
+//! small-n analysis code that iterates full rows.
 
 /// Row-major dense square matrix of f32 weights.
 #[derive(Clone, Debug, PartialEq)]

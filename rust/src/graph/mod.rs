@@ -23,21 +23,28 @@
 pub mod arch;
 pub mod augmented;
 mod matrix;
+mod sparse;
 mod topology;
 
 pub use arch::{ArchSpec, TreeKind, TreeSpec};
 pub use augmented::AugmentedAnalysis;
 pub use matrix::Mat;
+pub use sparse::{Axis, SparseWeights, DENSE_COMPAT_MAX};
 pub use topology::{Topology, TopologyKind};
 
 /// The (W, A) pair with cached neighbor lists, ready for algorithm use.
-#[derive(Clone, Debug)]
+///
+/// Storage is sparse ([`SparseWeights`], O(edges) — DESIGN.md §13); the
+/// dense [`Mat`] survives only as a small-n compatibility boundary
+/// ([`WeightMatrices::new`] converts in, [`SparseWeights::to_dense`]
+/// converts out).
+#[derive(Clone, Debug, PartialEq)]
 pub struct WeightMatrices {
     pub n: usize,
-    /// Row-stochastic pull matrix.
-    pub w: Mat,
-    /// Column-stochastic push matrix.
-    pub a: Mat,
+    /// Row-stochastic pull matrix (row-primary sparse storage).
+    pub w: SparseWeights,
+    /// Column-stochastic push matrix (column-primary sparse storage).
+    pub a: SparseWeights,
     /// `w_in[i]` = in-neighbors j (≠ i) of i in G(W): `W[i][j] > 0`.
     pub w_in: Vec<Vec<usize>>,
     /// `w_out[i]` = out-neighbors j (≠ i) of i in G(W): `W[j][i] > 0`.
@@ -92,24 +99,46 @@ impl std::fmt::Display for AssumptionError {
 }
 
 impl WeightMatrices {
-    /// Build from raw matrices, caching neighbor lists.
+    /// Dense compatibility constructor: convert and cache. Small-n only
+    /// (hand-built matrices in tests, analysis code); builders go
+    /// through [`WeightMatrices::from_sparse`].
     pub fn new(w: Mat, a: Mat) -> Self {
         assert_eq!(w.n(), a.n());
+        Self::from_sparse(
+            SparseWeights::from_mat(&w, Axis::Row),
+            SparseWeights::from_mat(&a, Axis::Col),
+        )
+    }
+
+    /// Build from sparse matrices, caching neighbor lists. The lists
+    /// come out index-sorted exactly as the old dense n² scan produced
+    /// them (ascending secondary index per node).
+    pub fn from_sparse(w: SparseWeights, a: SparseWeights) -> Self {
+        assert_eq!(w.n(), a.n());
+        assert_eq!(w.axis(), Axis::Row, "W must be row-primary");
+        assert_eq!(a.axis(), Axis::Col, "A must be column-primary");
         let n = w.n();
         let mut w_in = vec![Vec::new(); n];
         let mut w_out = vec![Vec::new(); n];
         let mut a_in = vec![Vec::new(); n];
         let mut a_out = vec![Vec::new(); n];
         for i in 0..n {
-            for j in 0..n {
-                if i == j {
-                    continue;
-                }
-                if w.get(i, j) > 0.0 {
+            // row i of W sorted by j: w_in[i] ascending; and since the
+            // outer i ascends, every w_out[j] ascends too
+            for &(j, v) in w.line(i) {
+                let j = j as usize;
+                if j != i && v > 0.0 {
                     w_in[i].push(j);
                     w_out[j].push(i);
                 }
-                if a.get(i, j) > 0.0 {
+            }
+        }
+        for j in 0..n {
+            // column j of A sorted by i: a_out[j] ascending; outer j
+            // ascending keeps every a_in[i] ascending
+            for &(i, v) in a.line(j) {
+                let i = i as usize;
+                if i != j && v > 0.0 {
                     a_in[i].push(j);
                     a_out[j].push(i);
                 }
@@ -119,15 +148,17 @@ impl WeightMatrices {
     }
 
     /// Roots of spanning trees of G(W): nodes that reach every node along
-    /// edges `j → i` whenever `W[i][j] > 0`.
+    /// edges `j → i` whenever `W[i][j] > 0`. O(V+E) via the cached
+    /// neighbor lists (out-neighbors of u in G(W) are `w_out[u]`).
     pub fn roots_w(&self) -> Vec<usize> {
-        roots_of(self.n, |from, to| self.w.get(to, from) > 0.0)
+        roots_fast(self.n, &self.w_out, &self.w_in)
     }
 
     /// Roots of spanning trees of G(Aᵀ): edges `j → i` whenever
-    /// `Aᵀ[i][j] = A[j][i] > 0`.
+    /// `Aᵀ[i][j] = A[j][i] > 0` — so out-neighbors of u are `a_in[u]`
+    /// (the nodes u pushes to) and in-neighbors are `a_out[u]`.
     pub fn roots_at(&self) -> Vec<usize> {
-        roots_of(self.n, |from, to| self.a.get(from, to) > 0.0)
+        roots_fast(self.n, &self.a_in, &self.a_out)
     }
 
     /// `R = R_W ∩ R_Aᵀ` — the common roots whose activations drive the
@@ -140,23 +171,18 @@ impl WeightMatrices {
 
     /// Smallest non-zero mixing weight m̄ (Assumption 1i).
     pub fn min_weight(&self) -> f64 {
-        let mut m = f64::INFINITY;
-        for i in 0..self.n {
-            for j in 0..self.n {
-                for v in [self.w.get(i, j), self.a.get(i, j)] {
-                    if v > 0.0 {
-                        m = m.min(v as f64);
-                    }
-                }
-            }
-        }
-        m
+        self.w.min_positive().min(self.a.min_positive())
     }
 
-    /// Validate Assumptions 1 and 2, returning every violation.
+    /// Validate Assumptions 1 and 2, returning every violation. O(V+E):
+    /// the negative-entry scan merges the stored entries of W row i and
+    /// A row i in ascending-j order (absent cells are exact zeros and
+    /// can't be negative), so the violation *order* matches the old
+    /// dense j-loop exactly — W(i,j) before A(i,j) for each j.
     pub fn check_assumptions(&self) -> Vec<AssumptionError> {
         let mut errs = Vec::new();
         const TOL: f64 = 1e-5;
+        let a_rows = self.a.off_axis_lists();
         for i in 0..self.n {
             if self.w.get(i, i) <= 0.0 {
                 errs.push(AssumptionError::ZeroDiagonal { matrix: 'W', node: i });
@@ -176,16 +202,42 @@ impl WeightMatrices {
                     matrix: 'A', index: i, sum: cs,
                 });
             }
-            for j in 0..self.n {
-                if self.w.get(i, j) < 0.0 {
-                    errs.push(AssumptionError::NegativeEntry {
-                        matrix: 'W', row: i, col: j,
-                    });
-                }
-                if self.a.get(i, j) < 0.0 {
-                    errs.push(AssumptionError::NegativeEntry {
-                        matrix: 'A', row: i, col: j,
-                    });
+            let wr = self.w.line(i);
+            let ar = &a_rows[i];
+            let (mut p, mut q) = (0, 0);
+            while p < wr.len() || q < ar.len() {
+                let jw = wr.get(p).map(|e| e.0);
+                let ja = ar.get(q).map(|e| e.0);
+                let take_w = match (jw, ja) {
+                    (Some(x), Some(y)) => x <= y,
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                if take_w {
+                    let (j, v) = wr[p];
+                    if v < 0.0 {
+                        errs.push(AssumptionError::NegativeEntry {
+                            matrix: 'W', row: i, col: j as usize,
+                        });
+                    }
+                    p += 1;
+                    if jw == ja {
+                        let (j, v) = ar[q];
+                        if v < 0.0 {
+                            errs.push(AssumptionError::NegativeEntry {
+                                matrix: 'A', row: i, col: j as usize,
+                            });
+                        }
+                        q += 1;
+                    }
+                } else {
+                    let (j, v) = ar[q];
+                    if v < 0.0 {
+                        errs.push(AssumptionError::NegativeEntry {
+                            matrix: 'A', row: i, col: j as usize,
+                        });
+                    }
+                    q += 1;
                 }
             }
         }
@@ -209,7 +261,81 @@ impl WeightMatrices {
     }
 }
 
+/// Root set of a digraph given by adjacency lists, in O(V+E).
+///
+/// Kosaraju's candidate trick: run one full DFS sweep (iterative — a
+/// 50k-node chain would blow the call stack) and take the last-finished
+/// vertex `c`, which lies in a *source* SCC of the condensation. If any
+/// root exists, its SCC is a source that reaches everything, so it is
+/// the unique source SCC and contains `c`. Therefore: roots exist iff
+/// `c` reaches all n vertices, and then v is a root iff v reaches `c`
+/// (v → c → everything). Output ascending, identical to the dense
+/// all-candidates BFS (`roots_of`, kept below as the test oracle).
+fn roots_fast(n: usize, out_adj: &[Vec<usize>], in_adj: &[Vec<usize>]) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    // 1. full-sweep iterative DFS; `candidate` ends as the last finisher
+    let mut state = vec![0u8; n]; // 0 = unvisited, 1 = in progress, 2 = done
+    let mut candidate = 0usize;
+    let mut stack: Vec<(usize, usize)> = Vec::new(); // (vertex, next-child cursor)
+    for s in 0..n {
+        if state[s] != 0 {
+            continue;
+        }
+        state[s] = 1;
+        stack.push((s, 0));
+        while let Some(top) = stack.last_mut() {
+            let u = top.0;
+            if top.1 < out_adj[u].len() {
+                let v = out_adj[u][top.1];
+                top.1 += 1;
+                if state[v] == 0 {
+                    state[v] = 1;
+                    stack.push((v, 0));
+                }
+            } else {
+                state[u] = 2;
+                candidate = u;
+                stack.pop();
+            }
+        }
+    }
+    // 2. candidate must reach every vertex, else there are no roots
+    let mut fwd = vec![false; n];
+    let mut queue = vec![candidate];
+    fwd[candidate] = true;
+    let mut count = 1;
+    while let Some(u) = queue.pop() {
+        for &v in &out_adj[u] {
+            if !fwd[v] {
+                fwd[v] = true;
+                count += 1;
+                queue.push(v);
+            }
+        }
+    }
+    if count != n {
+        return Vec::new();
+    }
+    // 3. roots = everything that reaches the candidate
+    let mut back = vec![false; n];
+    let mut queue = vec![candidate];
+    back[candidate] = true;
+    while let Some(u) = queue.pop() {
+        for &v in &in_adj[u] {
+            if !back[v] {
+                back[v] = true;
+                queue.push(v);
+            }
+        }
+    }
+    (0..n).filter(|&v| back[v]).collect()
+}
+
 /// Nodes from which every node is reachable under `edge(from, to)`.
+/// O(n · (V+E)) reference oracle for [`roots_fast`]; test-only.
+#[cfg(test)]
 fn roots_of(n: usize, edge: impl Fn(usize, usize) -> bool) -> Vec<usize> {
     (0..n)
         .filter(|&r| {
@@ -330,6 +456,42 @@ mod tests {
         assert_eq!(wm.roots_at(), vec![1]);
         let errs = wm.check_assumptions();
         assert!(errs.contains(&AssumptionError::NoCommonRoot), "{errs:?}");
+    }
+
+    #[test]
+    fn fast_roots_match_bfs_oracle() {
+        let topos = [
+            Topology::binary_tree(7),
+            Topology::line(5),
+            Topology::ring(6),
+            Topology::exponential(8),
+            Topology::star(9),
+            Topology::mesh(9),
+            Topology::gossip(10, 3, 7),
+        ];
+        for t in &topos {
+            let wm = &t.weights;
+            assert_eq!(
+                wm.roots_w(),
+                roots_of(wm.n, |from, to| wm.w.get(to, from) > 0.0),
+                "{:?} W",
+                t.kind
+            );
+            assert_eq!(
+                wm.roots_at(),
+                roots_of(wm.n, |from, to| wm.a.get(from, to) > 0.0),
+                "{:?} At",
+                t.kind
+            );
+        }
+        // disconnected: no edges at all ⇒ no roots (n > 1)
+        let wm = WeightMatrices::new(Mat::identity(4), Mat::identity(4));
+        assert!(wm.roots_w().is_empty());
+        assert!(wm.roots_at().is_empty());
+        // degenerate single node: trivially its own root
+        let wm1 = WeightMatrices::new(Mat::identity(1), Mat::identity(1));
+        assert_eq!(wm1.roots_w(), vec![0]);
+        assert_eq!(wm1.common_roots(), vec![0]);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Sparse mixing-weight storage: per-node edge lists instead of n×n.
+//!
+//! Spanning trees — the structures Assumption 2 actually requires — have
+//! O(n) edges, so the dense [`Mat`] wastes quadratic memory the moment n
+//! leaves the tens. [`SparseWeights`] stores one sorted `(index, weight)`
+//! list per node along a primary [`Axis`]: row-primary for the
+//! row-stochastic pull matrix W, column-primary for the column-stochastic
+//! push matrix A. Lookups off the primary axis binary-search, so the
+//! whole dense read surface (`get`/`row_sum`/`col_sum`) survives
+//! unchanged for the `algo/` state machines and the analysis code.
+//!
+//! **Bitwise parity with the dense path** (DESIGN.md §13) rests on two
+//! facts the construction exploits:
+//!
+//! 1. `Topology::from_edges` densifies unit entries (identity diagonal +
+//!    1.0 per edge) and normalizes; the dense row/column sum of k ones
+//!    plus zeros is the exact f64 integer k, so
+//!    `(1.0 / k as f64) as f32` here reproduces the dense scale factor
+//!    bit-for-bit, and `1.0f32 * inv == inv` exactly.
+//! 2. Dense sums iterate indices ascending and adding an exact `0.0`
+//!    never changes an f64 accumulator, so summing only the stored
+//!    entries in ascending index order yields bitwise-identical sums.
+
+use super::matrix::Mat;
+
+/// Which index the per-node lists are keyed by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// `lists[i]` holds row i: entries `(j, M[i][j])` sorted by j.
+    Row,
+    /// `lists[j]` holds column j: entries `(i, M[i][j])` sorted by i.
+    Col,
+}
+
+/// Largest n for which the dense compatibility view may be materialized.
+pub const DENSE_COMPAT_MAX: usize = 4096;
+
+/// A square mixing matrix stored as per-node sorted edge lists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseWeights {
+    n: usize,
+    axis: Axis,
+    /// `lists[k]` sorted ascending by the secondary index; weights are
+    /// the exact f32 values the dense construction would produce.
+    lists: Vec<Vec<(u32, f32)>>,
+}
+
+impl SparseWeights {
+    /// Unit adjacency + implicit diagonal, normalized along the primary
+    /// axis — bitwise-identical to densifying the same edges into
+    /// `Mat::identity` and calling `normalize_rows`/`normalize_cols`
+    /// (see the module docs for why the arithmetic matches exactly).
+    ///
+    /// `adj[k]` lists the off-diagonal secondary indices of node k's
+    /// unit entries; duplicates are deduplicated, matching the dense
+    /// path where setting the same cell twice is idempotent.
+    pub fn from_unit_adjacency(n: usize, axis: Axis, adj: Vec<Vec<u32>>) -> SparseWeights {
+        assert_eq!(adj.len(), n);
+        let mut lists = Vec::with_capacity(n);
+        for (k, mut others) in adj.into_iter().enumerate() {
+            others.push(k as u32);
+            others.sort_unstable();
+            others.dedup();
+            debug_assert!(others.last().map_or(true, |&m| (m as usize) < n));
+            // exact: the dense row/col sum of `others.len()` unit
+            // entries is this same f64 integer
+            let inv = (1.0 / others.len() as f64) as f32;
+            lists.push(others.into_iter().map(|j| (j, inv)).collect());
+        }
+        SparseWeights { n, axis, lists }
+    }
+
+    /// Explicitly weighted lists (diagonal included), for constructions
+    /// like Metropolis weights that don't normalize unit entries.
+    /// Entries are sorted here; indices must be in-range and unique.
+    pub fn from_weighted_lists(
+        n: usize,
+        axis: Axis,
+        mut lists: Vec<Vec<(u32, f32)>>,
+    ) -> SparseWeights {
+        assert_eq!(lists.len(), n);
+        for l in &mut lists {
+            l.sort_unstable_by_key(|e| e.0);
+            for pair in l.windows(2) {
+                assert!(pair[0].0 < pair[1].0, "duplicate index in weighted list");
+            }
+            assert!(l.last().map_or(true, |&(m, _)| (m as usize) < n));
+        }
+        SparseWeights { n, axis, lists }
+    }
+
+    /// Compatibility conversion from a dense matrix: stores every
+    /// non-zero entry (including negatives, so `check_assumptions` sees
+    /// exactly what the dense matrix held).
+    pub fn from_mat(m: &Mat, axis: Axis) -> SparseWeights {
+        let n = m.n();
+        let mut lists = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = m.get(i, j);
+                if v != 0.0 {
+                    match axis {
+                        Axis::Row => lists[i].push((j as u32, v)),
+                        Axis::Col => lists[j].push((i as u32, v)),
+                    }
+                }
+            }
+        }
+        SparseWeights { n, axis, lists }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn axis(&self) -> Axis {
+        self.axis
+    }
+
+    /// Stored entry count (nnz).
+    pub fn entry_count(&self) -> usize {
+        self.lists.iter().map(|l| l.len()).sum()
+    }
+
+    /// The sorted `(secondary index, weight)` list of primary line k —
+    /// row k for a [`Axis::Row`] matrix, column k for [`Axis::Col`].
+    #[inline]
+    pub fn line(&self, k: usize) -> &[(u32, f32)] {
+        &self.lists[k]
+    }
+
+    /// `M[i][j]`, 0.0 when absent. O(log deg) off the stored cell.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let (k, s) = match self.axis {
+            Axis::Row => (i, j as u32),
+            Axis::Col => (j, i as u32),
+        };
+        match self.lists[k].binary_search_by_key(&s, |e| e.0) {
+            Ok(p) => self.lists[k][p].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// f64 sum of row i in ascending-j order — bitwise-equal to the
+    /// dense `Mat::row_sum` (skipped zeros contribute exactly nothing).
+    pub fn row_sum(&self, i: usize) -> f64 {
+        match self.axis {
+            Axis::Row => self.lists[i].iter().map(|&(_, v)| v as f64).sum(),
+            Axis::Col => (0..self.n).map(|j| self.get(i, j) as f64).sum(),
+        }
+    }
+
+    /// f64 sum of column j in ascending-i order (see [`Self::row_sum`]).
+    pub fn col_sum(&self, j: usize) -> f64 {
+        match self.axis {
+            Axis::Col => self.lists[j].iter().map(|&(_, v)| v as f64).sum(),
+            Axis::Row => (0..self.n).map(|i| self.get(i, j) as f64).sum(),
+        }
+    }
+
+    /// Smallest strictly positive stored weight, `f64::INFINITY` if none.
+    pub fn min_positive(&self) -> f64 {
+        let mut m = f64::INFINITY;
+        for l in &self.lists {
+            for &(_, v) in l {
+                if v > 0.0 {
+                    m = m.min(v as f64);
+                }
+            }
+        }
+        m
+    }
+
+    /// Re-bucket the entries along the *other* axis: for a [`Axis::Col`]
+    /// matrix, per-row `(j, v)` lists with j ascending (and vice versa).
+    /// O(E); built once by `check_assumptions` to merge W rows with A
+    /// rows without n² probing.
+    pub fn off_axis_lists(&self) -> Vec<Vec<(u32, f32)>> {
+        let mut out = vec![Vec::new(); self.n];
+        for (k, l) in self.lists.iter().enumerate() {
+            for &(s, v) in l {
+                // outer k ascends, so each out-list stays sorted by k
+                out[s as usize].push((k as u32, v));
+            }
+        }
+        out
+    }
+
+    /// Dense compatibility view for small-n analysis and diagnostics.
+    /// Refuses to materialize n×n beyond [`DENSE_COMPAT_MAX`] — large
+    /// topologies must stay on the sparse read surface.
+    pub fn to_dense(&self) -> Mat {
+        assert!(
+            self.n <= DENSE_COMPAT_MAX,
+            "to_dense is a small-n compatibility accessor (n = {} > {})",
+            self.n,
+            DENSE_COMPAT_MAX
+        );
+        let mut m = Mat::zeros(self.n);
+        for (k, l) in self.lists.iter().enumerate() {
+            for &(s, v) in l {
+                match self.axis {
+                    Axis::Row => m.set(k, s as usize, v),
+                    Axis::Col => m.set(s as usize, k, v),
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dense twin of `from_unit_adjacency` — the exact arithmetic the
+    /// old `Topology::from_edges` ran.
+    fn dense_unit(n: usize, axis: Axis, adj: &[Vec<u32>]) -> Mat {
+        let mut m = Mat::identity(n);
+        for (k, others) in adj.iter().enumerate() {
+            for &s in others {
+                match axis {
+                    Axis::Row => m.set(k, s as usize, 1.0),
+                    Axis::Col => m.set(s as usize, k, 1.0),
+                }
+            }
+        }
+        match axis {
+            Axis::Row => m.normalize_rows(),
+            Axis::Col => m.normalize_cols(),
+        }
+        m
+    }
+
+    fn bits(x: f32) -> u32 {
+        x.to_bits()
+    }
+
+    #[test]
+    fn unit_construction_matches_dense_normalization_bitwise() {
+        let adj = vec![vec![1, 2], vec![0], vec![], vec![0, 1, 2]];
+        for axis in [Axis::Row, Axis::Col] {
+            let s = SparseWeights::from_unit_adjacency(4, axis, adj.clone());
+            let d = dense_unit(4, axis, &adj);
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(
+                        bits(s.get(i, j)),
+                        bits(d.get(i, j)),
+                        "axis {axis:?} cell ({i},{j})"
+                    );
+                }
+                assert_eq!(s.row_sum(i).to_bits(), d.row_sum(i).to_bits());
+                assert_eq!(s.col_sum(i).to_bits(), d.col_sum(i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_edges_are_idempotent_like_dense_set() {
+        let s = SparseWeights::from_unit_adjacency(3, Axis::Row, vec![vec![1, 1, 2], vec![], vec![]]);
+        let d = dense_unit(3, Axis::Row, &[vec![1, 1, 2], vec![], vec![]]);
+        assert_eq!(bits(s.get(0, 1)), bits(d.get(0, 1)));
+        assert_eq!(s.line(0).len(), 3); // {0, 1, 2} once each
+    }
+
+    #[test]
+    fn from_mat_round_trips_including_negatives() {
+        let mut m = Mat::zeros(3);
+        m.set(0, 0, 1.0);
+        m.set(0, 2, -0.25);
+        m.set(2, 1, 0.5);
+        for axis in [Axis::Row, Axis::Col] {
+            let s = SparseWeights::from_mat(&m, axis);
+            for i in 0..3 {
+                for j in 0..3 {
+                    assert_eq!(bits(s.get(i, j)), bits(m.get(i, j)));
+                }
+                assert_eq!(s.row_sum(i).to_bits(), m.row_sum(i).to_bits());
+                assert_eq!(s.col_sum(i).to_bits(), m.col_sum(i).to_bits());
+            }
+            assert_eq!(s.to_dense(), m);
+        }
+        assert_eq!(SparseWeights::from_mat(&m, Axis::Row).min_positive(), 0.5);
+    }
+
+    #[test]
+    fn off_axis_lists_rebucket_sorted() {
+        let s = SparseWeights::from_unit_adjacency(
+            3,
+            Axis::Col,
+            vec![vec![1, 2], vec![2], vec![]],
+        );
+        let rows = s.off_axis_lists();
+        for (i, r) in rows.iter().enumerate() {
+            for pair in r.windows(2) {
+                assert!(pair[0].0 < pair[1].0);
+            }
+            for &(j, v) in r {
+                assert_eq!(bits(v), bits(s.get(i, j as usize)));
+            }
+        }
+        assert_eq!(rows.iter().map(Vec::len).sum::<usize>(), s.entry_count());
+    }
+
+    #[test]
+    fn single_node_is_exactly_one() {
+        let s = SparseWeights::from_unit_adjacency(1, Axis::Row, vec![vec![]]);
+        assert_eq!(bits(s.get(0, 0)), bits(1.0f32));
+        assert_eq!(s.row_sum(0), 1.0);
+    }
+}

@@ -7,7 +7,7 @@
 //! (node i pushes to j). Weights are uniform over {self} ∪ neighbors — the
 //! Appendix-G construction: W rows and A columns are `1/(1+deg)`.
 
-use super::{Mat, WeightMatrices};
+use super::{Axis, Mat, SparseWeights, WeightMatrices};
 use crate::prng::Rng;
 
 /// Which builder produced a topology (benches/reports key on this).
@@ -112,12 +112,46 @@ impl Topology {
         ))
     }
 
-    /// Build from explicit directed edge lists.
+    /// Build from explicit directed edge lists — the single construction
+    /// funnel every builder (and [`ArchSpec`](super::arch::ArchSpec))
+    /// routes through. O(edges): no n×n buffer is ever allocated.
     ///
     /// `w_edges`: `(j, i)` meaning i pulls from j in G(W).
     /// `a_edges`: `(i, j)` meaning i pushes to j in G(A).
-    /// Weights are uniform (Appendix-G style).
+    /// Weights are uniform (Appendix-G style), bitwise-identical to the
+    /// dense densify-and-normalize reference [`Topology::from_edges_dense`]
+    /// (see `SparseWeights` docs for the exactness argument).
     pub fn from_edges(
+        n: usize,
+        w_edges: &[(usize, usize)],
+        a_edges: &[(usize, usize)],
+    ) -> Topology {
+        let mut w_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(j, i) in w_edges {
+            assert!(i < n && j < n && i != j, "bad W edge ({j},{i})");
+            w_adj[i].push(j as u32);
+        }
+        let mut a_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(i, j) in a_edges {
+            assert!(i < n && j < n && i != j, "bad A edge ({i},{j})");
+            a_adj[j].push(i as u32);
+        }
+        Topology {
+            kind: TopologyKind::Custom,
+            weights: WeightMatrices::from_sparse(
+                SparseWeights::from_unit_adjacency(n, Axis::Row, w_adj),
+                SparseWeights::from_unit_adjacency(n, Axis::Col, a_adj),
+            ),
+            label: None,
+        }
+    }
+
+    /// Dense reference twin of [`Topology::from_edges`]: densify the same
+    /// edges into `Mat::identity` and normalize with dense arithmetic.
+    /// Exists so the sparse-vs-dense parity suite can diff the two
+    /// construction paths bit-for-bit; allocates n×n, so it is *not* a
+    /// production path.
+    pub fn from_edges_dense(
         n: usize,
         w_edges: &[(usize, usize)],
         a_edges: &[(usize, usize)],
@@ -258,18 +292,23 @@ impl Topology {
     /// Returned as a Topology whose W **is** doubly stochastic and A = W.
     pub fn undirected_ring_metropolis(n: usize) -> Topology {
         assert!(n >= 3);
-        let mut w = Mat::zeros(n);
         // Metropolis–Hastings: w_ij = 1/(1+max(d_i,d_j)) = 1/3 on a ring.
-        for i in 0..n {
-            let prev = (i + n - 1) % n;
-            let next = (i + 1) % n;
-            w.set(i, prev, 1.0 / 3.0);
-            w.set(i, next, 1.0 / 3.0);
-            w.set(i, i, 1.0 / 3.0);
-        }
+        let third = 1.0f32 / 3.0;
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|i| {
+                let prev = ((i + n - 1) % n) as u32;
+                let next = ((i + 1) % n) as u32;
+                vec![(prev, third), (i as u32, third), (next, third)]
+            })
+            .collect();
+        // the matrix is symmetric, so the column-primary lists of A = W
+        // are the same index/weight lists
         Topology {
             kind: TopologyKind::Ring,
-            weights: WeightMatrices::new(w.clone(), w),
+            weights: WeightMatrices::from_sparse(
+                SparseWeights::from_weighted_lists(n, Axis::Row, rows.clone()),
+                SparseWeights::from_weighted_lists(n, Axis::Col, rows),
+            ),
             label: None,
         }
     }
@@ -355,6 +394,21 @@ mod tests {
             Topology::from_edges(3, &[(1, 1)], &[])
         });
         assert!(r.is_err());
+        let r = std::panic::catch_unwind(|| {
+            Topology::from_edges_dense(3, &[(1, 1)], &[])
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sparse_and_dense_construction_paths_agree_bitwise() {
+        // full property coverage lives in tests/sparse_parity.rs; this
+        // pins the funnel itself on a lopsided edge set with duplicates
+        let w_edges = [(0, 1), (0, 2), (1, 2), (0, 2), (3, 0)];
+        let a_edges = [(1, 0), (2, 0), (2, 1), (0, 3)];
+        let s = Topology::from_edges(4, &w_edges, &a_edges);
+        let d = Topology::from_edges_dense(4, &w_edges, &a_edges);
+        assert_eq!(s.weights, d.weights);
     }
 
     #[test]

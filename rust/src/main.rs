@@ -94,7 +94,7 @@ fn print_help() {
          train            run one training experiment (virtual-time simulator or\n                          wall-clock threaded runner; see --engine)\n  \
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
          fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11)\n  \
-         bench-baseline   run the hot-path suite + 8→64-node scaling sweep and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode). Fails if\n                          the emitted JSON is schema-invalid (EXPERIMENTS.md).\n  \
+         bench-baseline   run the hot-path suite + scaling sweep (8→64-node\n                          binary tree, then the 1k–50k sparse-era points) and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode);\n                          RFAST_BENCH_SCALE_MAX caps the large points by node\n                          count (0 drops them). Fails if the emitted JSON is\n                          schema-invalid (EXPERIMENTS.md).\n  \
          lint             determinism & hot-path static analyzer (DESIGN.md \u{a7}12):\n                          scans rust/src, rust/benches, rust/tests, examples;\n                          --baseline LINT_BASELINE.json gates on the ratchet\n                          (counts may only shrink), --fix-baseline rewrites it,\n                          --out FILE writes the findings JSON, --root/--paths\n                          override the scan set. Waive a finding in place with\n                          `// lint:allow(RULE): reason` (reason mandatory)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
@@ -441,11 +441,31 @@ fn cmd_bench_baseline(args: &Args) -> Result<(), String> {
         return Err(format!("RFAST_BENCH_EPOCHS must be > 0, got {epochs}"));
     }
     let quick = std::env::var("RFAST_BENCH_QUICK").is_ok() || epochs <= 1.0;
+    // RFAST_BENCH_SCALE_MAX caps the sparse-era large points (1k–50k
+    // nodes) by node count: 0 drops them, unset runs them all.
+    let scale_max: usize = match std::env::var("RFAST_BENCH_SCALE_MAX") {
+        Ok(v) => v
+            .parse()
+            .map_err(|_| format!("RFAST_BENCH_SCALE_MAX: bad value {v:?}"))?,
+        Err(_) => usize::MAX,
+    };
+    let mut specs: Vec<bench::ScalingSpec> = bench::SCALING_NODES
+        .iter()
+        .map(|&n| bench::ScalingSpec {
+            nodes: n,
+            topology: "binary_tree",
+            workload: "logreg",
+        })
+        .collect();
+    specs.extend(bench::SCALING_LARGE
+        .iter()
+        .filter(|s| s.nodes <= scale_max)
+        .copied());
     println!(
         "bench-baseline: hot-path suite (quick={quick}, allocs \
          counted={}) + scaling sweep ({epochs} epochs, nodes {:?})",
         bench::counting_allocator_active(),
-        bench::SCALING_NODES,
+        specs.iter().map(|s| s.nodes).collect::<Vec<_>>(),
     );
 
     let hot = bench::hotpath_suite(quick);
@@ -457,15 +477,17 @@ fn cmd_bench_baseline(args: &Args) -> Result<(), String> {
     std::fs::write(&hot_path, bench::hotpath_json(&hot, quick).to_string())
         .map_err(|e| format!("write {}: {e}", hot_path.display()))?;
 
-    let points = bench::scaling_sweep(bench::SCALING_NODES, epochs);
+    let points = bench::scaling_sweep_specs(&specs, epochs);
     let mut t = Table::new(
-        "scaling sweep (R-FAST, logreg, binary tree)",
-        &["nodes", "virtual s", "wall s", "grad wakes", "MB sent",
-          "MB/epoch"],
+        "scaling sweep (R-FAST)",
+        &["nodes", "topology", "workload", "virtual s", "wall s",
+          "grad wakes", "MB sent", "MB/epoch"],
     );
     for p in &points {
         t.row(vec![
             p.nodes.to_string(),
+            p.topology.clone(),
+            p.workload.clone(),
             format!("{:.2}", p.virtual_time),
             format!("{:.2}", p.wall_seconds),
             format!("{:.0}", p.grad_wakes),

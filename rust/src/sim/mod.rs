@@ -41,14 +41,15 @@
 use crate::algo::{mean_param, AlgoKind, Msg, NodeState};
 use crate::config::SimConfig;
 use crate::exp::Stop;
-use crate::faults::{BwPacer, FaultSpec, SendVerdict, SimFaultLayer,
-                    VirtualClock};
+use crate::faults::{BwPacer, FaultSpec, LinkIndex, SendVerdict,
+                    SimFaultLayer, VirtualClock};
 use crate::graph::Topology;
 use crate::metrics::Report;
 use crate::oracle::OracleSet;
 use crate::prng::Rng;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+
+mod sched;
+use sched::{CalendarQueue, Key};
 
 /// When to stop a run (legacy simulator-only spelling).
 ///
@@ -120,29 +121,6 @@ enum Event {
     Resume(usize),
 }
 
-/// Min-heap key: (time, seq) — deterministic tie-break. Times are
-/// compared with `f64::total_cmp` so the ordering is total even for the
-/// values `push_event` debug-rejects (a NaN event time must fail loudly
-/// in tests, not silently scramble the heap).
-struct Key(f64, u64);
-impl PartialEq for Key {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-impl Eq for Key {}
-impl PartialOrd for Key {
-    // lint:allow(float-ord): delegates to the total order below (bit-keyed, NaN-free)
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Key {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
-    }
-}
-
 pub struct Simulator {
     cfg: SimConfig,
     algo: AlgoKind,
@@ -151,8 +129,15 @@ pub struct Simulator {
     n: usize,
     time: f64,
     seq: u64,
-    heap: BinaryHeap<Reverse<(Key, usize)>>, // (key, event idx)
+    /// calendar-queue scheduler over (Key, event idx) — drains in the
+    /// exact (time, seq) total order the old global heap produced
+    /// ([`sched`] module docs + DESIGN.md §13)
+    queue: CalendarQueue,
     events: Vec<Option<Event>>,
+    /// recycled `events` slots (each slot lives exactly one push→pop
+    /// cycle; without reuse the vec grows with total events, not with
+    /// in-flight events)
+    free_slots: Vec<usize>,
     busy: Vec<bool>,
     /// shared fault/link layer (virtual clock + one-unacked-packet
     /// channel slots + scalar/scenario fault queries); `faults.clock`
@@ -205,8 +190,13 @@ impl Simulator {
         let nodes = algo.build(topo, x0, cfg.gamma, cfg.seed);
         let pace_rng =
             (0..n).map(|i| Rng::stream(cfg.seed, 0xacce1 + i as u64)).collect();
-        let faults =
-            SimFaultLayer::new(n, VirtualClock::new(), FaultSpec::from_config(&cfg));
+        // sparse link universe: every direction a message can travel in
+        // this topology (v-broadcasts, ρ-pushes, protocol replies) —
+        // O(edges) channel slots and pacer lanes instead of n²
+        let links = LinkIndex::from_weights(&topo.weights);
+        let link_count = links.links();
+        let faults = SimFaultLayer::with_links(links, VirtualClock::new(),
+                                               FaultSpec::from_config(&cfg));
         Simulator {
             link_rng: Rng::stream(cfg.seed, 0x117c),
             cfg,
@@ -216,13 +206,14 @@ impl Simulator {
             n,
             time: 0.0,
             seq: 0,
-            heap: BinaryHeap::new(),
+            queue: CalendarQueue::new(),
             events: Vec::new(),
+            free_slots: Vec::new(),
             busy: vec![false; n],
             faults,
             pace_rng,
             resume_scheduled: vec![false; n],
-            bw: BwPacer::new(n * n),
+            bw: BwPacer::new(link_count),
             stats: SimStats::default(),
             steps_per_node: vec![0; n],
             mean_buf: Vec::new(),
@@ -235,10 +226,18 @@ impl Simulator {
     fn push_event(&mut self, at: f64, ev: Event) {
         debug_assert!(at.is_finite(),
                       "non-finite event time {at} for {ev:?}");
-        let idx = self.events.len();
-        self.events.push(Some(ev));
+        let idx = match self.free_slots.pop() {
+            Some(i) => {
+                self.events[i] = Some(ev);
+                i
+            }
+            None => {
+                self.events.push(Some(ev));
+                self.events.len() - 1
+            }
+        };
         self.seq += 1;
-        self.heap.push(Reverse((Key(at, self.seq), idx)));
+        self.queue.push(Key(at, self.seq), idx);
     }
 
     fn compute_cost(&mut self, node: usize) -> f64 {
@@ -327,7 +326,16 @@ impl Simulator {
                 self.faults.spec.bandwidth_delay(msg.from, msg.to, bytes);
             let sent_at = if bw_delay > 0.0 {
                 self.stats.msgs_paced += 1;
-                self.bw.sent_at(msg.from * self.n + msg.to, self.time, bw_delay)
+                match self.faults.link_id(msg.from, msg.to) {
+                    Some(l) => self.bw.sent_at(l, self.time, bw_delay),
+                    None => {
+                        // a routed message always travels an indexed
+                        // link; fall back to plain serialization delay
+                        debug_assert!(false, "unindexed link {} -> {}",
+                                      msg.from, msg.to);
+                        self.time + bw_delay
+                    }
+                }
             } else {
                 self.time
             };
@@ -413,15 +421,16 @@ impl Simulator {
         let mut replies: Vec<Msg> = Vec::with_capacity(4);
         let mut done = false;
         while !done {
-            let Some(Reverse((Key(at, _), idx))) = self.heap.pop() else {
+            let Some((Key(at, _), idx)) = self.queue.pop() else {
                 // drained queue: sync deadlock would land here
                 report.set_scalar("drained_early", 1.0);
                 break;
             };
             self.time = at;
             self.faults.clock.advance_to(at);
-            // lint:allow(panic-path): heap index points at a live slot by construction; firing twice is a real bug
+            // lint:allow(panic-path): queue index points at a live slot by construction; firing twice is a real bug
             let ev = self.events[idx].take().expect("event consumed twice");
+            self.free_slots.push(idx);
             match ev {
                 Event::NodeFinish(i) => {
                     self.busy[i] = false;

@@ -1,0 +1,431 @@
+//! Calendar-queue event scheduler (DESIGN.md §13).
+//!
+//! Replaces the simulator's single `BinaryHeap`: O(1)-amortized
+//! push/pop against the near-sorted insert pattern a discrete-event
+//! loop produces, instead of O(log m) on a heap whose size scales with
+//! node count. Events hash into `nbuckets` day-wide buckets by
+//! ⌊t/width⌋; each bucket is a tiny binary heap ordered by
+//! `(day, Key)`.
+//!
+//! **Ordering is bitwise-compatible with the old global heap.** The
+//! argument (§13 has the long form):
+//!
+//! 1. `day_of(t)` is monotone non-decreasing under `f64::total_cmp`
+//!    for every non-NaN time (negatives and −0.0 saturate to day 0,
+//!    +∞ to `u64::MAX`), so smaller times never land on later days.
+//! 2. Pushes clamp the day to the current day, and the current day
+//!    never exceeds any stored entry's day; so for coexisting entries,
+//!    `Key(e1) < Key(e2)` implies `day(e1) ≤ day(e2)` even when one of
+//!    them was clamped.
+//! 3. A pop takes the global `(day, Key)` minimum — the fast path pops
+//!    the current-day bucket (all current-day entries live there); the
+//!    jump path scans every bucket's heap minimum. By (2) that entry
+//!    is also the global `Key` minimum.
+//! 4. `width`/`nbuckets` adaptation happens only at deterministic
+//!    rebuild points driven by push/pop counts and popped times, so it
+//!    affects *cost*, never order — and every seeded run replays the
+//!    exact same rebuild sequence.
+//!
+//! Keys carry a unique sequence number, so the total order is strict
+//! and bucket-heap tie-breaking can never be observed. NaN times are
+//! rejected upstream (`Simulator::push_event` debug-asserts finite).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-heap key: (time, seq) — deterministic tie-break. Times are
+/// compared with `f64::total_cmp` so the ordering is total even for the
+/// values `push_event` debug-rejects (a NaN event time must fail loudly
+/// in tests, not silently scramble the queue).
+#[derive(Clone, Copy, Debug)]
+pub struct Key(pub f64, pub u64);
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Key {}
+impl PartialOrd for Key {
+    // lint:allow(float-ord): delegates to the total order below (bit-keyed, NaN-free)
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// A scheduled event: bucket-day, key, and the event-slot index.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    day: u64,
+    key: Key,
+    idx: usize,
+}
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    // lint:allow(float-ord): delegates to the (day, Key) total order below
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // idx is deliberately NOT part of the order: keys are unique
+        // (seq), so (day, key) is already a strict total order
+        self.day.cmp(&other.day).then_with(|| self.key.cmp(&other.key))
+    }
+}
+
+const MIN_BUCKETS: usize = 16;
+/// Empty days to step through before giving up and jump-scanning all
+/// bucket minima (sparse schedules would otherwise spin day by day).
+const PROBE_DAYS: u32 = 8;
+/// Initial bucket width in virtual seconds — resized adaptively, and by
+/// the ordering argument above the value only matters for performance.
+const INITIAL_WIDTH: f64 = 0.01;
+
+/// Bucket day of time `t`: ⌊t/width⌋ with saturating conversion
+/// (negatives/−0.0 → 0, +∞ → `u64::MAX`), monotone under `total_cmp`
+/// for all non-NaN t.
+#[inline]
+fn day_of(t: f64, width: f64) -> u64 {
+    (t / width).floor() as u64
+}
+
+pub struct CalendarQueue {
+    buckets: Vec<BinaryHeap<Reverse<Entry>>>,
+    /// `buckets.len() - 1`; bucket count is always a power of two.
+    mask: u64,
+    cur_day: u64,
+    width: f64,
+    len: usize,
+    /// EMA of inter-pop time deltas; sampled only at rebuilds to pick a
+    /// width that spreads the live horizon over the buckets.
+    ema_gap: f64,
+    last_pop: f64,
+}
+
+impl CalendarQueue {
+    pub fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            mask: (MIN_BUCKETS - 1) as u64,
+            cur_day: 0,
+            width: INITIAL_WIDTH,
+            len: 0,
+            ema_gap: 0.0,
+            last_pop: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, key: Key, idx: usize) {
+        // clamp: a time before the current day files under the current
+        // day, where intra-bucket Key order still pops it first
+        let day = day_of(key.0, self.width).max(self.cur_day);
+        let b = (day & self.mask) as usize;
+        self.buckets[b].push(Reverse(Entry { day, key, idx }));
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.rebuild(self.buckets.len() * 2);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(Key, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut probes = PROBE_DAYS;
+        loop {
+            let b = (self.cur_day & self.mask) as usize;
+            let hit = matches!(self.buckets[b].peek(),
+                               Some(Reverse(e)) if e.day == self.cur_day);
+            if hit {
+                if let Some(Reverse(e)) = self.buckets[b].pop() {
+                    self.len -= 1;
+                    self.note_pop(e.key.0);
+                    if self.len < self.buckets.len() / 8
+                        && self.buckets.len() > MIN_BUCKETS
+                    {
+                        self.rebuild(self.buckets.len() / 2);
+                    }
+                    return Some((e.key, e.idx));
+                }
+            }
+            if probes == 0 {
+                // sparse horizon: jump straight to the earliest
+                // (day, key) among the per-bucket minima
+                let mut best: Option<Entry> = None;
+                for h in &self.buckets {
+                    if let Some(Reverse(e)) = h.peek() {
+                        if best.map_or(true, |b| *e < b) {
+                            best = Some(*e);
+                        }
+                    }
+                }
+                match best {
+                    Some(e) => self.cur_day = e.day, // next loop pops it
+                    None => return None,             // len desynced: treat as empty
+                }
+                probes = PROBE_DAYS;
+                continue;
+            }
+            probes -= 1;
+            self.cur_day = self.cur_day.saturating_add(1);
+        }
+    }
+
+    fn note_pop(&mut self, t: f64) {
+        let delta = t - self.last_pop;
+        self.last_pop = t;
+        if delta > 0.0 && delta.is_finite() {
+            self.ema_gap = 0.75 * self.ema_gap + 0.25 * delta;
+        }
+    }
+
+    /// Deterministic re-bucketing: new width from the pop-gap EMA, new
+    /// day origin at the last popped time, every entry re-clamped.
+    /// Order-neutral (module tests + tests/sparse_parity.rs hold this).
+    fn rebuild(&mut self, nbuckets: usize) {
+        if self.ema_gap > 0.0 && self.ema_gap.is_finite() {
+            // aim for a few events per day at the observed pop rate
+            self.width = self.ema_gap * 4.0;
+        }
+        self.cur_day = day_of(self.last_pop, self.width);
+        self.mask = (nbuckets - 1) as u64;
+        let old = std::mem::replace(
+            &mut self.buckets,
+            (0..nbuckets).map(|_| BinaryHeap::new()).collect(),
+        );
+        for heap in old {
+            for Reverse(e) in heap {
+                let day = day_of(e.key.0, self.width).max(self.cur_day);
+                let b = (day & self.mask) as usize;
+                self.buckets[b].push(Reverse(Entry { day, ..e }));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The old scheduler, verbatim: one global heap over (Key, idx).
+    struct HeapModel {
+        heap: BinaryHeap<Reverse<(Key, usize)>>,
+    }
+    impl HeapModel {
+        fn new() -> HeapModel {
+            HeapModel { heap: BinaryHeap::new() }
+        }
+        fn push(&mut self, key: Key, idx: usize) {
+            self.heap.push(Reverse((key, idx)));
+        }
+        fn pop(&mut self) -> Option<(Key, usize)> {
+            self.heap.pop().map(|Reverse(p)| p)
+        }
+    }
+
+    enum Op {
+        Push(f64),
+        Pop,
+    }
+
+    /// Run the op script against both schedulers and require identical
+    /// (time-bits, seq, idx) pop sequences, including the final drain.
+    fn assert_drain_parity(ops: &[Op]) {
+        let mut cq = CalendarQueue::new();
+        let mut model = HeapModel::new();
+        let mut seq = 0u64;
+        let mut idx = 0usize;
+        let mut pops = 0usize;
+        for op in ops {
+            match op {
+                Op::Push(t) => {
+                    seq += 1;
+                    cq.push(Key(*t, seq), idx);
+                    model.push(Key(*t, seq), idx);
+                    idx += 1;
+                }
+                Op::Pop => {
+                    let a = cq.pop();
+                    let b = model.pop();
+                    assert_popped_eq(a, b, pops);
+                    pops += 1;
+                }
+            }
+        }
+        loop {
+            let a = cq.pop();
+            let b = model.pop();
+            assert_popped_eq(a, b, pops);
+            pops += 1;
+            if b.is_none() {
+                assert!(cq.is_empty());
+                break;
+            }
+        }
+    }
+
+    fn assert_popped_eq(a: Option<(Key, usize)>, b: Option<(Key, usize)>, k: usize) {
+        match (a, b) {
+            (None, None) => {}
+            (Some((ka, ia)), Some((kb, ib))) => {
+                assert_eq!(ka.0.to_bits(), kb.0.to_bits(), "pop {k}: time bits");
+                assert_eq!(ka.1, kb.1, "pop {k}: seq");
+                assert_eq!(ia, ib, "pop {k}: idx");
+            }
+            (a, b) => panic!("pop {k}: calendar {a:?} vs heap {b:?}"),
+        }
+    }
+
+    #[test]
+    fn mass_same_tick_inserts_drain_in_seq_order() {
+        // hundreds of events at identical timestamps: order must fall
+        // back to seq exactly like the global heap
+        let mut ops = Vec::new();
+        for round in 0..6 {
+            for _ in 0..128 {
+                ops.push(Op::Push(round as f64 * 0.5));
+            }
+            ops.push(Op::Pop);
+            ops.push(Op::Pop);
+        }
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn total_cmp_boundary_values_order_identically() {
+        // the adversarial corners of the total_cmp order the old heap
+        // relied on: signed zeros, subnormals, extremes, infinities
+        let ts = [
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 4.0, // subnormal
+            -f64::MIN_POSITIVE,
+            1e-300,
+            -1e-300,
+            1e300,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1.0,
+            1.0 + f64::EPSILON,
+            -1.0,
+        ];
+        let mut ops: Vec<Op> = ts.iter().map(|&t| Op::Push(t)).collect();
+        ops.push(Op::Pop);
+        ops.push(Op::Pop);
+        // interleave more pushes after partial drain (times in the past
+        // relative to popped -∞/−1.0 exercise the clamp path)
+        ops.extend(ts.iter().map(|&t| Op::Push(t * 0.5)));
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn insert_during_drain_including_past_times() {
+        // a sim pushes while popping, sometimes at times before the
+        // current head (zero-latency acks): clamped entries must still
+        // pop in Key order
+        let mut ops = Vec::new();
+        for i in 0..200 {
+            ops.push(Op::Push(i as f64 * 0.01));
+        }
+        for i in 0..150 {
+            ops.push(Op::Pop);
+            if i % 3 == 0 {
+                ops.push(Op::Push(i as f64 * 0.003)); // usually in the past
+            }
+            if i % 7 == 0 {
+                ops.push(Op::Push(2.0 + i as f64 * 0.05));
+            }
+        }
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn growth_and_shrink_rebuilds_preserve_order() {
+        // push far past the grow threshold, then drain to force the
+        // shrink rebuild; widths change, order must not
+        let mut ops = Vec::new();
+        for i in 0..1500 {
+            // lumpy spacing so the EMA actually moves between rebuilds
+            let t = (i / 100) as f64 + (i % 100) as f64 * 1e-4;
+            ops.push(Op::Push(t));
+        }
+        for _ in 0..1400 {
+            ops.push(Op::Pop);
+        }
+        for i in 0..64 {
+            ops.push(Op::Push(100.0 + i as f64 * 3.0)); // sparse tail
+        }
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn sparse_horizon_exercises_jump_scan() {
+        // gaps far wider than PROBE_DAYS × width force the jump path
+        let mut ops = Vec::new();
+        for i in 0..40 {
+            ops.push(Op::Push(i as f64 * 1e4));
+            ops.push(Op::Push(i as f64 * 1e4)); // same-tick pair
+        }
+        for _ in 0..30 {
+            ops.push(Op::Pop);
+        }
+        ops.push(Op::Push(5.0)); // past, clamps
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn pseudorandom_stress_against_model() {
+        let mut rng = crate::prng::Rng::stream(42, 0x5c4ed);
+        let mut ops = Vec::new();
+        let mut live = 0i64;
+        for _ in 0..5000 {
+            if live > 0 && rng.below(3) == 0 {
+                ops.push(Op::Pop);
+                live -= 1;
+            } else {
+                // mixture of scales, exact ties, and integer times
+                let t = match rng.below(4) {
+                    0 => rng.f64() * 1e-3,
+                    1 => rng.f64() * 1e3,
+                    2 => rng.below(50) as f64,
+                    _ => 7.25,
+                };
+                ops.push(Op::Push(t));
+                live += 1;
+            }
+        }
+        assert_drain_parity(&ops);
+    }
+
+    #[test]
+    fn empty_queue_pops_none() {
+        let mut cq = CalendarQueue::new();
+        assert!(cq.pop().is_none());
+        cq.push(Key(1.0, 1), 0);
+        assert_eq!(cq.len(), 1);
+        assert!(cq.pop().is_some());
+        assert!(cq.pop().is_none());
+        assert!(cq.is_empty());
+    }
+}

@@ -109,6 +109,33 @@ fn committed_repros_replay_with_recorded_verdicts() {
 }
 
 #[test]
+fn committed_repros_are_bitwise_stable_on_the_calendar_scheduler() {
+    // the committed corpus predates the calendar-queue scheduler; its
+    // verdicts AND detail strings must replay bitwise-identically on it
+    // (and keep doing so), twice in one process to rule out ambient state
+    let dir = repros_dir();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("tests/repros exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    for path in &paths {
+        let repro = Repro::load(path).expect("committed repro parses");
+        let first = repro.case.run();
+        let second = repro.case.run();
+        assert_eq!(first, second,
+                   "{}: outcome depends on ambient state", path.display());
+        let expect_fail = repro.expect == "fail";
+        assert_eq!(first.violation.is_some(), expect_fail,
+                   "{}: verdict drifted: {first:?}", path.display());
+        assert_eq!(first.violation.map(str::to_string),
+                   repro.violation.clone(),
+                   "{}: oracle drifted: {first:?}", path.display());
+    }
+}
+
+#[test]
 fn diverging_example_shrinks_to_the_committed_minimal_repro() {
     // end-to-end shrinker contract: a case failing by construction
     // (γ = 16 on h ∈ [0.5, 2] quadratics ⇒ per-step blow-up factor ≥ 7)

@@ -1,0 +1,80 @@
+//! Scale smoke (DESIGN.md §13): the sparse topology representation and
+//! the calendar-queue scheduler must make 10k-node simulator runs
+//! routine. This binary installs the counting allocator so the memory
+//! ceilings are *asserted*, not eyeballed:
+//!
+//! * a 10k-node logreg run finishes inside a wall-clock and peak-heap
+//!   budget;
+//! * no public topology constructor allocates anything resembling an
+//!   n × n buffer at large n.
+//!
+//! CI runs this file in its own step; the peak-heap gauge is process
+//! global, so the tests serialize on a mutex.
+
+use rfast::algo::AlgoKind;
+use rfast::exp::bench::{self, CountingAllocator};
+use rfast::exp::{Experiment, Stop, Workload};
+use rfast::graph::Topology;
+use std::sync::Mutex;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Serializes the peak-gauge windows across the tests in this binary.
+static GAUGE: Mutex<()> = Mutex::new(());
+
+#[test]
+fn ten_thousand_node_logreg_run_fits_time_and_memory_budget() {
+    let _window = GAUGE.lock().unwrap();
+    assert!(bench::counting_allocator_active());
+
+    let topo = Topology::from_spec("tree:random@0:7+random@0:21", 10_000)
+        .unwrap();
+    let mut cfg = Workload::LogReg.paper_config();
+    cfg.seed = 2;
+
+    bench::reset_peak();
+    let t0 = std::time::Instant::now();
+    let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
+        .topology(&topo)
+        .config(cfg)
+        .stop(Stop::Iterations(12_000))
+        .run()
+        .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, peak) = bench::live_peak_stats();
+
+    let wakes = run.report.scalars["grad_wakes"];
+    assert!(wakes >= 12_000.0, "budget not consumed: {wakes}");
+    assert!(run.report.final_gap.is_none()
+                || run.report.final_gap.unwrap().is_finite());
+    // wall budget: generous for CI runners — a dense-era n² layer blew
+    // this by an order of magnitude before it blew the allocator
+    assert!(wall < 180.0, "10k-node run took {wall:.1}s");
+    // peak-heap ceiling: n² f64 link state alone would be 800 MB; the
+    // whole run (dataset, 10k node states, sparse link layer) must stay
+    // under 1.5 GB
+    assert!(peak < 1_500_000_000, "peak heap {peak} bytes");
+}
+
+#[test]
+fn no_topology_constructor_allocates_n_squared_at_large_n() {
+    let _window = GAUGE.lock().unwrap();
+    let n = 30_000usize;
+    let specs = ["star", "line", "binary_tree", "gossip",
+                 "tree:random@0:7+random@0:21"];
+    for spec in specs {
+        let before = bench::alloc_stats().1;
+        let topo = Topology::from_spec(spec, n).unwrap();
+        let delta = bench::alloc_stats().1 - before;
+        // cumulative bytes requested while building: O(edges), with
+        // generous per-node Vec overhead — an n × n f32 buffer alone
+        // would be 3.6 GB
+        let budget = 6_000u64 * n as u64;
+        assert!(delta < budget,
+                "{spec}: building n = {n} requested {delta} bytes \
+                 (budget {budget})");
+        assert_eq!(topo.n(), n);
+        drop(topo);
+    }
+}

@@ -1,0 +1,172 @@
+//! Bitwise sparse-vs-dense equivalence suite (DESIGN.md §13): every
+//! topology the repo can construct must come out of the sparse edge-list
+//! funnel (`Topology::from_edges` / `SparseWeights`) with *exactly* the
+//! same weights the dense densify-and-normalize reference
+//! (`Topology::from_edges_dense`) produces — same f32 bits, same
+//! neighbor lists, same `check_assumptions` verdicts (including
+//! no-common-root rejections), and, end to end, byte-identical report
+//! JSON from a seeded simulator run.
+//!
+//! Why bitwise equality is even possible: builder weights are uniform
+//! 1/k with k unit entries per line, dense row sums of k ones are exact
+//! integers in f64, and `(1.0 / k as f64) as f32` is precisely the scale
+//! the dense normalize applies — see the `SparseWeights` module docs for
+//! the full argument.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::exp::{Experiment, QuadSpec, Stop, Workload};
+use rfast::graph::{ArchSpec, AssumptionError, Topology, TopologyKind};
+use rfast::prng::Rng;
+
+/// Every parameterless builder kind (Custom has no `build`).
+const KINDS: [TopologyKind; 7] = [
+    TopologyKind::BinaryTree,
+    TopologyKind::Line,
+    TopologyKind::Ring,
+    TopologyKind::Exponential,
+    TopologyKind::Mesh,
+    TopologyKind::Star,
+    TopologyKind::Gossip,
+];
+
+/// Re-derive the directed edge lists a topology was built from, straight
+/// off its neighbor lists: W edge (j, i) ⇔ i pulls from j (j ∈ w_in[i]),
+/// A edge (i, j) ⇔ i pushes to j (j ∈ a_out[i]).
+fn edge_lists(t: &Topology) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+    let wm = &t.weights;
+    let w = (0..wm.n)
+        .flat_map(|i| wm.w_in[i].iter().map(move |&j| (j, i)))
+        .collect();
+    let a = (0..wm.n)
+        .flat_map(|i| wm.a_out[i].iter().map(move |&j| (i, j)))
+        .collect();
+    (w, a)
+}
+
+/// The core assertion: the dense reference twin built from the same edge
+/// set is bitwise equal (weights, via `SparseWeights: PartialEq`, and
+/// the full assumption report).
+fn assert_dense_twin_parity(sparse: &Topology, ctx: &str) {
+    let (w_edges, a_edges) = edge_lists(sparse);
+    let dense = Topology::from_edges_dense(sparse.n(), &w_edges, &a_edges);
+    assert_eq!(sparse.weights, dense.weights, "{ctx}: weights diverge");
+    assert_eq!(sparse.weights.check_assumptions(),
+               dense.weights.check_assumptions(),
+               "{ctx}: assumption verdicts diverge");
+    assert_eq!(sparse.weights.common_roots(), dense.weights.common_roots(),
+               "{ctx}: root sets diverge");
+}
+
+#[test]
+fn every_builder_kind_matches_the_dense_reference_bitwise() {
+    for kind in KINDS {
+        for n in [2usize, 3, 4, 5, 7, 8, 12, 16, 23, 32, 48, 64] {
+            let topo = kind.build(n);
+            assert_dense_twin_parity(&topo, &format!("{}({n})", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn metropolis_ring_matches_dense_normalization_bitwise() {
+    // not a from_edges builder — its 1/3 weights come from
+    // from_weighted_lists — but on a ring the dense normalize of the
+    // unit adjacency produces the identical 1/3 bits
+    for n in [3usize, 5, 16, 64] {
+        let topo = Topology::undirected_ring_metropolis(n);
+        assert_dense_twin_parity(&topo, &format!("metropolis({n})"));
+    }
+}
+
+#[test]
+fn paper_architecture_pairs_match_the_dense_reference_bitwise() {
+    for spec in ArchSpec::paper_pairs() {
+        for n in [2usize, 3, 5, 9, 17, 33, 64] {
+            let topo = spec.build(n).unwrap();
+            assert_dense_twin_parity(&topo,
+                                     &format!("{}({n})", spec.name()));
+        }
+    }
+}
+
+#[test]
+fn fifty_sampled_architecture_pairs_match_the_dense_reference() {
+    let mut rng = Rng::stream(0x59a25e, 0);
+    for case in 0..50u64 {
+        let mut draw = Rng::stream(77, case);
+        let spec = ArchSpec::sample(&mut draw);
+        let n = 2 + rng.below(63);
+        let topo = spec.build(n).unwrap();
+        assert_dense_twin_parity(
+            &topo, &format!("sample[{case}] {}({n})", spec.name()));
+    }
+}
+
+#[test]
+fn no_common_root_pairs_are_rejected_identically() {
+    // the root-mismatched pair builds fine on both paths and fails
+    // Assumption 2 with the same typed violation list
+    for n in [2usize, 6, 17, 64] {
+        let topo = ArchSpec::no_common_root_pair().build(n).unwrap();
+        assert_dense_twin_parity(&topo, &format!("no_common_root({n})"));
+        let errs = topo.weights.check_assumptions();
+        assert!(errs.contains(&AssumptionError::NoCommonRoot),
+                "n = {n}: {errs:?}");
+        assert!(topo.weights.common_roots().is_empty(), "n = {n}");
+    }
+    // hand-built edge lists, both construction paths
+    let w = [(0usize, 1usize), (0, 2)];
+    let a = [(0usize, 1usize), (2, 1)];
+    let s = Topology::from_edges(3, &w, &a);
+    let d = Topology::from_edges_dense(3, &w, &a);
+    assert_eq!(s.weights, d.weights);
+    let errs = s.weights.check_assumptions();
+    assert_eq!(errs, d.weights.check_assumptions());
+    assert!(errs.contains(&AssumptionError::NoCommonRoot), "{errs:?}");
+}
+
+// ---- end to end: the report bytes, not just the matrices ---------------
+
+fn quad() -> Workload {
+    Workload::Quadratic(QuadSpec::heterogeneous(8, 0.5, 2.0))
+}
+
+fn fast_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        gamma: 0.03,
+        compute_mean: 0.01,
+        link_latency: 0.002,
+        latency_cap: 0.05,
+        eval_every: 1.0,
+        ..SimConfig::default()
+    }
+}
+
+fn report_bytes(topo: &Topology, seed: u64) -> String {
+    Experiment::new(quad(), AlgoKind::RFast)
+        .topology(topo)
+        .config(fast_cfg(seed))
+        .stop(Stop::Iterations(2_000))
+        .run()
+        .unwrap()
+        .report
+        .to_json()
+        .to_string()
+}
+
+#[test]
+fn seeded_runs_emit_byte_identical_reports_on_both_construction_paths() {
+    let cases: Vec<(Topology, &str)> = vec![
+        (Topology::ring(8), "ring(8)"),
+        (Topology::gossip(12, 2, 3), "gossip(12)"),
+        (ArchSpec::paper_pairs()[0].build(16).unwrap(), "paper_pair(16)"),
+    ];
+    for (sparse, ctx) in cases {
+        let (w_edges, a_edges) = edge_lists(&sparse);
+        let dense = Topology::from_edges_dense(sparse.n(), &w_edges, &a_edges);
+        assert_eq!(report_bytes(&sparse, 5), report_bytes(&dense, 5),
+                   "{ctx}: report JSON diverges between construction paths");
+    }
+}
