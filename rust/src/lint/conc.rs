@@ -1,0 +1,296 @@
+//! The concurrency half of `repro lint` (DESIGN.md §14): lock-declaration
+//! collection and the cross-file lock-acquisition-order graph.
+//!
+//! The per-line concurrency rules (`lock-across-blocking`,
+//! `relaxed-counter`, `unsync-shared`) live in [`super::scan`] next to the
+//! determinism rules — they need the scanner's stripped view, waiver
+//! state, and guard stack. This module owns what spans files:
+//!
+//! * **Phase A** — [`collect_lock_decls`] walks every stripped line of
+//!   every file and records the *names* of declared `Mutex`/`RwLock`
+//!   values (struct fields, `let` bindings of `Mutex::new`, statics).
+//!   The scanner then treats `.lock()`/`.read()`/`.write()` as a lock
+//!   acquisition only when the receiver is a declared name — so
+//!   `file.read()` or `stdout().lock()` never enter the analysis.
+//! * **Phase B aggregation** — each file scan emits [`LockEdge`]s
+//!   (lock B acquired while a guard of lock A is held). [`cycle_findings`]
+//!   builds the global acquisition-order digraph and flags every edge
+//!   that sits on a cycle: two functions acquiring the same pair of locks
+//!   in opposite orders is the classic deadlock shape, and the cycle test
+//!   generalizes it to any length (a self-edge — re-acquiring a lock
+//!   already held — is a cycle of length one).
+//!
+//! Soundness caveats of the lexical approach are catalogued in DESIGN.md
+//! §14: locks are identified by *name*, not by instance (two slots of one
+//! `Vec<Mutex<_>>` alias), guard lifetimes are approximated by brace
+//! depth and explicit `drop(..)`, and statements split across lines are
+//! matched per line. The rules err toward silence on constructs they
+//! cannot see; the sanitizer CI jobs (miri, ThreadSanitizer) backstop
+//! them dynamically.
+
+use super::scan::{has_token, is_ident, strip_lines};
+use super::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One observed acquisition ordering: a guard of `first` was held when
+/// `second` was acquired at `file:line`. Waived acquisitions
+/// (`lint:allow(lock-order)`) never become edges, so one waiver removes
+/// the edge — and with it any cycle that needed it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LockEdge {
+    pub file: String,
+    pub line: usize,
+    pub first: String,
+    pub second: String,
+}
+
+/// Characters that may appear between a field name's `:` and its
+/// `Mutex<`/`RwLock<` token inside a type (`x: Arc<Mutex<T>>`,
+/// `v: Vec<Mutex<(f64, u64)>>`). Anything else — `=`, `(`, `|`, `.` —
+/// means the token is an expression, not a declared type.
+fn is_typeish(b: u8) -> bool {
+    b.is_ascii_alphanumeric()
+        || matches!(b, b'_' | b'<' | b'>' | b' ' | b'&' | b'\'' | b',')
+}
+
+/// Collect declared lock names from one file's raw text into `out`.
+/// Recognized declaration shapes (on the stripped view, so tokens inside
+/// strings or comments are inert):
+///
+/// * `NAME: ..Mutex<..` / `NAME: ..RwLock<..` — struct fields, statics,
+///   consts, typed lets, fn params;
+/// * `let [mut] NAME = ..Mutex::new(..` / `..RwLock::new(..`.
+///
+/// Constructor lines inside struct literals (`field: Mutex::new(..)`)
+/// deliberately match neither shape — the field's own declaration already
+/// contributed the name.
+pub fn collect_lock_decls(text: &str, out: &mut BTreeSet<String>) {
+    for code in strip_lines(text) {
+        let b = code.as_bytes();
+        for tok in ["Mutex<", "RwLock<"] {
+            let mut start = 0;
+            while let Some(off) = code[start..].find(tok) {
+                let i = start + off;
+                start = i + tok.len();
+                if i > 0 && is_ident(b[i - 1]) {
+                    continue; // MyMutex< etc.
+                }
+                // walk back over the type to the declaring `:` (skipping
+                // `::` path separators: `x: std::sync::Mutex<T>`)
+                let mut k = i;
+                loop {
+                    if k == 0 {
+                        break;
+                    }
+                    let c = b[k - 1];
+                    if c == b':' {
+                        if k >= 2 && b[k - 2] == b':' {
+                            k -= 2;
+                            continue;
+                        }
+                        break; // the declaration colon
+                    }
+                    if is_typeish(c) {
+                        k -= 1;
+                    } else {
+                        break;
+                    }
+                }
+                if k == 0 || b[k - 1] != b':' {
+                    continue;
+                }
+                let e = k - 1;
+                let mut s = e;
+                while s > 0 && is_ident(b[s - 1]) {
+                    s -= 1;
+                }
+                if s < e {
+                    out.insert(code[s..e].to_string());
+                }
+            }
+        }
+        if has_token(&code, "Mutex::new") || has_token(&code, "RwLock::new") {
+            if let Some(name) = let_binding_name(&code) {
+                out.insert(name);
+            }
+        }
+    }
+}
+
+/// Name bound by the first `let` on a stripped line, unwrapping a leading
+/// `mut` (tuple/struct patterns yield `None`).
+pub(crate) fn let_binding_name(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let mut start = 0;
+    let i = loop {
+        let off = code[start..].find("let ")?;
+        let i = start + off;
+        if i > 0 && is_ident(b[i - 1]) {
+            start = i + 4;
+            continue;
+        }
+        break i;
+    };
+    let mut j = i + 4;
+    while j < b.len() && b[j] == b' ' {
+        j += 1;
+    }
+    if code[j..].starts_with("mut ") {
+        j += 4;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+    }
+    for wrap in ["Ok(", "Some("] {
+        if code[j..].starts_with(wrap) {
+            j += wrap.len();
+            break;
+        }
+    }
+    let s = j;
+    let mut k = j;
+    while k < b.len() && is_ident(b[k]) {
+        k += 1;
+    }
+    if k > s {
+        Some(code[s..k].to_string())
+    } else {
+        None
+    }
+}
+
+/// Flag every edge that lies on a cycle of the acquisition-order digraph:
+/// edge `first -> second` is reported when `second` can reach `first`
+/// (so the full cycle exists), which reports *each* offending acquisition
+/// site of a two-lock inversion rather than an arbitrary one.
+pub fn cycle_findings(edges: &[LockEdge]) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(&e.first).or_default().insert(&e.second);
+    }
+    let mut out: Vec<Finding> = Vec::new();
+    for e in edges {
+        if reaches(&adj, &e.second, &e.first) {
+            out.push(Finding {
+                rule: super::LOCK_ORDER,
+                file: e.file.clone(),
+                line: e.line,
+                detail: format!(
+                    "acquires {} while holding {}, but an opposite path \
+                     {} -> {} exists elsewhere (potential deadlock)",
+                    e.second, e.first, e.second, e.first
+                ),
+            });
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// Is `target` reachable from `from` along >= 1 edge?
+fn reaches(
+    adj: &BTreeMap<&str, BTreeSet<&str>>,
+    from: &str,
+    target: &str,
+) -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![from];
+    while let Some(n) = stack.pop() {
+        for &m in adj.get(n).into_iter().flatten() {
+            if m == target {
+                return true;
+            }
+            if seen.insert(m) {
+                stack.push(m);
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decls(src: &str) -> Vec<String> {
+        let mut out = BTreeSet::new();
+        collect_lock_decls(src, &mut out);
+        out.into_iter().collect()
+    }
+
+    #[test]
+    fn field_and_static_and_let_declarations_are_collected() {
+        let src = "struct S {\n    slots: Vec<Mutex<(f64, u64)>>,\n    \
+                   pub table: std::sync::RwLock<u8>,\n}\n\
+                   static GAUGE: Mutex<()> = Mutex::new(());\n\
+                   fn f() { let last = Arc::new(Mutex::new(Vec::new())); }\n";
+        assert_eq!(decls(src), vec!["GAUGE", "last", "slots", "table"]);
+    }
+
+    #[test]
+    fn constructor_lines_and_strings_do_not_declare() {
+        // a struct-literal constructor re-using a field name, and the
+        // token inside a string, both stay silent
+        let src = "fn f() {\n    S { slots: (0..n).map(|_| \
+                   Mutex::new(0)).collect() };\n    \
+                   let s = \"a Mutex<u8> in prose\";\n}\n";
+        assert!(decls(src).is_empty());
+    }
+
+    #[test]
+    fn tuple_let_bindings_yield_no_name() {
+        assert!(decls("fn f() { let (a, b) = (Mutex::new(0), 1); }\n")
+            .is_empty());
+        assert_eq!(
+            let_binding_name("let mut guard = m.lock();"),
+            Some("guard".to_string())
+        );
+        assert_eq!(
+            let_binding_name("if let Ok(g) = m.lock() {"),
+            Some("g".to_string())
+        );
+    }
+
+    fn edge(file: &str, line: usize, a: &str, b: &str) -> LockEdge {
+        LockEdge {
+            file: file.to_string(),
+            line,
+            first: a.to_string(),
+            second: b.to_string(),
+        }
+    }
+
+    #[test]
+    fn two_lock_inversion_flags_both_sites() {
+        let edges = vec![edge("x.rs", 3, "a", "b"), edge("y.rs", 7, "b", "a")];
+        let got = cycle_findings(&edges);
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].file.as_str(), got[0].line), ("x.rs", 3));
+        assert_eq!((got[1].file.as_str(), got[1].line), ("y.rs", 7));
+    }
+
+    #[test]
+    fn consistent_global_order_is_clean() {
+        let edges = vec![
+            edge("x.rs", 3, "a", "b"),
+            edge("y.rs", 7, "a", "b"),
+            edge("z.rs", 2, "b", "c"),
+            edge("z.rs", 9, "a", "c"),
+        ];
+        assert!(cycle_findings(&edges).is_empty());
+    }
+
+    #[test]
+    fn longer_cycles_and_self_edges_are_cycles() {
+        // a -> b -> c -> a: every edge sits on the cycle
+        let edges = vec![
+            edge("x.rs", 1, "a", "b"),
+            edge("x.rs", 2, "b", "c"),
+            edge("x.rs", 3, "c", "a"),
+        ];
+        assert_eq!(cycle_findings(&edges).len(), 3);
+        // re-acquiring a held lock is a self-deadlock
+        let edges = vec![edge("x.rs", 4, "m", "m")];
+        assert_eq!(cycle_findings(&edges).len(), 1);
+    }
+}

@@ -10,6 +10,14 @@
 //! per-event allocation inside the `algo/` hot path; no unwaived panics
 //! in library code.
 //!
+//! The second rule family (DESIGN.md §14) guards the threaded engine's
+//! shared state: a cross-file lock-acquisition-order graph flags
+//! potential deadlocks (`lock-order`), guards held across blocking calls
+//! (`lock-across-blocking`), `Ordering::Relaxed` on report counters
+//! (`relaxed-counter`), and type-system escape hatches (`unsync-shared`).
+//! The graph machinery lives in [`conc`]; the per-line matching rides the
+//! same [`scan`] pass as the determinism rules.
+//!
 //! Dependency-free by construction (vendored-offline builds): the scanner
 //! in [`scan`] is a hand-rolled tokenizing line scanner, JSON I/O rides
 //! the in-tree [`crate::jsonio`].
@@ -21,20 +29,32 @@
 //! can absorb — fails the gate. `repro lint --fix-baseline` rewrites the
 //! baseline after a genuine improvement.
 
+pub mod conc;
 pub mod scan;
 
 use crate::jsonio::{self, Json};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs;
 use std::path::{Path, PathBuf};
 
-/// Schema tag of `LINT_BASELINE.json`.
-pub const BASELINE_SCHEMA: &str = "rfast-lint-baseline/v1";
+/// Schema tag of `LINT_BASELINE.json`. v2 added the concurrency rule
+/// family (DESIGN.md §14); v1 files still parse — `--fix-baseline`
+/// rewrites them with the v2 tag.
+pub const BASELINE_SCHEMA: &str = "rfast-lint-baseline/v2";
+/// The predecessor tag, accepted on read for migration.
+pub const BASELINE_SCHEMA_V1: &str = "rfast-lint-baseline/v1";
 /// Schema tag of the findings artifact (`repro lint --out FILE`).
-pub const FINDINGS_SCHEMA: &str = "rfast-lint-findings/v1";
+pub const FINDINGS_SCHEMA: &str = "rfast-lint-findings/v2";
 /// Pseudo-rule for malformed waiver pragmas. Not waivable, never
 /// baseline-absorbed: a broken waiver must be fixed, not grandfathered.
 pub const BAD_WAIVER: &str = "bad-waiver";
+/// Pseudo-rule for a valid waiver whose rule no longer fires on its
+/// line. Like [`BAD_WAIVER`], never baseline-absorbed: a suppression
+/// must not outlive its cause.
+pub const STALE_WAIVER: &str = "stale-waiver";
+/// The lock-acquisition-order rule name (findings are synthesized from
+/// the cross-file graph in [`conc::cycle_findings`], not per line).
+pub const LOCK_ORDER: &str = "lock-order";
 
 /// One lint rule: the name waiver pragmas refer to, plus where and what
 /// it guards (the full table lives in DESIGN.md §12).
@@ -44,9 +64,9 @@ pub struct Rule {
     pub summary: &'static str,
 }
 
-/// The rule catalog. `bad-waiver` is deliberately absent — it cannot be
-/// waived.
-pub const RULES: [Rule; 6] = [
+/// The rule catalog. `bad-waiver` and `stale-waiver` are deliberately
+/// absent — they cannot be waived.
+pub const RULES: [Rule; 10] = [
     Rule {
         name: "det-collections",
         scope: "sim/ algo/ fuzz/ scenario/ graph/",
@@ -82,6 +102,34 @@ pub const RULES: [Rule; 6] = [
         scope: "rust/src/** except testutil/",
         summary: "unwrap/expect/panic in library code needs a waiver \
                   stating why it cannot fire",
+    },
+    Rule {
+        name: "lock-order",
+        scope: "rust/src/** except testutil/",
+        summary: "this acquisition order is inverted elsewhere in the \
+                  tree — a cycle in the lock-order graph is a potential \
+                  deadlock; pick one global order",
+    },
+    Rule {
+        name: "lock-across-blocking",
+        scope: "rust/src/** except testutil/",
+        summary: "a Mutex/RwLock guard held across send/recv/sleep/join \
+                  stalls every contender for the blocking duration; drop \
+                  the guard first",
+    },
+    Rule {
+        name: "relaxed-counter",
+        scope: "rust/src/** except testutil/",
+        summary: "Ordering::Relaxed on an atomic that feeds report \
+                  scalars; use AcqRel RMWs and Acquire loads (or a waiver \
+                  stating why Relaxed is sound)",
+    },
+    Rule {
+        name: "unsync-shared",
+        scope: "rust/src/** except testutil/",
+        summary: "static mut / unsafe impl Send|Sync / raw pointers \
+                  bypass the type system's race freedom; justify with a \
+                  waiver or use safe sharing",
     },
 ];
 
@@ -128,18 +176,40 @@ pub struct LintReport {
     pub waivers_used: usize,
 }
 
-/// Scan every `.rs` file selected by `cfg`, in sorted path order.
+/// Scan every `.rs` file selected by `cfg`, in sorted path order. Two
+/// phases (DESIGN.md §14): phase A collects declared `Mutex`/`RwLock`
+/// names across the whole corpus (so a lock declared in `runner/` is
+/// recognized when acquired from another module); phase B scans each
+/// file with that name set, then the per-file lock edges aggregate into
+/// the global acquisition-order graph and its cycles become `lock-order`
+/// findings.
 pub fn run(cfg: &LintConfig) -> Result<LintReport, String> {
-    let mut report = LintReport::default();
+    let mut files = Vec::new();
     for rel in walk(cfg)? {
         let text = fs::read_to_string(cfg.root.join(&rel))
             .map_err(|e| format!("read {rel}: {e}"))?;
-        let scanned = scan::scan_source(&rel, &text);
+        files.push((rel, text));
+    }
+    let mut locks: BTreeSet<String> = BTreeSet::new();
+    for (_, text) in &files {
+        conc::collect_lock_decls(text, &mut locks);
+    }
+    let mut report = LintReport::default();
+    let mut edges: Vec<conc::LockEdge> = Vec::new();
+    for (rel, text) in &files {
+        let scanned = scan::scan_source_with(rel, text, &locks);
         report.findings.extend(scanned.findings);
         report.waiver_errors.extend(scanned.waiver_errors);
         report.waivers_used += scanned.waivers_used;
+        edges.extend(scanned.lock_edges);
         report.files_scanned += 1;
     }
+    report.findings.extend(conc::cycle_findings(&edges));
+    // stable sort: cross-file findings interleave back into file order,
+    // same-line findings keep rule-table emission order
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line))
+    });
     Ok(report)
 }
 
@@ -252,14 +322,18 @@ impl Baseline {
             .map_err(|e| format!("{}: {e}", path.display()))
     }
 
+    /// Parse a baseline. Accepts the current [`BASELINE_SCHEMA`] and the
+    /// v1 predecessor (identical shape, pre-concurrency rule set) —
+    /// `--fix-baseline` migrates a v1 file to v2 on its next rewrite.
     pub fn from_json(j: &Json) -> Result<Baseline, String> {
         let schema = j
             .get("schema")
             .and_then(|s| s.as_str())
             .ok_or("missing schema tag")?;
-        if schema != BASELINE_SCHEMA {
+        if schema != BASELINE_SCHEMA && schema != BASELINE_SCHEMA_V1 {
             return Err(format!(
-                "schema {schema:?}, expected {BASELINE_SCHEMA:?}"
+                "schema {schema:?}, expected {BASELINE_SCHEMA:?} \
+                 (or the readable predecessor {BASELINE_SCHEMA_V1:?})"
             ));
         }
         let raw = j
@@ -400,9 +474,34 @@ pub fn findings_json(report: &LintReport, ratchet: Option<&Ratchet>) -> Json {
     Json::obj(pairs)
 }
 
+/// GitHub Actions workflow-command annotation for one finding: printed
+/// to stdout during a CI run, it surfaces as an inline error on the PR's
+/// file view (`repro lint --format github`).
+pub fn github_annotation(f: &Finding) -> String {
+    format!(
+        "::error file={},line={},title=repro-lint[{}]::{}",
+        f.file, f.line, f.rule, f.detail
+    )
+}
+
+/// GitHub annotation for a ratchet regression (no line — the cell is a
+/// per-file count, so the annotation anchors to line 1).
+pub fn github_delta_annotation(d: &Delta) -> String {
+    format!(
+        "::error file={},line=1,title=repro-lint-ratchet[{}]::count went \
+         {} -> {} (fix or waive the new finding; baselines only shrink)",
+        d.file, d.rule, d.base, d.cur
+    )
+}
+
 /// Two-space-indent pretty printer (sorted keys come free from
 /// `BTreeMap`). `LINT_BASELINE.json` is a committed, human-reviewed debt
 /// register; one-line JSON would bury its diffs.
+///
+/// Schema migration note: `Baseline::to_json` always stamps the current
+/// [`BASELINE_SCHEMA`] (v2), so pretty-printing a baseline parsed from a
+/// v1 file *is* the v1 → v2 migration — the counts object is unchanged,
+/// only the tag moves.
 pub fn to_pretty(j: &Json) -> String {
     let mut out = String::new();
     pretty(j, 0, &mut out);
@@ -523,7 +622,74 @@ mod tests {
         let text = to_pretty(&b.to_json());
         let expect = "{\n  \"counts\": {\n    \"hot-alloc\": {\n      \
                       \"a.rs\": 2\n    }\n  },\n  \"schema\": \
-                      \"rfast-lint-baseline/v1\"\n}\n";
+                      \"rfast-lint-baseline/v2\"\n}\n";
         assert_eq!(text, expect);
+    }
+
+    #[test]
+    fn v1_baseline_parses_and_rewrites_as_v2() {
+        let v1 = format!(
+            "{{\"schema\":\"{BASELINE_SCHEMA_V1}\",\
+             \"counts\":{{\"hot-alloc\":{{\"a.rs\":2}}}}}}"
+        );
+        let j = crate::jsonio::parse(&v1).expect("v1 parses");
+        let b = Baseline::from_json(&j).expect("v1 accepted");
+        assert_eq!(b, baseline(&[("hot-alloc", "a.rs", 2)]));
+        // the rewrite path stamps v2 with the counts untouched
+        let out = b.to_json();
+        assert_eq!(
+            out.get("schema").and_then(|s| s.as_str()),
+            Some(BASELINE_SCHEMA)
+        );
+        assert_eq!(
+            Baseline::from_json(&out).expect("v2 round-trip"),
+            b
+        );
+        // v1 cells may name the new concurrency rules once migrated
+        let v2 = format!(
+            "{{\"schema\":\"{BASELINE_SCHEMA}\",\
+             \"counts\":{{\"relaxed-counter\":{{\"b.rs\":1}}}}}}"
+        );
+        let j = crate::jsonio::parse(&v2).expect("v2 parses");
+        assert!(Baseline::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn stale_and_bad_waiver_cells_are_unrepresentable() {
+        for pseudo in [BAD_WAIVER, STALE_WAIVER] {
+            let text = format!(
+                "{{\"schema\":\"{BASELINE_SCHEMA}\",\
+                 \"counts\":{{\"{pseudo}\":{{\"a.rs\":1}}}}}}"
+            );
+            let j = crate::jsonio::parse(&text).expect("parses");
+            assert!(
+                Baseline::from_json(&j).is_err(),
+                "{pseudo} must not be baselineable"
+            );
+        }
+    }
+
+    #[test]
+    fn github_annotations_format() {
+        let f = Finding {
+            rule: "lock-order",
+            file: "rust/src/runner/mod.rs".to_string(),
+            line: 42,
+            detail: "acquires b while holding a".to_string(),
+        };
+        assert_eq!(
+            github_annotation(&f),
+            "::error file=rust/src/runner/mod.rs,line=42,\
+             title=repro-lint[lock-order]::acquires b while holding a"
+        );
+        let d = Delta {
+            rule: "hot-alloc".to_string(),
+            file: "a.rs".to_string(),
+            base: 2,
+            cur: 3,
+        };
+        let s = github_delta_annotation(&d);
+        assert!(s.starts_with("::error file=a.rs,line=1,"));
+        assert!(s.contains("2 -> 3"));
     }
 }

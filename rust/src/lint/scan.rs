@@ -14,9 +14,22 @@
 //! on its own line (trailing form) or, when the line carries no code, on
 //! the next code-bearing line (standalone form). The reason is mandatory;
 //! a reasonless or malformed pragma is itself reported as a `bad-waiver`
-//! finding that no baseline can absorb.
+//! finding that no baseline can absorb. Every accepted pragma is also
+//! *tracked*: one that suppressed nothing by end of file is reported as
+//! `stale-waiver` (DESIGN.md §14) — equally un-baselineable — so a
+//! suppression cannot outlive the finding that justified it.
+//!
+//! The concurrency rules (DESIGN.md §14) ride the same pass: a guard
+//! stack models `Mutex`/`RwLock` guards acquired on *declared* lock names
+//! (collected corpus-wide by [`super::conc::collect_lock_decls`]) and
+//! released by brace depth or explicit `drop(..)`; nested acquisitions
+//! emit [`LockEdge`]s for the cross-file order graph, blocking calls
+//! under a held guard are `lock-across-blocking`, `Ordering::Relaxed`
+//! beside a report-counter name is `relaxed-counter`, and `static mut` /
+//! `unsafe impl Send/Sync` / raw pointers are `unsync-shared`.
 
-use super::{Finding, BAD_WAIVER, RULES};
+use super::conc::{let_binding_name, LockEdge};
+use super::{Finding, BAD_WAIVER, RULES, STALE_WAIVER};
 use std::collections::BTreeSet;
 
 /// Result of scanning one file.
@@ -24,24 +37,69 @@ use std::collections::BTreeSet;
 pub struct FileScan {
     /// Rule findings (baseline-eligible), in line order.
     pub findings: Vec<Finding>,
-    /// Malformed waiver pragmas (`bad-waiver`); never baseline-absorbed.
+    /// Malformed (`bad-waiver`) and unconsumed (`stale-waiver`) pragmas;
+    /// never baseline-absorbed.
     pub waiver_errors: Vec<Finding>,
     /// Number of findings suppressed by valid waivers.
     pub waivers_used: usize,
+    /// Observed lock-acquisition orderings, for the cross-file graph.
+    pub lock_edges: Vec<LockEdge>,
 }
 
-/// Scan one file's source text. `rel_path` is the repo-root-relative,
-/// `/`-separated path — rule scoping keys on it (DESIGN.md §12).
+static NO_LOCKS: BTreeSet<String> = BTreeSet::new();
+
+/// Scan one file's source text with no declared-lock knowledge (the
+/// lock-acquisition rules stay silent). `rel_path` is the
+/// repo-root-relative, `/`-separated path — rule scoping keys on it
+/// (DESIGN.md §12).
 pub fn scan_source(rel_path: &str, text: &str) -> FileScan {
-    let mut sc = Scanner::new(rel_path);
+    scan_source_with(rel_path, text, &NO_LOCKS)
+}
+
+/// Full scan: determinism rules plus the concurrency rules, recognizing
+/// `.lock()`/`.read()`/`.write()` acquisitions on the declared
+/// `lock_names` (DESIGN.md §14).
+pub fn scan_source_with(
+    rel_path: &str,
+    text: &str,
+    lock_names: &BTreeSet<String>,
+) -> FileScan {
+    let mut sc = Scanner::new(rel_path, lock_names);
     for (idx, line) in text.lines().enumerate() {
         sc.feed(idx + 1, line);
     }
+    let mut waiver_errors = sc.waiver_errors;
+    for rec in &sc.waiver_recs {
+        // test-region pragmas are inert (rules don't run there), so they
+        // cannot prove themselves live — skip, don't punish
+        if !rec.consumed && !rec.in_test {
+            waiver_errors.push(Finding {
+                rule: STALE_WAIVER,
+                file: rel_path.to_string(),
+                line: rec.line,
+                detail: format!(
+                    "waiver for {} suppresses nothing on its line — \
+                     remove it",
+                    rec.rule
+                ),
+            });
+        }
+    }
+    waiver_errors.sort_by_key(|f| f.line);
     FileScan {
         findings: sc.findings,
-        waiver_errors: sc.waiver_errors,
+        waiver_errors,
         waivers_used: sc.waivers_used,
+        lock_edges: sc.lock_edges,
     }
+}
+
+/// Stripped view (comments removed, string contents emptied) of every
+/// line — the declaration-collection pre-pass reuses the scanner's
+/// tokenizer so `Mutex<` inside a string or doc comment stays inert.
+pub(crate) fn strip_lines(text: &str) -> Vec<String> {
+    let mut sc = Scanner::new("", &NO_LOCKS);
+    text.lines().map(|l| sc.split_line(l).0).collect()
 }
 
 // ---- rule scoping by path (DESIGN.md §12 table) ------------------------
@@ -93,7 +151,46 @@ const PANIC_PATH: [&str; 6] = [
     "unimplemented!",
 ];
 
-fn is_ident(b: u8) -> bool {
+/// Guard acquisition methods. The empty parens are load-bearing: they
+/// match `Mutex::lock()`/`RwLock::read()`/`RwLock::write()` but not the
+/// arg-taking `io::Read::read(buf)`/`io::Write::write(buf)`.
+const ACQUIRE: [&str; 3] = [".lock()", ".read()", ".write()"];
+
+/// Calls that block the current thread: holding a guard across one of
+/// these stalls every contender for the lock's full blocking duration
+/// (and `.send()` on a bounded channel can deadlock outright).
+/// `try_recv`/`try_send` are non-blocking and deliberately absent;
+/// `.join()`/`.recv()` keep their empty parens so `Path::join(..)` and
+/// friends never match.
+const BLOCKING: [&str; 6] = [
+    ".send(",
+    ".recv()",
+    ".recv_timeout(",
+    "thread::sleep",
+    ".join()",
+    ".wait(",
+];
+
+/// Atomic counter names whose values feed report scalars or stats
+/// (`RunStats`, `Report` scalars, the allocator gauges). A
+/// `fetch_add(.., Relaxed)` here can publish a count the reader's
+/// `load(Relaxed)` never observes coherently with the data it counts —
+/// writes must be `AcqRel`/`Release`, reads `Acquire` (DESIGN.md §14).
+const REPORT_COUNTERS: [&str; 11] = [
+    "msgs_sent",
+    "msgs_lost",
+    "msgs_backpressured",
+    "msgs_paced",
+    "bytes_sent",
+    "total_steps",
+    "steps",
+    "ALLOC_COUNT",
+    "ALLOC_BYTES",
+    "ALLOC_LIVE",
+    "ALLOC_PEAK",
+];
+
+pub(crate) fn is_ident(b: u8) -> bool {
     b.is_ascii_alphanumeric() || b == b'_'
 }
 
@@ -151,15 +248,42 @@ struct Scanner<'a> {
     /// Saw `fn NAME`; the next `{` opens its body (`;` cancels — a
     /// body-less trait method declaration).
     pending_fn: Option<String>,
-    /// Standalone pragma rules awaiting the next code-bearing line.
-    pending_waiver: BTreeSet<&'static str>,
+    /// Standalone pragmas (indices into `waiver_recs`) awaiting the next
+    /// code-bearing line.
+    pending_waiver: BTreeSet<usize>,
+    /// Every accepted pragma, for stale-waiver accounting.
+    waiver_recs: Vec<WaiverRec>,
+    /// Corpus-wide declared Mutex/RwLock names (conc.rs phase A).
+    lock_names: &'a BTreeSet<String>,
+    /// Guards currently held, in acquisition order.
+    guards: Vec<Guard>,
+    lock_edges: Vec<LockEdge>,
     findings: Vec<Finding>,
     waiver_errors: Vec<Finding>,
     waivers_used: usize,
 }
 
+/// One accepted waiver pragma and whether it ever suppressed anything.
+struct WaiverRec {
+    line: usize,
+    rule: &'static str,
+    consumed: bool,
+    /// Pragmas inside `#[cfg(test)]`/`mod tests` regions are exempt from
+    /// staleness — rules never run there, so consumption is unprovable.
+    in_test: bool,
+}
+
+/// A held lock guard: the lock's declared name, the `let` binding (for
+/// explicit `drop(binding)`), and the brace depth it lives at — closing
+/// below that depth releases it.
+struct Guard {
+    lock: String,
+    binding: Option<String>,
+    depth: i64,
+}
+
 impl<'a> Scanner<'a> {
-    fn new(path: &'a str) -> Scanner<'a> {
+    fn new(path: &'a str, lock_names: &'a BTreeSet<String>) -> Scanner<'a> {
         Scanner {
             path,
             block_comment: 0,
@@ -172,6 +296,10 @@ impl<'a> Scanner<'a> {
             fn_stack: Vec::new(),
             pending_fn: None,
             pending_waiver: BTreeSet::new(),
+            waiver_recs: Vec::new(),
+            lock_names,
+            guards: Vec::new(),
+            lock_edges: Vec::new(),
             findings: Vec::new(),
             waiver_errors: Vec::new(),
             waivers_used: 0,
@@ -310,17 +438,29 @@ impl<'a> Scanner<'a> {
     }
 
     /// Parse every `lint:allow(...)` pragma in the line's comment text.
-    /// Valid pragmas return their rule set; malformed ones (no rule list,
-    /// unknown rule, missing/empty reason) become `bad-waiver` findings.
-    fn parse_waivers(&mut self, comment: &str, line_no: usize) -> BTreeSet<&'static str> {
+    /// Valid pragmas are registered in `waiver_recs` (for stale-waiver
+    /// accounting) and their record indices returned; malformed ones (no
+    /// rule list, unknown rule, missing/empty reason) become `bad-waiver`
+    /// findings.
+    fn parse_waivers(&mut self, comment: &str, line_no: usize) -> BTreeSet<usize> {
         const KEY: &str = "lint:allow";
-        let mut rules: BTreeSet<&'static str> = BTreeSet::new();
+        let mut recs: BTreeSet<usize> = BTreeSet::new();
         let mut start = 0;
         while let Some(off) = comment[start..].find(KEY) {
             let k = start + off;
             let rest = &comment[k + KEY.len()..];
             match Self::parse_one_waiver(rest) {
-                Ok(names) => rules.extend(names),
+                Ok(names) => {
+                    for name in names {
+                        recs.insert(self.waiver_recs.len());
+                        self.waiver_recs.push(WaiverRec {
+                            line: line_no,
+                            rule: name,
+                            consumed: false,
+                            in_test: !self.test_regions.is_empty(),
+                        });
+                    }
+                }
                 Err(detail) => self.waiver_errors.push(Finding {
                     rule: BAD_WAIVER,
                     file: self.path.to_string(),
@@ -330,7 +470,7 @@ impl<'a> Scanner<'a> {
             }
             start = k + KEY.len();
         }
-        rules
+        recs
     }
 
     fn parse_one_waiver(rest: &str) -> Result<Vec<&'static str>, String> {
@@ -415,6 +555,9 @@ impl<'a> Scanner<'a> {
                         self.fn_stack.pop();
                     }
                     self.depth -= 1;
+                    // a guard lives while depth >= its recorded depth
+                    let d = self.depth;
+                    self.guards.retain(|g| g.depth <= d);
                 }
                 b';' => {
                     // a body-less declaration: `fn ready(&self) -> bool;`
@@ -442,12 +585,53 @@ impl<'a> Scanner<'a> {
             .any(|name| HOT_FNS.contains(&name.as_str()))
     }
 
+    /// Mark every active pragma for `rule` consumed (it suppressed
+    /// something) and count the suppression.
+    fn consume(&mut self, active: &BTreeSet<usize>, rule: &str) {
+        for &i in active {
+            if self.waiver_recs[i].rule == rule {
+                self.waiver_recs[i].consumed = true;
+            }
+        }
+        self.waivers_used += 1;
+    }
+
+    /// Report `rule` at `line_no` unless an active waiver suppresses it.
+    fn emit(
+        &mut self,
+        line_no: usize,
+        rule: &'static str,
+        detail: String,
+        active: &BTreeSet<usize>,
+        waived: &BTreeSet<&'static str>,
+    ) {
+        if waived.contains(rule) {
+            self.consume(active, rule);
+        } else {
+            self.findings.push(Finding {
+                rule,
+                file: self.path.to_string(),
+                line: line_no,
+                detail,
+            });
+        }
+    }
+
+    fn fn_ctx(&self) -> String {
+        self.fn_stack
+            .last()
+            .map(|(name, _)| format!(" in fn {name}"))
+            .unwrap_or_default()
+    }
+
     fn match_rules(
         &mut self,
         line_no: usize,
         code: &str,
-        waived: &BTreeSet<&'static str>,
+        active: &BTreeSet<usize>,
     ) {
+        let waived: BTreeSet<&'static str> =
+            active.iter().map(|&i| self.waiver_recs[i].rule).collect();
         let mut hits: Vec<(&'static str, &'static str)> = Vec::new();
         if in_sim_scope(self.path) {
             for tok in DET_COLLECTIONS {
@@ -493,23 +677,271 @@ impl<'a> Scanner<'a> {
             }
         }
         for (rule, tok) in hits {
-            if waived.contains(rule) {
-                self.waivers_used += 1;
-            } else {
-                let ctx = self
-                    .fn_stack
-                    .last()
-                    .map(|(name, _)| format!(" in fn {name}"))
-                    .unwrap_or_default();
-                self.findings.push(Finding {
-                    rule,
-                    file: self.path.to_string(),
-                    line: line_no,
-                    detail: format!("{tok}{ctx}"),
-                });
+            let detail = format!("{tok}{}", self.fn_ctx());
+            self.emit(line_no, rule, detail, active, &waived);
+        }
+        if in_lib_scope(self.path) {
+            self.match_conc(line_no, code, active, &waived);
+        }
+    }
+
+    /// The concurrency rules (DESIGN.md §14). Scope matches `panic-path`:
+    /// all of `rust/src/` except `testutil/`.
+    fn match_conc(
+        &mut self,
+        line_no: usize,
+        code: &str,
+        active: &BTreeSet<usize>,
+        waived: &BTreeSet<&'static str>,
+    ) {
+        // position-independent per-line rules first
+        if has_token(code, "Ordering::Relaxed") {
+            if let Some(ctr) =
+                REPORT_COUNTERS.iter().find(|c| has_token(code, c))
+            {
+                let detail =
+                    format!("Ordering::Relaxed on {ctr}{}", self.fn_ctx());
+                self.emit(line_no, "relaxed-counter", detail, active, waived);
+            }
+        }
+        if has_token(code, "static mut") {
+            self.emit(
+                line_no,
+                "unsync-shared",
+                "static mut".to_string(),
+                active,
+                waived,
+            );
+        }
+        if has_token(code, "unsafe impl")
+            && (has_token(code, "Send") || has_token(code, "Sync"))
+        {
+            self.emit(
+                line_no,
+                "unsync-shared",
+                "unsafe impl Send/Sync".to_string(),
+                active,
+                waived,
+            );
+        }
+        for tok in ["*mut", "*const"] {
+            if has_token(code, tok) {
+                let detail = format!("raw pointer ({tok}){}", self.fn_ctx());
+                self.emit(line_no, "unsync-shared", detail, active, waived);
+            }
+        }
+
+        // positional events: acquisitions, explicit drops, blocking calls
+        // — processed left to right so `drop(g); tx.send(x)` on one line
+        // is already guard-free at the send
+        enum Ev {
+            Acq(String),
+            Rel(String),
+            Block(&'static str),
+        }
+        let mut evs: Vec<(usize, Ev)> = Vec::new();
+        for (off, name) in find_acquisitions(code, self.lock_names) {
+            evs.push((off, Ev::Acq(name)));
+        }
+        for (off, name) in find_drops(code) {
+            evs.push((off, Ev::Rel(name)));
+        }
+        for tok in BLOCKING {
+            for off in token_offsets(code, tok) {
+                evs.push((off, Ev::Block(tok)));
+            }
+        }
+        if evs.is_empty() {
+            return;
+        }
+        evs.sort_by_key(|e| e.0);
+        // a binding only attaches when the line acquires exactly once
+        // (`let (a, b) = (m1.lock(), m2.lock())` keeps both anonymous)
+        let n_acq =
+            evs.iter().filter(|(_, e)| matches!(e, Ev::Acq(_))).count();
+        let binding =
+            if n_acq == 1 { let_binding_name(code) } else { None };
+        for (off, ev) in evs {
+            match ev {
+                Ev::Acq(name) => {
+                    // `let g = m.lock();` lives at the current depth; in
+                    // `{ let g = m.lock(); }` the guard sits inside the
+                    // braces before the token, and in `if let Ok(g) =
+                    // m.lock() {` inside the block the line opens — take
+                    // the deeper of the two approximations
+                    let depth_at = self.depth
+                        + line_brace_delta(&code[..off])
+                            .max(line_brace_delta(code))
+                            .max(0);
+                    for held in
+                        self.guards.iter().map(|g| g.lock.clone()).collect::<Vec<_>>()
+                    {
+                        if waived.contains("lock-order") {
+                            self.consume(active, "lock-order");
+                        } else {
+                            self.lock_edges.push(LockEdge {
+                                file: self.path.to_string(),
+                                line: line_no,
+                                first: held,
+                                second: name.clone(),
+                            });
+                        }
+                    }
+                    self.guards.push(Guard {
+                        lock: name,
+                        binding: binding.clone(),
+                        depth: depth_at,
+                    });
+                }
+                Ev::Rel(name) => {
+                    if let Some(pos) = self.guards.iter().rposition(|g| {
+                        g.binding.as_deref() == Some(&name) || g.lock == name
+                    }) {
+                        self.guards.remove(pos);
+                    }
+                }
+                Ev::Block(tok) => {
+                    let held = self.guards.last().map(|g| g.lock.clone());
+                    if let Some(lock) = held {
+                        let detail = format!(
+                            "guard of {lock} held across {tok}{}",
+                            self.fn_ctx()
+                        );
+                        self.emit(
+                            line_no,
+                            "lock-across-blocking",
+                            detail,
+                            active,
+                            waived,
+                        );
+                    }
+                }
             }
         }
     }
+}
+
+/// All word-boundary match offsets of `tok` in `code` (the positional
+/// twin of [`has_token`]).
+fn token_offsets(code: &str, tok: &str) -> Vec<usize> {
+    let (c, t) = (code.as_bytes(), tok.as_bytes());
+    let mut out = Vec::new();
+    if t.is_empty() || c.len() < t.len() {
+        return out;
+    }
+    let (first, last) = (t[0], t[t.len() - 1]);
+    let mut start = 0;
+    while let Some(off) = find_bytes(&c[start..], t) {
+        let i = start + off;
+        let j = i + t.len();
+        let left_ok = !is_ident(first) || i == 0 || !is_ident(c[i - 1]);
+        let right_ok = !is_ident(last) || j >= c.len() || !is_ident(c[j]);
+        if left_ok && right_ok {
+            out.push(i);
+        }
+        start = i + 1;
+    }
+    out
+}
+
+/// Lock acquisitions on a stripped line: `(offset, lock name)` for every
+/// `NAME.lock()`/`.read()`/`.write()` (one optional `[..]` index group
+/// between name and method) whose NAME is a declared lock. A `)` before
+/// the dot (`stdout().lock()`) means a call result, not a named lock —
+/// skipped.
+fn find_acquisitions(
+    code: &str,
+    locks: &BTreeSet<String>,
+) -> Vec<(usize, String)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    if locks.is_empty() {
+        return out;
+    }
+    for tok in ACQUIRE {
+        let mut start = 0;
+        while let Some(off) = code[start..].find(tok) {
+            let i = start + off; // offset of the '.'
+            start = i + tok.len();
+            let mut k = i;
+            if k > 0 && b[k - 1] == b']' {
+                // hop backwards over one balanced [...] group
+                let mut depth = 0i32;
+                let mut p = k;
+                let mut matched = false;
+                while p > 0 {
+                    p -= 1;
+                    if b[p] == b']' {
+                        depth += 1;
+                    } else if b[p] == b'[' {
+                        depth -= 1;
+                        if depth == 0 {
+                            matched = true;
+                            break;
+                        }
+                    }
+                }
+                if !matched {
+                    continue;
+                }
+                k = p;
+            }
+            let e = k;
+            let mut s = e;
+            while s > 0 && is_ident(b[s - 1]) {
+                s -= 1;
+            }
+            if s == e {
+                continue;
+            }
+            let name = &code[s..e];
+            if locks.contains(name) {
+                out.push((i, name.to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// Explicit guard releases: `(offset, NAME)` for every `drop(NAME)` /
+/// `mem::drop(NAME)` on the line.
+fn find_drops(code: &str) -> Vec<(usize, String)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(off) = code[start..].find("drop(") {
+        let i = start + off;
+        start = i + 5;
+        if i > 0 && is_ident(b[i - 1]) {
+            continue; // airdrop( etc.
+        }
+        let mut j = i + 5;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let s = j;
+        let mut k = j;
+        while k < b.len() && is_ident(b[k]) {
+            k += 1;
+        }
+        if k > s && k < b.len() && b[k] == b')' {
+            out.push((i, code[s..k].to_string()));
+        }
+    }
+    out
+}
+
+/// Net `{`/`}` count of a stripped line.
+fn line_brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for &c in code.as_bytes() {
+        match c {
+            b'{' => d += 1,
+            b'}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
 }
 
 /// First `fn NAME` on the (stripped) line, if any.
@@ -722,5 +1154,154 @@ mod tests {
                    }\n    }\n    fn calm(&self) { let v = vec![1]; }\n}\n";
         let got = findings("rust/src/algo/x.rs", src);
         assert_eq!(got, vec![("hot-alloc".to_string(), 4)]);
+    }
+
+    // ---- concurrency rules (DESIGN.md §14) ----------------------------
+
+    fn conc_scan(path: &str, src: &str, locks: &[&str]) -> FileScan {
+        let locks: BTreeSet<String> =
+            locks.iter().map(|s| s.to_string()).collect();
+        scan_source_with(path, src, &locks)
+    }
+
+    #[test]
+    fn nested_acquisitions_record_edges() {
+        let src = "fn f(&self) {\n    let ga = self.a.lock();\n    \
+                   let gb = self.b.lock();\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["a", "b"]);
+        assert_eq!(scan.lock_edges.len(), 1);
+        let e = &scan.lock_edges[0];
+        assert_eq!((e.first.as_str(), e.second.as_str(), e.line), ("a", "b", 3));
+        // sibling (non-nested) acquisitions: no edge
+        let src = "fn f(&self) {\n    { let ga = self.a.lock(); }\n    \
+                   { let gb = self.b.lock(); }\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["a", "b"]);
+        assert!(scan.lock_edges.is_empty());
+    }
+
+    #[test]
+    fn drop_and_scope_release_guards() {
+        // explicit drop before the second acquisition: no edge
+        let src = "fn f(&self) {\n    let ga = self.a.lock();\n    \
+                   drop(ga);\n    let gb = self.b.lock();\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["a", "b"]);
+        assert!(scan.lock_edges.is_empty());
+        // a guard from an `if let` head dies with its block
+        let src = "fn f(&self) {\n    if let Ok(ga) = self.a.lock() {\n        \
+                   x();\n    }\n    let gb = self.b.lock();\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["a", "b"]);
+        assert!(scan.lock_edges.is_empty());
+    }
+
+    #[test]
+    fn guard_held_across_blocking_call_is_flagged() {
+        let src = "fn f(&self) {\n    let g = self.slots.lock();\n    \
+                   tx.send(m);\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["slots"]);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].rule, "lock-across-blocking");
+        assert!(scan.findings[0].detail.contains("slots"));
+        // drop first (same line, left of the send): clean
+        let src = "fn f(&self) {\n    let g = self.slots.lock();\n    \
+                   drop(g); tx.send(m);\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["slots"]);
+        assert!(scan.findings.is_empty());
+        // Path::join and try_recv are not blocking calls
+        let src = "fn f(&self) {\n    let g = self.slots.lock();\n    \
+                   let p = dir.join(name);\n    let m = rx.try_recv();\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["slots"]);
+        assert!(scan.findings.is_empty());
+    }
+
+    #[test]
+    fn undeclared_receivers_never_acquire() {
+        // io .read()/.write()/stdout().lock(): none of these names are
+        // declared locks, so no guard state and no findings
+        let src = "fn f(&self) {\n    let n = file.read();\n    \
+                   out.write();\n    let h = io::stdout().lock();\n    \
+                   tx.send(m);\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["slots"]);
+        assert!(scan.findings.is_empty());
+        assert!(scan.lock_edges.is_empty());
+    }
+
+    #[test]
+    fn indexed_acquisition_resolves_the_field_name() {
+        let src = "fn f(&self) {\n    let g = \
+                   shared.snapshots[id].lock();\n    thread::sleep(d);\n}\n";
+        let scan =
+            conc_scan("rust/src/runner/x.rs", src, &["snapshots"]);
+        assert_eq!(scan.findings.len(), 1);
+        assert!(scan.findings[0].detail.contains("snapshots"));
+    }
+
+    #[test]
+    fn relaxed_counter_only_for_report_counters() {
+        let src = "fn f(&self) {\n    \
+                   self.msgs_sent.fetch_add(1, Ordering::Relaxed);\n    \
+                   self.gamma_bits.store(b, Ordering::Relaxed);\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &[]);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].rule, "relaxed-counter");
+        assert_eq!(scan.findings[0].line, 2);
+        // AcqRel on the counter: clean
+        let src = "fn f(&self) {\n    \
+                   self.msgs_sent.fetch_add(1, Ordering::AcqRel);\n}\n";
+        assert!(conc_scan("rust/src/runner/x.rs", src, &[])
+            .findings
+            .is_empty());
+    }
+
+    #[test]
+    fn unsync_shared_tokens_flag_outside_testutil() {
+        let src = "static mut GLOBAL: u64 = 0;\n\
+                   unsafe impl Send for Raw {}\n\
+                   fn f(p: *mut u8) {}\n";
+        let scan = conc_scan("rust/src/exp/x.rs", src, &[]);
+        let rules: Vec<_> = scan.findings.iter().map(|f| f.rule).collect();
+        assert_eq!(
+            rules,
+            vec!["unsync-shared", "unsync-shared", "unsync-shared"]
+        );
+        // testutil/ is exempt; `unsafe impl GlobalAlloc` is not Send/Sync
+        assert!(conc_scan("rust/src/testutil/x.rs", src, &[])
+            .findings
+            .is_empty());
+        let src = "unsafe impl GlobalAlloc for A {\n}\n";
+        assert!(conc_scan("rust/src/exp/x.rs", src, &[])
+            .findings
+            .is_empty());
+    }
+
+    #[test]
+    fn conc_waivers_suppress_and_are_consumed() {
+        let src = "fn f(&self) {\n    let g = self.slots.lock();\n    \
+                   // lint:allow(lock-across-blocking): bounded 1ms sleep\n    \
+                   thread::sleep(d);\n}\n";
+        let scan = conc_scan("rust/src/runner/x.rs", src, &["slots"]);
+        assert!(scan.findings.is_empty());
+        assert!(scan.waiver_errors.is_empty(), "consumed, not stale");
+        assert_eq!(scan.waivers_used, 1);
+    }
+
+    #[test]
+    fn stale_waiver_is_reported_and_unbaselineable() {
+        // the waived rule does not fire on the covered line
+        let src = "fn f() {\n    let x = 1; \
+                   // lint:allow(panic-path): nothing panics here\n}\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        assert!(scan.findings.is_empty());
+        assert_eq!(scan.waiver_errors.len(), 1);
+        assert_eq!(scan.waiver_errors[0].rule, STALE_WAIVER);
+        assert_eq!(scan.waiver_errors[0].line, 2);
+        assert!(scan.waiver_errors[0].detail.contains("panic-path"));
+    }
+
+    #[test]
+    fn stale_tracking_skips_test_regions() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn g() {\n        \
+                   x.unwrap(); // lint:allow(panic-path): test-only\n    }\n}\n";
+        let scan = scan_source("rust/src/exp/x.rs", src);
+        assert!(scan.waiver_errors.is_empty());
     }
 }

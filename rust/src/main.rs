@@ -95,7 +95,7 @@ fn print_help() {
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
          fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11)\n  \
          bench-baseline   run the hot-path suite + scaling sweep (8→64-node\n                          binary tree, then the 1k–50k sparse-era points) and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode);\n                          RFAST_BENCH_SCALE_MAX caps the large points by node\n                          count (0 drops them). Fails if the emitted JSON is\n                          schema-invalid (EXPERIMENTS.md).\n  \
-         lint             determinism & hot-path static analyzer (DESIGN.md \u{a7}12):\n                          scans rust/src, rust/benches, rust/tests, examples;\n                          --baseline LINT_BASELINE.json gates on the ratchet\n                          (counts may only shrink), --fix-baseline rewrites it,\n                          --out FILE writes the findings JSON, --root/--paths\n                          override the scan set. Waive a finding in place with\n                          `// lint:allow(RULE): reason` (reason mandatory)\n  \
+         lint             determinism, hot-path & concurrency static analyzer\n                          (DESIGN.md \u{a7}12, \u{a7}14): scans rust/src, rust/benches,\n                          rust/tests, examples; --baseline LINT_BASELINE.json\n                          gates on the ratchet (counts may only shrink),\n                          --fix-baseline rewrites it, --out FILE writes the\n                          findings JSON, --format github emits ::error\n                          annotations, --root/--paths override the scan set.\n                          Waive a finding in place with\n                          `// lint:allow(RULE): reason` (reason mandatory;\n                          a waiver that suppresses nothing is itself an error)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
          check-artifacts  load every AOT artifact and smoke-run it\n  \
          algos            list implemented algorithms\n  \
@@ -289,11 +289,14 @@ fn fuzz_replay(dir: PathBuf) -> Result<(), String> {
 ///   regressions or malformed waivers exit non-zero, improvements pass
 ///   with a nudge to `--fix-baseline`;
 /// * with `--fix-baseline`: rewrite FILE from this scan (refused while
-///   malformed waivers exist — they are never baselineable);
+///   malformed or stale waivers exist — they are never baselineable);
 /// * with neither: any finding at all exits non-zero.
 ///
 /// `--out FILE` additionally writes the findings JSON
-/// (`rfast-lint-findings/v1`) — CI uploads it on failure.
+/// (`rfast-lint-findings/v2`) — CI uploads it on failure. `--format
+/// github` switches the per-finding lines (and ratchet regressions) to
+/// GitHub Actions `::error` annotations so CI failures land on the
+/// offending line in the PR diff; the summary/nudge lines stay plain.
 fn cmd_lint(args: &Args) -> Result<(), String> {
     use rfast::lint;
 
@@ -312,10 +315,21 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
             return Err("--paths: empty list".into());
         }
     }
+    let github = match args.get("format") {
+        None => false,
+        Some("github") => true,
+        Some(other) => {
+            return Err(format!("--format {other}: expected `github`"));
+        }
+    };
     let report = lint::run(&cfg)?;
 
     for f in report.findings.iter().chain(report.waiver_errors.iter()) {
-        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.detail);
+        if github {
+            println!("{}", lint::github_annotation(f));
+        } else {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.detail);
+        }
     }
     println!(
         "lint: {} file(s), {} finding(s), {} waiver(s) used, {} bad \
@@ -343,8 +357,8 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
     }
     if !report.waiver_errors.is_empty() {
         return Err(format!(
-            "{} malformed waiver pragma(s) — fix them; bad waivers are \
-             never baselineable",
+            "{} malformed or stale waiver pragma(s) — fix or remove them; \
+             they are never baselineable",
             report.waiver_errors.len()
         ));
     }
@@ -360,11 +374,15 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
             // ratchet was computed above; unwrap-free by construction
             let r = ratchet.unwrap_or_default();
             for d in &r.regressions {
-                println!(
-                    "RATCHET: {} in {} went {} -> {} (new findings need a \
-                     fix or a waiver, not a bigger baseline)",
-                    d.rule, d.file, d.base, d.cur
-                );
+                if github {
+                    println!("{}", lint::github_delta_annotation(d));
+                } else {
+                    println!(
+                        "RATCHET: {} in {} went {} -> {} (new findings \
+                         need a fix or a waiver, not a bigger baseline)",
+                        d.rule, d.file, d.base, d.cur
+                    );
+                }
             }
             if !r.improvements.is_empty() {
                 println!(

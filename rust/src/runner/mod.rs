@@ -111,6 +111,12 @@ struct Shared {
     /// shared fault/link layer: wall clock + atomic per-(link, channel)
     /// in-flight flags + scalar/scenario fault queries
     faults: RunnerFaultLayer,
+    // Report-counter ordering contract (DESIGN.md §14, `relaxed-counter`):
+    // every counter below feeds RunnerStats/report scalars, so writers
+    // use AcqRel RMWs and readers Acquire loads — a coordinator-side read
+    // then observes everything the worker published before bumping the
+    // counter. `gamma_bits` and `stop` are single-value signals, not
+    // counters; Relaxed remains sound for them.
     total_steps: AtomicU64,
     msgs_sent: AtomicU64,
     msgs_lost: AtomicU64,
@@ -251,7 +257,7 @@ impl ThreadedRunner {
                         .series_mut("acc_vs_wall", "wall_seconds", "accuracy")
                         .push(elapsed, acc);
                 }
-                let total = shared.total_steps.load(Ordering::Relaxed);
+                let total = shared.total_steps.load(Ordering::Acquire);
                 report
                     .series_mut("steps_vs_wall", "wall_seconds", "total_steps")
                     .push(elapsed, total as f64);
@@ -317,13 +323,13 @@ impl ThreadedRunner {
             steps_per_node: shared
                 .steps
                 .iter()
-                .map(|s| s.load(Ordering::Relaxed))
+                .map(|s| s.load(Ordering::Acquire))
                 .collect(),
-            msgs_sent: shared.msgs_sent.load(Ordering::Relaxed),
-            msgs_lost: shared.msgs_lost.load(Ordering::Relaxed),
-            msgs_backpressured: shared.msgs_backpressured.load(Ordering::Relaxed),
-            msgs_paced: shared.msgs_paced.load(Ordering::Relaxed),
-            bytes_sent: shared.bytes_sent.load(Ordering::Relaxed),
+            msgs_sent: shared.msgs_sent.load(Ordering::Acquire),
+            msgs_lost: shared.msgs_lost.load(Ordering::Acquire),
+            msgs_backpressured: shared.msgs_backpressured.load(Ordering::Acquire),
+            msgs_paced: shared.msgs_paced.load(Ordering::Acquire),
+            bytes_sent: shared.bytes_sent.load(Ordering::Acquire),
         };
         let total_steps = stats.steps_per_node.iter().sum::<u64>();
         report.set_scalar("wall_seconds", stats.wall_seconds);
@@ -374,22 +380,22 @@ fn send_all(
     n: usize,
 ) {
     for m in msgs.drain(..) {
-        shared.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        shared.msgs_sent.fetch_add(1, Ordering::AcqRel);
         match shared.faults.send_verdict(lossy, &m, rng) {
             SendVerdict::Backpressured => {
-                shared.msgs_backpressured.fetch_add(1, Ordering::Relaxed);
+                shared.msgs_backpressured.fetch_add(1, Ordering::AcqRel);
                 node.on_send_failed(m);
                 continue;
             }
             SendVerdict::Lost => {
-                shared.msgs_lost.fetch_add(1, Ordering::Relaxed);
+                shared.msgs_lost.fetch_add(1, Ordering::AcqRel);
                 node.on_send_failed(m);
                 continue;
             }
             SendVerdict::Deliver => {}
         }
         let bytes = FaultSpec::payload_bytes(&m);
-        shared.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        shared.bytes_sent.fetch_add(bytes as u64, Ordering::AcqRel);
         let now = shared.faults.clock.now();
         let mut delay = shared.faults.spec.injected_latency(now);
         let bw_delay = shared.faults.spec.bandwidth_delay(m.from, m.to, bytes);
@@ -399,7 +405,7 @@ fn send_all(
             delay += bw.sent_at(m.from * n + m.to, now, bw_delay) - now;
         }
         if delay > 0.0 {
-            shared.msgs_paced.fetch_add(1, Ordering::Relaxed);
+            shared.msgs_paced.fetch_add(1, Ordering::AcqRel);
             let mut remaining = delay;
             while remaining > 0.0 && !shared.stop.load(Ordering::Relaxed) {
                 let chunk = remaining.min(MAX_PACING_SLEEP);
@@ -500,8 +506,8 @@ fn worker_loop(
             send_all(node.as_mut(), &mut outbox, &mut rng, &mut bw, &routes,
                      &shared, lossy, n);
             if computed {
-                shared.steps[id].fetch_add(1, Ordering::Relaxed);
-                shared.total_steps.fetch_add(1, Ordering::Relaxed);
+                shared.steps[id].fetch_add(1, Ordering::AcqRel);
+                shared.total_steps.fetch_add(1, Ordering::AcqRel);
                 if let Some(l) = loss {
                     // uncontended: this node's own accumulator
                     // lint:allow(panic-path): lock poisoning means a sibling worker already panicked

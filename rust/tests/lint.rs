@@ -1,6 +1,7 @@
-//! Integration tests for `repro lint` (DESIGN.md §12): fixture corpus,
-//! waiver policy, baseline ratchet, and the live-tree self-scan against
-//! the committed `LINT_BASELINE.json`.
+//! Integration tests for `repro lint` (DESIGN.md §12, §14): fixture
+//! corpus (determinism + concurrency rule families), waiver policy
+//! (malformed and stale), baseline ratchet with v1 → v2 migration, and
+//! the live-tree self-scan against the committed `LINT_BASELINE.json`.
 
 use rfast::lint::{self, Baseline, LintConfig};
 use std::path::{Path, PathBuf};
@@ -78,6 +79,82 @@ fn bad_fixtures_trip_their_rule_and_good_pairs_stay_clean() {
         vec![("panic-path", 4), ("panic-path", 6)]
     );
     assert!(findings_for(&r, "rust/src/exp/good_panic.rs").is_empty());
+}
+
+#[test]
+fn conc_bad_fixtures_trip_and_good_pairs_stay_clean() {
+    let r = scan_fixtures();
+
+    // the seeded two-lock inversion: the cross-file acquisition graph
+    // holds a -> b and b -> a, so BOTH nested-acquisition sites are on
+    // the cycle and each function is flagged at its second lock()
+    assert_eq!(
+        findings_for(&r, "rust/src/runner/bad_lock_order.rs"),
+        vec![("lock-order", 12), ("lock-order", 18)]
+    );
+    // a consistent global order contributes edges but no cycle
+    assert!(findings_for(&r, "rust/src/runner/good_lock_order.rs").is_empty());
+
+    // guard held across a blocking channel send vs dropped first
+    assert_eq!(
+        findings_for(&r, "rust/src/runner/bad_lock_blocking.rs"),
+        vec![("lock-across-blocking", 10)]
+    );
+    assert!(
+        findings_for(&r, "rust/src/runner/good_lock_blocking.rs").is_empty()
+    );
+
+    // Relaxed on a report counter vs AcqRel/Acquire discipline
+    assert_eq!(
+        findings_for(&r, "rust/src/runner/bad_relaxed.rs"),
+        vec![("relaxed-counter", 7)]
+    );
+    assert!(findings_for(&r, "rust/src/runner/good_relaxed.rs").is_empty());
+
+    // static mut, raw pointer, unsafe impl Send — one finding each
+    assert_eq!(
+        findings_for(&r, "rust/src/faults/bad_unsync.rs"),
+        vec![
+            ("unsync-shared", 3),
+            ("unsync-shared", 5),
+            ("unsync-shared", 7)
+        ]
+    );
+    assert!(findings_for(&r, "rust/src/faults/good_unsync.rs").is_empty());
+}
+
+#[test]
+fn stale_waiver_is_an_error_not_a_finding() {
+    let r = scan_fixtures();
+    let errs: Vec<_> = r
+        .waiver_errors
+        .iter()
+        .filter(|f| f.file == "rust/src/exp/stale_waiver.rs")
+        .collect();
+    assert_eq!(errs.len(), 1);
+    assert_eq!((errs[0].rule, errs[0].line), ("stale-waiver", 5));
+    assert!(errs[0].detail.contains("suppresses nothing"));
+    // stale waivers route through waiver_errors, never findings — so
+    // they can never be grandfathered into a baseline
+    assert!(findings_for(&r, "rust/src/exp/stale_waiver.rs").is_empty());
+}
+
+#[test]
+fn v1_baseline_files_still_load_and_ratchet() {
+    let dir = std::env::temp_dir().join("rfast_lint_v1_migration");
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+    let path = dir.join("LINT_BASELINE_v1.json");
+    let r = scan_fixtures();
+    let b = Baseline::from_report(&r);
+    let text = lint::to_pretty(&b.to_json())
+        .replace("rfast-lint-baseline/v2", "rfast-lint-baseline/v1");
+    std::fs::write(&path, text).expect("write v1 baseline");
+    let loaded = Baseline::load(&path).expect("v1 baseline parses");
+    assert_eq!(loaded, b);
+    assert!(loaded.diff(&b).is_clean());
+    // any rewrite emits the v2 schema tag
+    assert!(lint::to_pretty(&loaded.to_json())
+        .contains("rfast-lint-baseline/v2"));
 }
 
 #[test]

@@ -1,0 +1,7 @@
+// Fixture: a well-formed waiver whose rule never fires on its target
+// line is itself an error (stale-waiver) and can never be baselined.
+
+pub fn total(xs: &[u64]) -> u64 {
+    // lint:allow(panic-path): nothing on the next line can panic
+    xs.iter().sum()
+}

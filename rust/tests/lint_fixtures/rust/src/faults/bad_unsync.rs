@@ -1,0 +1,7 @@
+// Fixture: unsynchronized shared mutable state (unsync-shared).
+
+pub static mut TICKS: u64 = 0;
+
+pub struct Cell(pub *mut u64);
+
+unsafe impl Send for Cell {}

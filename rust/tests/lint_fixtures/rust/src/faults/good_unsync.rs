@@ -1,0 +1,9 @@
+// Fixture: OnceLock-published state needs no unsafe sharing — clean.
+
+use std::sync::OnceLock;
+
+pub static TICKS: OnceLock<u64> = OnceLock::new();
+
+pub fn ticks() -> u64 {
+    *TICKS.get_or_init(|| 0)
+}

@@ -1,0 +1,11 @@
+// Fixture: a guard held across a blocking channel send — the receiver
+// may need the same lock to drain (lock-across-blocking).
+
+pub struct Hub {
+    pub queue: std::sync::Mutex<Vec<u64>>,
+}
+
+pub fn push(hub: &Hub, tx: &std::sync::mpsc::Sender<u64>, v: u64) {
+    let g = hub.queue.lock();
+    tx.send(v);
+}

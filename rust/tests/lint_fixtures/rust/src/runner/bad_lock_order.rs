@@ -1,0 +1,21 @@
+// Fixture: two functions acquire the same pair of locks in opposite
+// orders — the classic two-lock deadlock shape (lock-order).
+
+pub struct Pair {
+    pub a: std::sync::Mutex<u64>,
+    pub b: std::sync::Mutex<u64>,
+}
+
+impl Pair {
+    pub fn ab(&self) -> u64 {
+        let ga = self.a.lock();
+        let gb = self.b.lock();
+        0
+    }
+
+    pub fn ba(&self) -> u64 {
+        let gb = self.b.lock();
+        let ga = self.a.lock();
+        0
+    }
+}

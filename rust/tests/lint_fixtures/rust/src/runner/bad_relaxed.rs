@@ -1,0 +1,8 @@
+// Fixture: Ordering::Relaxed on a report counter — readers may see a
+// stale total in RunnerStats (relaxed-counter).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(msgs_sent: &AtomicU64) {
+    msgs_sent.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,11 @@
+// Fixture: dropping the guard before the blocking send is clean.
+
+pub struct Hub {
+    pub work: std::sync::Mutex<Vec<u64>>,
+}
+
+pub fn push(hub: &Hub, tx: &std::sync::mpsc::Sender<u64>, v: u64) {
+    let g = hub.work.lock();
+    drop(g);
+    tx.send(v);
+}

@@ -1,0 +1,20 @@
+// Fixture: a consistent global acquisition order (lo before hi, in
+// every function) never forms a cycle — clean.
+
+pub struct Pair {
+    pub lo: std::sync::Mutex<u64>,
+    pub hi: std::sync::Mutex<u64>,
+}
+
+impl Pair {
+    pub fn sum(&self) -> u64 {
+        let glo = self.lo.lock();
+        let ghi = self.hi.lock();
+        0
+    }
+
+    pub fn swap(&self) {
+        let glo = self.lo.lock();
+        let ghi = self.hi.lock();
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: report counters use AcqRel RMWs and Acquire loads — clean.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(msgs_sent: &AtomicU64) -> u64 {
+    msgs_sent.fetch_add(1, Ordering::AcqRel);
+    msgs_sent.load(Ordering::Acquire)
+}
