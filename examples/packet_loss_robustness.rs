@@ -73,7 +73,7 @@ fn main() {
     });
     let engine = match args.get_or("engine", "sim").as_str() {
         "sim" => Engine::Sim,
-        "threaded" => Engine::Threaded { pace: Some(1e-4) },
+        "threaded" => Engine::threaded(Some(1e-4)),
         other => {
             eprintln!("error: unknown --engine {other:?} (sim|threaded)");
             std::process::exit(2);

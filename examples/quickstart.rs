@@ -2,7 +2,7 @@
 //! `Experiment` builder — on both a closed-form quadratic (exact
 //! optimality gap) and the paper's logistic-regression workload. The
 //! same chain runs on the wall-clock engine by swapping
-//! `.engine(Engine::Threaded { pace })` in.
+//! `.engine(Engine::threaded(pace))` in.
 //!
 //!     cargo run --release --example quickstart
 

@@ -51,7 +51,7 @@ fn main() {
             // wall clock: pace each local iteration at compute_mean so
             // the cadence matches the simulator's calibration
             cfg.eval_every = 0.25;
-            (Engine::Threaded { pace: Some(cfg.compute_mean) },
+            (Engine::threaded(Some(cfg.compute_mean)),
              Stop::TargetLoss { loss: target, max_time: 60.0 })
         }
         other => {

@@ -11,7 +11,7 @@
 //!     .topology(&topo)
 //!     .config(cfg)
 //!     .scenario(&sc)
-//!     .engine(Engine::Threaded { pace: Some(0.01) })
+//!     .engine(Engine::threaded(Some(0.01)))
 //!     .stop(Stop::Epochs(10.0))
 //!     .run()?
 //! ```
@@ -40,7 +40,7 @@ use crate::config::SimConfig;
 use crate::graph::{ArchSpec, Topology, TopologyKind};
 use crate::metrics::{Report, Series};
 use crate::oracle::{LogRegFactory, OracleFactory};
-use crate::runner::{RunnerStats, ThreadedRunner};
+use crate::runner::{MailboxCfg, RunnerStats, ThreadedRunner};
 use crate::scenario::Scenario;
 use crate::sim::{SimStats, Simulator};
 use std::io::Write;
@@ -121,13 +121,27 @@ impl Stop {
 pub enum Engine {
     /// Deterministic discrete-event simulator (virtual time).
     Sim,
-    /// Thread-per-node wall-clock runner. `pace` bounds the minimum
-    /// per-iteration duration in seconds (`None` when the oracle is
-    /// naturally paced by real compute).
-    Threaded { pace: Option<f64> },
+    /// Actor-pool wall-clock runner: M node actors multiplexed over N OS
+    /// worker threads. `pace` bounds the minimum per-iteration duration
+    /// in seconds (`None` when the oracle is naturally paced by real
+    /// compute); `workers` sizes the pool (`None` = one per core,
+    /// clamped to the node count); `mailbox` sets per-actor queue
+    /// capacity and overflow policy. [`Engine::threaded`] fills the
+    /// latter two with defaults.
+    Threaded {
+        pace: Option<f64>,
+        workers: Option<usize>,
+        mailbox: MailboxCfg,
+    },
 }
 
 impl Engine {
+    /// `Engine::Threaded` with default pool sizing and mailbox knobs —
+    /// the spelling every call site that only cares about pacing uses.
+    pub fn threaded(pace: Option<f64>) -> Engine {
+        Engine::Threaded { pace, workers: None, mailbox: MailboxCfg::default() }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Sim => "sim",
@@ -230,6 +244,11 @@ pub struct RunStats {
     pub virtual_time: Option<f64>,
     /// Threaded only: wall seconds the run took.
     pub wall_seconds: Option<f64>,
+    /// Threaded only: messages discarded by a full actor mailbox under a
+    /// drop overflow policy (zero under the default backpressure).
+    pub msgs_dropped: Option<u64>,
+    /// Threaded only: worker threads the actor pool ran on.
+    pub workers: Option<usize>,
 }
 
 impl RunStats {
@@ -245,6 +264,8 @@ impl RunStats {
             comm_wakes: Some(s.comm_wakes),
             virtual_time: Some(s.virtual_time),
             wall_seconds: None,
+            msgs_dropped: None,
+            workers: None,
         }
     }
 
@@ -260,6 +281,8 @@ impl RunStats {
             comm_wakes: None,
             virtual_time: None,
             wall_seconds: Some(s.wall_seconds),
+            msgs_dropped: Some(s.msgs_dropped),
+            workers: Some(s.workers),
         }
     }
 
@@ -546,8 +569,8 @@ impl Experiment {
         let (topo, cfg, stop) = self.validated(self.engine)?;
         match self.engine {
             Engine::Sim => self.run_on_sim(topo, cfg, stop),
-            Engine::Threaded { pace } => {
-                self.run_on_threaded(topo, cfg, stop, pace)
+            Engine::Threaded { pace, workers, mailbox } => {
+                self.run_on_threaded(topo, cfg, stop, pace, workers, mailbox)
             }
         }
     }
@@ -594,16 +617,22 @@ impl Experiment {
         Ok(Run { report, stats, engine: Engine::Sim })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_on_threaded(&self, topo: &Topology, cfg: SimConfig, stop: Stop,
-                       pace: Option<f64>) -> Result<Run, ExpError> {
-        let engine = Engine::Threaded { pace };
+                       pace: Option<f64>, workers: Option<usize>,
+                       mailbox: MailboxCfg) -> Result<Run, ExpError> {
+        let engine = Engine::Threaded { pace, workers, mailbox };
         match self.workload {
             Workload::LogReg => {
                 let factory = LogRegFactory::paper_workload(
                     topo.n(), cfg.batch, cfg.skew_alpha, cfg.seed);
                 let x0 = self.workload.x0(factory.dim(), cfg.seed);
                 let mut runner =
-                    ThreadedRunner::new(cfg, topo, self.algo, x0);
+                    ThreadedRunner::new(cfg, topo, self.algo, x0)
+                        .with_mailbox(mailbox);
+                if let Some(w) = workers {
+                    runner = runner.with_workers(w);
+                }
                 if let Some(p) = pace {
                     runner = runner.with_pace(p);
                 }
@@ -623,7 +652,11 @@ impl Experiment {
                 // contract needs both engines starting from one x0 rule
                 let x0 = self.workload.x0(spec.dim, cfg.seed);
                 let mut runner =
-                    ThreadedRunner::new(cfg, topo, self.algo, x0);
+                    ThreadedRunner::new(cfg, topo, self.algo, x0)
+                        .with_mailbox(mailbox);
+                if let Some(w) = workers {
+                    runner = runner.with_workers(w);
+                }
                 if let Some(p) = pace {
                     runner = runner.with_pace(p);
                 }
@@ -648,7 +681,7 @@ impl Experiment {
             // compatibility — kept as the authoritative error for direct
             // calls
             Workload::Mlp => {
-                Err(self.check_workload_on(Engine::Threaded { pace })
+                Err(self.check_workload_on(engine)
                     .expect_err("Mlp is not threadable"))
             }
         }

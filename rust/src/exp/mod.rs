@@ -192,7 +192,7 @@ pub fn run_sim_under(workload: Workload, algo: AlgoKind, topo: &Topology,
 /// Wall-clock counterpart of [`run_sim_under`].
 ///
 /// Migration: same chain with
-/// `.engine(Engine::Threaded { pace }).stop(stop)`; the builder returns
+/// `.engine(Engine::threaded(pace)).stop(stop)`; the builder returns
 /// the unified [`RunStats`] instead of `RunnerStats` and a typed
 /// [`ExpError`] instead of a `String`.
 #[deprecated(note = "use exp::Experiment with .engine(Engine::Threaded { .. })")]
@@ -212,7 +212,7 @@ pub fn run_threaded_under(
         .topology(topo)
         .config(cfg)
         .maybe_scenario(scenario)
-        .engine(Engine::Threaded { pace })
+        .engine(Engine::threaded(pace))
         .stop(until.into())
         .run()
         .map_err(|e| e.to_string())?;
@@ -223,7 +223,9 @@ pub fn run_threaded_under(
         msgs_lost: run.stats.msgs_lost,
         msgs_backpressured: run.stats.msgs_backpressured,
         msgs_paced: run.stats.msgs_paced,
+        msgs_dropped: run.stats.msgs_dropped.unwrap_or(0),
         bytes_sent: run.stats.bytes_sent,
+        workers: run.stats.workers.unwrap_or(0),
     };
     Ok((run.report, stats))
 }
@@ -341,7 +343,7 @@ mod tests {
             .topology(&topo)
             .config(cfg.clone())
             .scenario(&sc)
-            .engine(Engine::Threaded { pace: Some(5e-4) })
+            .engine(Engine::threaded(Some(5e-4)))
             .stop(Stop::Time(0.3))
             .run()
             .unwrap();
@@ -355,7 +357,7 @@ mod tests {
         let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
             .topology(&topo)
             .config(cfg)
-            .engine(Engine::Threaded { pace: None })
+            .engine(Engine::threaded(None))
             .stop(Stop::Time(0.1))
             .run()
             .unwrap_err();

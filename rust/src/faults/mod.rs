@@ -302,10 +302,13 @@ pub enum SendVerdict {
 }
 
 /// How `(from, to)` pairs map to channel-slot indices: the dense `n × n`
-/// address space (small n, and unit tests that probe arbitrary pairs) or
-/// a [`LinkIndex`] over the topology's actual links (slots scale with
-/// edge count, not n²).
+/// address space (unit tests that probe arbitrary pairs) or a
+/// [`LinkIndex`] over the topology's actual links (slots scale with edge
+/// count, not n²). Both engines route exclusively through the sparse
+/// form; the dense form survives only behind the `#[cfg(test)]`
+/// constructor below.
 enum LinkMap {
+    #[cfg_attr(not(test), allow(dead_code))]
     Dense { n: usize },
     Sparse(LinkIndex),
 }
@@ -348,8 +351,12 @@ pub type SimFaultLayer = FaultLayer<VirtualClock, LocalLinks>;
 pub type RunnerFaultLayer = FaultLayer<WallClock, SharedLinks>;
 
 impl<C: Clock, L: LinkSlots> FaultLayer<C, L> {
-    /// Dense-addressed layer (`n² × CHANNELS` slots) — the small-n
-    /// compatibility constructor the runner and unit tests use.
+    /// Dense-addressed layer (`n² × CHANNELS` slots) — a test-only
+    /// convenience for probing arbitrary `(from, to)` pairs without
+    /// building a topology. Production engines construct via
+    /// [`with_links`](Self::with_links) so channel-slot state scales with
+    /// edge count.
+    #[cfg(test)]
     pub fn new(n: usize, clock: C, spec: FaultSpec) -> FaultLayer<C, L> {
         Self::with_map(LinkMap::Dense { n }, clock, spec)
     }

@@ -23,10 +23,11 @@ pub mod shrink;
 
 use crate::algo::AlgoKind;
 use crate::config::SimConfig;
-use crate::exp::{Experiment, QuadSpec, Stop, Workload};
+use crate::exp::{Engine, Experiment, QuadSpec, Stop, Workload};
 use crate::graph::ArchSpec;
 use crate::jsonio::{self, Json};
 use crate::prng::Rng;
+use crate::runner::MailboxCfg;
 use crate::scenario::Scenario;
 
 /// Schema tag of committed repro files — bump on breaking layout change.
@@ -35,6 +36,20 @@ pub const SCHEMA: &str = "rfast-fuzz-repro/v1";
 /// Cases per `repro fuzz` run when neither `--budget` nor
 /// `RFAST_FUZZ_BUDGET` is given.
 pub const DEFAULT_BUDGET: u64 = 50;
+
+/// Cases per `repro fuzz --engine threaded` run by default: wall-clock
+/// cases cost real seconds each where virtual-time cases cost
+/// milliseconds, so the actor-engine sweep keeps a small budget.
+pub const DEFAULT_THREADED_BUDGET: u64 = 8;
+
+/// Pacing floor of threaded fuzz runs (seconds per local iteration):
+/// fast enough that a small budget finishes in CI, slow enough that the
+/// actor scheduler's suspend/resume machinery actually engages.
+const THREADED_PACE: f64 = 1e-4;
+
+/// Worker-pool size of threaded fuzz runs — deliberately smaller than
+/// most sampled node counts, so every case exercises M > N multiplexing.
+const THREADED_WORKERS: usize = 4;
 
 /// The shrinker never reduces the iteration budget below this.
 pub const ITERS_FLOOR: u64 = 50;
@@ -161,6 +176,35 @@ impl FuzzCase {
             .stop(Stop::Iterations(self.iters));
         match exp.run_sim_probed(oracles::MassProbe::capture) {
             Ok((run, probe)) => oracles::check(self, &run, &probe),
+            Err(e) => CaseOutcome::fail("setup", e.to_string()),
+        }
+    }
+
+    /// Execute on the wall-clock actor runner (small worker pool, default
+    /// mailbox) and check the schedule-independent oracle subset
+    /// ([`oracles::check_threaded`]): liveness and counter conservation
+    /// must hold under real preemptive scheduling exactly as under the
+    /// simulator's deterministic one.
+    pub fn run_threaded(&self) -> CaseOutcome {
+        let topo = match self.arch.build(self.n) {
+            Ok(t) => t,
+            Err(e) => {
+                return CaseOutcome::fail("setup", format!("arch build: {e}"))
+            }
+        };
+        let spec = QuadSpec::heterogeneous(4, 0.5, 2.0);
+        let exp = Experiment::new(Workload::Quadratic(spec), AlgoKind::RFast)
+            .topology(&topo)
+            .config(self.config())
+            .scenario(&self.scenario)
+            .engine(Engine::Threaded {
+                pace: Some(THREADED_PACE),
+                workers: Some(THREADED_WORKERS),
+                mailbox: MailboxCfg::default(),
+            })
+            .stop(Stop::Iterations(self.iters));
+        match exp.run() {
+            Ok(run) => oracles::check_threaded(self, &run),
             Err(e) => CaseOutcome::fail("setup", e.to_string()),
         }
     }
@@ -374,6 +418,29 @@ pub fn run_corpus(seed: u64, budget: u64,
                 violation,
                 detail: outcome.detail,
                 shrunk,
+            });
+        }
+    }
+    FuzzReport { seed, budget, failures }
+}
+
+/// Replay `budget` generated cases on the actor runner (`repro fuzz
+/// --engine threaded`). Case *generation* stays a pure function of the
+/// seed; the verdict depends on real OS scheduling, so there is no
+/// shrinker here — reproduce a failing case's fault schedule under
+/// [`run_corpus`] for a deterministic minimal repro.
+pub fn run_corpus_threaded(seed: u64, budget: u64) -> FuzzReport {
+    let mut failures = Vec::new();
+    for case_index in 0..budget {
+        let case = FuzzCase::sample(seed, case_index);
+        let outcome = case.run_threaded();
+        if let Some(violation) = outcome.violation {
+            failures.push(Failure {
+                case_index,
+                case,
+                violation,
+                detail: outcome.detail,
+                shrunk: None,
             });
         }
     }

@@ -180,3 +180,94 @@ pub fn check(case: &FuzzCase, run: &Run, probe: &MassProbe) -> CaseOutcome {
     }
     CaseOutcome::pass()
 }
+
+/// Schedule-independent subset of the catalog, for `repro fuzz --engine
+/// threaded` runs on the actor pool. `gap_bounded` and
+/// `mass_conservation` are calibrated against virtual-time delivery
+/// ratios and stay sim-only; liveness and counter conservation must hold
+/// under real preemptive scheduling too:
+///
+/// * `no_stuck` — the full iteration budget executed. A lost actor
+///   wakeup, a wedged (link, channel) slot (e.g. a mailbox drop that
+///   never released its channel) or a never-resumed suspend starves the
+///   global step counter.
+/// * `scalar_sanity` — terminal verdicts (lost / backpressured /
+///   mailbox-dropped) never exceed or double-count sends, the report's
+///   scalar table agrees with the engine counters, and the wall clock
+///   and pool size read as valid.
+pub fn check_threaded(case: &FuzzCase, run: &Run) -> CaseOutcome {
+    // no_stuck
+    let steps = run.stats.total_steps();
+    if steps < case.iters {
+        return CaseOutcome::fail(
+            "no_stuck",
+            format!("only {steps} of {} budgeted steps ran", case.iters),
+        );
+    }
+
+    // scalar_sanity
+    let s = &run.stats;
+    let dropped = s.msgs_dropped.unwrap_or(0);
+    for (what, count) in [
+        ("msgs_lost", s.msgs_lost),
+        ("msgs_backpressured", s.msgs_backpressured),
+        ("msgs_paced", s.msgs_paced),
+        ("msgs_dropped", dropped),
+    ] {
+        if count > s.msgs_sent {
+            return CaseOutcome::fail(
+                "scalar_sanity",
+                format!("{what} {count} > msgs_sent {}", s.msgs_sent),
+            );
+        }
+    }
+    // lost / backpressured / dropped are terminal per send attempt, so
+    // their sum never exceeds sends (paced messages still deliver and are
+    // counted separately)
+    let verdicts = s.msgs_lost + s.msgs_backpressured + dropped;
+    if verdicts > s.msgs_sent {
+        return CaseOutcome::fail(
+            "scalar_sanity",
+            format!(
+                "verdicts double-counted: lost {} + backpressured {} + \
+                 dropped {dropped} > sent {}",
+                s.msgs_lost, s.msgs_backpressured, s.msgs_sent
+            ),
+        );
+    }
+    for (key, expect) in [
+        ("msgs_sent", s.msgs_sent as f64),
+        ("msgs_lost", s.msgs_lost as f64),
+        ("msgs_backpressured", s.msgs_backpressured as f64),
+        ("msgs_paced", s.msgs_paced as f64),
+        ("msgs_dropped", dropped as f64),
+        ("bytes_sent", s.bytes_sent as f64),
+    ] {
+        if let Some(&got) = run.report.scalars.get(key) {
+            if got != expect {
+                return CaseOutcome::fail(
+                    "scalar_sanity",
+                    format!("report scalar {key} = {got}, stats say \
+                             {expect}"),
+                );
+            }
+        }
+    }
+    match s.wall_seconds {
+        Some(w) if w.is_finite() && w >= 0.0 => {}
+        other => {
+            return CaseOutcome::fail(
+                "scalar_sanity",
+                format!("wall_seconds {other:?} is not a valid clock \
+                         reading"),
+            )
+        }
+    }
+    if s.workers.map_or(true, |w| w == 0) {
+        return CaseOutcome::fail(
+            "scalar_sanity",
+            format!("threaded run reports workers = {:?}", s.workers),
+        );
+    }
+    CaseOutcome::pass()
+}

@@ -60,7 +60,7 @@
 //!         AlgoKind::RFast)
 //!     .topology(&topo)
 //!     .config(cfg)
-//!     .engine(Engine::Sim) // Engine::Threaded { pace } = wall clock
+//!     .engine(Engine::Sim) // Engine::threaded(pace) = wall clock
 //!     .stop(Stop::Iterations(5_000))
 //!     .run()
 //!     .unwrap();

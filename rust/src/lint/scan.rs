@@ -176,11 +176,12 @@ const BLOCKING: [&str; 6] = [
 /// `fetch_add(.., Relaxed)` here can publish a count the reader's
 /// `load(Relaxed)` never observes coherently with the data it counts —
 /// writes must be `AcqRel`/`Release`, reads `Acquire` (DESIGN.md §14).
-const REPORT_COUNTERS: [&str; 11] = [
+const REPORT_COUNTERS: [&str; 12] = [
     "msgs_sent",
     "msgs_lost",
     "msgs_backpressured",
     "msgs_paced",
+    "msgs_dropped",
     "bytes_sent",
     "total_steps",
     "steps",

@@ -32,6 +32,7 @@ use rfast::data::{Dataset, Partition};
 use rfast::exp::{Engine, Experiment, Stop, Workload};
 use rfast::graph::Topology;
 use rfast::metrics::Table;
+use rfast::runner::MailboxCfg;
 use rfast::runtime::{self, Manifest, PjrtTask};
 use rfast::scenario::Scenario;
 use rfast::sim::Simulator;
@@ -93,7 +94,7 @@ fn print_help() {
          subcommands:\n  \
          train            run one training experiment (virtual-time simulator or\n                          wall-clock threaded runner; see --engine)\n  \
          scenarios        list fault-injection presets (--export DIR writes JSON)\n  \
-         fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11)\n  \
+         fuzz             deterministic fault-space fuzzer: --seed S (default 0)\n                          generates --budget N cases (default 50; env\n                          RFAST_FUZZ_BUDGET) of random scenarios × random\n                          spanning-tree pairs, checks the invariant oracles,\n                          exits 1 on any violation. --shrink reduces each\n                          failure to a minimal JSON repro in --out (default\n                          rust/tests/repros). --replay DIR re-checks every\n                          committed repro instead (DESIGN.md \u{a7}11).\n                          --engine threaded replays a small budget (default 8)\n                          on the wall-clock actor runner, checking the\n                          schedule-independent oracles (no shrink)\n  \
          bench-baseline   run the hot-path suite + scaling sweep (8→64-node\n                          binary tree, then the 1k–50k sparse-era points) and\n                          write BENCH_hotpath.json / BENCH_scaling.json to --out\n                          (default .). RFAST_BENCH_EPOCHS sets the sweep's epoch\n                          budget (default 3; ≤1 implies quick mode);\n                          RFAST_BENCH_SCALE_MAX caps the large points by node\n                          count (0 drops them). Fails if the emitted JSON is\n                          schema-invalid (EXPERIMENTS.md).\n  \
          lint             determinism, hot-path & concurrency static analyzer\n                          (DESIGN.md \u{a7}12, \u{a7}14): scans rust/src, rust/benches,\n                          rust/tests, examples; --baseline LINT_BASELINE.json\n                          gates on the ratchet (counts may only shrink),\n                          --fix-baseline rewrites it, --out FILE writes the\n                          findings JSON, --format github emits ::error\n                          annotations, --root/--paths override the scan set.\n                          Waive a finding in place with\n                          `// lint:allow(RULE): reason` (reason mandatory;\n                          a waiver that suppresses nothing is itself an error)\n  \
          graph            print a topology's W/A structure, roots, assumption check\n                          (--analyze [--delay D]: Lemma-1 contraction/ψ analysis)\n  \
@@ -105,7 +106,7 @@ fn print_help() {
          --topology SPEC    binary_tree|line|ring|exponential|mesh|star|gossip, or\n                          an asymmetric pull+push spanning-tree pair\n                          [tree:]PULL+PUSH with PULL/PUSH = KIND[@ROOT][:SEED],\n                          KIND = bfs|dfs|balanced|chain|star|random —\n                          e.g. tree:bfs@0+star@0 (DESIGN.md \u{a7}10)\n  \
          --nodes N          node count (default 8)\n  \
          --model NAME       logreg|mlp (which oracle/workload; default logreg)\n  \
-         --engine E         sim (virtual time, default) | threaded (thread-per-\n                          node, wall clock; logreg + rust oracle) | both (run\n                          sim AND threaded, emit side-by-side comparison CSVs)\n  \
+         --engine E         sim (virtual time, default) | threaded (actor pool,\n                          wall clock; logreg + rust oracle) | both (run\n                          sim AND threaded, emit side-by-side comparison CSVs)\n  \
          --oracle KIND      rust|pjrt (default rust; pjrt needs `make artifacts`)\n  \
          --scenario S       fault preset name or scenario .json path; drives\n                          either engine (see `repro scenarios`)\n  \
          --gamma G          step size\n  --seed S\n  \
@@ -113,6 +114,8 @@ fn print_help() {
          --loss-prob P      packet loss probability (async algos)\n  \
          --skew A           label-skew heterogeneity in [0,1]\n  \
          --pace S           threaded engine: min seconds per local iteration\n                          (default compute_mean; 0 disables)\n  \
+         --workers N        threaded engine: OS worker threads multiplexing the\n                          node actors (default: one per core, \u{2264} node count)\n  \
+         --mailbox C[:P]    threaded engine: per-actor mailbox capacity + overflow\n                          policy backpressure|drop-newest|drop-oldest\n                          (default 1024:backpressure)\n  \
          --stop SPEC        unified stop rule: time:T | iters:K | epochs:E |\n                          loss:L[:MAX_T]  (time is virtual s on sim, wall s on\n                          threaded — DESIGN.md \u{a7}9)\n  \
          --time T           shorthand for --stop time:T (default 300; threaded:\n                          30). Rejected with --engine both (clock-ambiguous;\n                          default there is iters:2000 — use --stop to override)\n  \
          --iters K          shorthand for --stop iters:K\n  \
@@ -181,7 +184,18 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
     if let Some(dir) = args.get("replay") {
         return fuzz_replay(PathBuf::from(dir));
     }
+    let engine = args.get_or("engine", "sim");
+    if !["sim", "threaded"].contains(&engine.as_str()) {
+        return Err(format!(
+            "fuzz: unknown --engine {engine:?} (sim|threaded)"
+        ));
+    }
     let seed: u64 = args.parse_num("seed", 0u64)?;
+    let default_budget = if engine == "threaded" {
+        fuzz::DEFAULT_THREADED_BUDGET
+    } else {
+        fuzz::DEFAULT_BUDGET
+    };
     let budget: u64 = match args.get("budget") {
         Some(v) => v
             .parse()
@@ -190,10 +204,44 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
             Ok(v) => v.parse().map_err(|_| {
                 format!("RFAST_FUZZ_BUDGET: bad value {v:?}")
             })?,
-            Err(_) => fuzz::DEFAULT_BUDGET,
+            Err(_) => default_budget,
         },
     };
     let do_shrink = args.has_flag("shrink");
+    if engine == "threaded" {
+        // wall-clock verdicts depend on real scheduling: no shrinker, no
+        // committed repros — reproduce the fault schedule under the
+        // virtual-time engine for a deterministic minimal case
+        if do_shrink {
+            return Err("fuzz: --shrink needs the deterministic engine \
+                        (drop --engine threaded)"
+                .into());
+        }
+        println!("fuzz: engine=threaded seed={seed} budget={budget}");
+        let report = fuzz::run_corpus_threaded(seed, budget);
+        if report.failures.is_empty() {
+            println!(
+                "fuzz: {budget} cases on the actor runner, liveness and \
+                 counter oracles held"
+            );
+            return Ok(());
+        }
+        for f in &report.failures {
+            println!("case {}: VIOLATION {} — {}", f.case_index,
+                     f.violation, f.detail);
+            println!(
+                "  generated: n={} arch={} iters={} gamma={} seed={} \
+                 clauses={}",
+                f.case.n, f.case.arch.name(), f.case.iters, f.case.gamma,
+                f.case.seed, fault_clauses(&f.case),
+            );
+        }
+        return Err(format!(
+            "fuzz: {} of {budget} cases violated an invariant on the \
+             actor runner",
+            report.failures.len()
+        ));
+    }
     println!("fuzz: seed={seed} budget={budget} shrink={do_shrink}");
 
     let report = fuzz::run_corpus(seed, budget, do_shrink);
@@ -743,7 +791,21 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     // default pace = compute_mean: the wall-clock cadence matches the
     // virtual-time calibration unless overridden (0 disables pacing)
     let pace: f64 = args.parse_num("pace", cfg.compute_mean)?;
-    let threaded = Engine::Threaded { pace: (pace > 0.0).then_some(pace) };
+    // actor-pool knobs: --workers N (default: one per core, clamped to
+    // the node count) and --mailbox CAP[:POLICY]
+    let workers: Option<usize> = match args.get("workers") {
+        Some(_) => Some(args.parse_num("workers", 0usize)?).filter(|&w| w > 0),
+        None => None,
+    };
+    let mailbox = match args.get("mailbox") {
+        Some(spec) => MailboxCfg::parse(&spec)?,
+        None => MailboxCfg::default(),
+    };
+    let threaded = Engine::Threaded {
+        pace: (pace > 0.0).then_some(pace),
+        workers,
+        mailbox,
+    };
     // pass the scenario through the builder's own setter so the saved
     // report labels carry the ` [scenario]` suffix on every engine
     let scenario = cfg.scenario.take();

@@ -1,0 +1,351 @@
+//! Per-actor execution: one scheduling slice of a node actor.
+//!
+//! A slice is the actor-model rewrite of one iteration of the old
+//! thread-per-node `worker_loop`, with every blocking sleep replaced by
+//! a [`TimerWheel`](super::timer) suspend (DESIGN.md §15):
+//!
+//! 1. pick up coordinator γ-decay;
+//! 2. drain the mailbox — data messages go to the algorithm (ack'd back
+//!    for loss-tolerant ones, protocol replies queued), acks free the
+//!    (link, channel) this actor holds toward the acker;
+//! 3. unless paused (churn) or blocked (`!ready`), run one local
+//!    iteration; counters, train-loss accumulator and the parameter
+//!    snapshot publish exactly as before;
+//! 4. send the outbox through the shared fault layer. Latency ramps and
+//!    bandwidth caps advance a *virtual send cursor* instead of sleeping:
+//!    each delayed message becomes a `Deliver` timer entry at its arrival
+//!    time (`msgs_paced`), and the cursor accumulates exactly the delays
+//!    the old engine slept, preserving its sender-side throughput bound;
+//! 5. suspend: until `max(send cursor, pacing target)` when that is in
+//!    the future (PACED — the straggler/pace emulation), until mail or a
+//!    churn-resume timer otherwise (WAITING).
+//!
+//! Pacing semantics are carried over verbatim: the target duration of an
+//! iteration is `max(real step time, pace) × straggler factor`, re-paced
+//! on top of any send delays — the paper slows a GPU by loading it, which
+//! scales its whole step.
+
+use super::mailbox::{Envelope, PushOutcome};
+use super::pool::{PoolShared, PACED, QUEUED, WAITING};
+use super::timer::TimerWheel;
+use super::Shared;
+use crate::algo::{Msg, NodeState};
+use crate::faults::{BwPacer, Clock, FaultSpec, SendVerdict};
+use crate::oracle::{NodeOracle, OracleFactory};
+use crate::prng::Rng;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Poll interval while paused with no scheduled resume time (open-ended
+/// churn windows) — the actor re-checks the pause predicate at this
+/// cadence, mirroring the old engine's `recv_timeout` loop.
+const PAUSE_POLL: f64 = 0.002;
+
+/// Events on a worker's timer wheel.
+pub(crate) enum TimerEvent {
+    /// Resume actor `id` (pacing over / churn re-check). `gen` guards
+    /// against stale entries: a resume is honored only if it matches the
+    /// actor's latest armed generation, so a leftover churn poll can
+    /// never cut a pacing suspend short.
+    Resume { id: usize, gen: u64 },
+    /// A delayed message (latency ramp / bandwidth cap) reaching its
+    /// arrival time; fires on the *sender's* worker, which owns the
+    /// link's FIFO ordering.
+    Deliver(Msg),
+}
+
+/// The worker-owned mutable half of one actor. Never crosses threads —
+/// which is why the oracle (possibly `!Send`, e.g. PJRT) is created by
+/// the owning worker itself and lives here.
+pub(crate) struct ActorBody {
+    pub id: usize,
+    pub node: Box<dyn NodeState>,
+    pub oracle: Option<Box<dyn NodeOracle>>,
+    pub rng: Rng,
+    outbox: Vec<Msg>,
+    replies: Vec<Msg>,
+    inbox: Vec<Envelope>,
+    gamma_seen: u32,
+    /// Latest armed resume `(deadline, generation)` — dedupes churn polls
+    /// and invalidates stale wheel entries.
+    armed: Option<(f64, u64)>,
+    gen: u64,
+}
+
+impl ActorBody {
+    pub fn new(id: usize, node: Box<dyn NodeState>, seed: u64) -> ActorBody {
+        ActorBody {
+            id,
+            node,
+            oracle: None,
+            // same per-node stream ids as the thread-per-node engine
+            rng: Rng::stream(seed, 0x70_000 + id as u64),
+            outbox: Vec::new(),
+            replies: Vec::new(),
+            inbox: Vec::new(),
+            gamma_seen: 0,
+            armed: None,
+            gen: 0,
+        }
+    }
+
+    pub fn make_oracle(&mut self, factory: &dyn OracleFactory) {
+        self.gamma_seen = 0; // force a γ re-read on first slice
+        self.oracle = Some(factory.make(self.id));
+    }
+
+    /// A `Resume { gen }` fired: is it the live one?
+    pub fn take_resume(&mut self, gen: u64) -> bool {
+        match self.armed {
+            Some((_, g)) if g == gen => {
+                self.armed = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Arm a resume timer at `at` unless an equal-or-earlier one is
+    /// already armed.
+    fn arm_resume(&mut self, at: f64, wheel: &mut TimerWheel<TimerEvent>) {
+        if let Some((t, _)) = self.armed {
+            if t <= at {
+                return;
+            }
+        }
+        self.gen += 1;
+        self.armed = Some((at, self.gen));
+        wheel.schedule(at, TimerEvent::Resume { id: self.id, gen: self.gen });
+    }
+
+    /// Arm a pacing suspend: always a fresh generation, so any stale
+    /// churn-poll entry is invalidated and cannot end the suspend early.
+    fn arm_pacing(&mut self, at: f64, wheel: &mut TimerWheel<TimerEvent>) {
+        self.gen += 1;
+        self.armed = Some((at, self.gen));
+        wheel.schedule(at, TimerEvent::Resume { id: self.id, gen: self.gen });
+    }
+}
+
+/// Run one slice of actor `body`. Publishes the actor's next scheduling
+/// state before returning.
+pub(crate) fn run_slice(
+    body: &mut ActorBody,
+    wheel: &mut TimerWheel<TimerEvent>,
+    bw: &mut BwPacer,
+    pool: &PoolShared,
+    shared: &Shared,
+    lossy: bool,
+    pace: Option<f64>,
+) {
+    let id = body.id;
+
+    // coordinator-pushed γ-decay
+    let g = shared.gamma_bits.load(Ordering::Relaxed);
+    if g != body.gamma_seen {
+        body.gamma_seen = g;
+        body.node.set_gamma(f32::from_bits(g));
+    }
+
+    // drain mailbox: receive data (ack it back when loss-tolerant, queue
+    // protocol replies), apply acks to the shared link layer
+    pool.actors[id].mailbox.drain_into(&mut body.inbox);
+    for env in body.inbox.drain(..) {
+        match env {
+            Envelope::Data(m) => {
+                let from = m.from;
+                let chan = m.kind.chan();
+                body.node.receive(m, &mut body.replies);
+                if lossy {
+                    // receipt confirmation back to the sender (control
+                    // traffic: bypasses mailbox capacity)
+                    pool.push_control(from,
+                                      Envelope::Ack { from: id, chan });
+                }
+                body.outbox.append(&mut body.replies);
+            }
+            Envelope::Ack { from, chan } => {
+                // we are the original sender: channel (id → from) free
+                shared.faults.ack(id, from, chan);
+            }
+        }
+    }
+
+    let now = shared.faults.clock.now();
+    // scenario churn: a paused node starts no new iteration but keeps
+    // receiving/acking above — a stalled worker, not a crashed one
+    let paused = shared.faults.spec.is_paused(id, now);
+
+    // one local iteration
+    let mut pacing_extra = 0.0f64;
+    if !paused && body.node.ready() {
+        let t0 = Instant::now();
+        let computed = body.node.wake_computes_gradient();
+        let oracle = body
+            .oracle
+            .as_deref_mut()
+            // lint:allow(panic-path): make_oracle runs before the first slice; a missing oracle is a scheduler bug
+            .expect("oracle built by owning worker");
+        let loss = body.node.wake(oracle, &mut body.outbox);
+        let step_time = t0.elapsed().as_secs_f64();
+        if computed {
+            shared.steps[id].fetch_add(1, Ordering::AcqRel);
+            shared.total_steps.fetch_add(1, Ordering::AcqRel);
+            if let Some(l) = loss {
+                // uncontended: this actor's own accumulator
+                // lint:allow(panic-path): lock poisoning means a worker already panicked
+                let mut acc = shared.train_loss[id].lock().unwrap();
+                acc.0 += l as f64;
+                acc.1 += 1;
+            }
+            // snapshot for the coordinator
+            {
+                // lint:allow(panic-path): lock poisoning means a worker already panicked
+                let mut guard = shared.snapshots[id].lock().unwrap();
+                guard.copy_from_slice(body.node.param());
+            }
+            // pace + straggler emulation (same law as the old engine):
+            // target iteration duration = max(real step, pace) × factor;
+            // the excess over the real step becomes a PACED suspend
+            let factor = shared.faults.spec.compute_factor(id, now);
+            let base = pace.map_or(step_time, |min| step_time.max(min));
+            pacing_extra = (base * factor - step_time).max(0.0);
+        }
+    }
+
+    // send phase: everything the drain + wake queued
+    let send_start = shared.faults.clock.now();
+    let send_end = send_phase(body, wheel, bw, pool, shared, lossy,
+                              send_start);
+    let resume_at = send_end + pacing_extra;
+
+    // publish the next scheduling state
+    let actor = &pool.actors[id];
+    let now2 = shared.faults.clock.now();
+    if resume_at > now2 {
+        // suspended by pacing/straggler/send delays: mail must NOT cut
+        // this short (the old engine's sleeps were uninterruptible)
+        actor.finish(PACED);
+        body.arm_pacing(resume_at, wheel);
+        return;
+    }
+    if !paused && body.node.ready() {
+        // more work available right now: yield for fairness
+        actor.finish(QUEUED);
+        pool.enqueue(id);
+        return;
+    }
+    // blocked on mail (or paused): go WAITING, then close the lost-wakeup
+    // window — re-check the mailbox after publishing WAITING and re-queue
+    // self if a sender slipped in before the state store
+    actor.finish(WAITING);
+    if paused {
+        let at = shared
+            .faults
+            .spec
+            .next_resume(id, now)
+            .unwrap_or(now2 + PAUSE_POLL);
+        body.arm_resume(at.max(now2), wheel);
+    }
+    if !actor.mailbox.is_empty() {
+        pool.wake_for_mail(id);
+    }
+}
+
+/// Send every queued message through the shared link layer. The virtual
+/// cursor starts at `start` and advances by each message's injected
+/// latency + FIFO bandwidth serialization delay — the same cumulative
+/// schedule the old engine produced by sleeping before each channel
+/// send; delayed messages become `Deliver` wheel entries at their
+/// arrival times. Returns the cursor (= when this sender's link work is
+/// finished and it may resume).
+fn send_phase(
+    body: &mut ActorBody,
+    wheel: &mut TimerWheel<TimerEvent>,
+    bw: &mut BwPacer,
+    pool: &PoolShared,
+    shared: &Shared,
+    lossy: bool,
+    start: f64,
+) -> f64 {
+    let ActorBody { node, outbox, rng, .. } = body;
+    let mut cursor = start;
+    for m in outbox.drain(..) {
+        shared.msgs_sent.fetch_add(1, Ordering::AcqRel);
+        match shared.faults.send_verdict(lossy, &m, rng) {
+            SendVerdict::Backpressured => {
+                shared.msgs_backpressured.fetch_add(1, Ordering::AcqRel);
+                node.on_send_failed(m);
+                continue;
+            }
+            SendVerdict::Lost => {
+                shared.msgs_lost.fetch_add(1, Ordering::AcqRel);
+                node.on_send_failed(m);
+                continue;
+            }
+            SendVerdict::Deliver => {}
+        }
+        let bytes = FaultSpec::payload_bytes(&m);
+        shared.bytes_sent.fetch_add(bytes as u64, Ordering::AcqRel);
+        let mut delay = shared.faults.spec.injected_latency(cursor);
+        let bw_delay = shared.faults.spec.bandwidth_delay(m.from, m.to, bytes);
+        if bw_delay > 0.0 {
+            // each directed link has exactly one sender (this actor), and
+            // this actor is pinned to this worker, so the worker-local
+            // pacer owns the link's FIFO transmission queue
+            if let Some(link) = shared.faults.link_id(m.from, m.to) {
+                delay += bw.sent_at(link, cursor, bw_delay) - cursor;
+            }
+        }
+        if delay > 0.0 {
+            shared.msgs_paced.fetch_add(1, Ordering::AcqRel);
+            cursor += delay;
+            wheel.schedule(cursor, TimerEvent::Deliver(m));
+        } else {
+            deliver(node.as_mut(), pool, shared, lossy, m);
+        }
+    }
+    cursor
+}
+
+/// Put `m` in its destination mailbox under the overflow policy. Runs on
+/// the sender's worker (immediately, or when the `Deliver` timer fires),
+/// so the sender's `on_send_failed` hook is in reach for rejections.
+///
+/// Any data message that leaves the system here releases its (link,
+/// channel) slot: the receiver will never process it, so it would never
+/// be acked, and a wedged channel is exactly what the `no_stuck` oracle
+/// rejects.
+pub(crate) fn deliver(
+    sender: &mut dyn NodeState,
+    pool: &PoolShared,
+    shared: &Shared,
+    lossy: bool,
+    m: Msg,
+) {
+    let dst = m.to;
+    match pool.actors[dst].mailbox.push_data(m) {
+        PushOutcome::Accepted => pool.wake_for_mail(dst),
+        PushOutcome::Rejected(m) => {
+            // Backpressure policy: same observable path as a busy link
+            shared.msgs_backpressured.fetch_add(1, Ordering::AcqRel);
+            if lossy {
+                shared.faults.ack(m.from, m.to, m.kind.chan());
+            }
+            sender.on_send_failed(m);
+        }
+        PushOutcome::DroppedNewest(m) => {
+            shared.msgs_dropped.fetch_add(1, Ordering::AcqRel);
+            if lossy {
+                shared.faults.ack(m.from, m.to, m.kind.chan());
+            }
+        }
+        PushOutcome::DroppedOldest(old) => {
+            shared.msgs_dropped.fetch_add(1, Ordering::AcqRel);
+            if lossy {
+                shared.faults.ack(old.from, old.to, old.kind.chan());
+            }
+            pool.wake_for_mail(dst);
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Bounded per-actor mailboxes with an explicit overflow policy.
+//!
+//! The thread-per-node engine used unbounded `mpsc` channels: the only
+//! queueing limit was the *implicit* one-slot at-most-one-unacked packet
+//! the [`faults`](crate::faults) layer enforces per (link, channel). The
+//! actor engine makes receiver-side queueing explicit — every actor owns
+//! one bounded mailbox, and what happens when it fills is a configured
+//! [`OverflowPolicy`], not a side effect (DESIGN.md §15):
+//!
+//! | policy        | full mailbox on a data push                        |
+//! |---------------|----------------------------------------------------|
+//! | `Backpressure`| reject: the sender sees the same `on_send_failed`  |
+//! |               | path as a busy link; nothing is queued (default)   |
+//! | `DropNewest`  | discard the incoming message                       |
+//! | `DropOldest`  | evict the oldest queued *data* message, queue new  |
+//!
+//! Capacity counts **data** envelopes only. Control traffic (acks)
+//! always enters: dropping an ack would wedge its (link, channel) slot
+//! forever — the `no_stuck` fuzz oracle exists to catch exactly that
+//! class of bug, so the bypass is load-bearing, not a convenience.
+//!
+//! The queue is a plain `Mutex<VecDeque>` rather than a lock-free ring:
+//! pushes come from remote workers, drains from the owner, and both are
+//! short critical sections with no blocking calls inside (the §14
+//! `lock-across-blocking` lint checks that). The mutex also gives the
+//! release/acquire edge the actor state machine's lost-wakeup protocol
+//! relies on (see [`super::pool`]).
+
+use crate::algo::Msg;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A message in flight between actors: data payloads take the fault
+/// layer's verdict/latency path; acks are control traffic that frees the
+/// sender's (link, channel) slot and bypasses mailbox capacity.
+pub(crate) enum Envelope {
+    Data(Msg),
+    Ack { from: usize, chan: usize },
+}
+
+/// What a full mailbox does with the next data message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Reject the push; the sender handles it like a busy link
+    /// (`msgs_backpressured` + `on_send_failed`). The default.
+    Backpressure,
+    /// Discard the incoming message (`msgs_dropped`).
+    DropNewest,
+    /// Evict the oldest queued data message, then accept the new one
+    /// (`msgs_dropped`).
+    DropOldest,
+}
+
+impl OverflowPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverflowPolicy::Backpressure => "backpressure",
+            OverflowPolicy::DropNewest => "drop-newest",
+            OverflowPolicy::DropOldest => "drop-oldest",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OverflowPolicy> {
+        match s {
+            "backpressure" => Some(OverflowPolicy::Backpressure),
+            "drop-newest" => Some(OverflowPolicy::DropNewest),
+            "drop-oldest" => Some(OverflowPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// Mailbox knobs carried by `Engine::Threaded` (and the CLI's
+/// `--mailbox CAP[:POLICY]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MailboxCfg {
+    /// Maximum queued data envelopes per actor (≥ 1; acks are exempt).
+    pub capacity: usize,
+    pub policy: OverflowPolicy,
+}
+
+impl Default for MailboxCfg {
+    /// Deep enough that well-behaved runs never overflow — the old
+    /// unbounded-channel behavior is preserved by default; the bound is a
+    /// safety net plus an experiment knob, not a new failure mode.
+    fn default() -> MailboxCfg {
+        MailboxCfg { capacity: 1024, policy: OverflowPolicy::Backpressure }
+    }
+}
+
+impl MailboxCfg {
+    /// Parse `CAP` or `CAP:POLICY` (policy one of `backpressure`,
+    /// `drop-newest`, `drop-oldest`), e.g. `64:drop-oldest`.
+    pub fn parse(s: &str) -> Result<MailboxCfg, String> {
+        let (cap_s, pol_s) = match s.split_once(':') {
+            Some((c, p)) => (c, Some(p)),
+            None => (s, None),
+        };
+        let capacity: usize = cap_s
+            .parse()
+            .map_err(|_| format!("invalid mailbox capacity {cap_s:?}"))?;
+        if capacity == 0 {
+            return Err("mailbox capacity must be >= 1".to_string());
+        }
+        let policy = match pol_s {
+            None => OverflowPolicy::Backpressure,
+            Some(p) => OverflowPolicy::from_name(p).ok_or_else(|| {
+                format!(
+                    "unknown overflow policy {p:?} (want backpressure | \
+                     drop-newest | drop-oldest)"
+                )
+            })?,
+        };
+        Ok(MailboxCfg { capacity, policy })
+    }
+}
+
+/// Outcome of a data push; drop/reject variants return the affected
+/// envelope so the scheduler can count it and release its link channel.
+pub(crate) enum PushOutcome {
+    Accepted,
+    /// Policy `Backpressure`: the incoming message comes back.
+    Rejected(Msg),
+    /// Policy `DropNewest`: the incoming message comes back, discarded.
+    DroppedNewest(Msg),
+    /// Policy `DropOldest`: the evicted oldest data message.
+    DroppedOldest(Msg),
+}
+
+struct Queue {
+    q: VecDeque<Envelope>,
+    /// Data envelopes currently queued (capacity counts only these).
+    data_len: usize,
+}
+
+pub(crate) struct Mailbox {
+    mail: Mutex<Queue>,
+    capacity: usize,
+    policy: OverflowPolicy,
+}
+
+impl Mailbox {
+    pub fn new(cfg: MailboxCfg) -> Mailbox {
+        Mailbox {
+            mail: Mutex::new(Queue { q: VecDeque::new(), data_len: 0 }),
+            capacity: cfg.capacity.max(1),
+            policy: cfg.policy,
+        }
+    }
+
+    /// Push a data message under the capacity/overflow policy.
+    pub fn push_data(&self, m: Msg) -> PushOutcome {
+        // lint:allow(panic-path): mailbox poisoning means a worker already panicked
+        let mut g = self.mail.lock().unwrap();
+        if g.data_len < self.capacity {
+            g.data_len += 1;
+            g.q.push_back(Envelope::Data(m));
+            return PushOutcome::Accepted;
+        }
+        match self.policy {
+            OverflowPolicy::Backpressure => PushOutcome::Rejected(m),
+            OverflowPolicy::DropNewest => PushOutcome::DroppedNewest(m),
+            OverflowPolicy::DropOldest => {
+                let pos = g
+                    .q
+                    .iter()
+                    .position(|e| matches!(e, Envelope::Data(_)));
+                // capacity ≥ 1 and data_len == capacity ⇒ a data envelope
+                // exists; fall back to accepting if it somehow doesn't
+                match pos.and_then(|p| g.q.remove(p)) {
+                    Some(Envelope::Data(old)) => {
+                        g.q.push_back(Envelope::Data(m));
+                        PushOutcome::DroppedOldest(old)
+                    }
+                    _ => {
+                        g.data_len += 1;
+                        g.q.push_back(Envelope::Data(m));
+                        PushOutcome::Accepted
+                    }
+                }
+            }
+        }
+    }
+
+    /// Push control traffic (acks): always accepted, never counted
+    /// against capacity.
+    pub fn push_control(&self, env: Envelope) {
+        // lint:allow(panic-path): mailbox poisoning means a worker already panicked
+        let mut g = self.mail.lock().unwrap();
+        g.q.push_back(env);
+    }
+
+    /// Move every queued envelope into `into` (owner-side drain).
+    pub fn drain_into(&self, into: &mut Vec<Envelope>) {
+        // lint:allow(panic-path): mailbox poisoning means a worker already panicked
+        let mut g = self.mail.lock().unwrap();
+        g.data_len = 0;
+        into.extend(g.q.drain(..));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        // lint:allow(panic-path): mailbox poisoning means a worker already panicked
+        self.mail.lock().unwrap().q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::MsgKind;
+
+    fn msg(from: usize, stamp: u64) -> Msg {
+        Msg::new(from, 0, MsgKind::V, stamp, vec![0.0; 2])
+    }
+
+    fn stamps(mb: &Mailbox) -> Vec<u64> {
+        let mut envs = Vec::new();
+        mb.drain_into(&mut envs);
+        envs.iter()
+            .filter_map(|e| match e {
+                Envelope::Data(m) => Some(m.stamp),
+                Envelope::Ack { .. } => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mb = Mailbox::new(MailboxCfg {
+            capacity: 2,
+            policy: OverflowPolicy::Backpressure,
+        });
+        assert!(matches!(mb.push_data(msg(1, 0)), PushOutcome::Accepted));
+        assert!(matches!(mb.push_data(msg(1, 1)), PushOutcome::Accepted));
+        match mb.push_data(msg(1, 2)) {
+            PushOutcome::Rejected(m) => assert_eq!(m.stamp, 2),
+            _ => panic!("expected rejection"),
+        }
+        assert_eq!(stamps(&mb), vec![0, 1]);
+    }
+
+    #[test]
+    fn drop_newest_discards_incoming() {
+        let mb = Mailbox::new(MailboxCfg {
+            capacity: 2,
+            policy: OverflowPolicy::DropNewest,
+        });
+        mb.push_data(msg(1, 0));
+        mb.push_data(msg(1, 1));
+        match mb.push_data(msg(1, 2)) {
+            PushOutcome::DroppedNewest(m) => assert_eq!(m.stamp, 2),
+            _ => panic!("expected drop-newest"),
+        }
+        assert_eq!(stamps(&mb), vec![0, 1]);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_head_and_queues_new() {
+        let mb = Mailbox::new(MailboxCfg {
+            capacity: 2,
+            policy: OverflowPolicy::DropOldest,
+        });
+        mb.push_data(msg(1, 0));
+        mb.push_data(msg(1, 1));
+        match mb.push_data(msg(1, 2)) {
+            PushOutcome::DroppedOldest(m) => assert_eq!(m.stamp, 0),
+            _ => panic!("expected drop-oldest"),
+        }
+        assert_eq!(stamps(&mb), vec![1, 2]);
+    }
+
+    #[test]
+    fn acks_bypass_capacity_and_survive_drop_oldest() {
+        let mb = Mailbox::new(MailboxCfg {
+            capacity: 1,
+            policy: OverflowPolicy::DropOldest,
+        });
+        mb.push_data(msg(1, 0));
+        mb.push_control(Envelope::Ack { from: 3, chan: 1 });
+        // full of data: evicts stamp 0, never the ack
+        match mb.push_data(msg(1, 1)) {
+            PushOutcome::DroppedOldest(m) => assert_eq!(m.stamp, 0),
+            _ => panic!("expected drop-oldest"),
+        }
+        let mut envs = Vec::new();
+        mb.drain_into(&mut envs);
+        assert_eq!(envs.len(), 2);
+        assert!(matches!(envs[0], Envelope::Ack { from: 3, chan: 1 }));
+        assert!(matches!(&envs[1], Envelope::Data(m) if m.stamp == 1));
+    }
+
+    #[test]
+    fn drain_resets_capacity_accounting() {
+        let mb = Mailbox::new(MailboxCfg {
+            capacity: 1,
+            policy: OverflowPolicy::Backpressure,
+        });
+        mb.push_data(msg(1, 0));
+        assert!(matches!(mb.push_data(msg(1, 1)), PushOutcome::Rejected(_)));
+        let mut envs = Vec::new();
+        mb.drain_into(&mut envs);
+        assert!(mb.is_empty());
+        assert!(matches!(mb.push_data(msg(1, 2)), PushOutcome::Accepted));
+    }
+
+    #[test]
+    fn cfg_parse_roundtrips() {
+        assert_eq!(
+            MailboxCfg::parse("64").unwrap(),
+            MailboxCfg { capacity: 64, policy: OverflowPolicy::Backpressure }
+        );
+        assert_eq!(
+            MailboxCfg::parse("8:drop-oldest").unwrap(),
+            MailboxCfg { capacity: 8, policy: OverflowPolicy::DropOldest }
+        );
+        assert_eq!(
+            MailboxCfg::parse("16:drop-newest").unwrap().policy.name(),
+            "drop-newest"
+        );
+        assert!(MailboxCfg::parse("0").is_err());
+        assert!(MailboxCfg::parse("x").is_err());
+        assert!(MailboxCfg::parse("4:teleport").is_err());
+    }
+}

@@ -1,61 +1,79 @@
-//! Real asynchronous runtime: one OS thread per node, mailbox channels.
+//! Real asynchronous runtime: M node actors over N worker threads.
 //!
 //! This is the wall-clock counterpart of [`crate::sim`] and mirrors the
 //! paper's implementation ("each process runs its own code independently
 //! and messages are transmitted in a fully-asynchronous way without any
-//! blocking", §VI ¶1) — with `std::thread` + `mpsc` in place of
-//! process-per-GPU + torch.distributed:
+//! blocking", §VI ¶1). Since PR 10 it is an **actor scheduler**, not a
+//! thread-per-node farm: each node is a suspendable actor with a bounded
+//! [`mailbox`] (explicit [`OverflowPolicy`] instead of the old implicit
+//! one-slot `LinkSlots` side effect), executed by a pool of N OS threads
+//! multiplexing M ≫ N runnable actors — which is what lets a 512-node
+//! straggler scenario run on a 4-thread pool (DESIGN.md §15):
 //!
-//! * every node thread loops: drain mailbox → if `ready`, run one local
-//!   iteration (for PJRT oracles the gradient is a real XLA execution on
-//!   this thread) → send messages; payloads are shared
-//!   ([`Payload`](crate::algo::Payload) is an `Arc`, hence `Send`), so a
-//!   cross-thread `mpsc` send moves a pointer-sized handle and a
-//!   broadcast's messages all reference one allocation (DESIGN.md §8);
-//! * links: the shared [`faults`](crate::faults) layer — sender-side
-//!   Bernoulli drop + at-most-one-unacked-packet per (link, channel),
-//!   with an atomic in-flight flag the receiver's ack clears — exactly
-//!   the semantics the simulator models (loss only for loss-tolerant
-//!   algorithms);
-//! * a straggler is emulated by sleeping `(factor−1)×` the measured step
-//!   time, exactly like the paper slows one GPU with extra load;
+//! * actor slice: drain mailbox → if `ready`, run one local iteration
+//!   (for PJRT oracles the gradient is a real XLA execution on the
+//!   owning worker — actors are pinned, so `!Send` oracles never move) →
+//!   send messages; payloads are shared
+//!   ([`Payload`](crate::algo::Payload) is an `Arc`), so a cross-actor
+//!   push moves a pointer-sized handle (DESIGN.md §8);
+//! * links: the shared [`faults`](crate::faults) layer over the
+//!   topology's sparse [`LinkIndex`](crate::faults::LinkIndex) —
+//!   sender-side Bernoulli drop + at-most-one-unacked-packet per (link,
+//!   channel), O(edges) state even at 10⁵ nodes;
+//! * **no `thread::sleep` on the actor path**: pacing floors, straggler
+//!   factors, injected latency, bandwidth serialization and churn-resume
+//!   polls are all [`timer`] wheel suspend/resume entries — a suspended
+//!   actor costs its worker nothing;
 //! * the coordinator thread snapshots per-node parameters, evaluates the
 //!   mean model periodically, applies the epoch-indexed γ-decay schedule,
 //!   and stops everyone at the deadline.
 //!
 //! Declarative [`Scenario`](crate::scenario::Scenario)s drive this engine
-//! too, through the same four hooks as the simulator, with virtual
-//! seconds read as wall seconds since the run started:
+//! through the same four hooks as the simulator, with virtual seconds
+//! read as wall seconds since the run started:
 //!
 //! * **straggler schedules** scale the per-iteration pacing factor;
 //! * **churn windows** stop a node from starting new iterations (it keeps
 //!   receiving — a stalled worker, not a crash);
 //! * **loss ramps** set the sender-side drop probability;
-//! * **latency ramps and bandwidth caps** pace the *sending thread*: the
-//!   injected excess latency and the FIFO serialization delay are slept
-//!   before the channel send, so delivery genuinely arrives later and a
-//!   capped link genuinely bounds throughput.
+//! * **latency ramps and bandwidth caps** delay *delivery*: the injected
+//!   excess latency and the FIFO serialization delay advance the sender's
+//!   virtual send cursor, the message arrives that much later through the
+//!   timer wheel, and the sender actor stays suspended until its cursor —
+//!   so a capped link still genuinely bounds throughput, without holding
+//!   an OS thread hostage.
 
-use crate::algo::{AlgoKind, Msg, NodeState};
+pub mod mailbox;
+pub(crate) mod actor;
+pub(crate) mod pool;
+pub(crate) mod timer;
+
+pub use mailbox::{MailboxCfg, OverflowPolicy};
+
+use crate::algo::AlgoKind;
 use crate::config::SimConfig;
 use crate::exp::Stop;
-use crate::faults::{BwPacer, Clock, FaultSpec, RunnerFaultLayer, SendVerdict,
+use crate::faults::{BwPacer, Clock, FaultSpec, LinkIndex, RunnerFaultLayer,
                     WallClock};
 use crate::graph::Topology;
 use crate::metrics::Report;
 use crate::oracle::{Eval, OracleFactory};
-use crate::prng::Rng;
+use actor::{run_slice, ActorBody, TimerEvent};
+use pool::PoolShared;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+use timer::TimerWheel;
 
-/// Injected pacing sleeps are taken in chunks of at most this many
-/// seconds, re-checking the stop flag between chunks, so a worker
-/// notices a stop request promptly even under extreme scenario
-/// parameters while still sleeping the *full* delay (truncating would
-/// let a bandwidth-capped link transmit above its configured rate).
-const MAX_PACING_SLEEP: f64 = 0.05;
+/// Timer-wheel bucket width. Purely a bucketing choice — expiry order is
+/// exact regardless (see [`timer`]) — sized so pacing-scale deadlines
+/// (tens of µs to ms) land in nearby buckets.
+const WHEEL_TICK: f64 = 0.001;
+/// Timer-wheel bucket count per worker.
+const WHEEL_SLOTS: usize = 64;
+/// Longest a worker parks before re-checking the stop flag when it has
+/// no nearer timer deadline.
+const MAX_PARK: f64 = 0.025;
 
 /// Wall-clock stopping criteria (legacy runner-only spelling).
 ///
@@ -97,52 +115,63 @@ pub struct RunnerStats {
     pub msgs_sent: u64,
     pub msgs_lost: u64,
     pub msgs_backpressured: u64,
-    /// Messages whose send was delayed by a scenario latency ramp or
-    /// bandwidth cap (the sender thread slept before the channel send).
+    /// Messages whose delivery was delayed by a scenario latency ramp or
+    /// bandwidth cap (the sender actor suspended through the timer wheel
+    /// instead of sleeping).
     pub msgs_paced: u64,
+    /// Messages discarded by a full mailbox under a `DropNewest` /
+    /// `DropOldest` overflow policy (zero under the default
+    /// `Backpressure`).
+    pub msgs_dropped: u64,
     /// Payload bytes actually sent (Deliver verdicts only) — the logical
     /// communication volume; shared payloads are charged by length, not
-    /// by the pointer-sized handle that crosses the channel.
+    /// by the pointer-sized handle that crosses the mailbox.
     pub bytes_sent: u64,
+    /// Worker threads the actor pool actually ran on.
+    pub workers: usize,
 }
 
-struct Shared {
-    stop: AtomicBool,
+pub(crate) struct Shared {
+    pub stop: AtomicBool,
     /// shared fault/link layer: wall clock + atomic per-(link, channel)
-    /// in-flight flags + scalar/scenario fault queries
-    faults: RunnerFaultLayer,
+    /// in-flight flags + scalar/scenario fault queries, sparse-addressed
+    /// over the topology's links
+    pub faults: RunnerFaultLayer,
     // Report-counter ordering contract (DESIGN.md §14, `relaxed-counter`):
     // every counter below feeds RunnerStats/report scalars, so writers
     // use AcqRel RMWs and readers Acquire loads — a coordinator-side read
     // then observes everything the worker published before bumping the
     // counter. `gamma_bits` and `stop` are single-value signals, not
     // counters; Relaxed remains sound for them.
-    total_steps: AtomicU64,
-    msgs_sent: AtomicU64,
-    msgs_lost: AtomicU64,
-    msgs_backpressured: AtomicU64,
-    msgs_paced: AtomicU64,
-    bytes_sent: AtomicU64,
+    pub total_steps: AtomicU64,
+    pub msgs_sent: AtomicU64,
+    pub msgs_lost: AtomicU64,
+    pub msgs_backpressured: AtomicU64,
+    pub msgs_paced: AtomicU64,
+    pub msgs_dropped: AtomicU64,
+    pub bytes_sent: AtomicU64,
     /// current step size as f32 bits; the coordinator writes decays, the
-    /// workers pick them up at the top of their loop
-    gamma_bits: AtomicU32,
+    /// workers pick them up at the top of each slice
+    pub gamma_bits: AtomicU32,
     /// per-node rolling (sum, count) of minibatch losses between eval
     /// ticks — per-node so the hot training loop never contends on a
     /// shared lock (same pattern as `steps`/`snapshots`)
-    train_loss: Vec<Mutex<(f64, u64)>>,
+    pub train_loss: Vec<Mutex<(f64, u64)>>,
     /// latest parameter snapshot per node (written post-wake)
-    snapshots: Vec<Mutex<Vec<f32>>>,
-    steps: Vec<AtomicU64>,
+    pub snapshots: Vec<Mutex<Vec<f32>>>,
+    pub steps: Vec<AtomicU64>,
 }
 
-/// Thread-per-node engine. Generic over the oracle factory so the same
-/// runner drives quadratics (tests), rust logreg, and PJRT models.
+/// Actor-pool engine. Generic over the oracle factory so the same runner
+/// drives quadratics (tests), rust logreg, and PJRT models.
 pub struct ThreadedRunner {
     cfg: SimConfig,
     algo: AlgoKind,
     topo: Topology,
     x0: Vec<f32>,
-    pace: Option<Duration>,
+    pace: Option<f64>,
+    workers: Option<usize>,
+    mailbox: MailboxCfg,
 }
 
 impl ThreadedRunner {
@@ -157,7 +186,15 @@ impl ThreadedRunner {
                 // lint:allow(panic-path): engine-level constructor fails fast; Experiment pre-validates into typed errors
                 .expect("invalid scenario for this topology");
         }
-        ThreadedRunner { cfg, algo, topo: topo.clone(), x0, pace: None }
+        ThreadedRunner {
+            cfg,
+            algo,
+            topo: topo.clone(),
+            x0,
+            pace: None,
+            workers: None,
+            mailbox: MailboxCfg::default(),
+        }
     }
 
     /// Enforce a minimum per-iteration duration. Needed when the oracle is
@@ -167,8 +204,28 @@ impl ThreadedRunner {
     /// fixed step size is no longer stable. Real model oracles (PJRT) are
     /// naturally paced by their compute.
     pub fn with_pace(mut self, seconds: f64) -> ThreadedRunner {
-        self.pace = Some(Duration::from_secs_f64(seconds));
+        self.pace = Some(seconds);
         self
+    }
+
+    /// Size of the worker pool (clamped to `[1, n]`). Default: one worker
+    /// per available core, at most one per node.
+    pub fn with_workers(mut self, workers: usize) -> ThreadedRunner {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Per-actor mailbox capacity and overflow policy.
+    pub fn with_mailbox(mut self, mailbox: MailboxCfg) -> ThreadedRunner {
+        self.mailbox = mailbox;
+        self
+    }
+
+    fn resolve_workers(&self, n: usize) -> usize {
+        let requested = self.workers.unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(4, |c| c.get())
+        });
+        requested.clamp(1, n.max(1))
     }
 
     /// Run to completion; `eval` is called on the coordinator thread with
@@ -190,55 +247,56 @@ impl ThreadedRunner {
         assert_eq!(factory.dim(), p, "factory dim vs x0");
         let nodes = self.algo.build(&self.topo, &self.x0, self.cfg.gamma,
                                     self.cfg.seed);
+        let workers = self.resolve_workers(n);
 
+        let links = LinkIndex::from_weights(&self.topo.weights);
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
-            faults: RunnerFaultLayer::new(n, WallClock::start_now(),
-                                          FaultSpec::from_config(&self.cfg)),
+            faults: RunnerFaultLayer::with_links(
+                links,
+                WallClock::start_now(),
+                FaultSpec::from_config(&self.cfg),
+            ),
             total_steps: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
             msgs_lost: AtomicU64::new(0),
             msgs_backpressured: AtomicU64::new(0),
             msgs_paced: AtomicU64::new(0),
+            msgs_dropped: AtomicU64::new(0),
             bytes_sent: AtomicU64::new(0),
             gamma_bits: AtomicU32::new(self.cfg.gamma.to_bits()),
             train_loss: (0..n).map(|_| Mutex::new((0.0, 0))).collect(),
             snapshots: (0..n).map(|_| Mutex::new(self.x0.clone())).collect(),
             steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
         });
+        let pool = PoolShared::new(n, workers, self.mailbox);
 
-        // mailboxes
-        let mut senders: Vec<Sender<Envelope>> = Vec::with_capacity(n);
-        let mut receivers: Vec<Option<Receiver<Envelope>>> = Vec::new();
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(Some(rx));
+        // actor bodies, sharded by owning worker (actor i → worker i % N)
+        let mut shards: Vec<Vec<ActorBody>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, node) in nodes.into_iter().enumerate() {
+            shards[i % workers].push(ActorBody::new(i, node, self.cfg.seed));
         }
 
         let start = Instant::now();
         let epoch_per_batch = factory.epoch_per_node_batch();
         let mut report = Report::new(self.algo.name());
         let mut mean = vec![0.0f32; p];
+        let lossy = self.algo.tolerates_loss();
+        let pace = self.pace;
         std::thread::scope(|scope| {
-            for (i, node) in nodes.into_iter().enumerate() {
-                // lint:allow(panic-path): each receiver is taken exactly once, i is unique per iteration
-                let rx = receivers[i].take().unwrap();
-                let routes = senders.clone();
-                let shared_i = Arc::clone(&shared);
-                let cfg = self.cfg.clone();
-                let algo = self.algo;
-                let pace = self.pace;
+            for (w, bodies) in shards.into_iter().enumerate() {
+                let pool = &pool;
+                let shared_w = Arc::clone(&shared);
                 std::thread::Builder::new()
-                    .name(format!("rfast-node-{i}"))
+                    .name(format!("rfast-worker-{w}"))
                     .spawn_scoped(scope, move || {
-                        worker_loop(i, node, factory, rx, routes, shared_i,
-                                    cfg, algo, pace);
+                        worker_main(w, bodies, pool, shared_w, factory,
+                                    lossy, pace);
                     })
                     // lint:allow(panic-path): thread spawn failure is unrecoverable resource exhaustion
                     .expect("spawn worker");
             }
-            drop(senders);
 
             // coordinator loop: evaluate + γ-decay + check stop condition
             let eval_every =
@@ -308,6 +366,7 @@ impl ThreadedRunner {
                 }
             }
             shared.stop.store(true, Ordering::SeqCst);
+            pool.notify_all();
             // scope joins all workers here
         });
         let wall = start.elapsed().as_secs_f64();
@@ -329,7 +388,9 @@ impl ThreadedRunner {
             msgs_lost: shared.msgs_lost.load(Ordering::Acquire),
             msgs_backpressured: shared.msgs_backpressured.load(Ordering::Acquire),
             msgs_paced: shared.msgs_paced.load(Ordering::Acquire),
+            msgs_dropped: shared.msgs_dropped.load(Ordering::Acquire),
             bytes_sent: shared.bytes_sent.load(Ordering::Acquire),
+            workers,
         };
         let total_steps = stats.steps_per_node.iter().sum::<u64>();
         report.set_scalar("wall_seconds", stats.wall_seconds);
@@ -340,6 +401,7 @@ impl ThreadedRunner {
         report.set_scalar("msgs_backpressured",
                           stats.msgs_backpressured as f64);
         report.set_scalar("msgs_paced", stats.msgs_paced as f64);
+        report.set_scalar("msgs_dropped", stats.msgs_dropped as f64);
         report.set_scalar("bytes_sent", stats.bytes_sent as f64);
         report.set_scalar("final_loss", e.loss);
         if let Some(acc) = e.accuracy {
@@ -359,198 +421,75 @@ impl ThreadedRunner {
     }
 }
 
-enum Envelope {
-    Data(Msg),
-    Ack { from: usize, chan: usize },
-}
-
-/// Send every queued message through the shared link layer. Scenario
-/// link degradation paces the *sending thread*: the FIFO bandwidth
-/// serialization delay and the injected excess latency are slept before
-/// the channel send, so delivery is genuinely later on the wall clock.
-#[allow(clippy::too_many_arguments)]
-fn send_all(
-    node: &mut dyn NodeState,
-    msgs: &mut Vec<Msg>,
-    rng: &mut Rng,
-    bw: &mut BwPacer,
-    routes: &[Sender<Envelope>],
-    shared: &Shared,
-    lossy: bool,
-    n: usize,
-) {
-    for m in msgs.drain(..) {
-        shared.msgs_sent.fetch_add(1, Ordering::AcqRel);
-        match shared.faults.send_verdict(lossy, &m, rng) {
-            SendVerdict::Backpressured => {
-                shared.msgs_backpressured.fetch_add(1, Ordering::AcqRel);
-                node.on_send_failed(m);
-                continue;
-            }
-            SendVerdict::Lost => {
-                shared.msgs_lost.fetch_add(1, Ordering::AcqRel);
-                node.on_send_failed(m);
-                continue;
-            }
-            SendVerdict::Deliver => {}
-        }
-        let bytes = FaultSpec::payload_bytes(&m);
-        shared.bytes_sent.fetch_add(bytes as u64, Ordering::AcqRel);
-        let now = shared.faults.clock.now();
-        let mut delay = shared.faults.spec.injected_latency(now);
-        let bw_delay = shared.faults.spec.bandwidth_delay(m.from, m.to, bytes);
-        if bw_delay > 0.0 {
-            // each directed link has exactly one sender (this thread), so
-            // the per-worker FIFO queue is the link's transmission queue
-            delay += bw.sent_at(m.from * n + m.to, now, bw_delay) - now;
-        }
-        if delay > 0.0 {
-            shared.msgs_paced.fetch_add(1, Ordering::AcqRel);
-            let mut remaining = delay;
-            while remaining > 0.0 && !shared.stop.load(Ordering::Relaxed) {
-                let chunk = remaining.min(MAX_PACING_SLEEP);
-                std::thread::sleep(Duration::from_secs_f64(chunk));
-                remaining -= chunk;
-            }
-        }
-        // receiver gone ⇒ shutting down; ignore
-        let _ = routes[m.to].send(Envelope::Data(m));
-    }
-}
-
-/// Deliver one envelope to this worker's node: data messages go to the
-/// algorithm (ack'd back for loss-tolerant ones, protocol replies routed
-/// out), acks free the channel this node holds toward the ack's sender.
-#[allow(clippy::too_many_arguments)]
-fn handle_envelope(
-    env: Envelope,
-    id: usize,
-    node: &mut dyn NodeState,
-    routes: &[Sender<Envelope>],
-    shared: &Shared,
-    outbox: &mut Vec<Msg>,
-    replies: &mut Vec<Msg>,
-    rng: &mut Rng,
-    bw: &mut BwPacer,
-    lossy: bool,
-    n: usize,
-) {
-    match env {
-        Envelope::Data(m) => {
-            let from = m.from;
-            let chan = m.kind.chan();
-            node.receive(m, replies);
-            if lossy {
-                // receipt confirmation back to the sender
-                let _ = routes[from].send(Envelope::Ack { from: id, chan });
-            }
-            if !replies.is_empty() {
-                outbox.append(replies);
-                send_all(node, outbox, rng, bw, routes, shared, lossy, n);
-            }
-        }
-        Envelope::Ack { from, chan } => {
-            // we are the original sender: channel (id → from) free
-            shared.faults.ack(id, from, chan);
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    id: usize,
-    mut node: Box<dyn NodeState>,
-    factory: &dyn OracleFactory,
-    rx: Receiver<Envelope>,
-    routes: Vec<Sender<Envelope>>,
+/// One pool worker: owns its shard of actor bodies (and builds their
+/// oracles on this thread — they may be `!Send`), its timer wheel and
+/// its bandwidth pacer, and loops fire-due-timers → run-one-slice →
+/// park-until-deadline until the coordinator raises the stop flag.
+fn worker_main(
+    w: usize,
+    mut bodies: Vec<ActorBody>,
+    pool: &PoolShared,
     shared: Arc<Shared>,
-    cfg: SimConfig,
-    algo: AlgoKind,
-    pace: Option<Duration>,
+    factory: &dyn OracleFactory,
+    lossy: bool,
+    pace: Option<f64>,
 ) {
-    let n = routes.len();
-    let mut oracle = factory.make(id);
-    let mut rng = Rng::stream(cfg.seed, 0x70_000 + id as u64);
-    let lossy = algo.tolerates_loss();
-    let mut outbox: Vec<Msg> = Vec::new();
-    let mut replies: Vec<Msg> = Vec::new();
-    let mut bw = BwPacer::new(n * n);
-    let mut gamma_seen = shared.gamma_bits.load(Ordering::Relaxed);
+    for b in &mut bodies {
+        b.make_oracle(factory);
+    }
+    let workers = pool.n_workers();
+    // actor id → index in this worker's shard (ids are w, w+N, w+2N, …)
+    let local = |id: usize| id / workers;
+    let mut wheel: TimerWheel<TimerEvent> =
+        TimerWheel::new(WHEEL_TICK, WHEEL_SLOTS);
+    let mut bw = BwPacer::new(shared.faults.link_count());
+    // seed the run queue: every actor starts QUEUED
+    for b in &bodies {
+        pool.enqueue(b.id);
+    }
 
     while !shared.stop.load(Ordering::Relaxed) {
-        // pick up γ-decay steps pushed by the coordinator
-        let g = shared.gamma_bits.load(Ordering::Relaxed);
-        if g != gamma_seen {
-            gamma_seen = g;
-            node.set_gamma(f32::from_bits(g));
-        }
-
-        // drain mailbox
-        while let Ok(env) = rx.try_recv() {
-            handle_envelope(env, id, node.as_mut(), &routes, &shared,
-                            &mut outbox, &mut replies, &mut rng, &mut bw,
-                            lossy, n);
-        }
-
+        // fire everything due before running the next slice, so timer
+        // fidelity degrades gracefully under load instead of starving
         let now = shared.faults.clock.now();
-        // scenario churn: a paused node starts no new iteration but keeps
-        // receiving below — a stalled worker, not a crashed one (same
-        // semantics as the simulator's pause windows)
-        let paused = shared.faults.spec.is_paused(id, now);
-
-        if !paused && node.ready() {
-            let t0 = Instant::now();
-            let computed = node.wake_computes_gradient();
-            let loss = node.wake(oracle.as_mut(), &mut outbox);
-            let step_time = t0.elapsed();
-            send_all(node.as_mut(), &mut outbox, &mut rng, &mut bw, &routes,
-                     &shared, lossy, n);
-            if computed {
-                shared.steps[id].fetch_add(1, Ordering::AcqRel);
-                shared.total_steps.fetch_add(1, Ordering::AcqRel);
-                if let Some(l) = loss {
-                    // uncontended: this node's own accumulator
-                    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
-                    let mut acc = shared.train_loss[id].lock().unwrap();
-                    acc.0 += l as f64;
-                    acc.1 += 1;
+        while let Some(ev) = wheel.pop_due(now) {
+            match ev {
+                TimerEvent::Resume { id, gen } => {
+                    if bodies[local(id)].take_resume(gen)
+                        && pool.actors[id].try_queue_for_timer()
+                    {
+                        pool.enqueue(id);
+                    }
                 }
-                // snapshot for the coordinator
-                {
-                    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
-                    let mut guard = shared.snapshots[id].lock().unwrap();
-                    guard.copy_from_slice(node.param());
-                }
-                // pace + straggler emulation: the target duration of this
-                // iteration is max(real step, pace) × straggler factor —
-                // the paper slows one GPU by extra load, which scales its
-                // *whole* step time. The factor is re-queried per step so
-                // scenario schedules (onset-at-T, intermittent) apply.
-                let factor = shared.faults.spec.compute_factor(id, now);
-                let base = pace.map_or(step_time, |min| step_time.max(min));
-                let target = base.mul_f64(factor);
-                if target > step_time {
-                    std::thread::sleep(target - step_time);
+                TimerEvent::Deliver(m) => {
+                    // fires on the sender's worker: its body (and its
+                    // on_send_failed hook) is in reach for rejections
+                    let sender = &mut bodies[local(m.from)];
+                    actor::deliver(sender.node.as_mut(), pool, &shared,
+                                   lossy, m);
                 }
             }
-        } else {
-            // paused, or blocked on a barrier: wait for mail (with a
-            // stop-check timeout that also rechecks the pause window)
-            match rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(env) => {
-                    handle_envelope(env, id, node.as_mut(), &routes, &shared,
-                                    &mut outbox, &mut replies, &mut rng,
-                                    &mut bw, lossy, n);
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+        }
+        if let Some(id) = pool.pop_runnable(w) {
+            run_slice(&mut bodies[local(id)], &mut wheel, &mut bw, pool,
+                      &shared, lossy, pace);
+            continue;
+        }
+        // idle: park until the next timer deadline (bounded, so the stop
+        // flag is re-checked even when no timers are pending)
+        let dt = wheel
+            .next_deadline()
+            .map_or(MAX_PARK, |t| (t - now).clamp(0.0, MAX_PARK));
+        if dt > 0.0 {
+            pool.park(w, Duration::from_secs_f64(dt));
         }
     }
-    // final snapshot
-    // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
-    let mut guard = shared.snapshots[id].lock().unwrap();
-    guard.copy_from_slice(node.param());
+    // final snapshots
+    for b in &bodies {
+        // lint:allow(panic-path): lock poisoning means a sibling worker already panicked
+        let mut guard = shared.snapshots[b.id].lock().unwrap();
+        guard.copy_from_slice(b.node.param());
+    }
 }
 
 #[cfg(test)]
@@ -635,5 +574,31 @@ mod tests {
         let (_, stats) =
             runner.run(&QuadFactory(q), &mut eval, Stop::Iterations(5_000));
         assert!(stats.msgs_lost > 0);
+    }
+
+    /// M ≫ N: more actors than workers, on an explicit 2-thread pool —
+    /// every node must still make progress.
+    #[test]
+    fn many_actors_on_small_pool_all_progress() {
+        let q = QuadraticOracle::heterogeneous(8, 16, 0.5, 2.0, 55);
+        let topo = Topology::ring(16);
+        let cfg = SimConfig {
+            seed: 9,
+            gamma: 0.02,
+            compute_mean: 0.001,
+            eval_every: 0.05,
+            ..SimConfig::default()
+        };
+        let runner = ThreadedRunner::new(cfg, &topo, AlgoKind::RFast,
+                                         vec![0.0; 8])
+            .with_pace(2e-4)
+            .with_workers(2);
+        let (mut eval, _) = tracking_quad_eval(q.clone());
+        let (report, stats) =
+            runner.run(&QuadFactory(q), &mut eval, Stop::Iterations(4_000));
+        assert_eq!(stats.workers, 2);
+        assert!(stats.steps_per_node.iter().all(|&s| s > 10),
+                "{:?}", stats.steps_per_node);
+        assert!(report.scalars.contains_key("msgs_dropped"));
     }
 }

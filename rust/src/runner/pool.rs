@@ -1,0 +1,260 @@
+//! M:N scheduling substrate: actor state machine + worker run queues.
+//!
+//! M node actors are multiplexed over N OS worker threads. Actors are
+//! **statically pinned**: actor `i` belongs to worker `i % N`, its
+//! mutable body (algorithm state, oracle, RNG) is owned by that worker's
+//! stack and never crosses threads — which is what lets PJRT oracles
+//! (deliberately `!Send`, `Rc`-based) run under the pool exactly as they
+//! did under thread-per-node, and keeps every per-actor hot structure
+//! lock-free. Cross-thread surface is exactly three things (DESIGN.md
+//! §15): the bounded [`Mailbox`](super::mailbox), the actor's atomic
+//! scheduling state, and the owner's run queue + condvar.
+//!
+//! ## Scheduling states and the lost-wakeup protocol
+//!
+//! ```text
+//!          pop (owner)                    mail push / timer fire
+//! QUEUED ─────────────▶ RUNNING          (CAS by any thread)
+//!    ▲                     │ end of slice      ▲
+//!    │                     ├──▶ QUEUED (yield: still ready)
+//!    │                     ├──▶ PACED  (timer-armed suspend; mail does
+//!    │                     │           NOT wake — pacing is the old
+//!    │                     │           engine's uninterruptible sleep)
+//!    │                     └──▶ WAITING (blocked on mail; mail or a
+//!    │                               churn-resume timer re-queues)
+//!    └── every enqueue is gated by a successful CAS *→QUEUED, so an
+//!        actor is never in a run queue twice
+//! ```
+//!
+//! Lost wakeups are closed Dekker-style: a sender pushes the envelope
+//! (mailbox mutex, release on unlock) *then* tries `WAITING→QUEUED`; the
+//! owner stores `WAITING` *then* re-checks the mailbox (mutex acquire)
+//! and re-queues itself if non-empty. Whichever CAS succeeds enqueues —
+//! exactly one of them can.
+//!
+//! ## Lock order (§14 lint notes)
+//!
+//! Declared locks in this engine: `mail` (per-actor mailbox queue),
+//! `runq` (per-worker run queue), plus the coordinator-facing `snapshots`
+//! / `train_loss` slots in [`super::Shared`]. No function holds one while
+//! acquiring another — every acquisition lives in its own helper whose
+//! guard dies before the next lock — so the cross-file acquisition graph
+//! stays edge-free. Workers park on `cv.wait_timeout` under the `runq`
+//! guard only (the condvar releases it atomically while parked, and
+//! nothing else blocks under a guard).
+
+use super::mailbox::{Envelope, Mailbox, MailboxCfg};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// In a run queue (or about to be), will be executed.
+pub(crate) const QUEUED: u8 = 0;
+/// A worker is executing its slice.
+pub(crate) const RUNNING: u8 = 1;
+/// Timer-armed suspend (pacing / straggler / send delay); mail does not
+/// wake it.
+pub(crate) const PACED: u8 = 2;
+/// Blocked on mail (or a churn pause); mail and timers wake it.
+pub(crate) const WAITING: u8 = 3;
+
+/// The cross-thread half of one actor. The mutable body lives on the
+/// owning worker's stack (see [`super::actor::ActorBody`]).
+pub(crate) struct ActorShared {
+    state: AtomicU8,
+    pub mailbox: Mailbox,
+}
+
+impl ActorShared {
+    fn new(mailbox: MailboxCfg) -> ActorShared {
+        ActorShared {
+            state: AtomicU8::new(QUEUED),
+            mailbox: Mailbox::new(mailbox),
+        }
+    }
+
+    /// Mail arrived: wake only out of WAITING (PACED suspends through
+    /// mail by design; QUEUED/RUNNING will drain it anyway).
+    pub fn try_queue_for_mail(&self) -> bool {
+        self.state
+            .compare_exchange(WAITING, QUEUED, Ordering::AcqRel,
+                              Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Timer fired: wake out of PACED or WAITING.
+    pub fn try_queue_for_timer(&self) -> bool {
+        self.state
+            .compare_exchange(PACED, QUEUED, Ordering::AcqRel,
+                              Ordering::Acquire)
+            .is_ok()
+            || self.try_queue_for_mail()
+    }
+
+    /// Owner popped this actor from its run queue.
+    pub fn begin_running(&self) -> bool {
+        self.state
+            .compare_exchange(QUEUED, RUNNING, Ordering::AcqRel,
+                              Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Owner ends a slice (state is RUNNING): publish the next state.
+    pub fn finish(&self, next: u8) {
+        debug_assert!(next == QUEUED || next == PACED || next == WAITING);
+        self.state.store(next, Ordering::Release);
+    }
+}
+
+struct WorkerShared {
+    runq: Mutex<VecDeque<u32>>,
+    cv: Condvar,
+}
+
+/// Shared scheduling state: one entry per actor, one queue per worker.
+pub(crate) struct PoolShared {
+    pub actors: Vec<ActorShared>,
+    workers: Vec<WorkerShared>,
+}
+
+impl PoolShared {
+    pub fn new(n: usize, workers: usize, mailbox: MailboxCfg) -> PoolShared {
+        debug_assert!(workers >= 1);
+        PoolShared {
+            actors: (0..n).map(|_| ActorShared::new(mailbox)).collect(),
+            workers: (0..workers)
+                .map(|_| WorkerShared {
+                    runq: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Owning worker of actor `id` (static pinning).
+    pub fn owner(&self, id: usize) -> usize {
+        id % self.workers.len()
+    }
+
+    /// Put an already-QUEUED actor on its owner's run queue and wake the
+    /// owner if parked. Callers must have won the `*→QUEUED` CAS.
+    pub fn enqueue(&self, id: usize) {
+        let ws = &self.workers[self.owner(id)];
+        {
+            // lint:allow(panic-path): runq poisoning means a worker already panicked
+            let mut q = ws.runq.lock().unwrap();
+            q.push_back(id as u32);
+        }
+        ws.cv.notify_one();
+    }
+
+    /// Mail was pushed to `id`'s mailbox: re-queue it if it was WAITING.
+    pub fn wake_for_mail(&self, id: usize) {
+        if self.actors[id].try_queue_for_mail() {
+            self.enqueue(id);
+        }
+    }
+
+    /// Deliver control traffic (an ack) to `dst`, bypassing capacity.
+    pub fn push_control(&self, dst: usize, env: Envelope) {
+        self.actors[dst].mailbox.push_control(env);
+        self.wake_for_mail(dst);
+    }
+
+    /// Owner-side pop: next runnable actor for worker `w`, transitioned
+    /// to RUNNING.
+    pub fn pop_runnable(&self, w: usize) -> Option<usize> {
+        loop {
+            let id = {
+                // lint:allow(panic-path): runq poisoning means a worker already panicked
+                let mut q = self.workers[w].runq.lock().unwrap();
+                q.pop_front()
+            }?;
+            // the CAS gate on enqueue makes double-queueing impossible,
+            // so this only fails if an invariant broke; skip defensively
+            if self.actors[id as usize].begin_running() {
+                return Some(id as usize);
+            }
+            debug_assert!(false, "popped actor {id} not QUEUED");
+        }
+    }
+
+    /// Park worker `w` for at most `dur` (bounded so the stop flag is
+    /// re-checked promptly even with no timers pending). Returns early if
+    /// work was enqueued before or during the wait.
+    pub fn park(&self, w: usize, dur: Duration) {
+        let ws = &self.workers[w];
+        // lint:allow(panic-path): runq poisoning means a worker already panicked
+        let q = ws.runq.lock().unwrap();
+        if q.is_empty() {
+            // condvar wait releases the runq guard atomically while
+            // parked; nothing blocks while it is held
+            // lint:allow(panic-path): runq poisoning means a worker already panicked
+            let _ = ws.cv.wait_timeout(q, dur).unwrap();
+        }
+    }
+
+    /// Wake every worker (stop-flag broadcast).
+    pub fn notify_all(&self) {
+        for ws in &self.workers {
+            ws.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mail_wakes_waiting_but_not_paced() {
+        let pool = PoolShared::new(2, 1, MailboxCfg::default());
+        let a = &pool.actors[0];
+        assert!(a.begin_running());
+        a.finish(WAITING);
+        assert!(a.try_queue_for_mail(), "mail must wake WAITING");
+        assert!(a.begin_running());
+        a.finish(PACED);
+        assert!(!a.try_queue_for_mail(), "mail must not wake PACED");
+        assert!(a.try_queue_for_timer(), "timer must wake PACED");
+    }
+
+    #[test]
+    fn cas_gate_prevents_double_queueing() {
+        let pool = PoolShared::new(1, 1, MailboxCfg::default());
+        let a = &pool.actors[0];
+        assert!(a.begin_running());
+        a.finish(WAITING);
+        assert!(a.try_queue_for_mail());
+        // second waker loses the race: no second enqueue
+        assert!(!a.try_queue_for_mail());
+        assert!(!a.try_queue_for_timer());
+    }
+
+    #[test]
+    fn pop_runnable_drains_fifo() {
+        let pool = PoolShared::new(3, 1, MailboxCfg::default());
+        // actors start QUEUED; emulate the initial seeding
+        pool.enqueue(0);
+        pool.enqueue(1);
+        pool.enqueue(2);
+        assert_eq!(pool.pop_runnable(0), Some(0));
+        assert_eq!(pool.pop_runnable(0), Some(1));
+        assert_eq!(pool.pop_runnable(0), Some(2));
+        assert_eq!(pool.pop_runnable(0), None);
+    }
+
+    #[test]
+    fn ownership_is_modular() {
+        let pool = PoolShared::new(10, 4, MailboxCfg::default());
+        assert_eq!(pool.owner(0), 0);
+        assert_eq!(pool.owner(5), 1);
+        assert_eq!(pool.owner(7), 3);
+        assert_eq!(pool.n_workers(), 4);
+    }
+}

@@ -1,0 +1,240 @@
+//! Deterministic timer wheel for the actor scheduler.
+//!
+//! Every wall-clock delay the old thread-per-node engine expressed as a
+//! `thread::sleep` — pacing floors, straggler factors, injected latency,
+//! bandwidth serialization, churn resume polls — becomes an entry here:
+//! the owning worker schedules an event at an absolute deadline, parks
+//! until the earliest one, and fires whatever is due at the top of its
+//! loop (DESIGN.md §15).
+//!
+//! Structure mirrors the simulator's [`CalendarQueue`](crate::sim::sched):
+//! a hashed wheel of `slots` buckets, each a binary heap keyed by
+//! `(time bits, insertion seq)`. Deadlines are non-negative seconds, so
+//! the IEEE-754 bit pattern is order-isomorphic to the float and the key
+//! is a total order with FIFO tie-breaks — two wheels fed the same
+//! schedule calls pop identically, regardless of bucket geometry, which
+//! is what the suspend/resume determinism tests pin.
+//!
+//! Unlike the calendar queue this wheel must answer "is anything due at
+//! wall time `now`?" without popping, so the API is [`pop_due`] +
+//! [`next_deadline`] rather than an unconditional pop. The global
+//! minimum is found by scanning the bucket tops (O(slots), slots ≤ 64) —
+//! no fast path keyed on the cursor bucket, because a past-deadline entry
+//! clamped into the cursor bucket could then overtake an older equal-time
+//! entry parked in an earlier bucket and break the FIFO tie-break.
+
+use std::cmp::{Ordering as CmpOrdering, Reverse};
+use std::collections::BinaryHeap;
+
+/// One scheduled event: key is `(bits, seq)`; `day` only routes the entry
+/// to its bucket and advances the clamp cursor.
+struct Entry<T> {
+    day: u64,
+    /// `f64::to_bits` of the (non-negative) deadline — sortable as u64.
+    bits: u64,
+    seq: u64,
+    ev: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Entry<T>) -> bool {
+        self.bits == other.bits && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Entry<T>) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Entry<T>) -> CmpOrdering {
+        (self.bits, self.seq).cmp(&(other.bits, other.seq))
+    }
+}
+
+pub(crate) struct TimerWheel<T> {
+    slots: Vec<BinaryHeap<Reverse<Entry<T>>>>,
+    mask: u64,
+    tick: f64,
+    /// Bucket of the last popped entry; schedules clamp below it so a
+    /// past-deadline entry stays findable (same trick as the calendar
+    /// queue's day cursor).
+    cur_day: u64,
+    seq: u64,
+    len: usize,
+}
+
+impl<T> TimerWheel<T> {
+    /// `tick` is the bucket width in seconds, `slots` is rounded up to a
+    /// power of two.
+    pub fn new(tick: f64, slots: usize) -> TimerWheel<T> {
+        debug_assert!(tick > 0.0);
+        let slots = slots.max(2).next_power_of_two();
+        TimerWheel {
+            slots: (0..slots).map(|_| BinaryHeap::new()).collect(),
+            mask: slots as u64 - 1,
+            tick,
+            cur_day: 0,
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Schedule `ev` at absolute time `at` (seconds; clamped to ≥ 0).
+    /// Equal deadlines fire in schedule order.
+    pub fn schedule(&mut self, at: f64, ev: T) {
+        let t = if at.is_finite() { at.max(0.0) } else { 0.0 };
+        let day = ((t / self.tick) as u64).max(self.cur_day);
+        let bits = t.to_bits();
+        let seq = self.seq;
+        self.seq += 1;
+        let slot = (day & self.mask) as usize;
+        self.slots[slot].push(Reverse(Entry { day, bits, seq, ev }));
+        self.len += 1;
+    }
+
+    /// Bucket holding the global minimum entry, by `(bits, seq)`.
+    fn best_slot(&self) -> Option<usize> {
+        let mut best: Option<(u64, u64, usize)> = None;
+        for (i, h) in self.slots.iter().enumerate() {
+            if let Some(Reverse(e)) = h.peek() {
+                let key = (e.bits, e.seq, i);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Earliest pending deadline, if any.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.best_slot().map(|i| {
+            // lint:allow(panic-path): best_slot only returns non-empty buckets
+            let Reverse(e) = self.slots[i].peek().expect("non-empty slot");
+            f64::from_bits(e.bits)
+        })
+    }
+
+    /// Pop the earliest event if its deadline is ≤ `now`. Call in a loop
+    /// to drain everything due.
+    pub fn pop_due(&mut self, now: f64) -> Option<T> {
+        let i = self.best_slot()?;
+        {
+            // lint:allow(panic-path): best_slot only returns non-empty buckets
+            let Reverse(e) = self.slots[i].peek().expect("non-empty slot");
+            if f64::from_bits(e.bits) > now {
+                return None;
+            }
+        }
+        // lint:allow(panic-path): peek above proved the bucket non-empty
+        let Reverse(e) = self.slots[i].pop().expect("non-empty slot");
+        self.cur_day = self.cur_day.max(e.day);
+        self.len -= 1;
+        Some(e.ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn drain_all(w: &mut TimerWheel<u32>) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some(ev) = w.pop_due(f64::INFINITY) {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_order_across_buckets() {
+        let mut w = TimerWheel::new(0.001, 8);
+        w.schedule(0.030, 3);
+        w.schedule(0.001, 1);
+        w.schedule(5.0, 4);
+        w.schedule(0.0205, 2);
+        assert_eq!(drain_all(&mut w), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn equal_deadlines_fire_in_schedule_order() {
+        let mut w = TimerWheel::new(0.001, 8);
+        for i in 0..20 {
+            w.schedule(0.5, i);
+        }
+        assert_eq!(drain_all(&mut w), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut w = TimerWheel::new(0.001, 8);
+        w.schedule(0.010, 1);
+        w.schedule(0.020, 2);
+        assert_eq!(w.pop_due(0.005), None);
+        assert_eq!(w.next_deadline(), Some(0.010));
+        assert_eq!(w.pop_due(0.010), Some(1));
+        assert_eq!(w.pop_due(0.010), None);
+        assert_eq!(w.pop_due(0.025), Some(2));
+        assert_eq!(w.len(), 0);
+        assert_eq!(w.next_deadline(), None);
+    }
+
+    #[test]
+    fn past_deadline_after_cursor_advance_still_found_in_order() {
+        let mut w = TimerWheel::new(0.001, 4);
+        w.schedule(0.100, 1);
+        assert_eq!(w.pop_due(1.0), Some(1));
+        // cursor now sits at day 100; a past-time entry must clamp into a
+        // reachable bucket and pop before later deadlines
+        w.schedule(0.050, 2);
+        w.schedule(0.200, 3);
+        assert_eq!(drain_all(&mut w), vec![2, 3]);
+    }
+
+    /// Suspend/resume ordering determinism under a seeded schedule: the
+    /// pop sequence equals the reference sort by (time, insertion seq)
+    /// and is identical across wheels with different bucket geometry.
+    #[test]
+    fn seeded_schedule_is_deterministic_and_geometry_independent() {
+        let mut rng = Rng::stream(7, 0xABC);
+        let times: Vec<f64> = (0..500)
+            // quantized so ties actually occur
+            .map(|_| (rng.f64() * 50.0).floor() * 0.01)
+            .collect();
+        let mut a = TimerWheel::new(0.001, 8);
+        let mut b = TimerWheel::new(0.05, 64);
+        for (i, &t) in times.iter().enumerate() {
+            a.schedule(t, i as u32);
+            b.schedule(t, i as u32);
+        }
+        let got_a = drain_all(&mut a);
+        let got_b = drain_all(&mut b);
+        let mut want: Vec<(u64, usize)> = times
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.to_bits(), i))
+            .collect();
+        want.sort();
+        let want: Vec<u32> = want.into_iter().map(|(_, i)| i as u32).collect();
+        assert_eq!(got_a, want);
+        assert_eq!(got_b, want);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop_keeps_order() {
+        let mut w = TimerWheel::new(0.01, 8);
+        w.schedule(0.02, 1);
+        w.schedule(0.08, 4);
+        assert_eq!(w.pop_due(0.03), Some(1));
+        w.schedule(0.04, 2);
+        w.schedule(0.06, 3);
+        assert_eq!(drain_all(&mut w), vec![2, 3, 4]);
+    }
+}

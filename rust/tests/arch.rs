@@ -78,7 +78,7 @@ fn hand_built_edge_pair_without_common_root_is_rejected_on_both_engines() {
         &[(0, 1), (2, 1)], // 0 and 2 push to 1 ⇒ roots_at = {1}
     );
     assert!(topo.weights.common_roots().is_empty());
-    for engine in [Engine::Sim, Engine::Threaded { pace: Some(1e-4) }] {
+    for engine in [Engine::Sim, Engine::threaded(Some(1e-4))] {
         let err = Experiment::new(quad(), AlgoKind::RFast)
             .topology(&topo)
             .config(fast_cfg(1))
@@ -149,7 +149,7 @@ fn sim_and_threaded_expose_the_same_scalar_keys_on_an_asymmetric_pair() {
         .run()
         .unwrap();
     let thr_run = base
-        .engine(Engine::Threaded { pace: Some(5e-4) })
+        .engine(Engine::threaded(Some(5e-4)))
         .stop(Stop::Time(0.3))
         .run()
         .unwrap();
@@ -220,7 +220,7 @@ fn root_churn_runs_on_the_threaded_engine_too() {
             ..SimConfig::logreg_paper()
         })
         .scenario(&sc)
-        .engine(Engine::Threaded { pace: Some(1e-3) })
+        .engine(Engine::threaded(Some(1e-3)))
         .stop(Stop::Time(0.45))
         .run()
         .unwrap();

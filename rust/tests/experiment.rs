@@ -53,7 +53,7 @@ fn missing_stop_is_a_typed_error() {
 fn epochs_without_an_epoch_mapping_is_a_typed_error() {
     // quadratics count steps, not passes over a dataset — Stop::Epochs
     // must be rejected up front on EITHER engine
-    for engine in [Engine::Sim, Engine::Threaded { pace: Some(1e-4) }] {
+    for engine in [Engine::Sim, Engine::threaded(Some(1e-4))] {
         let err = Experiment::new(quad(), AlgoKind::RFast)
             .topology(&Topology::ring(3))
             .config(fast_cfg(1))
@@ -83,7 +83,7 @@ fn epochs_without_an_epoch_mapping_is_a_typed_error() {
 fn mlp_on_threaded_surfaces_the_pjrt_hint() {
     let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
         .topology(&Topology::ring(3))
-        .engine(Engine::Threaded { pace: None })
+        .engine(Engine::threaded(None))
         .stop(Stop::Time(0.1))
         .run()
         .unwrap_err();
@@ -196,7 +196,7 @@ fn engine_sweep_preflights_every_leg_before_running_any() {
     let err = Experiment::new(Workload::Mlp, AlgoKind::RFast)
         .topology(&Topology::ring(3))
         .stop(Stop::Iterations(1))
-        .sweep_engines(&[Engine::Sim, Engine::Threaded { pace: None }])
+        .sweep_engines(&[Engine::Sim, Engine::threaded(None)])
         .unwrap_err();
     assert!(matches!(err, ExpError::UnsupportedWorkload { .. }), "{err:?}");
 }
@@ -253,7 +253,7 @@ fn both_engines_expose_the_same_unified_scalar_keys() {
         .run()
         .unwrap();
     let thr_run = base
-        .engine(Engine::Threaded { pace: Some(5e-4) })
+        .engine(Engine::threaded(Some(5e-4)))
         .stop(Stop::Time(0.3))
         .run()
         .unwrap();
@@ -295,7 +295,7 @@ fn engine_sweep_produces_the_side_by_side_artifacts() {
             ..SimConfig::logreg_paper()
         })
         .stop(Stop::Iterations(200))
-        .sweep_engines(&[Engine::Sim, Engine::Threaded { pace: Some(1e-4) }])
+        .sweep_engines(&[Engine::Sim, Engine::threaded(Some(1e-4))])
         .unwrap();
     assert_eq!(cmp.runs.len(), 2);
     assert_eq!(cmp.runs[0].report.label, "sim");

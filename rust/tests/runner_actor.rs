@@ -1,0 +1,160 @@
+//! Actor-pool integration gates for the threaded engine (DESIGN.md §15):
+//! the M:N scheduler must multiplex far more actors than workers, the
+//! bounded-mailbox overflow policies must surface through the unified
+//! counter set without wedging a channel, and nothing on the actor hot
+//! path may pace by sleeping an OS thread.
+//!
+//! Like `runner_scenario`, these tests burn real wall time; CI runs them
+//! single-threaded with a job timeout, and every assertion is
+//! directional, never exact.
+
+use rfast::algo::AlgoKind;
+use rfast::config::SimConfig;
+use rfast::exp::{Engine, Experiment, QuadSpec, Stop, Workload};
+use rfast::graph::Topology;
+use rfast::oracle::QuadraticOracle;
+use rfast::runner::{MailboxCfg, OverflowPolicy, RunnerStats, ThreadedRunner};
+use rfast::scenario::Scenario;
+use rfast::testutil::{tracking_quad_eval, QuadFactory};
+
+/// The scalar set the ISSUE's acceptance gate names for the 512-actor
+/// smoke — the same unified set `runner_scenario` checks per preset.
+const UNIFIED_SCALARS: [&str; 5] = [
+    "msgs_lost",
+    "bytes_sent",
+    "msgs_backpressured",
+    "msgs_paced",
+    "epoch",
+];
+
+/// Acceptance smoke: 512 node actors multiplexed onto 4 OS workers under
+/// the paper's Fig. 6 straggler preset (node 3 slowed 5×, 2% loss). The
+/// old thread-per-node engine would need 512 OS threads here; the pool
+/// must finish a short wall-clock run with every actor making progress
+/// and the full unified scalar set reported.
+#[test]
+fn straggler_512_actors_on_4_workers_smoke() {
+    let mut cfg = SimConfig {
+        seed: 101,
+        gamma: 0.02,
+        compute_mean: 0.001,
+        eval_every: 0.1,
+        ..SimConfig::default()
+    };
+    cfg.scenario = Some(Scenario::by_name("paper_fig6_straggler").unwrap());
+    let run = Experiment::new(
+            Workload::Quadratic(QuadSpec::heterogeneous(4, 0.5, 2.0)),
+            AlgoKind::RFast)
+        .topology(&Topology::ring(512))
+        .config(cfg)
+        .engine(Engine::Threaded {
+            pace: Some(2e-4),
+            workers: Some(4),
+            mailbox: MailboxCfg::default(),
+        })
+        .stop(Stop::Time(0.6))
+        .run()
+        .expect("512-actor straggler smoke");
+
+    assert_eq!(run.stats.workers, Some(4), "pool size must be honored");
+    assert_eq!(run.stats.steps_per_node.len(), 512);
+    let starved =
+        run.stats.steps_per_node.iter().filter(|&&s| s == 0).count();
+    assert_eq!(starved, 0, "{starved} of 512 actors never ran a step");
+    for key in UNIFIED_SCALARS {
+        assert!(run.report.scalars.contains_key(key),
+                "acceptance scalar {key} missing");
+    }
+    assert!(run.stats.msgs_lost > 0, "preset carries 2% loss");
+    // default mailbox depth (1024) never overflows on a ring: drops are
+    // an opt-in policy outcome, not a pool side effect
+    assert_eq!(run.report.scalars.get("msgs_dropped"), Some(&0.0));
+}
+
+/// Run a small ring with a severely straggled receiver (node 0 slowed
+/// 40×) so its neighbors outpace its mailbox drain, under the given
+/// mailbox bound.
+fn run_slow_receiver(mailbox: MailboxCfg)
+    -> (rfast::metrics::Report, RunnerStats)
+{
+    let q = QuadraticOracle::heterogeneous(6, 4, 0.5, 2.0, 77);
+    let mut cfg = SimConfig {
+        seed: 33,
+        gamma: 0.02,
+        compute_mean: 0.001,
+        eval_every: 0.05,
+        ..SimConfig::default()
+    };
+    cfg.scenario = Some(Scenario::single_straggler(0, 40.0));
+    let runner = ThreadedRunner::new(cfg, &Topology::ring(4),
+                                     AlgoKind::RFast, vec![0.0; 6])
+        .with_pace(1e-3)
+        .with_workers(2)
+        .with_mailbox(mailbox);
+    let (mut eval, _) = tracking_quad_eval(q.clone());
+    runner.run(&QuadFactory(q), &mut eval, Stop::Time(0.4))
+}
+
+#[test]
+fn drop_oldest_policy_sheds_into_msgs_dropped() {
+    let (report, stats) = run_slow_receiver(MailboxCfg {
+        capacity: 1,
+        policy: OverflowPolicy::DropOldest,
+    });
+    assert!(stats.msgs_dropped > 0, "capacity 1 never overflowed: {stats:?}");
+    assert_eq!(report.scalars.get("msgs_dropped"),
+               Some(&(stats.msgs_dropped as f64)),
+               "report must agree with the engine counter");
+    // dropping a message releases its (link, channel) slot — the channel
+    // must not wedge, so every node keeps stepping (the no_stuck shape
+    // the fuzzer's threaded oracle checks)
+    for (i, &s) in stats.steps_per_node.iter().enumerate() {
+        assert!(s > 0, "node {i} starved: {:?}", stats.steps_per_node);
+    }
+}
+
+#[test]
+fn drop_newest_policy_sheds_into_msgs_dropped() {
+    let (_, stats) = run_slow_receiver(MailboxCfg {
+        capacity: 1,
+        policy: OverflowPolicy::DropNewest,
+    });
+    assert!(stats.msgs_dropped > 0, "capacity 1 never overflowed: {stats:?}");
+    for (i, &s) in stats.steps_per_node.iter().enumerate() {
+        assert!(s > 0, "node {i} starved: {:?}", stats.steps_per_node);
+    }
+}
+
+#[test]
+fn backpressure_policy_rejects_instead_of_dropping() {
+    let (_, stats) = run_slow_receiver(MailboxCfg {
+        capacity: 1,
+        policy: OverflowPolicy::Backpressure,
+    });
+    assert_eq!(stats.msgs_dropped, 0,
+               "backpressure must never drop: {stats:?}");
+    assert!(stats.msgs_backpressured > 0,
+            "full mailbox must reject like a busy link: {stats:?}");
+    for (i, &s) in stats.steps_per_node.iter().enumerate() {
+        assert!(s > 0, "node {i} starved: {:?}", stats.steps_per_node);
+    }
+}
+
+/// ISSUE acceptance gate: pacing, stragglers, latency and bandwidth are
+/// timer-wheel suspends now — no actor-pool source file may sleep an OS
+/// thread. (`runner/mod.rs` keeps one sleep in the coordinator's eval
+/// loop, which runs on the caller's thread, not a pool worker.)
+#[test]
+fn no_thread_sleep_on_the_actor_hot_path() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("src")
+        .join("runner");
+    for file in ["actor.rs", "mailbox.rs", "pool.rs", "timer.rs"] {
+        let text = std::fs::read_to_string(root.join(file))
+            .unwrap_or_else(|e| panic!("read {file}: {e}"));
+        assert!(!text.contains("thread::sleep"),
+                "{file} sleeps on the actor hot path");
+        assert!(!text.contains("sleep("),
+                "{file} sleeps on the actor hot path");
+    }
+}

@@ -20,7 +20,7 @@ fn threaded_rfast_trains_logreg_to_high_accuracy() {
     let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
         .topology(&Topology::binary_tree(4))
         .config(cfg)
-        .engine(Engine::Threaded { pace: Some(2e-4) })
+        .engine(Engine::threaded(Some(2e-4)))
         .stop(Stop::TargetLoss { loss: 0.08, max_time: 30.0 })
         .run()
         .expect("threaded logreg run");
@@ -48,7 +48,7 @@ fn threaded_runner_all_async_algorithms_progress() {
         let run = Experiment::new(Workload::LogReg, algo)
             .topology(&Topology::ring(3))
             .config(cfg)
-            .engine(Engine::Threaded { pace: Some(5e-4) })
+            .engine(Engine::threaded(Some(5e-4)))
             .stop(Stop::Iterations(9_000))
             .run()
             .expect("threaded run");
@@ -76,7 +76,7 @@ fn threaded_runner_straggler_counts_fewer_steps() {
     let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
         .topology(&Topology::ring(n))
         .config(cfg)
-        .engine(Engine::Threaded { pace: Some(2e-4) })
+        .engine(Engine::threaded(Some(2e-4)))
         .stop(Stop::Time(1.5))
         .run()
         .expect("straggler run");
@@ -104,7 +104,7 @@ fn threaded_stop_epochs_uses_the_coordinator_mapping() {
     let run = Experiment::new(Workload::LogReg, AlgoKind::RFast)
         .topology(&Topology::ring(3))
         .config(cfg)
-        .engine(Engine::Threaded { pace: Some(1e-3) })
+        .engine(Engine::threaded(Some(1e-3)))
         .stop(Stop::Epochs(0.05))
         .run()
         .expect("epoch-stopped run");

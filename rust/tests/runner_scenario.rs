@@ -43,7 +43,7 @@ fn run_quad(
             Workload::Quadratic(QuadSpec::heterogeneous(dim, 0.5, 2.0)), algo)
         .topology(&Topology::ring(n))
         .config(cfg)
-        .engine(Engine::Threaded { pace: Some(pace) })
+        .engine(Engine::threaded(Some(pace)))
         .stop(until)
         .run()
         .expect("threaded quad run");
@@ -51,10 +51,23 @@ fn run_quad(
     (run.report, run.stats, gap)
 }
 
+/// The scalar keys every actor-engine run must report, preset or not —
+/// the set the 512-actor CI smoke and the fuzz `scalar_sanity` oracle key
+/// off, so a preset silently dropping one would break both downstream.
+const UNIFIED_SCALARS: [&str; 5] = [
+    "msgs_lost",
+    "bytes_sent",
+    "msgs_backpressured",
+    "msgs_paced",
+    "epoch",
+];
+
 #[test]
 fn every_preset_runs_in_the_threaded_engine() {
     // acceptance loop: each named preset loads, passes validation against
-    // the topology, and completes a short wall-clock run
+    // the topology, and completes a short wall-clock run on the actor
+    // pool reporting the unified scalar key set
+    assert_eq!(Scenario::preset_names().len(), 6, "preset census drifted");
     for name in Scenario::preset_names() {
         let mut cfg = fast_cfg(17);
         cfg.scenario = Some(Scenario::by_name(name).unwrap());
@@ -64,6 +77,10 @@ fn every_preset_runs_in_the_threaded_engine() {
         assert!(stats.steps_per_node.iter().sum::<u64>() > 0,
                 "{name}: no progress");
         assert!(report.series.contains_key("loss_vs_wall"), "{name}");
+        for key in UNIFIED_SCALARS {
+            assert!(report.scalars.contains_key(key),
+                    "{name}: scalar {key} missing from actor-engine run");
+        }
     }
 }
 
@@ -97,7 +114,7 @@ fn churn_pause_window_freezes_the_paused_node() {
 #[test]
 fn lossy_30pct_keeps_rfast_converging() {
     // also the threaded-engine gate for the zero-copy message fabric:
-    // payloads crossing the worker mpsc channels are shared Arcs
+    // payloads crossing the actor mailboxes are shared Arcs
     // (DESIGN.md §8), and R-FAST must still converge under 30% loss with
     // the byte accounting live
     let mut cfg = fast_cfg(23);
